@@ -1,0 +1,11 @@
+//! Regenerate EVERY table and figure of the paper's evaluation section in
+//! one run (Table 1, Table 2, Fig. 5, Fig. 6, Fig. 7, plus the two
+//! ablations) — the same output `cargo bench` produces, bundled for easy
+//! comparison against the PDF.
+//!
+//! Run: `cargo run --release --example paper_tables`
+
+fn main() {
+    apllm::bench::print_all_tables();
+    println!("(see EXPERIMENTS.md for the paper-vs-simulated comparison and calibration residuals)");
+}

@@ -1,0 +1,19 @@
+//! Profiling helper for the §Perf pass: splits the bitmm hot path into
+//! packing vs GEMM-core time (EXPERIMENTS.md §Perf iteration log).
+//!
+//! Run: `cargo run --release --example profile_bitmm`
+
+use apllm::bitmm::{pack_codes, apmm_bipolar, ApmmOpts, CodeMatrix};
+use std::time::Instant;
+fn main() {
+    let (m, k, n) = (256usize, 2048usize, 256usize);
+    let w = CodeMatrix::random(m, k, 2, 1);
+    let xt = CodeMatrix::random(n, k, 2, 2);
+    for _ in 0..2 { let _ = pack_codes(&w); }
+    let t0 = Instant::now();
+    for _ in 0..10 { std::hint::black_box(pack_codes(&w)); std::hint::black_box(pack_codes(&xt)); }
+    println!("pack both: {:?}/iter", t0.elapsed()/10);
+    let t0 = Instant::now();
+    for _ in 0..10 { std::hint::black_box(apmm_bipolar(&w, &xt, ApmmOpts::default())); }
+    println!("apmm total: {:?}/iter", t0.elapsed()/10);
+}

@@ -1,0 +1,71 @@
+//! Quickstart: the library in ~60 lines.
+//!
+//! 1. Quantize a float weight matrix to 2-bit bipolar-INT.
+//! 2. Dynamically quantize activations.
+//! 3. Run the arbitrary-precision MatMul (decompose → 1-bit XNOR-popcount
+//!    GEMMs → fused shift-add recovery).
+//! 4. Dequantize and compare against the float reference.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use apllm::bitmm::{apmm_bipolar, transpose_codes, ApmmOpts};
+use apllm::quant::{quantize_bipolar_per_channel, quantize_bipolar_per_tensor};
+use apllm::util::Rng;
+
+fn main() {
+    let (out_features, in_features, tokens) = (512usize, 1024usize, 16usize);
+    let (nw, nx) = (4u32, 4u32); // W4A4
+
+    // a "trained" weight matrix and an activation batch
+    let mut rng = Rng::with_seed(42);
+    let w: Vec<f32> = (0..out_features * in_features).map(|_| rng.normal() * 0.05).collect();
+    let x: Vec<f32> = (0..tokens * in_features).map(|_| rng.normal()).collect();
+
+    // 1. offline: per-output-channel weight quantization
+    let wq = quantize_bipolar_per_channel(&w, out_features, in_features, nw);
+
+    // 2. online: per-token activation quantization
+    let xq = quantize_bipolar_per_tensor(&x, tokens, in_features, nx);
+
+    // 3. integer AP-GEMM: Y_int = Wq · Xqᵀ   (activations are N-major)
+    let y_int = apmm_bipolar(&wq.codes, &xq.codes, ApmmOpts::default());
+
+    // 4. dequantize: y = y_int · s_w[row] · s_x
+    let sx = xq.scales[0];
+    let mut max_rel = 0f32;
+    let mut y = vec![0f32; out_features * tokens];
+    for r in 0..out_features {
+        for t in 0..tokens {
+            y[r * tokens + t] = y_int[r * tokens + t] as f32 * wq.scales[r] * sx;
+        }
+    }
+
+    // float reference for error reporting (relative L2 over the output)
+    let mut se = 0f64;
+    let mut sref = 0f64;
+    for r in 0..out_features {
+        for t in 0..tokens {
+            let mut acc = 0f32;
+            for c in 0..in_features {
+                acc += w[r * in_features + c] * x[t * in_features + c];
+            }
+            let d = y[r * tokens + t] - acc;
+            se += (d * d) as f64;
+            sref += (acc * acc) as f64;
+            max_rel = max_rel.max(d.abs() / acc.abs().max(1.0));
+        }
+    }
+    let rel_l2 = (se / sref).sqrt();
+
+    println!("W{nw}A{nx} AP-GEMM: {out_features}x{in_features} weights × {tokens} tokens");
+    println!("packed weight footprint: {} bytes (f32 would be {})",
+        out_features * in_features * nw as usize / 8,
+        out_features * in_features * 4);
+    println!("output error vs f32 reference: rel-L2 {rel_l2:.3}, worst element {max_rel:.3}");
+    assert!(rel_l2 < 0.25, "quantization error out of expected band: {rel_l2}");
+
+    // bonus: transpose helper demo (normal (K,N) activations)
+    let xt = transpose_codes(&xq.codes);
+    assert_eq!(xt.rows, in_features);
+    println!("OK");
+}

@@ -1,0 +1,262 @@
+"""AOT lowering: JAX/Pallas -> HLO text + weights + manifest (build-time).
+
+Emits into ``artifacts/``:
+
+  * ``apmm_w{nw}a{nx}_{M}x{K}x{N}.hlo.txt``  -- standalone AP-GEMM
+    executables over a shape x precision grid (kernel integration tests +
+    the measured bench).
+  * ``model_prefill_b{B}_t{T}.hlo.txt`` / ``model_decode_b{B}.hlo.txt`` --
+    the L2 model entry points, weights as leading parameters.
+  * ``weights.bin``   -- raw little-endian tensors in param_spec order.
+  * ``golden_apmm.json`` -- small cross-language test vectors (inputs +
+    expected outputs) so the Rust ``bitmm`` substrate can verify against
+    the Python oracle bit-for-bit.
+  * ``manifest.json`` -- everything the Rust runtime needs to load the
+    above (shapes, dtypes, argument order, offsets).
+
+HLO *text* is the interchange format -- jax >= 0.5 emits protos with
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels.bitmm import apmm_packed
+from compile.kernels.ref import dense_matmul_ref
+from compile.quant import pack_along_k
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Standalone GEMM artifact grid: (M, K, N) x (nw, nx).
+GEMM_SHAPES = [(64, 256, 64), (128, 512, 128)]
+GEMM_PRECISIONS = [(1, 2), (2, 2), (3, 4)]
+
+# Model entry-point grid.
+PREFILL_BATCHES = [(1, 16), (2, 16), (4, 16)]  # (B, T)
+DECODE_BATCHES = [1, 2, 4, 8]
+
+DTYPE_MAP = {"f32": np.float32, "u32": np.uint32, "i32": np.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, DTYPE_MAP[dtype])
+
+
+def _io(name, dtype, shape):
+    return {"name": name, "dtype": dtype, "shape": list(shape)}
+
+
+def lower_apmm(out_dir, m, k, n, nw, nx):
+    kp = (k + 31) // 32
+    name = f"apmm_w{nw}a{nx}_{m}x{k}x{n}"
+
+    def fn(wp, xp):
+        return (apmm_packed(wp, xp, k_logical=k, nw=nw, nx=nx, interpret=True),)
+
+    lowered = jax.jit(fn).lower(
+        _spec((nw, m, kp), "u32"), _spec((nx, n, kp), "u32")
+    )
+    path = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    return {
+        "name": name,
+        "kind": "apmm",
+        "hlo": path,
+        "inputs": [_io("wp", "u32", (nw, m, kp)), _io("xp", "u32", (nx, n, kp))],
+        "outputs": [_io("y", "i32", (m, n))],
+        "meta": {"m": m, "k": k, "n": n, "nw": nw, "nx": nx},
+    }
+
+
+def write_weights(out_dir, params, cfg):
+    """weights.bin + spec-with-offsets; returns the spec entries."""
+    spec = M.param_spec(cfg)
+    flat = M.params_to_list(params, cfg)
+    assert len(spec) == len(flat)
+    entries = []
+    offset = 0
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        for (name, shape, dtype), arr in zip(spec, flat):
+            a = np.asarray(arr).astype(DTYPE_MAP[dtype])
+            assert tuple(a.shape) == tuple(shape), (name, a.shape, shape)
+            raw = a.tobytes()  # C-order little-endian
+            f.write(raw)
+            entries.append(
+                {"name": name, "dtype": dtype, "shape": list(shape), "offset": offset, "nbytes": len(raw)}
+            )
+            offset += len(raw)
+    return entries
+
+
+def lower_prefill(out_dir, params, cfg, b, t):
+    name = f"model_prefill_b{b}_t{t}"
+    spec = M.param_spec(cfg)
+
+    def fn(*args):
+        flat, (tokens,) = args[: len(spec)], args[len(spec) :]
+        p = M.params_from_list(list(flat), cfg)
+        return M.prefill(p, tokens, cfg)
+
+    arg_specs = [_spec(s, d) for (_, s, d) in spec] + [_spec((b, t), "i32")]
+    lowered = jax.jit(fn).lower(*arg_specs)
+    path = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    kv = (cfg.n_layers, b, cfg.max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "name": name,
+        "kind": "prefill",
+        "hlo": path,
+        "inputs": [_io("tokens", "i32", (b, t))],
+        "outputs": [
+            _io("logits", "f32", (b, t, cfg.vocab)),
+            _io("k_cache", "f32", kv),
+            _io("v_cache", "f32", kv),
+        ],
+        "meta": {"batch": b, "seq": t},
+    }
+
+
+def lower_decode(out_dir, params, cfg, b):
+    name = f"model_decode_b{b}"
+    spec = M.param_spec(cfg)
+    kv = (cfg.n_layers, b, cfg.max_seq, cfg.n_kv_heads, cfg.head_dim)
+
+    def fn(*args):
+        flat = args[: len(spec)]
+        token, pos, k_cache, v_cache = args[len(spec) :]
+        p = M.params_from_list(list(flat), cfg)
+        return M.decode_step(p, token, pos, k_cache, v_cache, cfg)
+
+    arg_specs = [_spec(s, d) for (_, s, d) in spec] + [
+        _spec((b,), "i32"),
+        _spec((b,), "i32"),  # per-slot positions (continuous batching)
+        _spec(kv, "f32"),
+        _spec(kv, "f32"),
+    ]
+    lowered = jax.jit(fn).lower(*arg_specs)
+    path = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    return {
+        "name": name,
+        "kind": "decode",
+        "hlo": path,
+        "inputs": [
+            _io("token", "i32", (b,)),
+            _io("pos", "i32", (b,)),
+            _io("k_cache", "f32", kv),
+            _io("v_cache", "f32", kv),
+        ],
+        "outputs": [
+            _io("logits", "f32", (b, cfg.vocab)),
+            _io("k_cache", "f32", kv),
+            _io("v_cache", "f32", kv),
+        ],
+        "meta": {"batch": b},
+    }
+
+
+def write_golden(out_dir, rng):
+    """Cross-language vectors: rust bitmm must reproduce these exactly."""
+    cases = []
+    for (m, k, n), (nw, nx) in [
+        ((4, 64, 4), (1, 1)),
+        ((3, 32, 5), (2, 2)),
+        ((8, 96, 6), (3, 4)),
+        ((5, 40, 7), (4, 3)),  # K not a multiple of 32
+    ]:
+        wc = rng.integers(0, 1 << nw, (m, k)).astype(np.uint32)
+        xc_ = rng.integers(0, 1 << nx, (k, n)).astype(np.uint32)
+        y = np.asarray(dense_matmul_ref(jnp.asarray(wc), jnp.asarray(xc_), nw, nx))
+        cases.append(
+            {
+                "m": m,
+                "k": k,
+                "n": n,
+                "nw": nw,
+                "nx": nx,
+                "w_code": wc.flatten().tolist(),
+                "x_code": xc_.flatten().tolist(),
+                "y": y.flatten().tolist(),
+            }
+        )
+    with open(os.path.join(out_dir, "golden_apmm.json"), "w") as f:
+        json.dump({"cases": cases}, f)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-model", action="store_true", help="GEMM artifacts only (fast)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    rng = np.random.default_rng(args.seed)
+    executables = []
+
+    for m, k, n in GEMM_SHAPES:
+        for nw, nx in GEMM_PRECISIONS:
+            executables.append(lower_apmm(args.out, m, k, n, nw, nx))
+            print(f"lowered {executables[-1]['name']}")
+
+    cfg = M.MINI
+    manifest = {
+        "version": 1,
+        "model": None,
+        "executables": executables,
+    }
+    if not args.skip_model:
+        params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
+        weight_entries = write_weights(args.out, params, cfg)
+        manifest["model"] = {
+            "config": {
+                "vocab": cfg.vocab,
+                "dim": cfg.dim,
+                "n_layers": cfg.n_layers,
+                "n_heads": cfg.n_heads,
+                "n_kv_heads": cfg.n_kv_heads,
+                "ffn": cfg.ffn,
+                "max_seq": cfg.max_seq,
+                "nw": cfg.nw,
+                "nx": cfg.nx,
+            },
+            "weights_file": "weights.bin",
+            "weights": weight_entries,
+        }
+        for b, t in PREFILL_BATCHES:
+            executables.append(lower_prefill(args.out, params, cfg, b, t))
+            print(f"lowered {executables[-1]['name']}")
+        for b in DECODE_BATCHES:
+            executables.append(lower_decode(args.out, params, cfg, b))
+            print(f"lowered {executables[-1]['name']}")
+
+    write_golden(args.out, rng)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(executables)} executables to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

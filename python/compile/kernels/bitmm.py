@@ -1,0 +1,186 @@
+"""L1 Pallas kernel: arbitrary-precision bipolar-INT MatMul.
+
+TPU rethink of the paper's tensor-core design (DESIGN.md Sec. 3):
+
+  * the BMMA-XOR 1-bit GEMM becomes an XNOR/popcount inner product over
+    K-packed ``uint32`` lanes (``lax.population_count`` on the VPU);
+  * the threadblock (b_m x b_n, K chunked by b_k) schedule becomes a
+    Pallas grid ``(M/bm, N/bn, Kp/bkp)`` whose BlockSpecs express the
+    HBM<->VMEM streaming the paper wrote with threadblocks;
+  * Sec. 4.2's "recover in shared memory, never in global memory" becomes
+    "recover on the VMEM-resident accumulator inside the kernel" -- the
+    shift-add over all n_w*n_x plane pairs happens on the output block
+    before it is ever written back;
+  * Sec. 4.2 (4)'s fragment reuse (one weight plane against all activation
+    planes) is the kernel's loop order: outer over weight planes, inner
+    over activation planes;
+  * Sec. 4.1's plane concatenation: each operand arrives as ONE packed
+    array ``(n_planes, rows, K/32)`` streamed by a single BlockSpec.
+
+Operand layout
+--------------
+  wp : uint32 (n_w, M, Kp)   weight bit planes, packed along K (LSB-first
+                             lanes), plane i = bit i of the bipolar code.
+  xp : uint32 (n_x, N, Kp)   activation planes, N-major (i.e. X^T) so the
+                             XOR runs along the contiguous K axis.
+  out: int32  (M, N)
+
+Math (Sec. 3.2): with bipolar decode v = sum_i (2 b_i - 1) 2^i,
+
+  Y = C - 2 * sum_{i,j} 2^{i+j} popc(W_i ^ X_j),
+  C = K * (2^{n_w} - 1) * (2^{n_x} - 1).
+
+Zero-padding K (in whole 32-bit words, zeros in BOTH operands) adds
+XOR = 0 -> popc 0, so only the *logical* K enters through C and padding is
+exact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from compile.quant import pack_along_k, quantize_pack_activations
+
+__all__ = ["apmm_packed", "apmm", "quantized_linear", "default_blocks"]
+
+
+def _apmm_kernel(w_ref, x_ref, o_ref, *, nw: int, nx: int, c_const: int):
+    """One (bm, bn) output block, one bkp-wide K chunk.
+
+    Grid = (M/bm, N/bn, Kp/bkp); the output block stays resident in VMEM
+    across the K dimension (innermost grid axis) and accumulates -- the
+    recovery never leaves fast memory.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():  # bake the bipolar constant in once per output block
+        o_ref[...] = jnp.full(o_ref.shape, c_const, dtype=jnp.int32)
+
+    acc = jnp.zeros(o_ref.shape, dtype=jnp.int32)
+    for i in range(nw):  # one weight plane ...
+        w_i = w_ref[i]  # (bm, bkp) uint32
+        for j in range(nx):  # ... against ALL activation planes (Sec 4.2 (4))
+            x_j = x_ref[j]  # (bn, bkp) uint32
+            xor = jnp.bitwise_xor(w_i[:, None, :], x_j[None, :, :])
+            popc = jnp.sum(lax.population_count(xor).astype(jnp.int32), axis=-1)
+            acc = acc + (popc << (i + j))  # activation+weight shift fused
+
+    o_ref[...] = o_ref[...] - 2 * acc
+
+
+def default_blocks(m: int, n: int, kp: int) -> tuple[int, int, int]:
+    """Pick (bm, bn, bkp) balancing VMEM footprint vs grid overhead.
+
+    Footprint per step ~= (nw*bm + nx*bn)*bkp*4 bytes of planes plus the
+    bm*bn*4 accumulator plus the bm*bn*bkp*4 XOR intermediate; 64x64x16 is
+    ~300 KB -- comfortably double-bufferable in 16 MB VMEM.
+    """
+
+    def pick(dim: int, cap: int) -> int:
+        b = 1
+        while b * 2 <= min(dim, cap):
+            b *= 2
+        return b
+
+    return pick(m, 64), pick(n, 64), pick(kp, 16)
+
+
+def _pad_axis(a, axis: int, mult: int):
+    size = a.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k_logical", "nw", "nx", "blocks", "interpret")
+)
+def apmm_packed(wp, xp, *, k_logical: int, nw: int, nx: int, blocks=None, interpret=True):
+    """Arbitrary-precision MatMul on pre-packed bit planes.
+
+    wp: uint32 (nw, M, Kp); xp: uint32 (nx, N, Kp); returns int32 (M, N).
+    ``k_logical`` is the true reduction length (<= Kp*32); the difference
+    must be zero-padded words in both operands.
+    """
+    if wp.shape[0] != nw or xp.shape[0] != nx:
+        raise ValueError("plane-count mismatch between operands and nw/nx")
+    if wp.shape[2] != xp.shape[2]:
+        raise ValueError(f"packed-K mismatch: {wp.shape} vs {xp.shape}")
+    m, n, kp = wp.shape[1], xp.shape[1], wp.shape[2]
+    bm, bn, bkp = blocks if blocks is not None else default_blocks(m, n, kp)
+
+    wp = _pad_axis(wp, 1, bm)
+    xp = _pad_axis(xp, 1, bn)
+    wp = _pad_axis(wp, 2, bkp)
+    xp = _pad_axis(xp, 2, bkp)
+    mp, np_, kpp = wp.shape[1], xp.shape[1], wp.shape[2]
+
+    c_const = k_logical * ((1 << nw) - 1) * ((1 << nx) - 1)
+    kernel = functools.partial(_apmm_kernel, nw=nw, nx=nx, c_const=c_const)
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // bm, np_ // bn, kpp // bkp),
+        in_specs=[
+            pl.BlockSpec((nw, bm, bkp), lambda im, jn, ik: (0, im, ik)),
+            pl.BlockSpec((nx, bn, bkp), lambda im, jn, ik: (0, jn, ik)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda im, jn, ik: (im, jn)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=interpret,
+    )(wp, xp)
+    return out[:m, :n]
+
+
+def apmm(w_code, x_code, nw: int, nx: int, blocks=None, interpret=True):
+    """End-to-end integer AP-MatMul from unpacked codes.
+
+    w_code: uint32 (M, K) bipolar codes; x_code: uint32 (K, N).
+    Packs along K (padding K to a multiple of 32 with zero bits is exact
+    only through the C-constant trick, see module docstring) and runs the
+    kernel.  Returns int32 (M, N).
+    """
+    k = w_code.shape[1]
+    if x_code.shape[0] != k:
+        raise ValueError(f"inner-dim mismatch: {w_code.shape} vs {x_code.shape}")
+    w_padded = _pad_axis(w_code, 1, 32)
+    x_padded = _pad_axis(x_code.T, 1, 32)  # N-major layout for the kernel
+    wp = pack_along_k(w_padded, nw)
+    xp = pack_along_k(x_padded, nx)
+    # zero-pad words hold code 0; code 0 decodes to -qmax, NOT zero -- but
+    # the XOR identity only ever sees equal padding in both operands, whose
+    # popcount contribution is zero, so correctness rides on k_logical.
+    return apmm_packed(
+        wp, xp, k_logical=k, nw=nw, nx=nx, blocks=blocks, interpret=interpret
+    )
+
+
+def quantized_linear(x, wp, w_scale, *, k_logical: int, nw: int, nx: int, interpret=True):
+    """Float->float quantized linear layer: y = x @ W^T (W stored packed).
+
+    x: float (M, K); wp: uint32 (nw, N, Kp) pre-packed weight planes
+    (output-channel-major); w_scale: float (N,) per-channel scales.
+    Activations are dynamically quantized per-row to nx-bit bipolar.
+    Returns float32 (M, N).
+
+    Padding order matters: quantize on the TRUE K first, then zero-pad the
+    *codes* to a word boundary -- padding the floats first would quantize
+    0.0 to a nonzero bipolar code and corrupt the XOR identity.
+    """
+    from compile.quant import encode_bipolar, quantize_bipolar
+
+    xq, x_scale = quantize_bipolar(x, nx, axis=-1)  # (M, K), (M, 1)
+    x_code = _pad_axis(encode_bipolar(xq, nx), 1, 32)
+    xp = pack_along_k(x_code, nx)  # (nx, M, Kp)
+    # apmm_packed(wp (nw,N,Kp), xp (nx,M,Kp)) -> (N, M); transpose to (M, N)
+    y_int = apmm_packed(
+        wp, xp, k_logical=k_logical, nw=nw, nx=nx, interpret=interpret
+    ).T
+    return y_int.astype(jnp.float32) * x_scale * jnp.reshape(w_scale, (1, -1))

@@ -1,0 +1,79 @@
+"""Pure-jnp correctness oracles for the arbitrary-precision MatMul.
+
+Two independent references:
+
+  * ``dense_matmul_ref``  -- decode both operands to plain int32 and matmul.
+    The ground truth: no bit tricks at all.
+  * ``bitwise_matmul_ref`` -- the paper's Sec. 3.2 pipeline written naively
+    (decompose -> n_w*n_x 1-bit XOR/popcount GEMMs -> shift-add recovery)
+    but without packing or tiling.  Validates the *math* of the recovery
+    dataflow in isolation from the Pallas kernel's memory layout.
+
+The Pallas kernel (bitmm.py) must agree with both.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.quant import decode_bipolar, encode_bipolar, planes_from_code, quantize_bipolar
+
+__all__ = [
+    "dense_matmul_ref",
+    "bitwise_matmul_ref",
+    "popcount_dot_ref",
+    "quantized_linear_ref",
+]
+
+
+def dense_matmul_ref(w_code, x_code, nw: int, nx: int):
+    """Ground truth: decode bipolar codes to int values, plain int matmul.
+
+    w_code: uint32 (M, K) codes in [0, 2^nw);  x_code: uint32 (K, N).
+    Returns int32 (M, N).
+    """
+    w = decode_bipolar(w_code, nw)
+    x = decode_bipolar(x_code, nx)
+    return jnp.matmul(w, x, preferred_element_type=jnp.int32)
+
+
+def popcount_dot_ref(w_plane, x_plane):
+    """1-bit bipolar GEMM via the XOR/popcount identity.
+
+    w_plane: {0,1} (M, K); x_plane: {0,1} (K, N).
+    dot_pm1[m, n] = K - 2 * popcount(w[m, :] XOR x[:, n]).
+    Emulates the tensor-core BMMA-XOR op + its scalar recovery.
+    """
+    k = w_plane.shape[-1]
+    xor = jnp.bitwise_xor(w_plane[:, None, :], x_plane.T[None, :, :])
+    pop = jnp.sum(xor.astype(jnp.int32), axis=-1)
+    return k - 2 * pop
+
+
+def bitwise_matmul_ref(w_code, x_code, nw: int, nx: int):
+    """The paper's decompose / 1-bit-GEMM / recover pipeline, naively.
+
+    Y = sum_{i,j} 2^{i+j} * D_ij   with   D_ij = K - 2*popc(W_i ^ X_j).
+    """
+    w_planes = planes_from_code(w_code, nw)  # (nw, M, K)
+    x_planes = planes_from_code(x_code, nx)  # (nx, K, N)
+    m, n = w_code.shape[0], x_code.shape[1]
+    y = jnp.zeros((m, n), dtype=jnp.int32)
+    for i in range(nw):
+        for j in range(nx):
+            d_ij = popcount_dot_ref(w_planes[i], x_planes[j])
+            y = y + (d_ij << (i + j))
+    return y
+
+
+def quantized_linear_ref(x, w_code, w_scale, nw: int, nx: int):
+    """Float-in/float-out reference for the quantized linear layer.
+
+    x: float (M, K); w_code: uint32 (N, K) codes (output-channel-major);
+    w_scale: (N,) or scalar.  Dynamically quantizes x per-row to nx-bit
+    bipolar, then y = (Xq Wq^T) * x_scale * w_scale.
+    """
+    xq, x_scale = quantize_bipolar(x, nx, axis=-1)  # (M, K), (M, 1)
+    x_code = encode_bipolar(xq, nx)
+    y_int = dense_matmul_ref(w_code, x_code.T, nw, nx)  # (N, M)
+    return (y_int.T.astype(jnp.float32) * x_scale) * jnp.reshape(w_scale, (1, -1))

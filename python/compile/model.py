@@ -1,0 +1,311 @@
+"""L2: Llama-style decoder with all projections through the AP kernel.
+
+Build-time JAX model.  Every linear layer stores its weights as bipolar
+bit planes (packed uint32, Sec. 4.1 layout) + per-output-channel scales
+and runs through the L1 Pallas kernel; activations are dynamically
+quantized per token.  Attention math (softmax, RoPE, cache) stays f32.
+
+Entry points lowered by aot.py:
+
+  * ``prefill(params, tokens)``          -> logits, k_cache, v_cache
+  * ``decode_step(params, token, pos, k_cache, v_cache)`` -> logits, caches
+
+Weights are *parameters* of the lowered HLO (not constants): the Rust
+runtime loads them once from ``artifacts/weights.bin`` and keeps them
+device-resident.  ``param_spec`` fixes the flat ordering shared with the
+manifest.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.bitmm import quantized_linear
+from compile.quant import encode_bipolar, pack_along_k, quantize_bipolar
+
+__all__ = [
+    "ModelConfig",
+    "MINI",
+    "MICRO",
+    "init_params",
+    "param_spec",
+    "params_to_list",
+    "params_from_list",
+    "prefill",
+    "decode_step",
+]
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + precision config (the W{nw}A{nx} pair is first-class)."""
+
+    vocab: int = 1024
+    dim: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    n_kv_heads: int = 4
+    ffn: int = 512
+    max_seq: int = 128
+    nw: int = 2  # weight bits  (bipolar)
+    nx: int = 2  # activation bits (bipolar)
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.n_heads
+
+    @property
+    def param_count(self) -> int:
+        """Dense-equivalent parameter count (before bit packing)."""
+        per_layer = (
+            self.dim * self.dim  # q
+            + 2 * self.dim * (self.n_kv_heads * self.head_dim)  # k, v
+            + self.dim * self.dim  # o
+            + 3 * self.dim * self.ffn  # gate, up, down
+            + 2 * self.dim  # norms
+        )
+        return self.vocab * self.dim * 2 + self.n_layers * per_layer + self.dim
+
+
+# Presets: MICRO for fast tests, MINI for the end-to-end serving example.
+MICRO = ModelConfig(vocab=256, dim=64, n_layers=2, n_heads=4, n_kv_heads=2, ffn=128, max_seq=32)
+MINI = ModelConfig()
+
+
+def _kp(k: int) -> int:
+    return (k + 31) // 32
+
+
+def _quantize_weight(key, shape, nw: int):
+    """Random-init a dense weight, quantize to bipolar, return packed planes
+    + per-row (output-channel) scales."""
+    out, k = shape
+    w = jax.random.normal(key, (out, k), dtype=jnp.float32) / np.sqrt(k)
+    q, scale = quantize_bipolar(w, nw, axis=-1)
+    code = encode_bipolar(q, nw)
+    code = jnp.pad(code, ((0, 0), (0, (-k) % 32)))
+    return {
+        "planes": pack_along_k(code, nw),  # (nw, out, Kp)
+        "scale": scale.reshape(-1),  # (out,)
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    keys = jax.random.split(key, 3 + cfg.n_layers)
+    kvd = cfg.n_kv_heads * cfg.head_dim
+    params = {
+        "tok_emb": jax.random.normal(keys[0], (cfg.vocab, cfg.dim), jnp.float32) * 0.02,
+        "final_norm": jnp.ones((cfg.dim,), jnp.float32),
+        "lm_head": _quantize_weight(keys[1], (cfg.vocab, cfg.dim), cfg.nw),
+        "layers": [],
+    }
+    for li in range(cfg.n_layers):
+        lk = jax.random.split(keys[3 + li], 7)
+        params["layers"].append(
+            {
+                "attn_norm": jnp.ones((cfg.dim,), jnp.float32),
+                "q": _quantize_weight(lk[0], (cfg.dim, cfg.dim), cfg.nw),
+                "k": _quantize_weight(lk[1], (kvd, cfg.dim), cfg.nw),
+                "v": _quantize_weight(lk[2], (kvd, cfg.dim), cfg.nw),
+                "o": _quantize_weight(lk[3], (cfg.dim, cfg.dim), cfg.nw),
+                "mlp_norm": jnp.ones((cfg.dim,), jnp.float32),
+                "gate": _quantize_weight(lk[4], (cfg.ffn, cfg.dim), cfg.nw),
+                "up": _quantize_weight(lk[5], (cfg.ffn, cfg.dim), cfg.nw),
+                "down": _quantize_weight(lk[6], (cfg.dim, cfg.ffn), cfg.nw),
+            }
+        )
+    return params
+
+
+def param_spec(cfg: ModelConfig):
+    """Flat (name, shape, dtype) list -- THE ordering contract with Rust.
+
+    The manifest writes this list; the Rust runtime feeds weight literals
+    in exactly this order ahead of the activation arguments.
+    """
+    kvd = cfg.n_kv_heads * cfg.head_dim
+
+    def qw(name, out, k):
+        return [
+            (f"{name}.planes", (cfg.nw, out, _kp(k)), "u32"),
+            (f"{name}.scale", (out,), "f32"),
+        ]
+
+    spec = [
+        ("tok_emb", (cfg.vocab, cfg.dim), "f32"),
+        ("final_norm", (cfg.dim,), "f32"),
+        *qw("lm_head", cfg.vocab, cfg.dim),
+    ]
+    for li in range(cfg.n_layers):
+        p = f"layers.{li}"
+        spec += [(f"{p}.attn_norm", (cfg.dim,), "f32")]
+        spec += qw(f"{p}.q", cfg.dim, cfg.dim)
+        spec += qw(f"{p}.k", kvd, cfg.dim)
+        spec += qw(f"{p}.v", kvd, cfg.dim)
+        spec += qw(f"{p}.o", cfg.dim, cfg.dim)
+        spec += [(f"{p}.mlp_norm", (cfg.dim,), "f32")]
+        spec += qw(f"{p}.gate", cfg.ffn, cfg.dim)
+        spec += qw(f"{p}.up", cfg.ffn, cfg.dim)
+        spec += qw(f"{p}.down", cfg.dim, cfg.ffn)
+    return spec
+
+
+def params_to_list(params, cfg: ModelConfig):
+    out = [params["tok_emb"], params["final_norm"], params["lm_head"]["planes"], params["lm_head"]["scale"]]
+    for layer in params["layers"]:
+        out.append(layer["attn_norm"])
+        for name in ("q", "k", "v", "o"):
+            out += [layer[name]["planes"], layer[name]["scale"]]
+        out.append(layer["mlp_norm"])
+        for name in ("gate", "up", "down"):
+            out += [layer[name]["planes"], layer[name]["scale"]]
+    return out
+
+
+def params_from_list(flat, cfg: ModelConfig):
+    it = iter(flat)
+
+    def qw():
+        return {"planes": next(it), "scale": next(it)}
+
+    params = {
+        "tok_emb": next(it),
+        "final_norm": next(it),
+        "lm_head": qw(),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        layer = {"attn_norm": next(it)}
+        for name in ("q", "k", "v", "o"):
+            layer[name] = qw()
+        layer["mlp_norm"] = next(it)
+        for name in ("gate", "up", "down"):
+            layer[name] = qw()
+        params["layers"].append(layer)
+    return params
+
+
+# ---------------------------------------------------------------- forward --
+
+
+def _rmsnorm(x, w, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _qlinear(x2d, w, cfg: ModelConfig, k_logical: int, interpret=True):
+    """(M, K) float -> (M, out) float through the AP kernel."""
+    return quantized_linear(
+        x2d, w["planes"], w["scale"], k_logical=k_logical, nw=cfg.nw, nx=cfg.nx, interpret=interpret
+    )
+
+
+def _rope(x, pos, theta: float):
+    """x: (B, S, H, Dh); pos: (B, S) absolute positions (per batch row —
+    decode groups mix sequences at different positions)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = pos[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention(q, k, v, mask):
+    """q: (B,S,H,Dh); k,v: (B,S_kv,Hkv,Dh); mask additive, broadcastable
+    to (B, 1, S, S_kv)."""
+    b, s, h, dh = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k) / np.sqrt(dh)
+    scores = scores + mask
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def _block(x, layer, cfg: ModelConfig, pos, k_slice, v_slice, mask, interpret=True):
+    """One transformer block over S tokens given S_kv cached K/V (which
+    already include this step's keys).  x: (B, S, D); pos: (B, S)."""
+    b, s, d = x.shape
+    h = _rmsnorm(x, layer["attn_norm"])
+    h2 = h.reshape(b * s, d)
+    q = _qlinear(h2, layer["q"], cfg, d, interpret).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    q = _rope(q, pos, cfg.rope_theta)
+    attn = _attention(q, k_slice, v_slice, mask)
+    attn = _qlinear(attn.reshape(b * s, d), layer["o"], cfg, d, interpret).reshape(b, s, d)
+    x = x + attn
+    h = _rmsnorm(x, layer["mlp_norm"])
+    h2 = h.reshape(b * s, d)
+    gate = _qlinear(h2, layer["gate"], cfg, d, interpret)
+    up = _qlinear(h2, layer["up"], cfg, d, interpret)
+    mlp = _qlinear(jax.nn.silu(gate) * up, layer["down"], cfg, cfg.ffn, interpret)
+    return x + mlp.reshape(b, s, d)
+
+
+def _project_kv(h2, layer, cfg, b, s, pos, interpret=True):
+    kvd = cfg.n_kv_heads * cfg.head_dim
+    k = _qlinear(h2, layer["k"], cfg, cfg.dim, interpret).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = _qlinear(h2, layer["v"], cfg, cfg.dim, interpret).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    return _rope(k, pos, cfg.rope_theta), v
+
+
+def prefill(params, tokens, cfg: ModelConfig, interpret=True):
+    """tokens: int32 (B, T).  Returns (logits (B,T,V), k_cache, v_cache)
+    with caches of shape (L, B, max_seq, Hkv, Dh), positions [0, T) filled."""
+    b, t = tokens.shape
+    x = params["tok_emb"][tokens]  # (B, T, D)
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    kvshape = (cfg.n_layers, b, cfg.max_seq, cfg.n_kv_heads, cfg.head_dim)
+    k_cache = jnp.zeros(kvshape, jnp.float32)
+    v_cache = jnp.zeros(kvshape, jnp.float32)
+    causal = jnp.where(
+        jnp.arange(t)[:, None] >= jnp.arange(t)[None, :], 0.0, -1e9
+    ).astype(jnp.float32)[None, None, :, :]
+    for li, layer in enumerate(params["layers"]):
+        h = _rmsnorm(x, layer["attn_norm"]).reshape(b * t, cfg.dim)
+        k_new, v_new = _project_kv(h, layer, cfg, b, t, pos, interpret)
+        k_cache = k_cache.at[li, :, :t].set(k_new)
+        v_cache = v_cache.at[li, :, :t].set(v_new)
+        x = _block(x, layer, cfg, pos, k_new, v_new, causal, interpret)
+    x = _rmsnorm(x, params["final_norm"])
+    logits = _qlinear(x.reshape(b * t, cfg.dim), params["lm_head"], cfg, cfg.dim, interpret)
+    return logits.reshape(b, t, cfg.vocab), k_cache, v_cache
+
+
+def decode_step(params, token, pos, k_cache, v_cache, cfg: ModelConfig, interpret=True):
+    """One autoregressive step with PER-SLOT positions (the continuous-
+    batching contract: a decode group may mix sequences at different
+    depths).
+
+    token: int32 (B,); pos: int32 (B,) — the cache index each row writes;
+    caches: (L, B, max_seq, Hkv, Dh).  Returns (logits (B,V), k_cache,
+    v_cache) with row b updated at pos[b].
+    """
+    b = token.shape[0]
+    x = params["tok_emb"][token][:, None, :]  # (B, 1, D)
+    pos = pos.astype(jnp.int32)
+    pos_bs = pos[:, None]  # (B, 1)
+    # row b attends to [0, pos[b]]; future slots masked
+    mask = jnp.where(
+        jnp.arange(cfg.max_seq)[None, :] <= pos[:, None], 0.0, -1e9
+    ).astype(jnp.float32)[:, None, None, :]
+    rows = jnp.arange(b)
+    for li, layer in enumerate(params["layers"]):
+        h = _rmsnorm(x, layer["attn_norm"]).reshape(b, cfg.dim)
+        k_new, v_new = _project_kv(h, layer, cfg, b, 1, pos_bs, interpret)
+        # scatter row b's new K/V at its own position
+        k_cache = k_cache.at[li, rows, pos].set(k_new[:, 0])
+        v_cache = v_cache.at[li, rows, pos].set(v_new[:, 0])
+        x = _block(x, layer, cfg, pos_bs, k_cache[li], v_cache[li], mask, interpret)
+    x = _rmsnorm(x, params["final_norm"])
+    logits = _qlinear(x.reshape(b, cfg.dim), params["lm_head"], cfg, cfg.dim, interpret)
+    return logits, k_cache, v_cache

@@ -1,0 +1,130 @@
+"""Bipolar-INT quantization utilities (L2, build-time).
+
+The paper's bipolar-INT format (Sec. 3.1): an n-bit word x = x_{n-1}..x_0
+decodes as
+
+    (x)_D = sum_i (2*x_i - 1) * 2^i
+
+i.e. every bit is +-1 weighted by 2^i.  The representable set is the 2^n
+*odd* integers in [-(2^n - 1), 2^n - 1] -- symmetric, zero-point-free, and
+every bit plane obeys the same sign rule (no special-cased MSB as in
+two's-complement, no zero-point correction as in unsigned quantization).
+
+Encoding: for an odd integer v in range,
+
+    code = (v + (2^n - 1)) / 2          (an unsigned n-bit integer)
+
+and the bit planes of `code` are exactly the x_i above.
+
+This module mirrors rust/src/quant/ bit-for-bit; golden vectors in the
+test suites keep the two in sync.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+__all__ = [
+    "bipolar_qmax",
+    "quantize_bipolar",
+    "dequantize_bipolar",
+    "encode_bipolar",
+    "decode_bipolar",
+    "planes_from_code",
+    "pack_planes",
+    "pack_along_k",
+    "quantize_pack_activations",
+]
+
+
+def bipolar_qmax(bits: int) -> int:
+    """Largest magnitude representable by an n-bit bipolar-INT (2^n - 1)."""
+    if not 1 <= bits <= 16:
+        raise ValueError(f"bits must be in 1..16, got {bits}")
+    return (1 << bits) - 1
+
+
+def quantize_bipolar(x, bits: int, axis=None):
+    """Symmetric round-to-nearest-odd quantization onto the bipolar grid.
+
+    Returns (q, scale) with x ~= q * scale, q odd integers in
+    [-(2^n-1), 2^n-1].  `axis` selects per-channel scales (reduced over the
+    complementary axes); None means per-tensor.
+    """
+    qmax = bipolar_qmax(bits)
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    t = x / scale
+    # nearest odd integer: 2*round((t-1)/2) + 1
+    q = 2.0 * jnp.round((t - 1.0) / 2.0) + 1.0
+    q = jnp.clip(q, -qmax, qmax)
+    return q.astype(jnp.int32), scale
+
+
+def dequantize_bipolar(q, scale):
+    """Inverse of quantize_bipolar (up to rounding)."""
+    return q.astype(jnp.float32) * scale
+
+
+def encode_bipolar(q, bits: int):
+    """Odd integer values -> unsigned n-bit codes: code = (v + qmax) >> 1."""
+    qmax = bipolar_qmax(bits)
+    return ((q + qmax) >> 1).astype(jnp.uint32)
+
+
+def decode_bipolar(code, bits: int):
+    """Unsigned n-bit codes -> odd integer values: v = 2*code - qmax."""
+    qmax = bipolar_qmax(bits)
+    return (2 * code.astype(jnp.int32)) - qmax
+
+
+def planes_from_code(code, bits: int):
+    """Split codes into bit planes: returns uint32 array (bits, *code.shape)
+    with planes[i] = (code >> i) & 1 (LSB first)."""
+    shifts = jnp.arange(bits, dtype=jnp.uint32).reshape((bits,) + (1,) * code.ndim)
+    return (code[None, ...] >> shifts) & jnp.uint32(1)
+
+
+@functools.partial(jnp.vectorize, signature="(k)->(p)")
+def _pack32(bits_row):
+    """Pack a length-K row of {0,1} into K/32 uint32 words, LSB-first lanes."""
+    k = bits_row.shape[0]
+    words = bits_row.reshape(k // 32, 32).astype(jnp.uint32)
+    lanes = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(words << lanes, axis=-1, dtype=jnp.uint32)
+
+
+def pack_planes(planes):
+    """Pack bit planes along the last axis into uint32 words.
+
+    planes: uint32 {0,1}, shape (..., K) with K % 32 == 0.
+    Returns uint32 shape (..., K//32).  Bit b of word w corresponds to
+    column w*32 + b (LSB-first) -- the paper's Sec. 4.1 step-2 reassembly
+    into the GPU-native 32-bit unsigned format.
+    """
+    k = planes.shape[-1]
+    if k % 32 != 0:
+        raise ValueError(f"K ({k}) must be a multiple of 32")
+    return _pack32(planes)
+
+
+def pack_along_k(code, bits: int):
+    """codes (..., K) -> packed planes (bits, ..., K//32), the kernel's
+    operand layout (decompose -> reassemble -> concatenate, Sec. 4.1)."""
+    return pack_planes(planes_from_code(code, bits))
+
+
+def quantize_pack_activations(x, bits: int):
+    """Dynamic per-row activation quantization + packing.
+
+    x: float (M, K) with K % 32 == 0.  Returns (packed, scale):
+    packed uint32 (bits, M, K//32), scale float (M, 1).
+    """
+    q, scale = quantize_bipolar(x, bits, axis=-1)
+    code = encode_bipolar(q, bits)
+    return pack_along_k(code, bits), scale

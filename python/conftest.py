@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Make `compile.*` importable regardless of pytest rootdir.
+sys.path.insert(0, os.path.dirname(__file__))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,79 @@
+"""AOT path: HLO text emission, manifest integrity, golden vectors."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import compile.aot as A
+from compile import model as M
+from compile.kernels.ref import dense_matmul_ref
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_smoke(tmp_path):
+    entry = A.lower_apmm(str(tmp_path), 8, 64, 8, 2, 2)
+    text = (tmp_path / entry["hlo"]).read_text()
+    assert text.startswith("HloModule"), "must be HLO text, not a proto"
+    assert "ENTRY" in text
+    # parameters in declared order: wp then xp
+    assert entry["inputs"][0]["name"] == "wp"
+    assert entry["inputs"][0]["shape"] == [2, 8, 2]
+
+
+def test_weights_file_roundtrip(tmp_path):
+    cfg = M.MICRO
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    entries = A.write_weights(str(tmp_path), params, cfg)
+    blob = (tmp_path / "weights.bin").read_bytes()
+    flat = M.params_to_list(params, cfg)
+    assert len(entries) == len(flat)
+    total = sum(e["nbytes"] for e in entries)
+    assert total == len(blob)
+    for e, arr in zip(entries, flat):
+        raw = blob[e["offset"] : e["offset"] + e["nbytes"]]
+        got = np.frombuffer(raw, dtype=A.DTYPE_MAP[e["dtype"]]).reshape(e["shape"])
+        np.testing.assert_array_equal(got, np.asarray(arr))
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")), reason="run `make artifacts` first")
+def test_manifest_integrity():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    names = set()
+    for exe in man["executables"]:
+        assert exe["name"] not in names, "duplicate executable name"
+        names.add(exe["name"])
+        assert os.path.exists(os.path.join(ART, exe["hlo"])), exe["hlo"]
+        for io in exe["inputs"] + exe["outputs"]:
+            assert io["dtype"] in A.DTYPE_MAP
+    if man["model"] is not None:
+        wf = os.path.join(ART, man["model"]["weights_file"])
+        size = os.path.getsize(wf)
+        last = man["model"]["weights"][-1]
+        assert last["offset"] + last["nbytes"] == size
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "golden_apmm.json")), reason="run `make artifacts` first")
+def test_golden_vectors_recompute():
+    with open(os.path.join(ART, "golden_apmm.json")) as f:
+        golden = json.load(f)
+    assert len(golden["cases"]) >= 4
+    for case in golden["cases"]:
+        m, k, n = case["m"], case["k"], case["n"]
+        wc = jnp.asarray(np.array(case["w_code"], np.uint32).reshape(m, k))
+        xc = jnp.asarray(np.array(case["x_code"], np.uint32).reshape(k, n))
+        y = np.asarray(dense_matmul_ref(wc, xc, case["nw"], case["nx"]))
+        np.testing.assert_array_equal(y.flatten(), np.array(case["y"], np.int32))
+
+
+def test_gemm_grid_covers_paper_precisions():
+    """The artifact grid must include the paper's headline configs."""
+    assert (1, 2) in A.GEMM_PRECISIONS  # W1A2
+    assert (2, 2) in A.GEMM_PRECISIONS  # W2A2
+    assert (3, 4) in A.GEMM_PRECISIONS  # W3A4

@@ -1,0 +1,168 @@
+"""L1 Pallas kernel vs pure-jnp oracles -- the core correctness signal.
+
+The kernel must agree EXACTLY (integer math) with both the dense decoded
+matmul and the naive bit-wise decompose/recover pipeline, across shapes
+(including non-multiples of the tile and of 32) and precisions 1..6 bits.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.bitmm import apmm, apmm_packed, default_blocks
+from compile.kernels.ref import (
+    bitwise_matmul_ref,
+    dense_matmul_ref,
+    popcount_dot_ref,
+    quantized_linear_ref,
+)
+from compile.quant import encode_bipolar, pack_along_k, quantize_bipolar
+
+
+def _codes(rng, m, k, n, nw, nx):
+    wc = jnp.asarray(rng.integers(0, 1 << nw, (m, k)).astype(np.uint32))
+    xc = jnp.asarray(rng.integers(0, 1 << nx, (k, n)).astype(np.uint32))
+    return wc, xc
+
+
+# ------------------------------------------------------------- unit tests --
+
+
+def test_popcount_dot_identity():
+    """K - 2*popc(xor) == the true +-1 dot product."""
+    rng = np.random.default_rng(0)
+    w = rng.integers(0, 2, (3, 64)).astype(np.uint32)
+    x = rng.integers(0, 2, (64, 5)).astype(np.uint32)
+    got = np.asarray(popcount_dot_ref(jnp.asarray(w), jnp.asarray(x)))
+    want = (2 * w.astype(np.int64) - 1) @ (2 * x.astype(np.int64) - 1)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_bitwise_ref_matches_dense():
+    rng = np.random.default_rng(1)
+    for (m, k, n, nw, nx) in [(4, 32, 4, 1, 1), (3, 64, 5, 2, 3), (6, 96, 2, 4, 4)]:
+        wc, xc = _codes(rng, m, k, n, nw, nx)
+        np.testing.assert_array_equal(
+            np.asarray(bitwise_matmul_ref(wc, xc, nw, nx)),
+            np.asarray(dense_matmul_ref(wc, xc, nw, nx)),
+        )
+
+
+@pytest.mark.parametrize(
+    "m,k,n,nw,nx",
+    [
+        (8, 64, 8, 1, 1),
+        (8, 64, 8, 2, 2),
+        (16, 128, 16, 3, 4),
+        (1, 32, 1, 1, 2),  # degenerate 1x1 output
+        (5, 96, 7, 2, 2),  # non-pow2 M/N
+        (4, 40, 6, 3, 3),  # K not a multiple of 32 (padding path)
+        (2, 33, 3, 2, 2),  # K barely over a word
+        (7, 32, 9, 6, 5),  # wide precisions
+    ],
+)
+def test_kernel_exact_vs_dense(m, k, n, nw, nx):
+    rng = np.random.default_rng(42 + m + k + n)
+    wc, xc = _codes(rng, m, k, n, nw, nx)
+    np.testing.assert_array_equal(
+        np.asarray(apmm(wc, xc, nw, nx)),
+        np.asarray(dense_matmul_ref(wc, xc, nw, nx)),
+    )
+
+
+def test_kernel_multiblock_grid():
+    """Shapes forcing a >1 grid in every dimension."""
+    rng = np.random.default_rng(7)
+    m, k, n, nw, nx = 96, 2048, 80, 2, 2
+    wc, xc = _codes(rng, m, k, n, nw, nx)
+    got = np.asarray(apmm(wc, xc, nw, nx, blocks=(32, 16, 8)))
+    want = np.asarray(dense_matmul_ref(wc, xc, nw, nx))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_kernel_block_shape_invariance():
+    """Result must not depend on the BlockSpec tiling."""
+    rng = np.random.default_rng(8)
+    m, k, n, nw, nx = 32, 256, 32, 2, 3
+    wc, xc = _codes(rng, m, k, n, nw, nx)
+    want = np.asarray(dense_matmul_ref(wc, xc, nw, nx))
+    for blocks in [(32, 32, 8), (16, 16, 4), (8, 32, 2), (32, 8, 8)]:
+        got = np.asarray(apmm(wc, xc, nw, nx, blocks=blocks))
+        np.testing.assert_array_equal(got, want, err_msg=f"blocks={blocks}")
+
+
+def test_extreme_codes():
+    """All-zeros / all-ones codes (the +-qmax corners)."""
+    m, k, n, nw, nx = 4, 64, 4, 3, 3
+    for wfill in (0, (1 << nw) - 1):
+        for xfill in (0, (1 << nx) - 1):
+            wc = jnp.full((m, k), wfill, jnp.uint32)
+            xc = jnp.full((k, n), xfill, jnp.uint32)
+            np.testing.assert_array_equal(
+                np.asarray(apmm(wc, xc, nw, nx)),
+                np.asarray(dense_matmul_ref(wc, xc, nw, nx)),
+            )
+
+
+def test_default_blocks_divide_padded():
+    for m, n, kp in [(1, 1, 1), (64, 64, 16), (100, 3, 5), (4096, 4096, 128)]:
+        bm, bn, bkp = default_blocks(m, n, kp)
+        assert bm <= 64 and bn <= 64 and bkp <= 16
+        assert bm > 0 and bn > 0 and bkp > 0
+
+
+def test_packed_entrypoint_rejects_mismatch():
+    wp = jnp.zeros((2, 8, 4), jnp.uint32)
+    xp = jnp.zeros((2, 8, 5), jnp.uint32)
+    with pytest.raises(ValueError):
+        apmm_packed(wp, xp, k_logical=128, nw=2, nx=2)
+    with pytest.raises(ValueError):
+        apmm_packed(wp, wp, k_logical=128, nw=3, nx=2)
+
+
+# ------------------------------------------------------ hypothesis sweeps --
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 24),
+    k=st.integers(1, 96),
+    n=st.integers(1, 24),
+    nw=st.integers(1, 5),
+    nx=st.integers(1, 5),
+    seed=st.integers(0, 2**31),
+)
+def test_kernel_exact_hypothesis(m, k, n, nw, nx, seed):
+    rng = np.random.default_rng(seed)
+    wc, xc = _codes(rng, m, k, n, nw, nx)
+    np.testing.assert_array_equal(
+        np.asarray(apmm(wc, xc, nw, nx)),
+        np.asarray(dense_matmul_ref(wc, xc, nw, nx)),
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 8),
+    k=st.integers(16, 80),
+    n=st.integers(1, 12),
+    nw=st.integers(1, 4),
+    nx=st.integers(1, 4),
+    seed=st.integers(0, 2**31),
+)
+def test_quantized_linear_matches_ref(m, k, n, nw, nx, seed):
+    from compile.kernels.bitmm import quantized_linear
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
+    wq, ws = quantize_bipolar(w, nw, axis=-1)
+    w_code = encode_bipolar(wq, nw)
+    wp = pack_along_k(jnp.pad(w_code, ((0, 0), (0, (-k) % 32))), nw)
+    got = np.asarray(
+        quantized_linear(x, wp, ws.reshape(-1), k_logical=k, nw=nw, nx=nx)
+    )
+    want = np.asarray(quantized_linear_ref(x, w_code, ws.reshape(-1), nw, nx))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

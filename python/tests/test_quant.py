@@ -1,0 +1,111 @@
+"""Properties of the bipolar-INT format and quantizers (mirrors rust quant/)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.quant import (
+    bipolar_qmax,
+    decode_bipolar,
+    dequantize_bipolar,
+    encode_bipolar,
+    pack_along_k,
+    planes_from_code,
+    quantize_bipolar,
+)
+
+
+@given(st.integers(min_value=1, max_value=8))
+def test_qmax(bits):
+    assert bipolar_qmax(bits) == 2**bits - 1
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4, 8])
+def test_encode_decode_roundtrip_all_values(bits):
+    qmax = bipolar_qmax(bits)
+    vals = jnp.arange(-qmax, qmax + 1, 2, dtype=jnp.int32)  # all odd values
+    assert vals.shape[0] == 2**bits
+    codes = encode_bipolar(vals, bits)
+    assert int(codes.min()) == 0 and int(codes.max()) == 2**bits - 1
+    back = decode_bipolar(codes, bits)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(vals))
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4])
+def test_planes_decode_identity(bits):
+    """sum_i (2*plane_i - 1) 2^i must reconstruct the decoded value (Eq. 1)."""
+    rng = np.random.default_rng(0)
+    code = jnp.asarray(rng.integers(0, 1 << bits, (5, 7)).astype(np.uint32))
+    planes = planes_from_code(code, bits)
+    recon = sum(
+        (2 * planes[i].astype(jnp.int32) - 1) * (1 << i) for i in range(bits)
+    )
+    np.testing.assert_array_equal(np.asarray(recon), np.asarray(decode_bipolar(code, bits)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_quantize_produces_odd_in_range(bits, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))
+    q, scale = quantize_bipolar(x, bits, axis=-1)
+    qn = np.asarray(q)
+    qmax = bipolar_qmax(bits)
+    assert np.all(qn % 2 != 0), "bipolar values must be odd"
+    assert np.all(np.abs(qn) <= qmax)
+    assert np.all(np.asarray(scale) > 0)
+
+
+def test_quantize_error_bound():
+    """RTN onto the odd grid: |x - s*q| <= s (grid step is 2s)."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(8, 32)).astype(np.float32))
+    for bits in (2, 3, 4, 6):
+        q, scale = quantize_bipolar(x, bits, axis=-1)
+        err = np.abs(np.asarray(x) - np.asarray(dequantize_bipolar(q, scale)))
+        assert err.max() <= np.asarray(scale).max() * (1 + 1e-5)
+
+
+def test_quantize_symmetry():
+    """Quantizing -x must give exactly -q (no zero-point asymmetry)."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(4, 24)).astype(np.float32))
+    for bits in (1, 2, 3):
+        q1, s1 = quantize_bipolar(x, bits, axis=-1)
+        q2, s2 = quantize_bipolar(-x, bits, axis=-1)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+        # grid is symmetric; ties x/s == even integers may round either way
+        mask = np.abs(np.asarray(x) / np.asarray(s1) % 2.0 - 0.0) > 1e-4
+        np.testing.assert_array_equal(np.asarray(q1)[mask], -np.asarray(q2)[mask])
+
+
+@pytest.mark.parametrize("bits,k", [(1, 32), (2, 64), (3, 96), (4, 128)])
+def test_pack_unpack(bits, k):
+    rng = np.random.default_rng(3)
+    code = jnp.asarray(rng.integers(0, 1 << bits, (6, k)).astype(np.uint32))
+    packed = pack_along_k(code, bits)
+    assert packed.shape == (bits, 6, k // 32)
+    # unpack by hand and compare with planes
+    planes = np.asarray(planes_from_code(code, bits))
+    pk = np.asarray(packed)
+    for i in range(bits):
+        for r in range(6):
+            for w in range(k // 32):
+                for b in range(32):
+                    assert ((pk[i, r, w] >> b) & 1) == planes[i, r, w * 32 + b]
+
+
+def test_per_tensor_vs_per_channel():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(3, 8)).astype(np.float32) * np.array([[1.0], [10.0], [100.0]], np.float32))
+    _, s_tensor = quantize_bipolar(x, 4, axis=None)
+    _, s_chan = quantize_bipolar(x, 4, axis=-1)
+    assert np.asarray(s_tensor).size == 1
+    assert np.asarray(s_chan).shape == (3, 1)
+    # per-channel adapts to each row's range
+    assert np.asarray(s_chan)[0, 0] < np.asarray(s_chan)[2, 0]

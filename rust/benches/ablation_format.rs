@@ -1,0 +1,4 @@
+//! AB1: bipolar vs signed vs unsigned decomposition formats.
+fn main() {
+    apllm::bench::print_ablation_format();
+}

@@ -1,0 +1,4 @@
+//! AB2: §4.1/§4.2 memory-scheduling knob ablation.
+fn main() {
+    apllm::bench::print_ablation_sched();
+}

@@ -1,0 +1,60 @@
+//! L3 coordinator bench: scheduler throughput and batcher overhead under
+//! synthetic load (SimBackend — isolates coordination cost from compute).
+
+use apllm::bench::bench_fn;
+use apllm::coordinator::{
+    Batcher, BatcherConfig, GenParams, Request, Scheduler, SchedulerConfig, SimBackend,
+};
+use std::time::{Duration, Instant};
+
+fn sched_run(n_requests: usize, max_running: usize, step_latency: Duration) -> f64 {
+    let mut backend = SimBackend::new(1024, 128, vec![1, 2, 4, 8]);
+    backend.step_latency = step_latency;
+    let mut s = Scheduler::new(
+        backend,
+        SchedulerConfig { kv_blocks: 256, block_tokens: 16, max_running },
+    );
+    for i in 0..n_requests {
+        s.submit(Request::new(
+            i as u64,
+            vec![1, 2, 3, 4, 5, 6, 7, 8],
+            GenParams { max_new_tokens: 16, sample: false, seed: i as u64 },
+        ));
+    }
+    let out = s.run_to_completion().unwrap();
+    assert_eq!(out.len(), n_requests);
+    s.metrics.throughput_tok_s()
+}
+
+fn main() {
+    println!("== coordinator: scheduler overhead (SimBackend, zero device latency) ==");
+    for max_running in [1usize, 2, 4, 8] {
+        let label = format!("scheduler 64 reqs, max_running={max_running}");
+        bench_fn(&label, 1, 5, || {
+            std::hint::black_box(sched_run(64, max_running, Duration::ZERO));
+        });
+    }
+
+    println!("\n== coordinator: batching payoff with 1ms simulated step latency ==");
+    for max_running in [1usize, 4, 8] {
+        let tput = sched_run(32, max_running, Duration::from_millis(1));
+        println!("  max_running={max_running}: {tput:.0} tok/s");
+    }
+
+    println!("\n== batcher: admission cost ==");
+    bench_fn("batcher push+poll 10k requests", 1, 5, || {
+        let mut b = Batcher::new(BatcherConfig::default());
+        let now = Instant::now();
+        let mut out = 0usize;
+        for i in 0..10_000u64 {
+            b.push(Request::new(i, vec![1], GenParams::default()));
+            if let Some(g) = b.poll(now + Duration::from_millis(i)) {
+                out += g.len();
+            }
+        }
+        while let Some(g) = b.poll(now + Duration::from_secs(3600)) {
+            out += g.len();
+        }
+        assert_eq!(out, 10_000);
+    });
+}

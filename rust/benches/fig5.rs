@@ -1,0 +1,4 @@
+//! F5: regenerate paper Fig. 5 (TOPS vs square size, incl. APNN/BSTC/BTC).
+fn main() {
+    apllm::bench::print_fig5();
+}

@@ -1,0 +1,4 @@
+//! F6: regenerate paper Fig. 6 (TOPS on Llama2-7B shapes).
+fn main() {
+    apllm::bench::print_fig6();
+}

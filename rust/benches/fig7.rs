@@ -1,0 +1,4 @@
+//! F7: regenerate paper Fig. 7 (end-to-end inference speedup vs FP16).
+fn main() {
+    apllm::bench::print_fig7();
+}

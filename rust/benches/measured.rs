@@ -1,0 +1,98 @@
+//! MK: REAL measured latencies on this host (not simulated):
+//!   * pure-Rust bitmm AP-GEMM across precisions vs the f32 GEMM baseline
+//!     and the decoded-int naive GEMM;
+//!   * PJRT execution of the AOT Pallas artifacts (when artifacts exist).
+//!
+//! The relative ordering mirrors the paper's core claim at CPU scale:
+//! bit-packed XNOR-popcount GEMM beats dense arithmetic at equal logical
+//! shape, and cost scales with n_w·n_x.
+
+use apllm::bench::bench_fn;
+use apllm::bitfmt::IntFormat;
+use apllm::bitmm::{
+    apmm_bipolar, apmm_bipolar_unfused, gemm_f32, naive_gemm_decoded, pack_codes_u32,
+    transpose_codes, ApmmOpts, CodeMatrix,
+};
+use apllm::model::PrecisionConfig;
+use apllm::util::Rng;
+
+fn main() {
+    println!("== measured: CPU bitmm vs dense baselines ==");
+    let (m, k, n) = (256usize, 2048usize, 256usize);
+    println!("shape {m}x{k}x{n}\n");
+
+    let mut results = Vec::new();
+    for prec in [
+        PrecisionConfig::W1A1,
+        PrecisionConfig::W1A2,
+        PrecisionConfig::W2A2,
+        PrecisionConfig::W3A4,
+        PrecisionConfig::W4A4,
+        PrecisionConfig::W8A8,
+    ] {
+        let w = CodeMatrix::random(m, k, prec.nw, 1);
+        let xt = CodeMatrix::random(n, k, prec.nx, 2);
+        let r = bench_fn(&format!("bitmm {} (fused)", prec.label()), 1, 7, || {
+            std::hint::black_box(apmm_bipolar(&w, &xt, ApmmOpts::default()));
+        });
+        results.push((prec.plane_pairs(), r.median_s));
+    }
+
+    // unfused (the paper's naive dataflow) at one precision for contrast
+    {
+        let p = PrecisionConfig::W2A2;
+        let w = CodeMatrix::random(m, k, p.nw, 1);
+        let xt = CodeMatrix::random(n, k, p.nx, 2);
+        bench_fn("bitmm W2A2 (UNFUSED recovery)", 1, 5, || {
+            std::hint::black_box(apmm_bipolar_unfused(&w, &xt));
+        });
+    }
+
+    // dense baselines at the same logical shape
+    {
+        let w = CodeMatrix::random(m, k, 4, 3);
+        let xt = CodeMatrix::random(n, k, 4, 4);
+        bench_fn("naive decoded int GEMM (W4A4 values)", 1, 5, || {
+            std::hint::black_box(naive_gemm_decoded(&w, &xt, IntFormat::Bipolar));
+        });
+        let mut rng = Rng::with_seed(9);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let bt: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+        bench_fn("dense f32 GEMM", 1, 5, || {
+            std::hint::black_box(gemm_f32(&a, &bt, m, n, k));
+        });
+    }
+
+    // scaling check: fused cost should grow ~linearly in plane pairs
+    println!("\nplane-pair scaling (median vs W1A1):");
+    let base = results[0].1;
+    for (pairs, t) in &results {
+        println!("  {:>2} pairs: {:>8.2} ms  ({:.2}× base)", pairs, t * 1e3, t / base);
+    }
+
+    // PJRT artifacts, if present
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        println!("\n== measured: PJRT Pallas artifacts (interpret-mode HLO on CPU) ==");
+        let engine = apllm::runtime::Engine::load(&dir).expect("engine");
+        for spec in engine.manifest().by_kind("apmm") {
+            let (am, ak, an) = (
+                spec.meta_usize("m").unwrap(),
+                spec.meta_usize("k").unwrap(),
+                spec.meta_usize("n").unwrap(),
+            );
+            let (nw, nx) =
+                (spec.meta_usize("nw").unwrap() as u32, spec.meta_usize("nx").unwrap() as u32);
+            let w = CodeMatrix::random(am, ak, nw, 5);
+            let x = CodeMatrix::random(ak, an, nx, 6);
+            let wp = pack_codes_u32(&w);
+            let xp = pack_codes_u32(&transpose_codes(&x));
+            let spec = spec.clone();
+            bench_fn(&format!("pjrt {}", spec.name), 1, 5, || {
+                std::hint::black_box(engine.run_apmm(&spec, &wp, &xp).unwrap());
+            });
+        }
+    } else {
+        println!("\n(skipping PJRT section: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,4 @@
+//! T1: regenerate paper Table 1 (square MatMul latency/speedup).
+fn main() {
+    apllm::bench::print_table1();
+}

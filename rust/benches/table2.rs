@@ -1,0 +1,4 @@
+//! T2: regenerate paper Table 2 (Llama2-7B MatMul latency/speedup).
+fn main() {
+    apllm::bench::print_table2();
+}

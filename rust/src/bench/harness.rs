@@ -1,0 +1,52 @@
+//! Tiny measurement harness (criterion substitute): warmup + N samples,
+//! median/mean/min reporting.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchResult {
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn fmt_time(s: f64) -> String {
+        if s >= 1.0 {
+            format!("{s:.3} s")
+        } else if s >= 1e-3 {
+            format!("{:.3} ms", s * 1e3)
+        } else {
+            format!("{:.1} µs", s * 1e6)
+        }
+    }
+}
+
+/// Run `f` `warmup` times unmeasured, then `samples` measured times.
+pub fn bench_fn<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let res = BenchResult {
+        median_s: times[times.len() / 2],
+        mean_s: times.iter().sum::<f64>() / times.len() as f64,
+        min_s: times[0],
+        samples,
+    };
+    println!(
+        "{name:<44} median {:>10}  mean {:>10}  min {:>10}  (n={})",
+        BenchResult::fmt_time(res.median_s),
+        BenchResult::fmt_time(res.mean_s),
+        BenchResult::fmt_time(res.min_s),
+        res.samples
+    );
+    res
+}

@@ -1,0 +1,59 @@
+//! Benchmark harness: regenerates every table and figure of the paper's
+//! evaluation section (DESIGN.md §5) and provides the measurement
+//! utilities the `rust/benches/*` targets use (the build is offline, so
+//! a small in-tree harness replaces criterion).
+
+mod harness;
+mod tables;
+
+pub use harness::{bench_fn, BenchResult};
+pub use tables::{
+    print_ablation_format, print_ablation_sched, print_all_tables, print_fig5, print_fig6,
+    print_fig7, print_table1, print_table2,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_fn_measures() {
+        let r = bench_fn("spin", 3, 5, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(r.median_s > 0.0);
+        assert!(r.mean_s > 0.0);
+        assert_eq!(r.samples, 5);
+        assert!(r.median_s < 1.0);
+    }
+
+    #[test]
+    fn tables_render_without_panicking() {
+        // smoke: every table generator runs and mentions its headline rows
+        let t1 = tables::table1_string();
+        assert!(t1.contains("CUTLASS INT1") && t1.contains("W1A2 (ours)"));
+        let t2 = tables::table2_string();
+        assert!(t2.contains("1k/4k/10.5k") || t2.contains("11008"));
+        let f7 = tables::fig7_string();
+        assert!(f7.contains("Llama2-7B") && f7.contains("OPT-6.7B") && f7.contains("BLOOM-7B"));
+    }
+
+    #[test]
+    fn table1_speedup_column_consistent() {
+        // the speedup column must equal fp32_time / row_time within rounding
+        let rows = tables::table1_rows();
+        for (label, per_size) in rows {
+            for (size, time_s, speedup) in per_size {
+                if label == "FP32" {
+                    assert!((speedup - 1.0).abs() < 1e-9);
+                }
+                assert!(time_s > 0.0, "{label} at {size}");
+                assert!(speedup > 0.0);
+            }
+        }
+    }
+}

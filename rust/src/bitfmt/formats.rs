@@ -1,0 +1,97 @@
+//! Encode/decode and per-plane sign rules for the three integer formats.
+
+/// Integer interpretation of an n-bit code (paper Fig. 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IntFormat {
+    /// Every bit is ±1 weighted by 2^i (the paper's format).
+    Bipolar,
+    /// Two's-complement: MSB weighted −2^{n−1}, others +2^i.
+    Signed,
+    /// Plain binary with an external zero-point.
+    Unsigned,
+}
+
+impl IntFormat {
+    /// Human-readable name used in bench output.
+    pub fn name(self) -> &'static str {
+        match self {
+            IntFormat::Bipolar => "bipolar-INT",
+            IntFormat::Signed => "signed (two's-complement)",
+            IntFormat::Unsigned => "unsigned (+zero-point)",
+        }
+    }
+
+    /// Does plane `i` of an `bits`-wide word need sign-flipping during
+    /// recovery?  This is the structural defect of two's-complement the
+    /// paper calls out: its MSB plane carries the opposite sign, forcing a
+    /// special case in the otherwise-uniform recovery loop.
+    pub fn plane_negative(self, i: u32, bits: u32) -> bool {
+        matches!(self, IntFormat::Signed) && i + 1 == bits
+    }
+
+    /// Number of extra correction GEMMs the format drags through the
+    /// pipeline (paper §3.1: unsigned needs the all-ones `J` matrix terms).
+    pub fn correction_gemms(self) -> u32 {
+        match self {
+            IntFormat::Bipolar => 0,
+            IntFormat::Signed => 0,
+            IntFormat::Unsigned => 2, // J·X and W·J zero-point terms
+        }
+    }
+}
+
+/// Largest magnitude representable by an n-bit bipolar-INT: `2^n − 1`.
+#[inline]
+pub fn bipolar_qmax(bits: u32) -> i32 {
+    assert!((1..=16).contains(&bits), "bits must be in 1..=16");
+    (1i32 << bits) - 1
+}
+
+/// Odd integer value → unsigned n-bit code: `code = (v + qmax) / 2`.
+#[inline]
+pub fn bipolar_encode(v: i32, bits: u32) -> u32 {
+    let qmax = bipolar_qmax(bits);
+    debug_assert!(v.abs() <= qmax && v.rem_euclid(2) == 1, "v={v} not an odd value in range");
+    ((v + qmax) / 2) as u32
+}
+
+/// Unsigned n-bit code → odd integer value: `v = 2·code − qmax` (Eq. 1).
+#[inline]
+pub fn bipolar_decode(code: u32, bits: u32) -> i32 {
+    debug_assert!(code < (1 << bits));
+    2 * code as i32 - bipolar_qmax(bits)
+}
+
+/// Signed (two's-complement) decode of an n-bit code.
+#[inline]
+pub fn signed_decode(code: u32, bits: u32) -> i32 {
+    debug_assert!(code < (1u32 << bits));
+    let sign_bit = 1u32 << (bits - 1);
+    if code & sign_bit != 0 {
+        code as i32 - (1i32 << bits)
+    } else {
+        code as i32
+    }
+}
+
+/// Unsigned decode (value == code).
+#[inline]
+pub fn unsigned_decode(code: u32, _bits: u32) -> i32 {
+    code as i32
+}
+
+/// Representable range of an n-bit signed integer.
+pub fn signed_range(bits: u32) -> (i32, i32) {
+    (-(1i32 << (bits - 1)), (1i32 << (bits - 1)) - 1)
+}
+
+/// Recovery weight of plane `i` under `fmt`: the scalar the plane's 1-bit
+/// GEMM result is multiplied by during reconstruction.
+pub fn plane_weight(fmt: IntFormat, i: u32, bits: u32) -> i64 {
+    let w = 1i64 << i;
+    if fmt.plane_negative(i, bits) {
+        -w
+    } else {
+        w
+    }
+}

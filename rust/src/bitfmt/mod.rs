@@ -1,0 +1,26 @@
+//! The bipolar-INT data format (paper §3.1) and the integer formats it is
+//! compared against.
+//!
+//! An `n`-bit **bipolar-INT** word `x = x_{n-1} … x_0` decodes as
+//!
+//! ```text
+//! (x)_D = Σ_i (2·x_i − 1) · 2^i
+//! ```
+//!
+//! so every bit is ±1 weighted by a power of two.  The representable set is
+//! the `2^n` **odd** integers in `[-(2^n−1), 2^n−1]` — symmetric around
+//! zero, with no zero-point and no special-cased sign bit.  That uniformity
+//! is the property the whole kernel rides on: every bit plane participates
+//! in the 1-bit GEMM + recovery with the *same* sign rule, unlike
+//! two's-complement (negative MSB plane) or unsigned (zero-point correction
+//! term).
+
+mod formats;
+
+pub use formats::{
+    bipolar_decode, bipolar_encode, bipolar_qmax, plane_weight, signed_decode, signed_range,
+    unsigned_decode, IntFormat,
+};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,120 @@
+use super::*;
+use crate::util::proptest::forall;
+
+#[test]
+fn qmax_values() {
+    assert_eq!(bipolar_qmax(1), 1);
+    assert_eq!(bipolar_qmax(2), 3);
+    assert_eq!(bipolar_qmax(3), 7);
+    assert_eq!(bipolar_qmax(8), 255);
+}
+
+#[test]
+fn bipolar_roundtrip_all_values() {
+    for bits in 1..=8u32 {
+        let qmax = bipolar_qmax(bits);
+        let mut seen = std::collections::HashSet::new();
+        let mut v = -qmax;
+        while v <= qmax {
+            let code = bipolar_encode(v, bits);
+            assert!(code < (1 << bits));
+            assert_eq!(bipolar_decode(code, bits), v);
+            seen.insert(code);
+            v += 2;
+        }
+        assert_eq!(seen.len(), 1 << bits, "codes must be a bijection");
+    }
+}
+
+#[test]
+fn bipolar_is_symmetric() {
+    for bits in 1..=8u32 {
+        let qmax = bipolar_qmax(bits);
+        let mut v = 1;
+        while v <= qmax {
+            // negating a value flips all code bits
+            let c = bipolar_encode(v, bits);
+            let cn = bipolar_encode(-v, bits);
+            assert_eq!(c ^ cn, (1 << bits) - 1, "bits={bits} v={v}");
+            v += 2;
+        }
+    }
+}
+
+#[test]
+fn bipolar_plane_identity() {
+    // (x)_D == Σ_i (2 x_i − 1) 2^i for every code
+    for bits in 1..=6u32 {
+        for code in 0..(1u32 << bits) {
+            let mut acc = 0i32;
+            for i in 0..bits {
+                let bit = ((code >> i) & 1) as i32;
+                acc += (2 * bit - 1) << i;
+            }
+            assert_eq!(acc, bipolar_decode(code, bits));
+        }
+    }
+}
+
+#[test]
+fn signed_decode_matches_twos_complement() {
+    assert_eq!(signed_decode(0b111, 3), -1);
+    assert_eq!(signed_decode(0b100, 3), -4);
+    assert_eq!(signed_decode(0b011, 3), 3);
+    assert_eq!(signed_range(3), (-4, 3));
+}
+
+#[test]
+fn plane_signs() {
+    // only the signed MSB plane is negative
+    assert!(!IntFormat::Bipolar.plane_negative(3, 4));
+    assert!(IntFormat::Signed.plane_negative(3, 4));
+    assert!(!IntFormat::Signed.plane_negative(2, 4));
+    assert!(!IntFormat::Unsigned.plane_negative(3, 4));
+    assert_eq!(plane_weight(IntFormat::Signed, 3, 4), -8);
+    assert_eq!(plane_weight(IntFormat::Bipolar, 3, 4), 8);
+}
+
+#[test]
+fn correction_cost() {
+    assert_eq!(IntFormat::Bipolar.correction_gemms(), 0);
+    assert_eq!(IntFormat::Unsigned.correction_gemms(), 2);
+}
+
+#[test]
+fn signed_plane_identity() {
+    // v == Σ_i plane_weight(i) · bit_i for two's complement
+    for bits in 2..=6u32 {
+        for code in 0..(1u32 << bits) {
+            let mut acc = 0i64;
+            for i in 0..bits {
+                acc += plane_weight(IntFormat::Signed, i, bits) * ((code >> i) & 1) as i64;
+            }
+            assert_eq!(acc, signed_decode(code, bits) as i64);
+        }
+    }
+}
+
+#[test]
+fn prop_bipolar_roundtrip() {
+    forall(256, |rng| {
+        let bits = rng.u32(1, 13);
+        let code = rng.u32(0, 1 << bits);
+        let v = bipolar_decode(code, bits);
+        assert_eq!(v.rem_euclid(2), 1, "decoded values are odd");
+        assert!(v.abs() <= bipolar_qmax(bits));
+        assert_eq!(bipolar_encode(v, bits), code);
+    });
+}
+
+#[test]
+fn prop_decode_monotone() {
+    forall(256, |rng| {
+        let bits = rng.u32(1, 13);
+        let a = rng.u32(0, 1 << bits);
+        let b = rng.u32(0, 1 << bits);
+        if a < b {
+            assert!(bipolar_decode(a, bits) < bipolar_decode(b, bits));
+        }
+    });
+}

@@ -1,0 +1,221 @@
+//! Arbitrary-precision MatMul kernels (fused recovery) + baselines.
+//!
+//! Operand convention: weights `W` are `(M, K)` codes; activations arrive
+//! **transposed** as `Xᵀ` `(N, K)` so both sides stream along packed-K —
+//! the same N-major layout the Pallas kernel uses.
+
+use super::gemm1b::{and_popcount_dot, xor_popcount_dot};
+use super::planes::{pack_codes, CodeMatrix, PackedPlanes};
+use crate::bitfmt::{plane_weight, IntFormat};
+use crate::util::par_chunks_mut;
+
+/// Kernel options (the §4.2 knobs that exist on a CPU).
+#[derive(Debug, Clone, Copy)]
+pub struct ApmmOpts {
+    /// Parallelize over output row blocks (util::par thread pool).
+    pub parallel: bool,
+    /// Output row/col tile (cache blocking — the shared-memory analog).
+    pub tile_m: usize,
+    pub tile_n: usize,
+}
+
+impl Default for ApmmOpts {
+    fn default() -> Self {
+        Self { parallel: true, tile_m: 32, tile_n: 32 }
+    }
+}
+
+/// Transpose a code matrix (used to put activations in N-major layout).
+pub fn transpose_codes(m: &CodeMatrix) -> CodeMatrix {
+    let mut data = vec![0u32; m.rows * m.cols];
+    for r in 0..m.rows {
+        for c in 0..m.cols {
+            data[c * m.rows + r] = m.at(r, c);
+        }
+    }
+    CodeMatrix::new(m.cols, m.rows, m.bits, data)
+}
+
+/// Fused bipolar AP-GEMM: `Y = W · X` with `W (M,K)`, `Xᵀ (N,K)` codes.
+///
+/// `Y[m,n] = C − 2 · Σ_{i,j} popc(W_i[m] ^ X_j[n]) << (i+j)`,
+/// `C = K (2^{n_w}−1)(2^{n_x}−1)` — recovery runs entirely in registers.
+pub fn apmm_bipolar(w: &CodeMatrix, xt: &CodeMatrix, opts: ApmmOpts) -> Vec<i32> {
+    let mut y = vec![0i32; w.rows * xt.rows];
+    apmm_bipolar_into(w, xt, opts, &mut y);
+    y
+}
+
+/// As [`apmm_bipolar`] but writing into a caller-provided buffer (the
+/// serving hot path reuses output allocations).
+pub fn apmm_bipolar_into(w: &CodeMatrix, xt: &CodeMatrix, opts: ApmmOpts, y: &mut [i32]) {
+    assert_eq!(w.cols, xt.cols, "inner dimension mismatch");
+    assert_eq!(y.len(), w.rows * xt.rows, "output buffer size");
+    let (m, n, k) = (w.rows, xt.rows, w.cols);
+    let (nw, nx) = (w.bits, xt.bits);
+    let wp = pack_codes(w);
+    let xp = pack_codes(xt);
+    let c_const = (k as i64 * ((1i64 << nw) - 1) * ((1i64 << nx) - 1)) as i32;
+
+    let body = |mb: usize, rows_out: &mut [i32]| {
+        let m_hi = (mb + rows_out.len() / n.max(1)).min(m);
+        let mut wr: Vec<&[u64]> = Vec::with_capacity(nw as usize);
+        let mut xr: Vec<&[u64]> = Vec::with_capacity(nx as usize);
+        for nb in (0..n).step_by(opts.tile_n) {
+            let n_hi = (nb + opts.tile_n).min(n);
+            for mi in mb..m_hi {
+                wr.clear();
+                for i in 0..nw {
+                    wr.push(wp.row(i, mi));
+                }
+                let out_row = &mut rows_out[(mi - mb) * n..(mi - mb + 1) * n];
+                for ni in nb..n_hi {
+                    xr.clear();
+                    for j in 0..nx {
+                        xr.push(xp.row(j, ni));
+                    }
+                    out_row[ni] = c_const - 2 * plane_pair_sum(&wr, &xr);
+                }
+            }
+        }
+    };
+
+    if opts.parallel && m >= 2 * opts.tile_m {
+        par_chunks_mut(y, opts.tile_m * n, |bi, chunk| body(bi * opts.tile_m, chunk));
+    } else {
+        body(0, y);
+    }
+}
+
+/// Σ_{i,j} popc(W_i ^ X_j) << (i+j) for one output element.  Row slices
+/// are hoisted by the caller (§4.2 ④'s reuse analog); each pair runs a
+/// tight 4-way-unrolled XOR/popcount loop with independent accumulators
+/// to break the popcnt dependency chain.
+#[inline(always)]
+fn plane_pair_sum(wr: &[&[u64]], xr: &[&[u64]]) -> i32 {
+    let mut acc = 0i32;
+    for (i, w) in wr.iter().enumerate() {
+        for (j, x) in xr.iter().enumerate() {
+            acc += (xor_popcount_dot(w, x) << (i + j)) as i32;
+        }
+    }
+    acc
+}
+
+/// The *unfused* pipeline (paper's naive Fig. 4 flow): materialize every
+/// intermediate `D_ij` matrix, then a separate shift-add recovery pass.
+/// Same result, strictly worse memory behaviour — kept for the ablation
+/// bench and as an internal cross-check of the fused kernel.
+pub fn apmm_bipolar_unfused(w: &CodeMatrix, xt: &CodeMatrix) -> Vec<i32> {
+    assert_eq!(w.cols, xt.cols);
+    let (m, n, k) = (w.rows, xt.rows, w.cols);
+    let (nw, nx) = (w.bits, xt.bits);
+    let wp = pack_codes(w);
+    let xp = pack_codes(xt);
+    // 1-bit GEMMs → intermediate tiles in "global memory"
+    let mut tiles: Vec<(u32, u32, Vec<i32>)> = Vec::with_capacity((nw * nx) as usize);
+    for i in 0..nw {
+        for j in 0..nx {
+            let mut d = vec![0i32; m * n];
+            for mi in 0..m {
+                let wr = wp.row(i, mi);
+                for ni in 0..n {
+                    d[mi * n + ni] = k as i32 - 2 * xor_popcount_dot(wr, xp.row(j, ni)) as i32;
+                }
+            }
+            tiles.push((i, j, d));
+        }
+    }
+    super::recover::recover_tiles(m, n, &tiles)
+}
+
+/// Signed (two's-complement) decomposition GEMM via BMMA-AND planes:
+/// `Y = Σ_{i,j} s_i s_j 2^{i+j} popc(W_i & X_j)` with the MSB planes
+/// negative — note the sign special-case bipolar avoids.
+pub fn apmm_signed(w: &CodeMatrix, xt: &CodeMatrix) -> Vec<i32> {
+    apmm_weighted(w, xt, IntFormat::Signed)
+}
+
+/// Unsigned decomposition GEMM via AND planes (values == codes; any
+/// zero-point correction is the caller's extra `J` GEMMs, see
+/// `IntFormat::correction_gemms`).
+pub fn apmm_unsigned(w: &CodeMatrix, xt: &CodeMatrix) -> Vec<i32> {
+    apmm_weighted(w, xt, IntFormat::Unsigned)
+}
+
+fn apmm_weighted(w: &CodeMatrix, xt: &CodeMatrix, fmt: IntFormat) -> Vec<i32> {
+    assert_eq!(w.cols, xt.cols);
+    let (m, n) = (w.rows, xt.rows);
+    let (nw, nx) = (w.bits, xt.bits);
+    let wp = pack_codes(w);
+    let xp = pack_codes(xt);
+    let mut y = vec![0i32; m * n];
+    par_chunks_mut(&mut y, n, |mi, row| {
+        for (ni, out) in row.iter_mut().enumerate() {
+            let mut acc = 0i64;
+            for i in 0..nw {
+                let wi = plane_weight(fmt, i, nw);
+                let wr = wp.row(i, mi);
+                for j in 0..nx {
+                    let xj = plane_weight(fmt, j, nx);
+                    acc += wi * xj * and_popcount_dot(wr, xp.row(j, ni)) as i64;
+                }
+            }
+            *out = acc as i32;
+        }
+    });
+    y
+}
+
+/// Ground truth: decode both operands under `fmt` and run a plain integer
+/// GEMM (i64 accumulate).  `W (M,K)`, `Xᵀ (N,K)`.
+pub fn naive_gemm_decoded(w: &CodeMatrix, xt: &CodeMatrix, fmt: IntFormat) -> Vec<i32> {
+    assert_eq!(w.cols, xt.cols);
+    let (m, n, k) = (w.rows, xt.rows, w.cols);
+    let wd = w.decode(fmt);
+    let xd = xt.decode(fmt);
+    let mut y = vec![0i32; m * n];
+    par_chunks_mut(&mut y, n, |mi, row| {
+        for (ni, out) in row.iter_mut().enumerate() {
+            let mut acc = 0i64;
+            for ki in 0..k {
+                acc += wd[mi * k + ki] as i64 * xd[ni * k + ki] as i64;
+            }
+            *out = acc as i32;
+        }
+    });
+    y
+}
+
+/// Blocked f32 GEMM baseline: `a (M,K)`, `bᵀ (N,K)` → `(M,N)`.
+/// The FP32 comparator for the measured bench.
+pub fn gemm_f32(a: &[f32], bt: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(bt.len(), n * k);
+    let mut c = vec![0f32; m * n];
+    par_chunks_mut(&mut c, n, |mi, row| {
+        let ar = &a[mi * k..(mi + 1) * k];
+        for (ni, out) in row.iter_mut().enumerate() {
+            let br = &bt[ni * k..(ni + 1) * k];
+            let mut acc = 0f32;
+            let mut ki = 0;
+            while ki + 8 <= k {
+                acc += ar[ki] * br[ki]
+                    + ar[ki + 1] * br[ki + 1]
+                    + ar[ki + 2] * br[ki + 2]
+                    + ar[ki + 3] * br[ki + 3]
+                    + ar[ki + 4] * br[ki + 4]
+                    + ar[ki + 5] * br[ki + 5]
+                    + ar[ki + 6] * br[ki + 6]
+                    + ar[ki + 7] * br[ki + 7];
+                ki += 8;
+            }
+            while ki < k {
+                acc += ar[ki] * br[ki];
+                ki += 1;
+            }
+            *out = acc;
+        }
+    });
+    c
+}

@@ -1,0 +1,35 @@
+//! 1-bit inner products — the BMMA instruction substitutes.
+//!
+//! NVIDIA TCs expose 1-bit GEMM with either XOR or AND accumulation
+//! (§3.2); on the CPU the same two primitives are word-wise
+//! `popcount(a ^ b)` and `popcount(a & b)` reductions.
+
+/// `Σ_w popcount(a[w] XOR b[w])` — the raw BMMA-XOR accumulator.
+#[inline(always)]
+pub fn xor_popcount_dot(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0u32;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        acc += (x ^ y).count_ones();
+    }
+    acc
+}
+
+/// `Σ_w popcount(a[w] AND b[w])` — the BMMA-AND accumulator (used by the
+/// signed / unsigned decomposition baselines).
+#[inline(always)]
+pub fn and_popcount_dot(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0u32;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        acc += (x & y).count_ones();
+    }
+    acc
+}
+
+/// The bipolar ±1 dot product over a logical length `k`:
+/// `D = k − 2·popcount(a XOR b)` (zero-padding in both operands cancels).
+#[inline(always)]
+pub fn xnor_dot(a: &[u64], b: &[u64], k: usize) -> i32 {
+    k as i32 - 2 * xor_popcount_dot(a, b) as i32
+}

@@ -1,0 +1,34 @@
+//! Bit-wise MatMul reconstitution (paper §3.2) — the compute substrate.
+//!
+//! This is the CPU realization of the paper's tensor-core pipeline:
+//!
+//! 1. **decompose** the n-bit operands into 1-bit planes and pack them
+//!    along K into 64-bit words (§4.1's decomposition + reassembly — we use
+//!    the widest native word the host has, exactly as the paper picks the
+//!    GPU-native 32-bit uint);
+//! 2. run all `n_w · n_x` pairwise **1-bit GEMMs** as XNOR-popcount inner
+//!    products (the BMMA-XOR substitute);
+//! 3. **recover** `Y = Σ_{i,j} 2^{i+j} D_ij` by shift-add, fused into the
+//!    accumulator loop so intermediate `D_ij` tiles never materialize
+//!    (§4.2's "recover in shared memory, not global memory" — here:
+//!    "recover in registers, not in a temporary buffer").
+//!
+//! The unfused variant (materializing every `D_ij`, then a second recovery
+//! pass — the paper's *naive* Fig. 4 baseline) is kept for the ablation
+//! bench and as an internal cross-check.
+
+mod apmm;
+mod gemm1b;
+mod planes;
+mod recover;
+
+pub use apmm::{
+    apmm_bipolar, apmm_bipolar_into, apmm_bipolar_unfused, apmm_signed, apmm_unsigned,
+    gemm_f32, naive_gemm_decoded, transpose_codes, ApmmOpts,
+};
+pub use gemm1b::{and_popcount_dot, xnor_dot, xor_popcount_dot};
+pub use planes::{pack_codes, pack_codes_u32, CodeMatrix, PackedPlanes};
+pub use recover::recover_tiles;
+
+#[cfg(test)]
+mod tests;

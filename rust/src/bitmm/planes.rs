@@ -1,0 +1,156 @@
+//! Bit-plane decomposition and word packing (paper §4.1).
+//!
+//! `PackedPlanes` is the operand layout every kernel here consumes: plane
+//! `i` of an n-bit code matrix is a `rows × kw` array of `u64` words, bit
+//! `b` of word `w` holding the code's bit `i` at column `w·64 + b`
+//! (LSB-first).  The n planes are stored **concatenated** in one contiguous
+//! allocation (§4.1 step 3), so a row of all planes streams as one slice.
+
+use crate::bitfmt::IntFormat;
+
+/// A row-major matrix of n-bit integer codes (values `< 2^bits`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CodeMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub bits: u32,
+    pub data: Vec<u32>,
+}
+
+impl CodeMatrix {
+    pub fn new(rows: usize, cols: usize, bits: u32, data: Vec<u32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        debug_assert!(data.iter().all(|&c| c < (1 << bits)), "code out of range");
+        Self { rows, cols, bits, data }
+    }
+
+    /// Filled with a constant code.
+    pub fn splat(rows: usize, cols: usize, bits: u32, code: u32) -> Self {
+        Self::new(rows, cols, bits, vec![code; rows * cols])
+    }
+
+    /// Uniform random codes from a seeded generator (tests/benches).
+    pub fn random(rows: usize, cols: usize, bits: u32, seed: u64) -> Self {
+        let mut rng = crate::util::Rng::with_seed(seed);
+        let data = (0..rows * cols).map(|_| rng.u32(0, 1 << bits)).collect();
+        Self::new(rows, cols, bits, data)
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> u32 {
+        self.data[r * self.cols + c]
+    }
+
+    /// Decode every element under `fmt` into an `i32` matrix.
+    pub fn decode(&self, fmt: IntFormat) -> Vec<i32> {
+        use crate::bitfmt::{bipolar_decode, signed_decode, unsigned_decode};
+        let f = match fmt {
+            IntFormat::Bipolar => bipolar_decode,
+            IntFormat::Signed => signed_decode,
+            IntFormat::Unsigned => unsigned_decode,
+        };
+        self.data.iter().map(|&c| f(c, self.bits)).collect()
+    }
+}
+
+/// Bit planes of a code matrix, packed along the column (K) axis into u64
+/// words, planes concatenated (§4.1).
+#[derive(Debug, Clone)]
+pub struct PackedPlanes {
+    pub rows: usize,
+    /// Logical K (unpadded column count).
+    pub cols: usize,
+    /// Words per row: `ceil(cols / 64)`; padding bits are zero.
+    pub kw: usize,
+    pub bits: u32,
+    data: Vec<u64>,
+}
+
+impl PackedPlanes {
+    /// Plane `i`, row `r` as a word slice.
+    #[inline(always)]
+    pub fn row(&self, plane: u32, r: usize) -> &[u64] {
+        let base = (plane as usize * self.rows + r) * self.kw;
+        &self.data[base..base + self.kw]
+    }
+
+    /// All planes of row `r` are NOT contiguous (planes are outer) — this
+    /// returns the full backing store for kernels that stride it manually.
+    #[inline(always)]
+    pub fn raw(&self) -> &[u64] {
+        &self.data
+    }
+
+    #[inline(always)]
+    pub fn plane_stride(&self) -> usize {
+        self.rows * self.kw
+    }
+
+    /// Total packed footprint in bytes (the §4.1 memory-saving claim:
+    /// exactly `bits` bits per element plus word-alignment padding).
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * 8
+    }
+}
+
+/// Decompose + pack into the **u32 kernel layout** the Pallas artifacts
+/// consume: `(bits, rows, ceil(cols/32))` row-major, bit `b` of word `w`
+/// holding column `w·32 + b` (LSB-first) — identical to
+/// `python/compile/quant.pack_along_k`.
+pub fn pack_codes_u32(m: &CodeMatrix) -> Vec<u32> {
+    let kw = m.cols.div_ceil(32);
+    let mut data = vec![0u32; m.bits as usize * m.rows * kw];
+    for plane in 0..m.bits {
+        for r in 0..m.rows {
+            let base = (plane as usize * m.rows + r) * kw;
+            for c in 0..m.cols {
+                let bit = (m.at(r, c) >> plane) & 1;
+                data[base + c / 32] |= bit << (c % 32);
+            }
+        }
+    }
+    data
+}
+
+/// Decompose + pack a code matrix (paper §4.1 steps 1–3).
+///
+/// Single pass over the codes: each 64-column chunk accumulates all `bits`
+/// plane words in registers before scattering them to the plane-major
+/// layout; rows are processed in parallel (each row's writes are disjoint).
+pub fn pack_codes(m: &CodeMatrix) -> PackedPlanes {
+    let kw = m.cols.div_ceil(64);
+    let bits = m.bits as usize;
+    let plane_stride = m.rows * kw;
+    let mut data = vec![0u64; bits * plane_stride];
+
+    // Disjoint-write parallelism over rows: every (plane, row) slot is
+    // touched by exactly one row index, so the raw-pointer writes below
+    // never alias across par_for workers.
+    struct Ptr(*mut u64);
+    unsafe impl Sync for Ptr {}
+    let ptr = Ptr(data.as_mut_ptr());
+    let rows = m.rows;
+    let cols = m.cols;
+    let src_all = &m.data;
+    crate::util::par_for(rows, |r| {
+        let p = &ptr;
+        let src = &src_all[r * cols..(r + 1) * cols];
+        for w in 0..kw {
+            let c0 = w * 64;
+            let chunk = &src[c0..cols.min(c0 + 64)];
+            let mut acc = [0u64; 16]; // bits ≤ 16
+            for (b, &code) in chunk.iter().enumerate() {
+                let mut c = code as u64;
+                for a in acc.iter_mut().take(bits) {
+                    *a |= (c & 1) << b;
+                    c >>= 1;
+                }
+            }
+            for (plane, &a) in acc.iter().enumerate().take(bits) {
+                // SAFETY: index (plane, r, w) is unique to this `r`
+                unsafe { *p.0.add(plane * plane_stride + r * kw + w) = a };
+            }
+        }
+    });
+    PackedPlanes { rows: m.rows, cols: m.cols, kw, bits: m.bits, data }
+}

@@ -1,0 +1,20 @@
+//! Data-recovery dataflow (paper §3.2 step 3): reconstruct the output
+//! matrix from intermediate 1-bit GEMM results by shifting each `D_ij` by
+//! its bit positions `(i, j)` and summing.
+//!
+//! The production kernel fuses this into its accumulator (`apmm_bipolar`);
+//! this standalone pass exists for the unfused/naive baseline and for
+//! testing the recovery math in isolation.
+
+/// `Y = Σ 2^{i+j} · D_ij` over `(i, j, D_ij)` tiles of shape `(m, n)`.
+pub fn recover_tiles(m: usize, n: usize, tiles: &[(u32, u32, Vec<i32>)]) -> Vec<i32> {
+    let mut y = vec![0i64; m * n];
+    for (i, j, d) in tiles {
+        assert_eq!(d.len(), m * n, "tile shape mismatch");
+        let shift = i + j;
+        for (acc, &v) in y.iter_mut().zip(d.iter()) {
+            *acc += (v as i64) << shift;
+        }
+    }
+    y.into_iter().map(|v| v as i32).collect()
+}

@@ -1,0 +1,183 @@
+use super::*;
+use crate::bitfmt::IntFormat;
+use crate::util::proptest::forall;
+
+fn check_bipolar(m: usize, k: usize, n: usize, nw: u32, nx: u32, seed: u64) {
+    let w = CodeMatrix::random(m, k, nw, seed);
+    let xt = CodeMatrix::random(n, k, nx, seed.wrapping_add(1));
+    let want = naive_gemm_decoded(&w, &xt, IntFormat::Bipolar);
+    let got = apmm_bipolar(&w, &xt, ApmmOpts::default());
+    assert_eq!(got, want, "m={m} k={k} n={n} nw={nw} nx={nx}");
+}
+
+#[test]
+fn fused_matches_naive_small() {
+    check_bipolar(4, 32, 4, 1, 1, 0);
+    check_bipolar(3, 17, 5, 2, 2, 1); // K not a word multiple
+    check_bipolar(8, 64, 8, 3, 4, 2);
+    check_bipolar(1, 1, 1, 2, 2, 3); // degenerate
+    check_bipolar(5, 200, 7, 4, 3, 4);
+}
+
+#[test]
+fn fused_matches_naive_parallel_threshold() {
+    // large enough to hit the rayon path
+    check_bipolar(128, 256, 96, 2, 2, 5);
+}
+
+#[test]
+fn unfused_matches_fused() {
+    let w = CodeMatrix::random(9, 70, 3, 10);
+    let xt = CodeMatrix::random(6, 70, 2, 11);
+    assert_eq!(
+        apmm_bipolar_unfused(&w, &xt),
+        apmm_bipolar(&w, &xt, ApmmOpts::default())
+    );
+}
+
+#[test]
+fn signed_matches_naive() {
+    let w = CodeMatrix::random(7, 48, 3, 20);
+    let xt = CodeMatrix::random(5, 48, 4, 21);
+    assert_eq!(apmm_signed(&w, &xt), naive_gemm_decoded(&w, &xt, IntFormat::Signed));
+}
+
+#[test]
+fn unsigned_matches_naive() {
+    let w = CodeMatrix::random(7, 48, 3, 22);
+    let xt = CodeMatrix::random(5, 48, 4, 23);
+    assert_eq!(apmm_unsigned(&w, &xt), naive_gemm_decoded(&w, &xt, IntFormat::Unsigned));
+}
+
+#[test]
+fn extreme_codes() {
+    for wf in [0u32, 7] {
+        for xf in [0u32, 3] {
+            let w = CodeMatrix::splat(4, 64, 3, wf);
+            let xt = CodeMatrix::splat(4, 64, 2, xf);
+            assert_eq!(
+                apmm_bipolar(&w, &xt, ApmmOpts::default()),
+                naive_gemm_decoded(&w, &xt, IntFormat::Bipolar)
+            );
+        }
+    }
+}
+
+#[test]
+fn packing_layout() {
+    // bit b of word w == column w*64 + b of the plane
+    let mut data = vec![0u32; 2 * 70];
+    data[0 * 70 + 0] = 0b11; // row 0, col 0
+    data[0 * 70 + 69] = 0b01; // row 0, col 69
+    data[1 * 70 + 64] = 0b10; // row 1, col 64
+    let m = CodeMatrix::new(2, 70, 2, data);
+    let p = pack_codes(&m);
+    assert_eq!(p.kw, 2);
+    assert_eq!(p.row(0, 0)[0] & 1, 1); // plane0 row0 col0
+    assert_eq!(p.row(1, 0)[0] & 1, 1); // plane1 row0 col0
+    assert_eq!((p.row(0, 0)[1] >> 5) & 1, 1); // col 69 → word 1 bit 5
+    assert_eq!((p.row(1, 0)[1] >> 5) & 1, 0);
+    assert_eq!(p.row(1, 1)[1] & 1, 1); // row1 col64 plane1
+    assert_eq!(p.row(0, 1)[1] & 1, 0);
+    // padding bits beyond col 69 are zero
+    assert_eq!(p.row(0, 0)[1] >> 6, 0);
+}
+
+#[test]
+fn xnor_dot_identity() {
+    // D = K − 2·popc(a^b) equals the ±1 dot product
+    let a = CodeMatrix::random(1, 100, 1, 30);
+    let b = CodeMatrix::random(1, 100, 1, 31);
+    let pa = pack_codes(&a);
+    let pb = pack_codes(&b);
+    let d = xnor_dot(pa.row(0, 0), pb.row(0, 0), 100);
+    let want: i32 = (0..100)
+        .map(|c| (2 * a.at(0, c) as i32 - 1) * (2 * b.at(0, c) as i32 - 1))
+        .sum();
+    assert_eq!(d, want);
+}
+
+#[test]
+fn recover_shift_weights() {
+    let tiles = vec![(0u32, 0u32, vec![1i32]), (1, 0, vec![1]), (1, 1, vec![1]), (0, 2, vec![-3])];
+    // 1 + 2 + 4 − 12 = −5
+    assert_eq!(recover_tiles(1, 1, &tiles), vec![-5]);
+}
+
+#[test]
+fn transpose_roundtrip() {
+    let m = CodeMatrix::random(5, 9, 3, 40);
+    let t = transpose_codes(&m);
+    assert_eq!(t.rows, 9);
+    assert_eq!(t.at(2, 3), m.at(3, 2));
+    assert_eq!(transpose_codes(&t), m);
+}
+
+#[test]
+fn gemm_f32_correct() {
+    let a = vec![1.0f32, 2.0, 3.0, 4.0]; // 2x2
+    let bt = vec![1.0f32, 0.0, 0.0, 1.0]; // identity^T
+    assert_eq!(gemm_f32(&a, &bt, 2, 2, 2), a);
+}
+
+#[test]
+fn into_buffer_reuse() {
+    let w = CodeMatrix::random(6, 33, 2, 50);
+    let xt = CodeMatrix::random(4, 33, 2, 51);
+    let mut buf = vec![-1i32; 24];
+    apmm_bipolar_into(&w, &xt, ApmmOpts::default(), &mut buf);
+    assert_eq!(buf, naive_gemm_decoded(&w, &xt, IntFormat::Bipolar));
+}
+
+#[test]
+fn large_k_no_overflow() {
+    // worst case |Y| = K · qmax_w · qmax_x must still fit in i32
+    let k = 8192;
+    let w = CodeMatrix::splat(1, k, 4, 15); // all +15
+    let xt = CodeMatrix::splat(1, k, 4, 15);
+    let y = apmm_bipolar(&w, &xt, ApmmOpts::default());
+    assert_eq!(y[0], (k as i32) * 15 * 15);
+}
+
+#[test]
+fn prop_fused_matches_naive() {
+    forall(48, |rng| {
+        let (m, k, n) = (rng.usize(1, 12), rng.usize(1, 150), rng.usize(1, 12));
+        let (nw, nx) = (rng.u32(1, 6), rng.u32(1, 6));
+        let seed = rng.u64();
+        let w = CodeMatrix::random(m, k, nw, seed);
+        let xt = CodeMatrix::random(n, k, nx, seed ^ 0xdead);
+        assert_eq!(
+            apmm_bipolar(&w, &xt, ApmmOpts::default()),
+            naive_gemm_decoded(&w, &xt, IntFormat::Bipolar),
+            "m={m} k={k} n={n} nw={nw} nx={nx}"
+        );
+    });
+}
+
+#[test]
+fn prop_tile_invariance() {
+    forall(32, |rng| {
+        let (m, n) = (rng.usize(1, 40), rng.usize(1, 40));
+        let (tm, tn) = (rng.usize(1, 9), rng.usize(1, 9));
+        let seed = rng.u64();
+        let w = CodeMatrix::random(m, 64, 2, seed);
+        let xt = CodeMatrix::random(n, 64, 2, seed ^ 1);
+        let base = apmm_bipolar(&w, &xt, ApmmOpts { parallel: false, tile_m: 32, tile_n: 32 });
+        let tiled = apmm_bipolar(&w, &xt, ApmmOpts { parallel: true, tile_m: tm, tile_n: tn });
+        assert_eq!(base, tiled, "tm={tm} tn={tn}");
+    });
+}
+
+#[test]
+fn prop_signed_unsigned_match_naive() {
+    forall(32, |rng| {
+        let (m, k, n) = (rng.usize(1, 8), rng.usize(1, 100), rng.usize(1, 8));
+        let (nw, nx) = (rng.u32(2, 6), rng.u32(2, 6));
+        let seed = rng.u64();
+        let w = CodeMatrix::random(m, k, nw, seed);
+        let xt = CodeMatrix::random(n, k, nx, seed ^ 2);
+        assert_eq!(apmm_signed(&w, &xt), naive_gemm_decoded(&w, &xt, IntFormat::Signed));
+        assert_eq!(apmm_unsigned(&w, &xt), naive_gemm_decoded(&w, &xt, IntFormat::Unsigned));
+    });
+}

@@ -1,0 +1,289 @@
+//! Execution backends for the scheduler.
+//!
+//! `Backend` abstracts one model replica at the granularity continuous
+//! batching needs: per-sequence prefill and per-slot batched decode.
+//! `PjrtBackend` runs the real AOT artifacts; `SimBackend` is a
+//! deterministic stand-in (fake logits, optional synthetic step latency)
+//! for scheduler tests and the coordinator bench.
+
+use crate::runtime::{lit_f32, ModelRunner};
+use anyhow::{bail, Context, Result};
+
+/// Host-resident KV state of ONE sequence: `(L, max_seq, Hkv, Dh)` f32,
+/// plus the next write position.  The scheduler owns these; backends
+/// gather them into device group tensors per step.
+#[derive(Debug, Clone)]
+pub struct SeqKv {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub pos: usize,
+}
+
+/// One model replica.
+pub trait Backend {
+    fn vocab(&self) -> usize;
+    fn max_seq(&self) -> usize;
+    /// Decode group sizes the replica supports, ascending.
+    fn supported_batches(&self) -> &[usize];
+    /// Longest admissible prompt.
+    fn max_prompt(&self) -> usize;
+    /// Prefill a single prompt; returns the last-token logits and the
+    /// sequence's KV state (positioned at `prompt.len()`).
+    fn prefill_one(&mut self, prompt: &[i32]) -> Result<(Vec<f32>, SeqKv)>;
+    /// One decode step over `kvs.len()` sequences (`tokens[i]` is row i's
+    /// input).  Returns per-row logits; advances every `SeqKv` in place.
+    fn decode_batch(&mut self, tokens: &[i32], kvs: &mut [&mut SeqKv]) -> Result<Vec<Vec<f32>>>;
+}
+
+// ------------------------------------------------------------------ PJRT --
+
+/// Real backend over the AOT model artifacts.
+pub struct PjrtBackend<'e> {
+    runner: &'e ModelRunner<'e>,
+    batches: Vec<usize>,
+    prefill_buckets: Vec<usize>,
+    /// Elements of one sequence's per-tensor KV: L * max_seq * Hkv * Dh.
+    seq_kv_elems: usize,
+}
+
+impl<'e> PjrtBackend<'e> {
+    pub fn new(runner: &'e ModelRunner<'e>) -> Result<Self> {
+        let man = runner.engine().manifest();
+        let mut batches: Vec<usize> =
+            man.by_kind("decode").iter().filter_map(|e| e.meta.get("batch").copied()).collect();
+        batches.sort_unstable();
+        if batches.is_empty() {
+            bail!("no decode executables in manifest");
+        }
+        let mut prefill_buckets: Vec<usize> = man
+            .by_kind("prefill")
+            .iter()
+            .filter(|e| e.meta.get("batch") == Some(&1))
+            .filter_map(|e| e.meta.get("seq").copied())
+            .collect();
+        prefill_buckets.sort_unstable();
+        if prefill_buckets.is_empty() {
+            bail!("no batch-1 prefill executable in manifest");
+        }
+        let cfg = runner.cfg;
+        let seq_kv_elems = cfg.n_layers * cfg.max_seq * cfg.n_kv_heads * cfg.head_dim();
+        Ok(Self { runner, batches, prefill_buckets, seq_kv_elems })
+    }
+
+    /// Group layout: (L, b, S, Hkv, Dh); sequence layout: (L, S, Hkv, Dh).
+    fn gather(&self, kvs: &[&mut SeqKv], b: usize, pick_k: bool) -> Vec<f32> {
+        let cfg = self.runner.cfg;
+        let layer_elems = cfg.max_seq * cfg.n_kv_heads * cfg.head_dim();
+        let mut out = vec![0f32; cfg.n_layers * b * layer_elems];
+        for (i, kv) in kvs.iter().enumerate() {
+            let src = if pick_k { &kv.k } else { &kv.v };
+            for l in 0..cfg.n_layers {
+                let s0 = l * layer_elems;
+                let d0 = (l * b + i) * layer_elems;
+                out[d0..d0 + layer_elems].copy_from_slice(&src[s0..s0 + layer_elems]);
+            }
+        }
+        out
+    }
+
+    fn scatter(&self, group: &[f32], kvs: &mut [&mut SeqKv], b: usize, pick_k: bool) {
+        let cfg = self.runner.cfg;
+        let layer_elems = cfg.max_seq * cfg.n_kv_heads * cfg.head_dim();
+        for (i, kv) in kvs.iter_mut().enumerate() {
+            let dst = if pick_k { &mut kv.k } else { &mut kv.v };
+            for l in 0..cfg.n_layers {
+                let d0 = l * layer_elems;
+                let s0 = (l * b + i) * layer_elems;
+                dst[d0..d0 + layer_elems].copy_from_slice(&group[s0..s0 + layer_elems]);
+            }
+        }
+    }
+}
+
+impl<'e> Backend for PjrtBackend<'e> {
+    fn vocab(&self) -> usize {
+        self.runner.cfg.vocab
+    }
+
+    fn max_seq(&self) -> usize {
+        self.runner.cfg.max_seq
+    }
+
+    fn supported_batches(&self) -> &[usize] {
+        &self.batches
+    }
+
+    fn max_prompt(&self) -> usize {
+        *self.prefill_buckets.last().unwrap()
+    }
+
+    fn prefill_one(&mut self, prompt: &[i32]) -> Result<(Vec<f32>, SeqKv)> {
+        let t = prompt.len();
+        if t == 0 || t > self.max_prompt() {
+            bail!("prompt length {t} outside (0, {}]", self.max_prompt());
+        }
+        let (logits, kv) = self.runner.prefill(prompt, 1, t)?;
+        let cfg = self.runner.cfg;
+        // last REAL token's logits (prefill pads to its bucket)
+        let row = &logits[(t - 1) * cfg.vocab..t * cfg.vocab];
+        let k = kv.k.to_vec::<f32>().map_err(|e| anyhow::anyhow!("kv k: {e:?}"))?;
+        let v = kv.v.to_vec::<f32>().map_err(|e| anyhow::anyhow!("kv v: {e:?}"))?;
+        debug_assert_eq!(k.len(), self.seq_kv_elems);
+        // next write position is the true prompt end — pad-slot KV beyond
+        // it is garbage but masked (rows only attend to [0, pos])
+        Ok((row.to_vec(), SeqKv { k, v, pos: t }))
+    }
+
+    fn decode_batch(&mut self, tokens: &[i32], kvs: &mut [&mut SeqKv]) -> Result<Vec<Vec<f32>>> {
+        let n = kvs.len();
+        if n == 0 || tokens.len() != n {
+            bail!("decode_batch: {} tokens for {n} sequences", tokens.len());
+        }
+        let b = *self
+            .supported_batches()
+            .iter()
+            .find(|&&b| b >= n)
+            .with_context(|| format!("no decode executable holds {n} sequences"))?;
+        let cfg = self.runner.cfg;
+
+        let mut toks = tokens.to_vec();
+        toks.resize(b, 0);
+        let mut pos: Vec<i32> = kvs.iter().map(|kv| kv.pos as i32).collect();
+        pos.resize(b, 0); // idle slots write pos 0 of their own (zero) rows
+
+        let kvshape = [cfg.n_layers, b, cfg.max_seq, cfg.n_kv_heads, cfg.head_dim()];
+        let k_lit = lit_f32(&self.gather(kvs, b, true), &kvshape)?;
+        let v_lit = lit_f32(&self.gather(kvs, b, false), &kvshape)?;
+        let (logits, k_out, v_out) = self.runner.decode_raw(&toks, &pos, &k_lit, &v_lit)?;
+        let k_host = k_out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("k out: {e:?}"))?;
+        let v_host = v_out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("v out: {e:?}"))?;
+        self.scatter(&k_host, kvs, b, true);
+        self.scatter(&v_host, kvs, b, false);
+        for kv in kvs.iter_mut() {
+            kv.pos += 1;
+        }
+        Ok((0..n).map(|i| logits[i * cfg.vocab..(i + 1) * cfg.vocab].to_vec()).collect())
+    }
+}
+
+// ------------------------------------------------------------------- sim --
+
+/// Deterministic fake backend: logits depend only on (last token, pos) so
+/// scheduler behaviour is reproducible; per-step latency is configurable
+/// to emulate a device.
+pub struct SimBackend {
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub batches: Vec<usize>,
+    pub step_latency: std::time::Duration,
+    pub prefills: u64,
+    pub decode_steps: u64,
+}
+
+impl SimBackend {
+    pub fn new(vocab: usize, max_seq: usize, batches: Vec<usize>) -> Self {
+        Self {
+            vocab,
+            max_seq,
+            batches,
+            step_latency: std::time::Duration::ZERO,
+            prefills: 0,
+            decode_steps: 0,
+        }
+    }
+
+    fn logits_for(&self, token: i32, pos: usize) -> Vec<f32> {
+        let mut v = vec![0f32; self.vocab];
+        // deterministic "next token": mix of token and pos
+        let top = ((token as usize).wrapping_mul(31).wrapping_add(pos * 7)) % self.vocab;
+        v[top] = 10.0;
+        v
+    }
+}
+
+impl Backend for SimBackend {
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    fn supported_batches(&self) -> &[usize] {
+        &self.batches
+    }
+
+    fn max_prompt(&self) -> usize {
+        self.max_seq / 2
+    }
+
+    fn prefill_one(&mut self, prompt: &[i32]) -> Result<(Vec<f32>, SeqKv)> {
+        if prompt.is_empty() || prompt.len() > self.max_prompt() {
+            bail!("prompt length {} outside (0, {}]", prompt.len(), self.max_prompt());
+        }
+        self.prefills += 1;
+        if !self.step_latency.is_zero() {
+            std::thread::sleep(self.step_latency);
+        }
+        let last = *prompt.last().unwrap();
+        Ok((self.logits_for(last, prompt.len()), SeqKv { k: vec![], v: vec![], pos: prompt.len() }))
+    }
+
+    fn decode_batch(&mut self, tokens: &[i32], kvs: &mut [&mut SeqKv]) -> Result<Vec<Vec<f32>>> {
+        if tokens.len() != kvs.len() {
+            bail!("token/kv mismatch");
+        }
+        if kvs.iter().any(|kv| kv.pos >= self.max_seq) {
+            bail!("KV exhausted");
+        }
+        self.decode_steps += 1;
+        if !self.step_latency.is_zero() {
+            std::thread::sleep(self.step_latency);
+        }
+        let out = tokens
+            .iter()
+            .zip(kvs.iter())
+            .map(|(&t, kv)| self.logits_for(t, kv.pos))
+            .collect();
+        for kv in kvs.iter_mut() {
+            kv.pos += 1;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_backend_deterministic() {
+        let mut b1 = SimBackend::new(64, 32, vec![1, 2, 4]);
+        let mut b2 = SimBackend::new(64, 32, vec![1, 2, 4]);
+        let (l1, kv1) = b1.prefill_one(&[1, 2, 3]).unwrap();
+        let (l2, kv2) = b2.prefill_one(&[1, 2, 3]).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(kv1.pos, 3);
+        assert_eq!(kv2.pos, 3);
+    }
+
+    #[test]
+    fn sim_decode_advances_positions() {
+        let mut b = SimBackend::new(64, 32, vec![1, 2]);
+        let (_, mut kva) = b.prefill_one(&[1]).unwrap();
+        let (_, mut kvb) = b.prefill_one(&[2, 3]).unwrap();
+        let logits = b.decode_batch(&[5, 6], &mut [&mut kva, &mut kvb]).unwrap();
+        assert_eq!(logits.len(), 2);
+        assert_eq!(kva.pos, 2);
+        assert_eq!(kvb.pos, 3);
+        assert_eq!(b.decode_steps, 1);
+    }
+
+    #[test]
+    fn sim_rejects_bad_prompts() {
+        let mut b = SimBackend::new(64, 32, vec![1]);
+        assert!(b.prefill_one(&[]).is_err());
+        assert!(b.prefill_one(&vec![1; 17]).is_err());
+    }
+}

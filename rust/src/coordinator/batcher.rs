@@ -1,0 +1,207 @@
+//! Dynamic batcher: greedily groups queued requests into the batch sizes
+//! the AOT artifacts support, bounded by a wait deadline.
+//!
+//! Policy (Triton/vLLM-style admission): release a group as soon as the
+//! largest supported batch fills; otherwise release whatever is queued
+//! once the *oldest* request has waited `max_wait`.  FIFO order is
+//! preserved — a group is always a prefix of the queue.
+
+use super::request::Request;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Supported group sizes, ascending (from the artifact manifest).
+    pub batch_sizes: Vec<usize>,
+    /// Deadline: oldest queued request may wait at most this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { batch_sizes: vec![1, 2, 4, 8], max_wait: Duration::from_millis(20) }
+    }
+}
+
+/// FIFO queue + grouping policy.  Single-threaded by design — the server
+/// wraps it in its own loop.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    queue: VecDeque<Request>,
+    admitted: u64,
+    released: u64,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        assert!(!cfg.batch_sizes.is_empty(), "need at least one batch size");
+        let mut cfg = cfg;
+        cfg.batch_sizes.sort_unstable();
+        Self { cfg, queue: VecDeque::new(), admitted: 0, released: 0 }
+    }
+
+    pub fn push(&mut self, r: Request) {
+        self.admitted += 1;
+        self.queue.push_back(r);
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Conservation counters: (admitted, released).
+    pub fn counts(&self) -> (u64, u64) {
+        (self.admitted, self.released)
+    }
+
+    pub fn max_batch(&self) -> usize {
+        *self.cfg.batch_sizes.last().unwrap()
+    }
+
+    /// Largest supported batch size ≤ n (None if n below the smallest).
+    fn fit(&self, n: usize) -> Option<usize> {
+        self.cfg.batch_sizes.iter().rev().find(|&&b| b <= n).copied()
+    }
+
+    /// Try to form a group at time `now`.  Returns a queue *prefix*.
+    pub fn poll(&mut self, now: Instant) -> Option<Vec<Request>> {
+        let n = self.queue.len();
+        if n == 0 {
+            return None;
+        }
+        let full = n >= self.max_batch();
+        let expired = now.duration_since(self.queue[0].arrived) >= self.cfg.max_wait;
+        if !(full || expired) {
+            return None;
+        }
+        let take = self.fit(n).unwrap_or_else(|| self.cfg.batch_sizes[0].min(n));
+        // (when n < smallest supported size we still take everything the
+        //  smallest executable can hold: smaller groups pad — but with
+        //  batch_sizes starting at 1 this branch never under-fills)
+        let take = take.min(n);
+        let group: Vec<Request> = self.queue.drain(..take).collect();
+        self.released += group.len() as u64;
+        Some(group)
+    }
+
+    /// Time until the oldest request's deadline (for sleep scheduling).
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|r| {
+            self.cfg.max_wait.saturating_sub(now.duration_since(r.arrived))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::GenParams;
+    use crate::util::proptest::forall;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![1, 2, 3], GenParams::default())
+    }
+
+    fn mk(batch_sizes: Vec<usize>, wait_ms: u64) -> Batcher {
+        Batcher::new(BatcherConfig { batch_sizes, max_wait: Duration::from_millis(wait_ms) })
+    }
+
+    #[test]
+    fn releases_full_batch_immediately() {
+        let mut b = mk(vec![1, 2, 4], 1000);
+        for i in 0..5 {
+            b.push(req(i));
+        }
+        let g = b.poll(Instant::now()).expect("full group");
+        assert_eq!(g.len(), 4);
+        assert_eq!(g[0].id.0, 0, "FIFO prefix");
+        assert_eq!(b.queued(), 1);
+        // remaining single request only flushes at deadline
+        assert!(b.poll(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn deadline_flushes_partial() {
+        let mut b = mk(vec![1, 2, 4], 10);
+        b.push(req(0));
+        b.push(req(1));
+        b.push(req(2));
+        assert!(b.poll(Instant::now()).is_none(), "no flush before deadline");
+        let later = Instant::now() + Duration::from_millis(11);
+        let g = b.poll(later).expect("deadline flush");
+        assert_eq!(g.len(), 2, "largest supported size ≤ 3");
+        assert_eq!(b.queued(), 1);
+        let g2 = b.poll(later + Duration::from_millis(11)).expect("second flush");
+        assert_eq!(g2.len(), 1);
+    }
+
+    #[test]
+    fn next_deadline_counts_down() {
+        let mut b = mk(vec![1], 50);
+        assert!(b.next_deadline(Instant::now()).is_none());
+        b.push(req(0));
+        let d = b.next_deadline(Instant::now()).unwrap();
+        assert!(d <= Duration::from_millis(50));
+    }
+
+    #[test]
+    fn prop_conservation_and_fifo() {
+        forall(64, |rng| {
+            let sizes = match rng.u32(0, 3) {
+                0 => vec![1],
+                1 => vec![1, 2, 4],
+                _ => vec![1, 2, 4, 8],
+            };
+            let mut b = mk(sizes.clone(), 5);
+            let total = rng.usize(1, 40);
+            let mut next_id = 0u64;
+            let mut out = Vec::new();
+            let mut now = Instant::now();
+            let mut to_add = total;
+            while out.len() < total {
+                // interleave arrivals and polls
+                let add = rng.usize(0, 4).min(to_add);
+                for _ in 0..add {
+                    b.push(req(next_id));
+                    next_id += 1;
+                }
+                to_add -= add;
+                now += Duration::from_millis(rng.u64() % 8);
+                if let Some(g) = b.poll(now) {
+                    assert!(!g.is_empty());
+                    assert!(g.len() <= *sizes.last().unwrap(), "never exceeds max batch");
+                    out.extend(g.iter().map(|r| r.id.0));
+                }
+            }
+            // every admitted request released exactly once, in FIFO order
+            let (adm, rel) = b.counts();
+            assert_eq!(adm, total as u64);
+            assert_eq!(rel, total as u64);
+            assert_eq!(out, (0..total as u64).collect::<Vec<_>>(), "FIFO violated");
+            assert_eq!(b.queued(), 0);
+        });
+    }
+
+    #[test]
+    fn prop_group_sizes_supported() {
+        forall(48, |rng| {
+            let mut b = mk(vec![1, 2, 4, 8], 0); // zero wait → flush whenever polled
+            let n = rng.usize(1, 30);
+            for i in 0..n {
+                b.push(req(i as u64));
+            }
+            let mut now = Instant::now();
+            while b.queued() > 0 {
+                now += Duration::from_millis(1);
+                if let Some(g) = b.poll(now) {
+                    assert!(
+                        [1usize, 2, 4, 8].contains(&g.len()),
+                        "group size {} unsupported",
+                        g.len()
+                    );
+                }
+            }
+        });
+    }
+}

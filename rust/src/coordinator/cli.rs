@@ -1,0 +1,127 @@
+//! `apllm serve` — the end-to-end serving demo: PJRT model artifacts +
+//! continuous-batching scheduler under a synthetic Poisson workload.
+
+use super::backend::PjrtBackend;
+use super::request::{GenParams, Request};
+use super::scheduler::{Scheduler, SchedulerConfig};
+use crate::runtime::{artifacts_dir, Engine, ModelRunner};
+use crate::util::Rng;
+use std::time::{Duration, Instant};
+
+pub struct ServeArgs {
+    pub requests: usize,
+    pub rate_per_s: f64,
+    pub max_new: usize,
+    pub prompt_len: usize,
+    pub seed: u64,
+}
+
+impl Default for ServeArgs {
+    fn default() -> Self {
+        Self { requests: 16, rate_per_s: 8.0, max_new: 8, prompt_len: 12, seed: 0 }
+    }
+}
+
+pub fn parse_args(args: &[String]) -> ServeArgs {
+    let mut a = ServeArgs::default();
+    let mut it = args.iter();
+    while let Some(flag) = it.next() {
+        let mut val = |name: &str| -> String {
+            it.next().unwrap_or_else(|| panic!("{name} needs a value")).clone()
+        };
+        match flag.as_str() {
+            "--requests" => a.requests = val("--requests").parse().expect("usize"),
+            "--rate" => a.rate_per_s = val("--rate").parse().expect("f64"),
+            "--max-new" => a.max_new = val("--max-new").parse().expect("usize"),
+            "--prompt-len" => a.prompt_len = val("--prompt-len").parse().expect("usize"),
+            "--seed" => a.seed = val("--seed").parse().expect("u64"),
+            other => panic!("unknown flag {other}"),
+        }
+    }
+    a
+}
+
+/// Run the demo; returns (responses, metrics report).  Used by both the
+/// CLI and the llm_serving example.
+pub fn run_serving_demo(a: &ServeArgs) -> anyhow::Result<String> {
+    let dir = artifacts_dir();
+    eprintln!("loading artifacts from {} ...", dir.display());
+    let engine = Engine::load(&dir)?;
+    let runner = ModelRunner::new(&engine)?;
+    let t0 = Instant::now();
+    let n = engine.warmup(&["prefill", "decode"])?;
+    eprintln!("compiled {n} model executables in {:.2?}", t0.elapsed());
+
+    let backend = PjrtBackend::new(&runner)?;
+    let vocab = runner.cfg.vocab as i32;
+    let mut sched = Scheduler::new(
+        backend,
+        SchedulerConfig { kv_blocks: 128, block_tokens: 16, max_running: 8 },
+    );
+
+    // Poisson arrivals, fixed prompt length, deterministic content
+    let mut rng = Rng::with_seed(a.seed);
+    let mut arrivals: Vec<(f64, Request)> = Vec::new();
+    let mut t = 0.0;
+    for i in 0..a.requests {
+        t += rng.exponential(a.rate_per_s);
+        let prompt: Vec<i32> = (0..a.prompt_len).map(|_| rng.u32(1, vocab as u32) as i32).collect();
+        arrivals.push((
+            t,
+            Request::new(
+                i as u64,
+                prompt,
+                GenParams { max_new_tokens: a.max_new, sample: false, seed: i as u64 },
+            ),
+        ));
+    }
+
+    sched.metrics.start();
+    let start = Instant::now();
+    let mut next = 0;
+    let mut responses = Vec::new();
+    while next < arrivals.len() || !sched.is_idle() {
+        let now = start.elapsed().as_secs_f64();
+        while next < arrivals.len() && arrivals[next].0 <= now {
+            let (_, mut req) = arrivals[next].clone();
+            req.arrived = Instant::now();
+            sched.submit(req);
+            next += 1;
+        }
+        if sched.is_idle() {
+            if next < arrivals.len() {
+                let wait = arrivals[next].0 - now;
+                std::thread::sleep(Duration::from_secs_f64(wait.max(0.0).min(0.05)));
+            }
+            continue;
+        }
+        responses.extend(sched.step()?);
+    }
+    sched.metrics.finish();
+
+    let mut report = String::new();
+    report.push_str(&format!(
+        "serving demo: {} requests, Poisson rate {}/s, prompt {} tokens, {} new tokens each\n",
+        a.requests, a.rate_per_s, a.prompt_len, a.max_new
+    ));
+    report.push_str(&sched.metrics.report());
+    report.push('\n');
+    let sample: Vec<i32> = responses
+        .iter()
+        .find(|r| r.id.0 == 0)
+        .map(|r| r.tokens.clone())
+        .unwrap_or_default();
+    report.push_str(&format!("request 0 generated: {sample:?}\n"));
+    Ok(report)
+}
+
+pub fn cmd_serve(args: &[String]) {
+    let a = parse_args(args);
+    match run_serving_demo(&a) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("serve failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,257 @@
+//! Paged KV-cache block allocator (vLLM-style) — the memory-management
+//! substrate for continuous batching.
+//!
+//! The cache is a pool of fixed-size blocks (`block_tokens` KV slots
+//! each); a sequence owns an ordered block list that grows as it decodes.
+//! The allocator guarantees: no block is owned twice, frees are idempotent
+//! per sequence, and capacity is respected (allocation fails cleanly when
+//! the pool is exhausted — the scheduler's preemption signal).
+
+use std::collections::HashMap;
+
+/// Index of a physical cache block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BlockId(pub u32);
+
+/// Per-sequence block table.
+#[derive(Debug, Default, Clone)]
+pub struct BlockTable {
+    pub blocks: Vec<BlockId>,
+    pub tokens: usize,
+}
+
+/// Fixed-capacity block pool.
+pub struct KvPool {
+    block_tokens: usize,
+    free: Vec<BlockId>,
+    tables: HashMap<u64, BlockTable>,
+    total_blocks: usize,
+}
+
+impl KvPool {
+    pub fn new(total_blocks: usize, block_tokens: usize) -> Self {
+        assert!(block_tokens > 0 && total_blocks > 0);
+        Self {
+            block_tokens,
+            free: (0..total_blocks as u32).rev().map(BlockId).collect(),
+            tables: HashMap::new(),
+            total_blocks,
+        }
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.total_blocks - self.free.len()
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Blocks needed to hold `tokens` KV entries.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Can a sequence of `tokens` be admitted right now?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.blocks_for(tokens) <= self.free.len()
+    }
+
+    /// Allocate the blocks for a new sequence of `tokens` (its prompt).
+    /// Fails (without side effects) if the pool can't hold it.
+    pub fn admit(&mut self, seq: u64, tokens: usize) -> Result<(), KvError> {
+        if self.tables.contains_key(&seq) {
+            return Err(KvError::AlreadyAdmitted(seq));
+        }
+        let need = self.blocks_for(tokens.max(1));
+        if need > self.free.len() {
+            return Err(KvError::OutOfBlocks { need, free: self.free.len() });
+        }
+        let blocks = self.free.split_off(self.free.len() - need);
+        self.tables.insert(seq, BlockTable { blocks, tokens });
+        Ok(())
+    }
+
+    /// Extend a sequence by one decoded token, growing its table if it
+    /// crosses a block boundary.
+    pub fn append_token(&mut self, seq: u64) -> Result<(), KvError> {
+        let t = self.tables.get_mut(&seq).ok_or(KvError::UnknownSeq(seq))?;
+        if t.tokens % self.block_tokens == 0 && t.tokens > 0 || t.blocks.is_empty() {
+            // need a fresh block (or first block for an empty admit)
+            if t.tokens.div_ceil(self.block_tokens) >= t.blocks.len() {
+                let b = self.free.pop().ok_or(KvError::OutOfBlocks { need: 1, free: 0 })?;
+                t.blocks.push(b);
+            }
+        }
+        t.tokens += 1;
+        Ok(())
+    }
+
+    /// Release every block a sequence holds.
+    pub fn release(&mut self, seq: u64) -> Result<(), KvError> {
+        let t = self.tables.remove(&seq).ok_or(KvError::UnknownSeq(seq))?;
+        self.free.extend(t.blocks);
+        Ok(())
+    }
+
+    pub fn table(&self, seq: u64) -> Option<&BlockTable> {
+        self.tables.get(&seq)
+    }
+
+    pub fn active_seqs(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Internal consistency: every block owned exactly once.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = std::collections::HashSet::new();
+        for b in &self.free {
+            if !seen.insert(b.0) {
+                return Err(format!("block {} double-freed", b.0));
+            }
+        }
+        for (seq, t) in &self.tables {
+            for b in &t.blocks {
+                if !seen.insert(b.0) {
+                    return Err(format!("block {} owned twice (seq {seq})", b.0));
+                }
+            }
+            if t.blocks.len() < self.blocks_for(t.tokens) {
+                return Err(format!("seq {seq}: {} tokens in {} blocks", t.tokens, t.blocks.len()));
+            }
+        }
+        if seen.len() != self.total_blocks {
+            return Err(format!("{} blocks tracked, expected {}", seen.len(), self.total_blocks));
+        }
+        Ok(())
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvError {
+    OutOfBlocks { need: usize, free: usize },
+    UnknownSeq(u64),
+    AlreadyAdmitted(u64),
+}
+
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvError::OutOfBlocks { need, free } => {
+                write!(f, "out of KV blocks (need {need}, free {free})")
+            }
+            KvError::UnknownSeq(s) => write!(f, "unknown sequence {s}"),
+            KvError::AlreadyAdmitted(s) => write!(f, "sequence {s} already admitted"),
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn admit_and_release() {
+        let mut p = KvPool::new(10, 16);
+        assert!(p.can_admit(160));
+        assert!(!p.can_admit(161));
+        p.admit(1, 100).unwrap();
+        assert_eq!(p.used_blocks(), 7);
+        assert_eq!(p.table(1).unwrap().tokens, 100);
+        p.release(1).unwrap();
+        assert_eq!(p.free_blocks(), 10);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admission_is_atomic() {
+        let mut p = KvPool::new(4, 16);
+        p.admit(1, 40).unwrap(); // 3 blocks
+        let err = p.admit(2, 40).unwrap_err();
+        assert!(matches!(err, KvError::OutOfBlocks { need: 3, free: 1 }));
+        assert_eq!(p.free_blocks(), 1, "failed admit must not leak");
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn append_grows_at_boundary() {
+        let mut p = KvPool::new(4, 4);
+        p.admit(7, 4).unwrap(); // exactly one block
+        assert_eq!(p.table(7).unwrap().blocks.len(), 1);
+        p.append_token(7).unwrap(); // 5th token → second block
+        assert_eq!(p.table(7).unwrap().blocks.len(), 2);
+        for _ in 0..3 {
+            p.append_token(7).unwrap();
+        }
+        assert_eq!(p.table(7).unwrap().blocks.len(), 2, "8 tokens fit 2 blocks");
+        p.append_token(7).unwrap();
+        assert_eq!(p.table(7).unwrap().blocks.len(), 3);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn double_admit_and_unknown_release() {
+        let mut p = KvPool::new(4, 4);
+        p.admit(1, 2).unwrap();
+        assert!(matches!(p.admit(1, 2), Err(KvError::AlreadyAdmitted(1))));
+        assert!(matches!(p.release(9), Err(KvError::UnknownSeq(9))));
+        assert!(matches!(p.append_token(9), Err(KvError::UnknownSeq(9))));
+    }
+
+    #[test]
+    fn exhaustion_on_append() {
+        let mut p = KvPool::new(2, 2);
+        p.admit(1, 4).unwrap(); // both blocks
+        let err = p.append_token(1).unwrap_err();
+        assert!(matches!(err, KvError::OutOfBlocks { .. }));
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prop_invariants_under_random_ops() {
+        forall(64, |rng| {
+            let blocks = rng.usize(1, 32);
+            let btok = rng.usize(1, 9);
+            let mut p = KvPool::new(blocks, btok);
+            let mut live: Vec<u64> = Vec::new();
+            let mut next = 0u64;
+            for _ in 0..rng.usize(10, 200) {
+                match rng.u32(0, 3) {
+                    0 => {
+                        let toks = rng.usize(1, 3 * btok + 1);
+                        if p.admit(next, toks).is_ok() {
+                            live.push(next);
+                        }
+                        next += 1;
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let i = rng.usize(0, live.len());
+                            let _ = p.append_token(live[i]);
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let i = rng.usize(0, live.len());
+                            let s = live.swap_remove(i);
+                            p.release(s).unwrap();
+                        }
+                    }
+                }
+                p.check_invariants().unwrap_or_else(|e| panic!("invariant: {e}"));
+            }
+            // drain
+            for s in live {
+                p.release(s).unwrap();
+            }
+            assert_eq!(p.free_blocks(), blocks);
+        });
+    }
+}

@@ -1,0 +1,157 @@
+//! Serving metrics: counters + latency percentiles.
+
+use std::time::Instant;
+
+/// Latency sample store with percentile queries (exact, sort-on-read —
+/// fine for the demo scale; a production build would use t-digest).
+#[derive(Debug, Default, Clone)]
+pub struct LatencyStats {
+    samples: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, seconds: f64) {
+        self.samples.push(seconds);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Exact percentile (nearest-rank); `p` in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[rank.min(v.len() - 1)]
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(0.0, f64::max)
+    }
+}
+
+/// Aggregated serving metrics.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    pub requests_in: u64,
+    pub requests_done: u64,
+    pub tokens_generated: u64,
+    pub groups_executed: u64,
+    pub batch_occupancy_sum: u64,
+    pub queue: LatencyStats,
+    pub ttft: LatencyStats,
+    pub total: LatencyStats,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+impl Metrics {
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    pub fn finish(&mut self) {
+        self.finished = Some(Instant::now());
+    }
+
+    pub fn wall_seconds(&self) -> f64 {
+        match (self.started, self.finished) {
+            (Some(s), Some(f)) => f.duration_since(s).as_secs_f64(),
+            (Some(s), None) => s.elapsed().as_secs_f64(),
+            _ => 0.0,
+        }
+    }
+
+    /// Generated tokens per wall-clock second.
+    pub fn throughput_tok_s(&self) -> f64 {
+        let w = self.wall_seconds();
+        if w > 0.0 {
+            self.tokens_generated as f64 / w
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean batch occupancy across executed groups.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.groups_executed == 0 {
+            return 0.0;
+        }
+        self.batch_occupancy_sum as f64 / self.groups_executed as f64
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests: {}/{} done | tokens: {} | wall: {:.2}s | {:.1} tok/s | occupancy {:.2}\n\
+             queue  p50/p95/max: {:.1}/{:.1}/{:.1} ms\n\
+             ttft   p50/p95/max: {:.1}/{:.1}/{:.1} ms\n\
+             total  p50/p95/max: {:.1}/{:.1}/{:.1} ms",
+            self.requests_done,
+            self.requests_in,
+            self.tokens_generated,
+            self.wall_seconds(),
+            self.throughput_tok_s(),
+            self.mean_occupancy(),
+            self.queue.percentile(50.0) * 1e3,
+            self.queue.percentile(95.0) * 1e3,
+            self.queue.max() * 1e3,
+            self.ttft.percentile(50.0) * 1e3,
+            self.ttft.percentile(95.0) * 1e3,
+            self.ttft.max() * 1e3,
+            self.total.percentile(50.0) * 1e3,
+            self.total.percentile(95.0) * 1e3,
+            self.total.max() * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_exact() {
+        let mut s = LatencyStats::default();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0] {
+            s.record(v);
+        }
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 10.0);
+        assert_eq!(s.percentile(50.0), 6.0); // nearest-rank on 10 samples
+        assert_eq!(s.max(), 10.0);
+        assert!((s.mean() - 5.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = LatencyStats::default();
+        assert_eq!(s.percentile(50.0), 0.0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.count(), 0);
+    }
+
+    #[test]
+    fn occupancy_and_throughput() {
+        let mut m = Metrics::default();
+        m.start();
+        m.groups_executed = 4;
+        m.batch_occupancy_sum = 10;
+        assert!((m.mean_occupancy() - 2.5).abs() < 1e-12);
+        m.tokens_generated = 100;
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        m.finish();
+        assert!(m.throughput_tok_s() > 0.0);
+        assert!(m.report().contains("occupancy 2.50"));
+    }
+}

@@ -1,0 +1,40 @@
+//! Serving coordinator — the L3 layer.
+//!
+//! The paper integrates its kernels into LLM inference (§5.2); this module
+//! is the serving system that integration needs in production:
+//!
+//! * [`request`]  — request/response types and generation parameters.
+//! * [`batcher`]  — dynamic batcher: collects arrivals into the batch
+//!   sizes the AOT artifacts support, under a deadline (vLLM-style
+//!   admission, group-static execution — see DESIGN.md).
+//! * [`kv`]       — paged KV-cache block allocator (the continuous-
+//!   batching substrate; exercised by the scheduler + property tests).
+//! * [`backend`]  — execution backend trait: `PjrtBackend` (real model
+//!   artifacts) and `SimBackend` (gpusim-timed fake model for tests and
+//!   the coordinator bench).
+//! * [`scheduler`]— continuous-batching scheduler over the backend trait:
+//!   admission, prefill/decode interleaving, slot recycling.
+//! * [`metrics`]  — counters + latency percentiles.
+//! * [`server`]   — ties engine + batcher into a multi-threaded serve
+//!   loop over mpsc channels (PJRT handles stay on one executor thread).
+
+pub mod backend;
+pub mod batcher;
+pub mod cli;
+pub mod kv;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+pub mod server;
+pub mod trace;
+
+pub use backend::{Backend, SimBackend};
+pub use batcher::{Batcher, BatcherConfig};
+pub use kv::{BlockId, KvPool};
+pub use metrics::{LatencyStats, Metrics};
+pub use request::{GenParams, Request, RequestId, Response};
+pub use router::{RoutePolicy, Router};
+pub use scheduler::{Scheduler, SchedulerConfig};
+pub use server::{Server, ServerConfig};
+pub use trace::{ArrivalKind, TraceConfig};

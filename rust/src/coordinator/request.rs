@@ -1,0 +1,51 @@
+//! Request/response types.
+
+use std::time::Instant;
+
+/// Monotonically assigned request identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestId(pub u64);
+
+/// Generation parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct GenParams {
+    pub max_new_tokens: usize,
+    /// Greedy if false; seeded multinomial-ish (argmax over perturbed
+    /// logits) if true.
+    pub sample: bool,
+    pub seed: u64,
+}
+
+impl Default for GenParams {
+    fn default() -> Self {
+        Self { max_new_tokens: 8, sample: false, seed: 0 }
+    }
+}
+
+/// An inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub params: GenParams,
+    pub arrived: Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<i32>, params: GenParams) -> Self {
+        Self { id: RequestId(id), prompt, params, arrived: Instant::now() }
+    }
+}
+
+/// A completed generation.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: RequestId,
+    pub tokens: Vec<i32>,
+    /// Queue time (arrival → prefill start).
+    pub queue_s: f64,
+    /// Total latency (arrival → last token).
+    pub total_s: f64,
+    /// Time to first token.
+    pub ttft_s: f64,
+}

@@ -1,0 +1,219 @@
+//! Request router: dispatches requests across model replicas.
+//!
+//! The paper's system serves one quantized model per precision config; a
+//! deployment runs several replicas (possibly at different W/A precisions)
+//! behind one endpoint.  The router picks a replica per request by
+//! policy; replicas report queue depth so least-loaded routing can steer
+//! around stragglers.
+
+use super::request::{Request, RequestId};
+use crate::model::PrecisionConfig;
+use std::collections::HashMap;
+
+/// Routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    /// Pick the replica with the smallest outstanding token budget.
+    LeastLoaded,
+}
+
+/// A registered replica.
+#[derive(Debug, Clone)]
+pub struct Replica {
+    pub name: String,
+    pub precision: PrecisionConfig,
+    /// Outstanding work in tokens (prompt + max_new of in-flight requests).
+    outstanding: u64,
+}
+
+/// The router: owns replica bookkeeping, returns an index per request.
+pub struct Router {
+    replicas: Vec<Replica>,
+    policy: RoutePolicy,
+    rr_next: usize,
+    /// request → replica index (so completions decrement the right one).
+    inflight: HashMap<RequestId, (usize, u64)>,
+    pub routed: u64,
+    pub completed: u64,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy) -> Self {
+        Self {
+            replicas: Vec::new(),
+            policy,
+            rr_next: 0,
+            inflight: HashMap::new(),
+            routed: 0,
+            completed: 0,
+        }
+    }
+
+    pub fn add_replica(&mut self, name: impl Into<String>, precision: PrecisionConfig) -> usize {
+        self.replicas.push(Replica { name: name.into(), precision, outstanding: 0 });
+        self.replicas.len() - 1
+    }
+
+    pub fn replicas(&self) -> &[Replica] {
+        &self.replicas
+    }
+
+    /// Replicas able to serve a precision (exact match).
+    fn candidates(&self, precision: Option<PrecisionConfig>) -> Vec<usize> {
+        self.replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| precision.map(|p| r.precision == p).unwrap_or(true))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Route a request (optionally pinned to a precision).  Returns the
+    /// replica index, or None if no candidate exists.
+    pub fn route(&mut self, req: &Request, precision: Option<PrecisionConfig>) -> Option<usize> {
+        let cands = self.candidates(precision);
+        if cands.is_empty() {
+            return None;
+        }
+        let idx = match self.policy {
+            RoutePolicy::RoundRobin => {
+                // advance rr cursor to the next candidate
+                let pos = cands.iter().position(|&c| c >= self.rr_next % self.replicas.len());
+                let pick = cands[pos.unwrap_or(0) % cands.len()];
+                self.rr_next = pick + 1;
+                pick
+            }
+            RoutePolicy::LeastLoaded => *cands
+                .iter()
+                .min_by_key(|&&c| (self.replicas[c].outstanding, c))
+                .unwrap(),
+        };
+        let budget = (req.prompt.len() + req.params.max_new_tokens) as u64;
+        self.replicas[idx].outstanding += budget;
+        self.inflight.insert(req.id, (idx, budget));
+        self.routed += 1;
+        Some(idx)
+    }
+
+    /// Mark a routed request finished; releases its load accounting.
+    pub fn complete(&mut self, id: RequestId) -> Option<usize> {
+        let (idx, budget) = self.inflight.remove(&id)?;
+        self.replicas[idx].outstanding = self.replicas[idx].outstanding.saturating_sub(budget);
+        self.completed += 1;
+        Some(idx)
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Conservation check: Σ outstanding == Σ inflight budgets.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let tracked: u64 = self.inflight.values().map(|(_, b)| b).sum();
+        let held: u64 = self.replicas.iter().map(|r| r.outstanding).sum();
+        if tracked != held {
+            return Err(format!("load accounting drift: inflight {tracked} vs held {held}"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::GenParams;
+    use crate::util::proptest::forall;
+
+    fn req(id: u64, plen: usize, mnew: usize) -> Request {
+        Request::new(
+            id,
+            vec![1; plen],
+            GenParams { max_new_tokens: mnew, sample: false, seed: id },
+        )
+    }
+
+    fn router3(policy: RoutePolicy) -> Router {
+        let mut r = Router::new(policy);
+        r.add_replica("r0", PrecisionConfig::W2A2);
+        r.add_replica("r1", PrecisionConfig::W2A2);
+        r.add_replica("r2", PrecisionConfig::W1A1);
+        r
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = router3(RoutePolicy::RoundRobin);
+        let picks: Vec<usize> =
+            (0..6).map(|i| r.route(&req(i, 4, 4), None).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn precision_pinning() {
+        let mut r = router3(RoutePolicy::RoundRobin);
+        for i in 0..4 {
+            let idx = r.route(&req(i, 4, 4), Some(PrecisionConfig::W1A1)).unwrap();
+            assert_eq!(idx, 2, "only r2 serves W1A1");
+        }
+        assert!(r.route(&req(99, 4, 4), Some(PrecisionConfig::W8A8)).is_none());
+    }
+
+    #[test]
+    fn least_loaded_balances() {
+        let mut r = router3(RoutePolicy::LeastLoaded);
+        // heavy request to r0 (it's least-loaded first, ties break by index)
+        let a = r.route(&req(0, 100, 100), None).unwrap();
+        assert_eq!(a, 0);
+        // next requests avoid the loaded replica
+        let b = r.route(&req(1, 4, 4), None).unwrap();
+        let c = r.route(&req(2, 4, 4), None).unwrap();
+        assert_ne!(b, 0);
+        assert_ne!(c, 0);
+        assert_ne!(b, c, "spread across the two idle replicas");
+        // completion releases the load
+        r.complete(RequestId(0)).unwrap();
+        r.check_invariants().unwrap();
+        let d = r.route(&req(3, 4, 4), None).unwrap();
+        assert_eq!(d, 0, "r0 is idle again");
+    }
+
+    #[test]
+    fn complete_unknown_is_none() {
+        let mut r = router3(RoutePolicy::RoundRobin);
+        assert!(r.complete(RequestId(42)).is_none());
+    }
+
+    #[test]
+    fn prop_conservation() {
+        forall(48, |rng| {
+            let policy = if rng.bool() { RoutePolicy::RoundRobin } else { RoutePolicy::LeastLoaded };
+            let mut r = Router::new(policy);
+            let n_rep = rng.usize(1, 5);
+            for i in 0..n_rep {
+                r.add_replica(format!("r{i}"), PrecisionConfig::W2A2);
+            }
+            let mut live: Vec<RequestId> = Vec::new();
+            let mut next = 0u64;
+            for _ in 0..rng.usize(5, 80) {
+                if rng.bool() || live.is_empty() {
+                    let rq = req(next, rng.usize(1, 32), rng.usize(1, 32));
+                    if r.route(&rq, None).is_some() {
+                        live.push(rq.id);
+                    }
+                    next += 1;
+                } else {
+                    let i = rng.usize(0, live.len());
+                    let id = live.swap_remove(i);
+                    r.complete(id).unwrap();
+                }
+                r.check_invariants().unwrap_or_else(|e| panic!("{e}"));
+            }
+            for id in live {
+                r.complete(id).unwrap();
+            }
+            assert_eq!(r.inflight(), 0);
+            assert!(r.replicas().iter().all(|rep| rep.outstanding == 0));
+        });
+    }
+}

@@ -1,0 +1,142 @@
+//! Synthetic workload traces (the substitute for production request logs
+//! — DESIGN.md §2): Poisson and bursty arrival processes with
+//! configurable prompt/output length distributions, used by the serving
+//! demo, the coordinator bench, and capacity tests.
+
+use super::request::{GenParams, Request};
+use crate::util::Rng;
+
+/// Arrival process shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalKind {
+    /// Memoryless arrivals at `rate` req/s.
+    Poisson { rate: f64 },
+    /// `burst_size` back-to-back requests every `period_s`.
+    Bursty { burst_size: usize, period_s: f64 },
+}
+
+/// Trace generator configuration.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub kind: ArrivalKind,
+    pub requests: usize,
+    /// Prompt length range `[lo, hi)` (uniform).
+    pub prompt_len: (usize, usize),
+    /// max_new_tokens range `[lo, hi)` (uniform).
+    pub max_new: (usize, usize),
+    pub vocab: usize,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self {
+            kind: ArrivalKind::Poisson { rate: 20.0 },
+            requests: 32,
+            prompt_len: (4, 16),
+            max_new: (4, 12),
+            vocab: 1024,
+            seed: 0,
+        }
+    }
+}
+
+/// A request plus its arrival offset from trace start.
+#[derive(Debug, Clone)]
+pub struct TimedRequest {
+    pub at_s: f64,
+    pub request: Request,
+}
+
+/// Generate a deterministic trace.
+pub fn generate(cfg: &TraceConfig) -> Vec<TimedRequest> {
+    let mut rng = Rng::with_seed(cfg.seed);
+    let mut out = Vec::with_capacity(cfg.requests);
+    let mut t = 0.0f64;
+    for i in 0..cfg.requests {
+        t = match cfg.kind {
+            ArrivalKind::Poisson { rate } => t + rng.exponential(rate),
+            ArrivalKind::Bursty { burst_size, period_s } => {
+                (i / burst_size.max(1)) as f64 * period_s
+            }
+        };
+        let plen = rng.usize(cfg.prompt_len.0, cfg.prompt_len.1.max(cfg.prompt_len.0 + 1));
+        let mnew = rng.usize(cfg.max_new.0, cfg.max_new.1.max(cfg.max_new.0 + 1));
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.u32(1, cfg.vocab as u32) as i32).collect();
+        out.push(TimedRequest {
+            at_s: t,
+            request: Request::new(
+                i as u64,
+                prompt,
+                GenParams { max_new_tokens: mnew, sample: false, seed: i as u64 },
+            ),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn poisson_trace_is_sorted_and_deterministic() {
+        let cfg = TraceConfig::default();
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.len(), 32);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_s, y.at_s);
+            assert_eq!(x.request.prompt, y.request.prompt);
+        }
+        assert!(a.windows(2).all(|w| w[0].at_s <= w[1].at_s));
+    }
+
+    #[test]
+    fn poisson_rate_approximately_holds() {
+        let cfg = TraceConfig {
+            kind: ArrivalKind::Poisson { rate: 50.0 },
+            requests: 2000,
+            ..Default::default()
+        };
+        let tr = generate(&cfg);
+        let span = tr.last().unwrap().at_s;
+        let rate = 2000.0 / span;
+        assert!((40.0..60.0).contains(&rate), "empirical rate {rate}");
+    }
+
+    #[test]
+    fn bursty_trace_groups() {
+        let cfg = TraceConfig {
+            kind: ArrivalKind::Bursty { burst_size: 4, period_s: 1.0 },
+            requests: 12,
+            ..Default::default()
+        };
+        let tr = generate(&cfg);
+        assert_eq!(tr[0].at_s, 0.0);
+        assert_eq!(tr[3].at_s, 0.0);
+        assert_eq!(tr[4].at_s, 1.0);
+        assert_eq!(tr[11].at_s, 2.0);
+    }
+
+    #[test]
+    fn prop_lengths_in_range() {
+        forall(24, |rng| {
+            let lo = rng.usize(1, 8);
+            let hi = lo + rng.usize(1, 8);
+            let cfg = TraceConfig {
+                prompt_len: (lo, hi),
+                max_new: (lo, hi),
+                requests: 20,
+                seed: rng.u64(),
+                ..Default::default()
+            };
+            for tr in generate(&cfg) {
+                assert!((lo..hi).contains(&tr.request.prompt.len()));
+                assert!((lo..hi).contains(&tr.request.params.max_new_tokens));
+                assert!(tr.request.prompt.iter().all(|&t| t >= 1 && t < 1024));
+            }
+        });
+    }
+}

@@ -1,0 +1,67 @@
+//! Device parameters (published RTX 3090 / GA102 numbers).
+
+/// GPU device model.
+#[derive(Debug, Clone, Copy)]
+pub struct Gpu {
+    pub name: &'static str,
+    pub sms: usize,
+    pub clock_hz: f64,
+    /// Peak global-memory bandwidth (bytes/s).
+    pub mem_bw: f64,
+    /// Achievable fraction of peak bandwidth for streaming GEMM loads.
+    pub bw_efficiency: f64,
+    /// Effective L2 bandwidth for tile re-reads (bytes/s).
+    pub l2_bw: f64,
+    /// Shared memory per SM (bytes).
+    pub smem_per_sm: usize,
+    /// Max shared memory a single block may claim (bytes).
+    pub smem_per_block: usize,
+    pub l2_bytes: usize,
+    /// Documented dense tensor-core peaks (ops/s) — used only for
+    /// roofline *reporting*, not for the fitted curves.
+    pub peak_fp16_tc: f64,
+    pub peak_int8_tc: f64,
+    pub peak_int4_tc: f64,
+    pub peak_int1_tc: f64,
+    pub peak_fp32_cuda: f64,
+}
+
+impl Gpu {
+    /// NVIDIA GeForce RTX 3090 (GA102, Ampere) — the paper's testbed.
+    pub fn rtx3090() -> Self {
+        Self {
+            name: "RTX 3090 (GA102)",
+            sms: 82,
+            clock_hz: 1.695e9,
+            mem_bw: 936.2e9,
+            bw_efficiency: 0.82,
+            l2_bw: 2.5e12,
+            smem_per_sm: 128 * 1024,
+            smem_per_block: 100 * 1024,
+            l2_bytes: 6 * 1024 * 1024,
+            peak_fp32_cuda: 35.6e12,
+            peak_fp16_tc: 71e12,   // FP16 with FP32 accumulate, dense
+            peak_int8_tc: 142e12,  // dense
+            peak_int4_tc: 284e12,  // dense
+            peak_int1_tc: 1136e12, // BMMA XOR, dense
+        }
+    }
+
+    pub fn eff_bandwidth(&self) -> f64 {
+        self.mem_bw * self.bw_efficiency
+    }
+
+    /// Roofline fraction a fitted rate represents against the documented
+    /// peak for `kind` ("fp32" | "fp16" | "int8" | "int4" | "int1").
+    pub fn roofline_fraction(&self, rate_ops: f64, kind: &str) -> f64 {
+        let peak = match kind {
+            "fp32" => self.peak_fp32_cuda,
+            "fp16" => self.peak_fp16_tc,
+            "int8" => self.peak_int8_tc,
+            "int4" => self.peak_int4_tc,
+            "int1" => self.peak_int1_tc,
+            _ => panic!("unknown roofline kind {kind}"),
+        };
+        rate_ops / peak
+    }
+}

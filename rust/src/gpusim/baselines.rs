@@ -1,0 +1,73 @@
+//! Per-scheme work and traffic formulas (the structural half of the cost
+//! model; the rate curves are fitted in `calibrate.rs`).
+
+use super::kernels::{ours_traffic, OursOpts, TileConfig};
+use super::Scheme;
+
+/// Memory traffic split by hierarchy level: `dram` is compulsory traffic
+/// (operands once + output once), `l2` is tile-reload traffic that hits
+/// the (much faster) L2 after the first pass — operand matrices at these
+/// precisions fit the GA102's 6 MB L2.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Traffic {
+    pub dram: f64,
+    pub l2: f64,
+}
+
+impl Traffic {
+    pub fn total(&self) -> f64 {
+        self.dram + self.l2
+    }
+}
+
+/// Native operation count of one `(M,K)×(K,N)` GEMM under `scheme`.
+///
+/// FP / CUTLASS / QLoRA count `2·M·N·K` native MACs; bit-decomposition
+/// schemes (ours, APNN-TC) execute `n_w · n_x` 1-bit GEMMs, i.e.
+/// `2·M·N·K·n_w·n_x` bit-ops.
+pub fn scheme_work(scheme: &Scheme, m: usize, k: usize, n: usize) -> f64 {
+    let base = 2.0 * m as f64 * n as f64 * k as f64;
+    match scheme {
+        Scheme::Ours(p, _) | Scheme::ApnnTc(p) => base * p.plane_pairs() as f64,
+        _ => base,
+    }
+}
+
+/// Memory traffic of one GEMM under `scheme`.
+///
+/// Output bytes follow the deployment pipeline: FP32 writes f32, FP16
+/// writes f16, CUTLASS IGEMM writes i32 accumulators, and the quantized
+/// inference paths (ours, APNN-TC, BSTC/BTC) requantize activations to
+/// 8-bit before the next layer — the paper's LLM integration (§5.2)
+/// implies the same, since its large-matrix latencies sit below the DRAM
+/// cost of an i32 output.
+pub fn scheme_traffic(scheme: &Scheme, m: usize, k: usize, n: usize) -> Traffic {
+    let (mf, kf, nf) = (m as f64, k as f64, n as f64);
+    match scheme {
+        Scheme::Fp32 => Traffic { dram: 4.0 * (mf * kf + kf * nf) + 4.0 * mf * nf, l2: 0.0 },
+        Scheme::Fp16 => Traffic { dram: 2.0 * (mf * kf + kf * nf) + 2.0 * mf * nf, l2: 0.0 },
+        Scheme::QloraW4 => {
+            // 4-bit stored weights dequantized in-kernel, FP16 compute
+            Traffic { dram: 0.5 * mf * kf + 2.0 * kf * nf + 2.0 * mf * nf, l2: 0.0 }
+        }
+        Scheme::CutlassInt4 => {
+            Traffic { dram: 0.5 * (mf * kf + kf * nf) + 4.0 * mf * nf, l2: 0.0 }
+        }
+        Scheme::CutlassInt1 => {
+            Traffic { dram: (mf * kf + kf * nf) / 8.0 + 4.0 * mf * nf, l2: 0.0 }
+        }
+        Scheme::Bstc | Scheme::Btc => {
+            Traffic { dram: (mf * kf + kf * nf) / 8.0 + mf * nf, l2: 0.0 }
+        }
+        Scheme::Ours(p, opts) => ours_traffic(m, k, n, p.nw, p.nx, opts),
+        Scheme::ApnnTc(p) => {
+            // APNN-TC uses smaller thread-block tiles (its smem layout is
+            // sized for CNN-scale GEMMs) → more tile re-reads at LLM sizes.
+            let opts = OursOpts {
+                tiles: TileConfig { bm: 32, bn: 32, bk: 128 },
+                ..OursOpts::paper()
+            };
+            ours_traffic(m, k, n, p.nw, p.nx, &opts)
+        }
+    }
+}

@@ -1,0 +1,279 @@
+//! Calibration: fit each scheme's `(L, R_max, s_half)` against the paper's
+//! published latencies (Tables 1 & 2), plus synthesized anchors for the
+//! comparators the paper only reports as speedup claims (APNN-TC, BSTC,
+//! BTC — Fig. 5/6; QLoRA/W1A1/W4A4 — Fig. 7).
+//!
+//! The fitter minimizes the worst-case |log(T_model / T_anchor)| with a
+//! coarse-to-fine grid search in log space — deterministic, ~1 ms per
+//! scheme, no dependencies.
+
+use super::{arch::Gpu, baselines, kernels::OursOpts, Scheme, SchemeParams};
+use crate::model::PrecisionConfig;
+
+/// One anchor: (M, K, N, latency_seconds).
+pub type Anchor = (usize, usize, usize, f64);
+
+const US: f64 = 1e-6;
+const MS: f64 = 1e-3;
+
+/// Paper Table 1 (square 1k/2k/4k) + Table 2 (Llama2-7B shapes) anchors,
+/// plus synthesized anchors (marked) derived from the paper's prose claims.
+pub static ANCHORS: &[(&str, &[Anchor])] = &[
+    (
+        "FP32",
+        &[
+            (1024, 1024, 1024, 121.0 * US),
+            (2048, 2048, 2048, 779.0 * US),
+            (4096, 4096, 4096, 5690.0 * US),
+            (1024, 4096, 4096, 3.12 * MS),
+            (1024, 4096, 11008, 8.21 * MS),
+            (1024, 11008, 4096, 8.36 * MS),
+        ],
+    ),
+    (
+        "FP16",
+        &[
+            (1024, 1024, 1024, 44.2 * US),
+            (2048, 2048, 2048, 263.0 * US),
+            (4096, 4096, 4096, 1960.0 * US),
+            (1024, 4096, 4096, 1.07 * MS),
+            (1024, 4096, 11008, 1.47 * MS),
+            (1024, 11008, 4096, 1.58 * MS),
+        ],
+    ),
+    (
+        "CUTLASS INT4",
+        &[
+            (1024, 1024, 1024, 15.8 * US),
+            (2048, 2048, 2048, 66.5 * US),
+            (4096, 4096, 4096, 386.0 * US),
+            (1024, 4096, 4096, 238.0 * US),
+            (1024, 4096, 11008, 574.0 * US),
+            (1024, 11008, 4096, 548.0 * US),
+        ],
+    ),
+    (
+        "CUTLASS INT1",
+        &[
+            (1024, 1024, 1024, 9.3 * US),
+            (2048, 2048, 2048, 36.9 * US),
+            (4096, 4096, 4096, 161.0 * US),
+            (1024, 4096, 4096, 97.0 * US),
+            (1024, 4096, 11008, 255.0 * US),
+            (1024, 11008, 4096, 188.0 * US),
+        ],
+    ),
+    (
+        "ours-W3A4",
+        &[
+            (256, 256, 256, 8.0 * US), // Fig. 5 small-size series
+            (1024, 1024, 1024, 12.4 * US),
+            (2048, 2048, 2048, 50.4 * US),
+            (4096, 4096, 4096, 184.0 * US),
+            (1024, 4096, 4096, 194.0 * US),
+            (1024, 4096, 11008, 523.0 * US),
+            (1024, 11008, 4096, 540.0 * US),
+        ],
+    ),
+    (
+        "ours-W2A2",
+        &[
+            (256, 256, 256, 7.0 * US), // Fig. 5: APNN-TC wins below ~512
+            (1024, 1024, 1024, 8.7 * US),
+            (2048, 2048, 2048, 18.1 * US),
+            (4096, 4096, 4096, 46.5 * US),
+            (1024, 4096, 4096, 59.0 * US),
+            (1024, 4096, 11008, 143.0 * US),
+            (1024, 11008, 4096, 165.0 * US),
+        ],
+    ),
+    (
+        "ours-W1A2",
+        &[
+            (256, 256, 256, 6.5 * US), // Fig. 5: APNN-TC wins below ~512
+            (1024, 1024, 1024, 9.0 * US),
+            (2048, 2048, 2048, 11.7 * US),
+            (4096, 4096, 4096, 29.5 * US),
+            (1024, 4096, 4096, 34.0 * US),
+            (1024, 4096, 11008, 84.0 * US),
+            (1024, 11008, 4096, 82.0 * US),
+        ],
+    ),
+    // ---- synthesized anchors (paper gives claims, not tables) ----
+    (
+        // Fig. 7 alignment with OneBit: W1A1 tracks W1A2 minus one
+        // activation plane (~0.7× compute at saturated sizes).
+        "ours-W1A1",
+        &[
+            (1024, 1024, 1024, 8.6 * US),
+            (4096, 4096, 4096, 21.0 * US),
+            (1024, 4096, 11008, 60.0 * US),
+        ],
+    ),
+    (
+        // Fig. 7's W4A4 configuration: 16 plane pairs ≈ 1.33× W3A4.
+        "ours-W4A4",
+        &[
+            (1024, 1024, 1024, 15.5 * US),
+            (4096, 4096, 4096, 245.0 * US),
+            (1024, 4096, 11008, 700.0 * US),
+        ],
+    ),
+    (
+        // Fig. 5: "APNN-TC slightly outperforms for smaller matrices";
+        // ours W1A2/W2A2 are 44×/50× faster at 4k; Fig. 6: 10× at LLM
+        // shapes ≥ 1k/10.75k/4k.
+        "APNN-TC W1A2",
+        &[
+            (256, 256, 256, 4.5 * US),
+            (1024, 1024, 1024, 42.0 * US),
+            (4096, 4096, 4096, 1.30 * MS),
+            (1024, 4096, 11008, 1.6 * MS),
+        ],
+    ),
+    (
+        "APNN-TC W2A2",
+        &[
+            (256, 256, 256, 5.2 * US),
+            (1024, 1024, 1024, 55.0 * US),
+            (4096, 4096, 4096, 2.33 * MS),
+            (1024, 4096, 11008, 2.6 * MS),
+        ],
+    ),
+    (
+        // BSTC/BTC: software/Turing bit-GEMMs, below CUTLASS INT1 at
+        // scale (Fig. 5's lower series).
+        "BSTC",
+        &[(1024, 1024, 1024, 26.0 * US), (4096, 4096, 4096, 430.0 * US)],
+    ),
+    (
+        "BTC",
+        &[(1024, 1024, 1024, 18.0 * US), (4096, 4096, 4096, 300.0 * US)],
+    ),
+    (
+        // QLoRA: 4-bit storage but FP16 compute + in-kernel dequant —
+        // Fig. 7 shows inference *slower* than plain FP16 (~0.8×).
+        "QLoRA W4",
+        &[
+            (1024, 1024, 1024, 56.0 * US),
+            (4096, 4096, 4096, 2.45 * MS),
+            (1024, 4096, 11008, 1.85 * MS),
+        ],
+    ),
+];
+
+/// The canonical `Scheme` a calibration key refers to (ablation variants
+/// share their base key; their deltas are structural).
+pub fn canonical_scheme(key: &str) -> Scheme {
+    match key {
+        "FP32" => Scheme::Fp32,
+        "FP16" => Scheme::Fp16,
+        "CUTLASS INT4" => Scheme::CutlassInt4,
+        "CUTLASS INT1" => Scheme::CutlassInt1,
+        "BSTC" => Scheme::Bstc,
+        "BTC" => Scheme::Btc,
+        "QLoRA W4" => Scheme::QloraW4,
+        _ => {
+            if let Some(p) = key.strip_prefix("ours-").and_then(PrecisionConfig::parse) {
+                Scheme::Ours(p, OursOpts::paper())
+            } else if let Some(p) = key.strip_prefix("APNN-TC ").and_then(PrecisionConfig::parse) {
+                Scheme::ApnnTc(p)
+            } else {
+                panic!("unknown calibration key {key}")
+            }
+        }
+    }
+}
+
+/// Model time under candidate params (must mirror `Simulator::simulate`
+/// for the canonical, fully-optimized configuration).
+fn model_time(gpu: &Gpu, scheme: &Scheme, p: &SchemeParams, a: &Anchor) -> f64 {
+    let (m, k, n, _) = *a;
+    let work = baselines::scheme_work(scheme, m, k, n);
+    let traffic = baselines::scheme_traffic(scheme, m, k, n);
+    let t_compute = work / (p.rate_ops * p.util(m, k, n));
+    // anchors were measured with the schemes' own on-chip reloads hidden
+    // under compute (see Simulator::simulate) — only DRAM traffic floors
+    let t_mem = traffic.dram / gpu.eff_bandwidth();
+    p.launch_s + t_compute.max(t_mem)
+}
+
+fn fit_error(gpu: &Gpu, scheme: &Scheme, p: &SchemeParams, anchors: &[Anchor]) -> f64 {
+    anchors
+        .iter()
+        .map(|a| (model_time(gpu, scheme, p, a) / a.3).ln().abs())
+        .fold(0.0, f64::max)
+}
+
+/// Fit `(L, R_max, s_half)` for one scheme: coarse log-space grid followed
+/// by two refinement passes around the best point.
+pub fn fit_scheme(gpu: &Gpu, key: &str, anchors: &[Anchor]) -> SchemeParams {
+    let scheme = canonical_scheme(key);
+    let mut best = SchemeParams { launch_s: 5e-6, rate_ops: 1e14, s_half: 500.0 };
+    let mut best_err = f64::INFINITY;
+    // coarse grid (log space)
+    let grid = |lo: f64, hi: f64, n: usize| -> Vec<f64> {
+        (0..n)
+            .map(|i| (lo.ln() + (hi.ln() - lo.ln()) * i as f64 / (n - 1) as f64).exp())
+            .collect()
+    };
+    let search = |ls: &[f64], rs: &[f64], ss: &[f64], best: &mut SchemeParams, best_err: &mut f64| {
+        for &l in ls {
+            for &r in rs {
+                for &s in ss {
+                    let p = SchemeParams { launch_s: l, rate_ops: r, s_half: s };
+                    let e = fit_error(gpu, &scheme, &p, anchors);
+                    if e < *best_err {
+                        *best_err = e;
+                        *best = p;
+                    }
+                }
+            }
+        }
+    };
+    search(
+        &grid(3e-7, 4e-5, 18),
+        &grid(5e12, 5e16, 24),
+        &grid(30.0, 8000.0, 18),
+        &mut best,
+        &mut best_err,
+    );
+    // refine twice around the incumbent
+    for shrink in [3.0f64, 1.6] {
+        let b = best;
+        search(
+            &grid(b.launch_s / shrink, b.launch_s * shrink, 13),
+            &grid(b.rate_ops / shrink, b.rate_ops * shrink, 13),
+            &grid(b.s_half / shrink, b.s_half * shrink, 13),
+            &mut best,
+            &mut best_err,
+        );
+    }
+    best
+}
+
+/// Per-anchor fit report (the calibrate CLI + EXPERIMENTS.md table).
+#[derive(Debug, Clone)]
+pub struct CalibrationReport {
+    pub key: String,
+    pub params: SchemeParams,
+    /// (anchor, model_time_s, rel_err).
+    pub rows: Vec<(Anchor, f64, f64)>,
+    pub max_rel_err: f64,
+}
+
+impl CalibrationReport {
+    pub fn build(gpu: &Gpu, key: &str, anchors: &[Anchor]) -> Self {
+        let params = fit_scheme(gpu, key, anchors);
+        let scheme = canonical_scheme(key);
+        let rows: Vec<_> = anchors
+            .iter()
+            .map(|a| {
+                let t = model_time(gpu, &scheme, &params, a);
+                (*a, t, (t - a.3).abs() / a.3)
+            })
+            .collect();
+        let max_rel_err = rows.iter().map(|r| r.2).fold(0.0, f64::max);
+        Self { key: key.to_string(), params, rows, max_rel_err }
+    }
+}

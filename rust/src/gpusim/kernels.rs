@@ -1,0 +1,142 @@
+//! Structural model of OUR kernel: tiling, shared-memory footprint, and
+//! global-memory traffic, with the §4.1/§4.2 optimizations as knobs.
+
+/// Output-block tiling (the paper's `b_m × b_n`, K chunked by `b_k`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TileConfig {
+    pub bm: usize,
+    pub bn: usize,
+    pub bk: usize,
+}
+
+impl Default for TileConfig {
+    fn default() -> Self {
+        // the configuration the paper's §4.2 scheduling targets: one
+        // output block per SM, all plane pairs resident
+        Self { bm: 64, bn: 64, bk: 512 }
+    }
+}
+
+impl TileConfig {
+    /// Shrink `bk` (then `bm`/`bn`) until the double-buffered smem
+    /// footprint at `nw`/`nx` bits fits `budget` bytes — how a real launch
+    /// would size itself for wide precisions like W8A8.
+    pub fn fit(nw: u32, nx: u32, budget: usize) -> Self {
+        let mut t = Self::default();
+        loop {
+            let opts = OursOpts { tiles: t, ..OursOpts::paper() };
+            if smem_bytes_per_block(nw, nx, &opts) <= budget {
+                return t;
+            }
+            if t.bk > 64 {
+                t.bk /= 2;
+            } else if t.bm > 16 {
+                t.bm /= 2;
+                t.bn /= 2;
+            } else {
+                return t; // smallest supported tile
+            }
+        }
+    }
+}
+
+/// The §4.1/§4.2 optimization knobs (all-on == the paper's kernel).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OursOpts {
+    /// §4.2 ①②: recover in shared memory/fragments (fused) instead of
+    /// writing every `D_ij` back to global memory.
+    pub fused_recovery: bool,
+    /// §4.1: bit-plane packing into native 32-bit words (off = each
+    /// sub-byte element stored in an 8-bit slot).
+    pub packed: bool,
+    /// §4.2 ③: double-buffered smem so transfer overlaps compute.
+    pub double_buffer: bool,
+    /// §4.2 ④: each fragment holds one weight plane against ALL
+    /// activation planes (off = weight planes re-fetched per activation
+    /// plane).
+    pub frag_reuse: bool,
+    pub tiles: TileConfig,
+}
+
+impl OursOpts {
+    /// The paper's full configuration.
+    pub fn paper() -> Self {
+        Self {
+            fused_recovery: true,
+            packed: true,
+            double_buffer: true,
+            frag_reuse: true,
+            tiles: TileConfig::default(),
+        }
+    }
+
+    /// Everything off — the naive Fig. 4 flow.
+    pub fn naive() -> Self {
+        Self {
+            fused_recovery: false,
+            packed: false,
+            double_buffer: false,
+            frag_reuse: false,
+            tiles: TileConfig::default(),
+        }
+    }
+}
+
+/// Stored bits per element under the knobs: packed = exactly `bits`
+/// (§4.1's claim), unpacked = padded to the next byte slot.
+fn stored_bits(bits: u32, packed: bool) -> f64 {
+    if packed {
+        bits as f64
+    } else {
+        (bits as f64 / 8.0).ceil() * 8.0
+    }
+}
+
+/// Memory traffic of our kernel for `(M,K)×(K,N)` at `nw`/`nx` bits.
+///
+/// Per output block `(bm, bn)`: the W tile (`bm × K`, all `nw` planes) and
+/// the X tile (`K × bn`, all `nx` planes) stream once per block — so W is
+/// read once per block *column* and X once per block *row*.  The first
+/// read of each operand is compulsory DRAM traffic; repeats hit L2 (the
+/// packed operands fit the 6 MB L2 at every size the paper evaluates).
+/// With frag_reuse off (§4.2 ④) the weight tile is re-fetched for every
+/// activation plane.  Output is requantized to 8-bit for the next layer.
+pub fn ours_traffic(
+    m: usize,
+    k: usize,
+    n: usize,
+    nw: u32,
+    nx: u32,
+    opts: &OursOpts,
+) -> super::baselines::Traffic {
+    let t = &opts.tiles;
+    let col_blocks = n.div_ceil(t.bn) as f64;
+    let row_blocks = m.div_ceil(t.bm) as f64;
+    let wbits = stored_bits(nw, opts.packed);
+    let xbits = stored_bits(nx, opts.packed);
+    let w_once = m as f64 * k as f64 * wbits / 8.0;
+    let x_once = k as f64 * n as f64 * xbits / 8.0;
+    let w_reads = col_blocks * if opts.frag_reuse { 1.0 } else { nx as f64 };
+    let x_reads = row_blocks;
+    let y_traffic = m as f64 * n as f64;
+    super::baselines::Traffic {
+        dram: w_once + x_once + y_traffic,
+        l2: (w_reads - 1.0).max(0.0) * w_once + (x_reads - 1.0).max(0.0) * x_once,
+    }
+}
+
+/// Shared-memory bytes one block claims: double-buffered W/X plane tiles
+/// plus the fragment-recovery staging area (`n_w·b_m × n_x·b_n` i32 before
+/// folding, §4.2 ②).
+pub fn smem_bytes_per_block(nw: u32, nx: u32, opts: &OursOpts) -> usize {
+    let t = &opts.tiles;
+    let buf = if opts.double_buffer { 2 } else { 1 };
+    let planes = (nw as usize * t.bm + nx as usize * t.bn) * t.bk / 8 * buf;
+    let recovery = if opts.fused_recovery { 4 * t.bm * t.bn } else { 0 };
+    planes + recovery
+}
+
+/// Number of thread blocks the launch produces.
+pub fn blocks_launched(m: usize, n: usize, opts: &OursOpts) -> usize {
+    m.div_ceil(opts.tiles.bm) * n.div_ceil(opts.tiles.bn)
+}

@@ -1,0 +1,249 @@
+//! Calibrated RTX 3090 tensor-core simulator — the substitute for the
+//! paper's testbed (DESIGN.md §2).
+//!
+//! The paper's numbers come from CUDA kernels on an RTX 3090; this
+//! environment has no NVIDIA GPU, so every scheme in the evaluation is
+//! modeled as
+//!
+//! ```text
+//! T(M,K,N) = L  +  { max(T_compute, T_mem)      with double buffering
+//!                  { T_compute + T_mem           without (§4.2 ③ off)
+//! T_compute = work / (R_max · util(s)),   util(s) = s / (s + s_half)
+//! T_mem     = traffic / BW_eff
+//! ```
+//!
+//! with `s = (M·N·K)^{1/3}` the effective size, `work` the scheme's native
+//! op count and `traffic` derived from the kernel's *structural* tiling
+//! model (`kernels.rs`).  The free parameters `(L, R_max, s_half)` of each
+//! scheme are **fitted at construction time** against the paper's own
+//! Table 1 + Table 2 anchor latencies (`calibrate.rs`), so the simulator
+//! reproduces the paper's relative claims by construction and interpolates
+//! structurally everywhere else (Fig. 5/6 sweeps, ablations, Fig. 7).
+//!
+//! **Honesty note** (recorded in EXPERIMENTS.md): fitting reveals that the
+//! paper's W1A2/W2A2 large-matrix latencies imply bit-op throughputs of
+//! ~9–13 P(bit)OPS — several times the GA102's documented INT1 tensor-core
+//! roofline.  The simulator reproduces the paper's numbers anyway (that is
+//! its job), but the fitted `R_max` values document the discrepancy.
+
+mod arch;
+mod baselines;
+mod calibrate;
+mod kernels;
+
+pub use arch::Gpu;
+pub use baselines::{scheme_traffic, scheme_work, Traffic};
+pub use calibrate::{fit_scheme, CalibrationReport, ANCHORS};
+pub use kernels::{smem_bytes_per_block, OursOpts, TileConfig};
+
+use crate::model::{LlmArch, MatMulShape, PrecisionConfig};
+use std::collections::HashMap;
+
+/// Every scheme the paper's evaluation section compares.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Scheme {
+    /// PyTorch FP32 MatMul (CUDA cores).
+    Fp32,
+    /// PyTorch FP16 MatMul (tensor cores).
+    Fp16,
+    /// CUTLASS INT4 tensor-core GEMM.
+    CutlassInt4,
+    /// CUTLASS INT1 (BMMA) GEMM.
+    CutlassInt1,
+    /// This paper's kernel at a given precision, with the §4.1/§4.2
+    /// optimization knobs (all-on = the paper's configuration).
+    Ours(PrecisionConfig, OursOpts),
+    /// APNN-TC [8] at a given precision (W ≤ 2 only — its documented limit).
+    ApnnTc(PrecisionConfig),
+    /// BSTC [17]: binarized soft tensor core, 1-bit only.
+    Bstc,
+    /// BTC [18]: bit tensor core, 1-bit only.
+    Btc,
+    /// QLoRA-style W4 with on-the-fly dequant to FP16.
+    QloraW4,
+}
+
+impl Scheme {
+    pub fn ours(p: PrecisionConfig) -> Self {
+        Scheme::Ours(p, OursOpts::paper())
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Scheme::Fp32 => "FP32".into(),
+            Scheme::Fp16 => "FP16".into(),
+            Scheme::CutlassInt4 => "CUTLASS INT4".into(),
+            Scheme::CutlassInt1 => "CUTLASS INT1".into(),
+            Scheme::Ours(p, o) if *o == OursOpts::paper() => format!("{} (ours)", p.label()),
+            Scheme::Ours(p, _) => format!("{} (ours, ablated)", p.label()),
+            Scheme::ApnnTc(p) => format!("APNN-TC {}", p.label()),
+            Scheme::Bstc => "BSTC".into(),
+            Scheme::Btc => "BTC".into(),
+            Scheme::QloraW4 => "QLoRA W4".into(),
+        }
+    }
+
+    /// Key used to look up fitted rate parameters (ablation knobs share
+    /// the base scheme's calibration; their deltas are structural).
+    fn fit_key(&self) -> String {
+        match self {
+            Scheme::Ours(p, _) => format!("ours-{}", p.label()),
+            s => s.label(),
+        }
+    }
+}
+
+/// Simulated execution breakdown of one GEMM.
+#[derive(Debug, Clone, Copy)]
+pub struct SimResult {
+    pub time_s: f64,
+    pub t_compute_s: f64,
+    pub t_mem_s: f64,
+    /// Extra global-memory recovery pass (only when §4.2 fusion is off).
+    pub t_recovery_s: f64,
+    pub launch_s: f64,
+    pub util: f64,
+    pub traffic_bytes: f64,
+    pub work_ops: f64,
+}
+
+impl SimResult {
+    /// Tera-operations per second in the scheme's native ops (the paper's
+    /// Fig. 5/6 metric counts 2·M·N·K ops regardless of precision).
+    pub fn tops_effective(&self, m: usize, k: usize, n: usize) -> f64 {
+        2.0 * m as f64 * k as f64 * n as f64 / self.time_s / 1e12
+    }
+}
+
+/// Fitted per-scheme rate curve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SchemeParams {
+    /// Fixed launch + tail overhead (s).
+    pub launch_s: f64,
+    /// Asymptotic throughput in native ops/s.
+    pub rate_ops: f64,
+    /// Size at which utilization reaches 50%.
+    pub s_half: f64,
+}
+
+impl SchemeParams {
+    /// Utilization at effective size `s = (M·N·K)^{1/3}` with an
+    /// aspect-ratio penalty: skewed GEMMs (tall/flat, e.g. the paper's
+    /// Table 2 LLM shapes) run at lower efficiency than square ones of
+    /// equal volume on every scheme the paper measures.
+    pub fn util(&self, m: usize, k: usize, n: usize) -> f64 {
+        let s_eff = (m as f64 * n as f64 * k as f64).cbrt();
+        let min_dim = m.min(k).min(n) as f64;
+        let aspect = (min_dim / s_eff).min(1.0).powf(0.5);
+        s_eff / (s_eff + self.s_half) * aspect
+    }
+}
+
+/// The simulator: device + calibrated scheme curves.
+pub struct Simulator {
+    pub gpu: Gpu,
+    params: HashMap<String, SchemeParams>,
+}
+
+impl Simulator {
+    /// Build an RTX 3090 simulator calibrated against the paper's
+    /// Table 1 / Table 2 anchors.  Deterministic; takes ~1 ms.
+    pub fn rtx3090() -> Self {
+        let gpu = Gpu::rtx3090();
+        let mut params = HashMap::new();
+        for (key, anchors) in calibrate::ANCHORS.iter() {
+            params.insert((*key).to_string(), calibrate::fit_scheme(&gpu, key, anchors));
+        }
+        Self { gpu, params }
+    }
+
+    pub fn scheme_params(&self, scheme: &Scheme) -> SchemeParams {
+        let key = scheme.fit_key();
+        *self
+            .params
+            .get(&key)
+            .unwrap_or_else(|| panic!("no calibration for scheme {key}"))
+    }
+
+    /// Simulate one `(M,K) × (K,N)` GEMM under `scheme`.
+    pub fn simulate(&self, scheme: &Scheme, m: usize, k: usize, n: usize) -> SimResult {
+        let p = self.scheme_params(scheme);
+        let util = p.util(m, k, n);
+        let work = baselines::scheme_work(scheme, m, k, n);
+        let traffic = baselines::scheme_traffic(scheme, m, k, n);
+        let t_compute = work / (p.rate_ops * util);
+        // Exposed memory time: compulsory DRAM traffic, plus any on-chip
+        // reload traffic *beyond* the paper configuration's own (the §4.2
+        // schedule hides its own reloads under compute by construction —
+        // that hiding is what the anchors were measured with; ablations
+        // that add traffic pay the difference at L2 speed).
+        let l2_exposed = match scheme {
+            Scheme::Ours(prec, opts) => {
+                let base = baselines::scheme_traffic(&Scheme::ours(*prec), m, k, n).l2;
+                (kernels::ours_traffic(m, k, n, prec.nw, prec.nx, opts).l2 - base).max(0.0)
+            }
+            _ => 0.0,
+        };
+        let t_mem = traffic.dram / self.gpu.eff_bandwidth() + l2_exposed / self.gpu.l2_bw;
+        let (overlap, t_recovery) = match scheme {
+            Scheme::Ours(prec, opts) => {
+                let rec = if opts.fused_recovery {
+                    0.0
+                } else {
+                    // unfused: D_ij tiles round-trip global memory
+                    let bytes = 8.0 * m as f64 * n as f64 * prec.plane_pairs() as f64;
+                    bytes / self.gpu.eff_bandwidth()
+                };
+                (opts.double_buffer, rec)
+            }
+            _ => (true, 0.0),
+        };
+        let body = if overlap { t_compute.max(t_mem) } else { t_compute + t_mem };
+        SimResult {
+            time_s: p.launch_s + body + t_recovery,
+            t_compute_s: t_compute,
+            t_mem_s: t_mem,
+            t_recovery_s: t_recovery,
+            launch_s: p.launch_s,
+            util,
+            traffic_bytes: traffic.total(),
+            work_ops: work,
+        }
+    }
+
+    /// Total MatMul time of one forward pass over `m` tokens (Fig. 7).
+    pub fn llm_matmul_time(&self, arch: &LlmArch, scheme: &Scheme, m: usize) -> f64 {
+        arch.forward_shapes(m)
+            .iter()
+            .map(|s| self.simulate(scheme, s.m, s.k, s.n).time_s * s.count as f64)
+            .sum()
+    }
+
+    /// End-to-end inference speedup over FP16 (Fig. 7's metric).
+    ///
+    /// Non-MatMul work (attention softmax, norms, KV traffic, sampling) is
+    /// `NON_MATMUL_FRAC` of the FP16 MatMul time and identical across
+    /// schemes — quantization does not touch it.
+    pub fn llm_speedup_vs_fp16(&self, arch: &LlmArch, scheme: &Scheme, m: usize) -> f64 {
+        let fp16 = self.llm_matmul_time(arch, &Scheme::Fp16, m);
+        let other = NON_MATMUL_FRAC * fp16;
+        let t = self.llm_matmul_time(arch, scheme, m);
+        (fp16 + other) / (t + other)
+    }
+
+    /// Simulated per-GEMM times for a set of shapes (helper for benches).
+    pub fn simulate_shapes(&self, scheme: &Scheme, shapes: &[MatMulShape]) -> f64 {
+        shapes
+            .iter()
+            .map(|s| self.simulate(scheme, s.m, s.k, s.n).time_s * s.count as f64)
+            .sum()
+    }
+}
+
+/// Fraction of FP16 MatMul time spent on non-MatMul work per forward
+/// (attention softmax/KV, norms, embeddings, sampling).  Calibrated so the
+/// Fig. 7 FP16-relative speedups land in the paper's 3.9–6.7× band.
+pub const NON_MATMUL_FRAC: f64 = 0.15;
+
+#[cfg(test)]
+mod tests;

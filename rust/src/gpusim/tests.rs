@@ -1,0 +1,210 @@
+use super::*;
+use crate::model::PrecisionConfig;
+use crate::util::proptest::forall;
+
+fn sim() -> Simulator {
+    Simulator::rtx3090()
+}
+
+#[test]
+fn calibration_hits_anchors() {
+    // every fitted scheme reproduces its own anchors within tolerance
+    let gpu = Gpu::rtx3090();
+    for (key, anchors) in ANCHORS.iter() {
+        let rep = CalibrationReport::build(&gpu, key, anchors);
+        // The paper's own anchors are mutually inconsistent under any
+        // smooth 3-parameter rate curve (its 1k→2k→4k scaling factors are
+        // 2.1× and 2.6× for 8× work each) — 65% worst-case is the
+        // practical floor; the ordering/factor tests below are the real
+        // reproduction criteria.
+        assert!(
+            rep.max_rel_err < 0.65,
+            "{key}: max rel err {:.2} (params {:?})",
+            rep.max_rel_err,
+            rep.params
+        );
+    }
+}
+
+#[test]
+fn table1_ordering_at_4k() {
+    // paper Table 1, 4k column: FP32 > FP16 > INT4 > W3A4 ≈ INT1 > W2A2 > W1A2
+    let s = sim();
+    let t = |sc: &Scheme| s.simulate(sc, 4096, 4096, 4096).time_s;
+    let fp32 = t(&Scheme::Fp32);
+    let fp16 = t(&Scheme::Fp16);
+    let i4 = t(&Scheme::CutlassInt4);
+    let i1 = t(&Scheme::CutlassInt1);
+    let w3a4 = t(&Scheme::ours(PrecisionConfig::W3A4));
+    let w2a2 = t(&Scheme::ours(PrecisionConfig::W2A2));
+    let w1a2 = t(&Scheme::ours(PrecisionConfig::W1A2));
+    assert!(fp32 > fp16 && fp16 > i4 && i4 > i1, "FP/CUTLASS ladder");
+    assert!(w3a4 < i4, "W3A4 beats CUTLASS INT4 (paper: 184 vs 386 µs)");
+    assert!(w2a2 < i1 && w1a2 < i1, "W2A2/W1A2 beat CUTLASS INT1");
+    // headline factors: W1A2 ≈ 5.5× INT1, W2A2 ≈ 3.5× INT1 (±40%)
+    let r1 = i1 / w1a2;
+    let r2 = i1 / w2a2;
+    assert!((3.2..8.0).contains(&r1), "INT1/W1A2 = {r1:.2}");
+    assert!((2.0..5.5).contains(&r2), "INT1/W2A2 = {r2:.2}");
+}
+
+#[test]
+fn table1_speedups_vs_fp32() {
+    // W1A2 @4k ≈ 193× FP32; W2A2 ≈ 122×; tolerate ±40%
+    let s = sim();
+    let fp32 = s.simulate(&Scheme::Fp32, 4096, 4096, 4096).time_s;
+    let w1a2 = s.simulate(&Scheme::ours(PrecisionConfig::W1A2), 4096, 4096, 4096).time_s;
+    let w2a2 = s.simulate(&Scheme::ours(PrecisionConfig::W2A2), 4096, 4096, 4096).time_s;
+    assert!((120.0..280.0).contains(&(fp32 / w1a2)), "got {:.0}", fp32 / w1a2);
+    assert!((75.0..180.0).contains(&(fp32 / w2a2)), "got {:.0}", fp32 / w2a2);
+}
+
+#[test]
+fn apnn_crossover() {
+    // Fig. 5: APNN-TC wins at small sizes, loses badly at ≥1k
+    let s = sim();
+    let ours = Scheme::ours(PrecisionConfig::W1A2);
+    let apnn = Scheme::ApnnTc(PrecisionConfig::W1A2);
+    let small_ours = s.simulate(&ours, 256, 256, 256).time_s;
+    let small_apnn = s.simulate(&apnn, 256, 256, 256).time_s;
+    assert!(small_apnn < small_ours, "APNN should win at 256³");
+    let big_ours = s.simulate(&ours, 4096, 4096, 4096).time_s;
+    let big_apnn = s.simulate(&apnn, 4096, 4096, 4096).time_s;
+    assert!(big_apnn / big_ours > 20.0, "ours ≥20× at 4k, got {:.1}", big_apnn / big_ours);
+}
+
+#[test]
+fn monotonicity_in_size() {
+    let s = sim();
+    for scheme in [
+        Scheme::Fp16,
+        Scheme::CutlassInt1,
+        Scheme::ours(PrecisionConfig::W2A2),
+    ] {
+        let mut last = 0.0;
+        for size in [128, 256, 512, 1024, 2048, 4096] {
+            let t = s.simulate(&scheme, size, size, size).time_s;
+            assert!(t > last, "{}: non-monotone at {size}", scheme.label());
+            last = t;
+        }
+    }
+}
+
+#[test]
+fn monotonicity_in_bits() {
+    let s = sim();
+    // more plane pairs ⇒ more work ⇒ ≥ time at fixed calibration curve...
+    // (only valid within one fitted key, so compare structural work)
+    let w22 = scheme_work(&Scheme::ours(PrecisionConfig::W2A2), 1024, 1024, 1024);
+    let w34 = scheme_work(&Scheme::ours(PrecisionConfig::W3A4), 1024, 1024, 1024);
+    let w11 = scheme_work(&Scheme::ours(PrecisionConfig::W1A1), 1024, 1024, 1024);
+    assert!(w11 < w22 && w22 < w34);
+}
+
+#[test]
+fn ablation_knobs_strictly_hurt() {
+    let s = sim();
+    let p = PrecisionConfig::W2A2;
+    let base = s.simulate(&Scheme::ours(p), 4096, 4096, 4096).time_s;
+    for (name, opts) in [
+        ("no fused recovery", OursOpts { fused_recovery: false, ..OursOpts::paper() }),
+        ("no packing", OursOpts { packed: false, ..OursOpts::paper() }),
+        ("no double buffer", OursOpts { double_buffer: false, ..OursOpts::paper() }),
+        ("no frag reuse", OursOpts { frag_reuse: false, ..OursOpts::paper() }),
+        ("naive", OursOpts::naive()),
+    ] {
+        let t = s.simulate(&Scheme::Ours(p, opts), 4096, 4096, 4096).time_s;
+        assert!(t > base, "{name} should not be faster ({t:.3e} vs {base:.3e})");
+    }
+    let naive = s.simulate(&Scheme::Ours(p, OursOpts::naive()), 4096, 4096, 4096).time_s;
+    assert!(naive / base > 1.5, "all-off should cost ≥1.5×, got {:.2}", naive / base);
+}
+
+#[test]
+fn launch_geometry() {
+    let opts = OursOpts::paper();
+    assert_eq!(super::kernels::blocks_launched(4096, 4096, &opts), 64 * 64);
+    assert_eq!(super::kernels::blocks_launched(65, 1, &opts), 2);
+    // >SM-count launches wave-quantize, <SM-count underutilize
+    let gpu = Gpu::rtx3090();
+    assert!(super::kernels::blocks_launched(4096, 4096, &opts) > gpu.sms);
+    assert!(super::kernels::blocks_launched(128, 128, &opts) < gpu.sms);
+}
+
+#[test]
+fn smem_fits_hardware() {
+    let gpu = Gpu::rtx3090();
+    // the paper's evaluated precisions fit with the default tiles
+    for (nw, nx) in [(1, 1), (1, 2), (2, 2), (3, 4), (4, 4)] {
+        let b = smem_bytes_per_block(nw, nx, &OursOpts::paper());
+        assert!(b <= gpu.smem_per_block, "W{nw}A{nx}: {b} bytes > block limit");
+    }
+    // wider precisions must shrink tiles to fit (TileConfig::fit)
+    for (nw, nx) in [(8, 8), (6, 8), (8, 4)] {
+        let t = TileConfig::fit(nw, nx, gpu.smem_per_block);
+        let opts = OursOpts { tiles: t, ..OursOpts::paper() };
+        let b = smem_bytes_per_block(nw, nx, &opts);
+        assert!(b <= gpu.smem_per_block, "W{nw}A{nx} fitted: {b} bytes");
+        assert!(t.bk < TileConfig::default().bk || t.bm < 64, "fit must shrink");
+    }
+}
+
+#[test]
+fn fig7_speedup_bands() {
+    // paper: ours 3.9–6.7× over FP16; QLoRA < 1×; GPTQ(INT4 cutlass) and
+    // OneBit(INT1 cutlass) in between; ours beats CUTLASS at equal bits
+    let s = sim();
+    for arch in crate::model::LlmArch::all_paper_models() {
+        let m = 1024;
+        let ours_w1a1 = s.llm_speedup_vs_fp16(&arch, &Scheme::ours(PrecisionConfig::W1A1), m);
+        let ours_w2a2 = s.llm_speedup_vs_fp16(&arch, &Scheme::ours(PrecisionConfig::W2A2), m);
+        let ours_w4a4 = s.llm_speedup_vs_fp16(&arch, &Scheme::ours(PrecisionConfig::W4A4), m);
+        let qlora = s.llm_speedup_vs_fp16(&arch, &Scheme::QloraW4, m);
+        let gptq = s.llm_speedup_vs_fp16(&arch, &Scheme::CutlassInt4, m);
+        let onebit = s.llm_speedup_vs_fp16(&arch, &Scheme::CutlassInt1, m);
+        assert!(qlora < 1.05, "{}: QLoRA {qlora:.2}", arch.name);
+        assert!((3.0..7.5).contains(&ours_w1a1), "{}: W1A1 {ours_w1a1:.2}", arch.name);
+        assert!((2.5..7.5).contains(&ours_w4a4), "{}: W4A4 {ours_w4a4:.2}", arch.name);
+        assert!(ours_w1a1 > onebit, "{}: ours must beat OneBit/CUTLASS-INT1", arch.name);
+        assert!(ours_w4a4 > gptq, "{}: ours W4A4 must beat GPTQ/CUTLASS-INT4", arch.name);
+        assert!(
+            ours_w1a1 / onebit < 2.6 && ours_w1a1 / onebit > 1.1,
+            "{}: ours/OneBit = {:.2} (paper: 1.2–2×)",
+            arch.name,
+            ours_w1a1 / onebit
+        );
+        assert!(ours_w2a2 > gptq, "{}: W2A2 vs GPTQ", arch.name);
+    }
+}
+
+#[test]
+fn roofline_reporting() {
+    let gpu = Gpu::rtx3090();
+    assert!((gpu.roofline_fraction(35.6e12, "fp32") - 1.0).abs() < 1e-9);
+    assert!(gpu.roofline_fraction(2000e12, "int1") > 1.0); // over-roofline is representable
+}
+
+#[test]
+fn prop_time_positive_and_finite() {
+    let sim = sim();
+    forall(24, |rng| {
+        let (m, k, n) = (rng.usize(1, 8192), rng.usize(1, 16384), rng.usize(1, 8192));
+        for scheme in [Scheme::Fp16, Scheme::CutlassInt1, Scheme::ours(PrecisionConfig::W2A2)] {
+            let r = sim.simulate(&scheme, m, k, n);
+            assert!(r.time_s.is_finite() && r.time_s > 0.0);
+            assert!(r.time_s >= r.launch_s);
+            assert!(r.util > 0.0 && r.util < 1.0);
+        }
+    });
+}
+
+#[test]
+fn prop_traffic_monotone_in_k() {
+    forall(24, |rng| {
+        let (m, n, k) = (rng.usize(32, 512), rng.usize(32, 512), rng.usize(64, 2048));
+        let sch = Scheme::ours(PrecisionConfig::W2A2);
+        let t1 = scheme_traffic(&sch, m, k, n).total();
+        let t2 = scheme_traffic(&sch, m, 2 * k, n).total();
+        assert!(t2 > t1);
+    });
+}

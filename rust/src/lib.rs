@@ -1,0 +1,35 @@
+//! # apllm — Arbitrary-Precision LLM Acceleration
+//!
+//! Reproduction of *"Efficient Arbitrary Precision Acceleration for Large
+//! Language Models on GPU Tensor Cores"* (Ma, Fang, Shao, Wang — ASPDAC '25)
+//! as a three-layer Rust + JAX + Pallas stack.
+//!
+//! Layer map (see `DESIGN.md`):
+//!
+//! * [`bitfmt`]   — the bipolar-INT data format (§3.1) plus the signed /
+//!   unsigned baselines it is compared against.
+//! * [`bitmm`]    — bit-wise MatMul reconstitution (§3.2): plane
+//!   decomposition, packed XNOR-popcount 1-bit GEMM, shift-add recovery.
+//! * [`quant`]    — symmetric bipolar quantizers (per-tensor / per-channel)
+//!   and baseline quantizers.
+//! * [`gpusim`]   — calibrated RTX 3090 tensor-core simulator: the
+//!   substitute for the paper's testbed (§5), including CUTLASS / APNN-TC /
+//!   BSTC / BTC baseline cost models and the §4.1/§4.2 ablation knobs.
+//! * [`model`]    — LLM architecture tables (Llama2-7B, OPT-6.7B, BLOOM-7B)
+//!   and per-layer MatMul shape extraction.
+//! * [`runtime`]  — PJRT engine loading the AOT artifacts emitted by
+//!   `python/compile/aot.py` (HLO text → compile → execute).
+//! * [`coordinator`] — the serving layer: router, dynamic batcher, KV
+//!   manager, scheduler, metrics.
+//! * [`bench`]    — harness regenerating every table/figure of the paper's
+//!   evaluation section.
+
+pub mod bench;
+pub mod bitfmt;
+pub mod bitmm;
+pub mod coordinator;
+pub mod gpusim;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod util;

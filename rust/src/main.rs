@@ -1,0 +1,96 @@
+//! apllm CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   calibrate             print the gpusim calibration report (fit vs paper anchors)
+//!   simulate M K N SCHEME simulate one GEMM (SCHEME: fp32|fp16|int4|int1|wXaY|apnn-wXaY)
+//!   tables                print every paper table/figure reproduction
+//!   gemm [--prec WxAy]    run a packed AP-GEMM through a PJRT artifact and verify vs bitmm
+//!   serve [--requests N]  run the serving demo over the PJRT model artifacts
+//!
+//! Argument parsing is hand-rolled (the build is offline; no clap).
+
+use apllm::gpusim::{CalibrationReport, Gpu, Scheme, Simulator, ANCHORS};
+use apllm::model::PrecisionConfig;
+
+fn parse_scheme(s: &str) -> Option<Scheme> {
+    match s.to_ascii_lowercase().as_str() {
+        "fp32" => Some(Scheme::Fp32),
+        "fp16" => Some(Scheme::Fp16),
+        "int4" | "cutlass-int4" => Some(Scheme::CutlassInt4),
+        "int1" | "cutlass-int1" => Some(Scheme::CutlassInt1),
+        "bstc" => Some(Scheme::Bstc),
+        "btc" => Some(Scheme::Btc),
+        "qlora" => Some(Scheme::QloraW4),
+        other => {
+            if let Some(rest) = other.strip_prefix("apnn-") {
+                PrecisionConfig::parse(rest).map(Scheme::ApnnTc)
+            } else {
+                PrecisionConfig::parse(other).map(Scheme::ours)
+            }
+        }
+    }
+}
+
+fn cmd_calibrate() {
+    let gpu = Gpu::rtx3090();
+    println!("gpusim calibration vs paper anchors ({})", gpu.name);
+    println!(
+        "{:<16} {:>9} {:>12} {:>8}  worst  per-anchor (model / paper, µs)",
+        "scheme", "launch µs", "rate ops/s", "s_half"
+    );
+    for (key, anchors) in ANCHORS.iter() {
+        let rep = CalibrationReport::build(&gpu, key, anchors);
+        print!(
+            "{:<16} {:>9.2} {:>12.3e} {:>8.0}  {:>4.0}%  ",
+            rep.key,
+            rep.params.launch_s * 1e6,
+            rep.params.rate_ops,
+            rep.params.s_half,
+            rep.max_rel_err * 100.0
+        );
+        for ((m, k, n, t), model, _) in &rep.rows {
+            print!("[{}x{}x{}: {:.1}/{:.1}] ", m, k, n, model * 1e6, t * 1e6);
+        }
+        println!();
+    }
+}
+
+fn cmd_simulate(args: &[String]) {
+    if args.len() < 4 {
+        eprintln!("usage: apllm simulate M K N SCHEME");
+        std::process::exit(2);
+    }
+    let (m, k, n) = (
+        args[0].parse().expect("M"),
+        args[1].parse().expect("K"),
+        args[2].parse().expect("N"),
+    );
+    let scheme = parse_scheme(&args[3]).expect("unknown scheme");
+    let sim = Simulator::rtx3090();
+    let r = sim.simulate(&scheme, m, k, n);
+    println!("scheme       : {}", scheme.label());
+    println!("shape        : {m} x {k} x {n}");
+    println!("time         : {:.2} µs", r.time_s * 1e6);
+    println!("  compute    : {:.2} µs", r.t_compute_s * 1e6);
+    println!("  memory     : {:.2} µs", r.t_mem_s * 1e6);
+    println!("  launch     : {:.2} µs", r.launch_s * 1e6);
+    println!("  recovery   : {:.2} µs", r.t_recovery_s * 1e6);
+    println!("util         : {:.1}%", r.util * 100.0);
+    println!("traffic      : {:.2} MB", r.traffic_bytes / 1e6);
+    println!("effective    : {:.1} TOPS", r.tops_effective(m, k, n));
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("calibrate") => cmd_calibrate(),
+        Some("simulate") => cmd_simulate(&args[1..]),
+        Some("tables") => apllm::bench::print_all_tables(),
+        Some("gemm") => apllm::runtime::cli::cmd_gemm(&args[1..]),
+        Some("serve") => apllm::coordinator::cli::cmd_serve(&args[1..]),
+        _ => {
+            eprintln!("usage: apllm <calibrate|simulate|tables|gemm|serve> [args]");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Transformer architecture descriptions + GEMM shape walks.
+
+/// MLP block variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MlpKind {
+    /// Gated SiLU (Llama): gate + up + down → 3 projections.
+    SwiGlu,
+    /// Plain 2-projection MLP (OPT, BLOOM): up + down.
+    Gelu,
+}
+
+/// One GEMM in an inference step: `(M, K) × (K, N)`, executed `count`
+/// times per model forward (M = tokens processed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MatMulShape {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub count: usize,
+    pub label: &'static str,
+}
+
+impl MatMulShape {
+    /// Multiply-accumulate count (`2·M·N·K` ops) for all `count` instances.
+    pub fn flops(&self) -> u128 {
+        2 * self.m as u128 * self.n as u128 * self.k as u128 * self.count as u128
+    }
+}
+
+/// An LLM architecture (decoder-only transformer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LlmArch {
+    pub name: &'static str,
+    pub dim: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub mlp: MlpKind,
+}
+
+impl LlmArch {
+    /// Llama2-7B: dim 4096, ffn 11008 (the paper's "10.5k"), 32 layers.
+    pub fn llama2_7b() -> Self {
+        Self {
+            name: "Llama2-7B",
+            dim: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            n_kv_heads: 32,
+            ffn: 11008,
+            vocab: 32000,
+            mlp: MlpKind::SwiGlu,
+        }
+    }
+
+    /// OPT-6.7B: dim 4096, ffn 16384, 32 layers.
+    pub fn opt_6_7b() -> Self {
+        Self {
+            name: "OPT-6.7B",
+            dim: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            n_kv_heads: 32,
+            ffn: 16384,
+            vocab: 50272,
+            mlp: MlpKind::Gelu,
+        }
+    }
+
+    /// BLOOM-7B1: dim 4096, ffn 16384, 30 layers.
+    pub fn bloom_7b() -> Self {
+        Self {
+            name: "BLOOM-7B",
+            dim: 4096,
+            n_layers: 30,
+            n_heads: 32,
+            n_kv_heads: 32,
+            ffn: 16384,
+            vocab: 250880,
+            mlp: MlpKind::Gelu,
+        }
+    }
+
+    pub fn all_paper_models() -> Vec<Self> {
+        vec![Self::llama2_7b(), Self::opt_6_7b(), Self::bloom_7b()]
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.n_heads
+    }
+
+    /// Dense parameter count of the weight GEMMs (excludes embeddings'
+    /// lookup use, includes the LM head).
+    pub fn weight_params(&self) -> u128 {
+        self.per_layer_shapes(1)
+            .iter()
+            .map(|s| (s.k * s.n * s.count) as u128)
+            .sum::<u128>()
+            * self.n_layers as u128
+            + (self.dim * self.vocab) as u128
+    }
+
+    /// The weight GEMMs of ONE decoder layer when processing `m` tokens.
+    pub fn per_layer_shapes(&self, m: usize) -> Vec<MatMulShape> {
+        let kvd = self.n_kv_heads * self.head_dim();
+        let mut v = vec![
+            MatMulShape { m, k: self.dim, n: self.dim, count: 1, label: "attn.q" },
+            MatMulShape { m, k: self.dim, n: kvd, count: 2, label: "attn.kv" },
+            MatMulShape { m, k: self.dim, n: self.dim, count: 1, label: "attn.o" },
+        ];
+        match self.mlp {
+            MlpKind::SwiGlu => {
+                v.push(MatMulShape { m, k: self.dim, n: self.ffn, count: 2, label: "mlp.gate_up" });
+                v.push(MatMulShape { m, k: self.ffn, n: self.dim, count: 1, label: "mlp.down" });
+            }
+            MlpKind::Gelu => {
+                v.push(MatMulShape { m, k: self.dim, n: self.ffn, count: 1, label: "mlp.up" });
+                v.push(MatMulShape { m, k: self.ffn, n: self.dim, count: 1, label: "mlp.down" });
+            }
+        }
+        v
+    }
+
+    /// Every weight GEMM of a full forward over `m` tokens (all layers +
+    /// LM head), aggregated by shape.
+    pub fn forward_shapes(&self, m: usize) -> Vec<MatMulShape> {
+        let mut v: Vec<MatMulShape> = self
+            .per_layer_shapes(m)
+            .into_iter()
+            .map(|mut s| {
+                s.count *= self.n_layers;
+                s
+            })
+            .collect();
+        v.push(MatMulShape { m, k: self.dim, n: self.vocab, count: 1, label: "lm_head" });
+        v
+    }
+
+    /// The paper's Table 2 picks: the three most FLOP-intensive GEMMs of
+    /// Llama2-7B at M = 1k (qkvo ≈ 1k/4k/4k, up ≈ 1k/10.5k/4k,
+    /// down ≈ 1k/4k/10.5k).
+    pub fn table2_shapes() -> [MatMulShape; 3] {
+        [
+            MatMulShape { m: 1024, k: 4096, n: 4096, count: 1, label: "1k/4k/4k" },
+            MatMulShape { m: 1024, k: 4096, n: 11008, count: 1, label: "1k/10.5k/4k" },
+            MatMulShape { m: 1024, k: 11008, n: 4096, count: 1, label: "1k/4k/10.5k" },
+        ]
+    }
+}

@@ -1,0 +1,16 @@
+//! LLM architecture tables and per-layer MatMul shape extraction.
+//!
+//! The paper's Table 2 / Fig. 6 / Fig. 7 workloads are defined by the
+//! MatMul shapes of Llama2-7B, OPT-6.7B and BLOOM-7B.  This module encodes
+//! those architectures and walks their layers to enumerate every GEMM an
+//! inference step performs, so the simulator and benches can reproduce the
+//! exact shape mix.
+
+mod arch;
+mod precision;
+
+pub use arch::{LlmArch, MatMulShape, MlpKind};
+pub use precision::PrecisionConfig;
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,58 @@
+//! W{n}A{m} precision configurations.
+
+/// A weight/activation bit-width pair, e.g. W1A2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PrecisionConfig {
+    pub nw: u32,
+    pub nx: u32,
+}
+
+impl PrecisionConfig {
+    pub const W1A1: Self = Self { nw: 1, nx: 1 };
+    pub const W1A2: Self = Self { nw: 1, nx: 2 };
+    pub const W2A2: Self = Self { nw: 2, nx: 2 };
+    pub const W3A2: Self = Self { nw: 3, nx: 2 };
+    pub const W3A4: Self = Self { nw: 3, nx: 4 };
+    pub const W4A4: Self = Self { nw: 4, nx: 4 };
+    pub const W8A8: Self = Self { nw: 8, nx: 8 };
+
+    pub fn new(nw: u32, nx: u32) -> Self {
+        assert!((1..=8).contains(&nw) && (1..=8).contains(&nx), "bits must be 1..=8");
+        Self { nw, nx }
+    }
+
+    /// Number of 1-bit plane-pair GEMMs the decomposition needs.
+    pub fn plane_pairs(&self) -> u32 {
+        self.nw * self.nx
+    }
+
+    /// e.g. "W2A2".
+    pub fn label(&self) -> String {
+        format!("W{}A{}", self.nw, self.nx)
+    }
+
+    /// Parse "W3A4" / "w3a4".
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.trim().to_ascii_uppercase();
+        let rest = s.strip_prefix('W')?;
+        let (w, a) = rest.split_once('A')?;
+        let (nw, nx) = (w.parse().ok()?, a.parse().ok()?);
+        if (1..=8).contains(&nw) && (1..=8).contains(&nx) {
+            Some(Self { nw, nx })
+        } else {
+            None
+        }
+    }
+
+    /// Packed operand footprint for an (M,K)x(K,N) GEMM, in bytes
+    /// (§4.1: exactly nw/nx bits per element).
+    pub fn operand_bytes(&self, m: usize, k: usize, n: usize) -> usize {
+        (m * k * self.nw as usize + k * n * self.nx as usize).div_ceil(8)
+    }
+}
+
+impl std::fmt::Display for PrecisionConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "W{}A{}", self.nw, self.nx)
+    }
+}

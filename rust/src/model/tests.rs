@@ -1,0 +1,66 @@
+use super::*;
+
+#[test]
+fn llama_params_about_7b() {
+    let p = LlmArch::llama2_7b().weight_params();
+    assert!((6_000_000_000..8_000_000_000u128).contains(&p), "params={p}");
+}
+
+#[test]
+fn opt_and_bloom_sane() {
+    for a in [LlmArch::opt_6_7b(), LlmArch::bloom_7b()] {
+        let p = a.weight_params();
+        assert!((5_000_000_000..9_000_000_000u128).contains(&p), "{}: {p}", a.name);
+        assert_eq!(a.head_dim() * a.n_heads, a.dim);
+    }
+}
+
+#[test]
+fn table2_matches_paper_shapes() {
+    let s = LlmArch::table2_shapes();
+    assert_eq!((s[0].m, s[0].k, s[0].n), (1024, 4096, 4096));
+    assert_eq!((s[1].k, s[1].n), (4096, 11008)); // "1k/10.5k/4k": N=10.5k... paper lists N/K
+    assert_eq!((s[2].k, s[2].n), (11008, 4096));
+}
+
+#[test]
+fn per_layer_shapes_cover_all_projections() {
+    let a = LlmArch::llama2_7b();
+    let shapes = a.per_layer_shapes(16);
+    let total: usize = shapes.iter().map(|s| s.count).sum();
+    assert_eq!(total, 7, "q + k + v + o + gate + up + down");
+    assert!(shapes.iter().all(|s| s.m == 16));
+    let b = LlmArch::opt_6_7b();
+    let total: usize = b.per_layer_shapes(16).iter().map(|s| s.count).sum();
+    assert_eq!(total, 6, "no gate for GELU MLP");
+}
+
+#[test]
+fn forward_flops_scale_with_m() {
+    let a = LlmArch::llama2_7b();
+    let f1: u128 = a.forward_shapes(1).iter().map(|s| s.flops()).sum();
+    let f8: u128 = a.forward_shapes(8).iter().map(|s| s.flops()).sum();
+    assert_eq!(f8, 8 * f1);
+    // ~2 FLOPs per weight param per token
+    let per_tok = f1 / 2;
+    let params = a.weight_params();
+    assert!(per_tok > params * 9 / 10 && per_tok < params * 11 / 10);
+}
+
+#[test]
+fn precision_parse_roundtrip() {
+    for p in [PrecisionConfig::W1A2, PrecisionConfig::W3A4, PrecisionConfig::W8A8] {
+        assert_eq!(PrecisionConfig::parse(&p.label()), Some(p));
+    }
+    assert_eq!(PrecisionConfig::parse("w2a2"), Some(PrecisionConfig::W2A2));
+    assert!(PrecisionConfig::parse("W9A1").is_none());
+    assert!(PrecisionConfig::parse("FP16").is_none());
+}
+
+#[test]
+fn precision_costs() {
+    assert_eq!(PrecisionConfig::W2A2.plane_pairs(), 4);
+    assert_eq!(PrecisionConfig::W3A4.plane_pairs(), 12);
+    // 1-bit weights: M*K/8 bytes
+    assert_eq!(PrecisionConfig::W1A1.operand_bytes(8, 64, 8), (8 * 64 + 64 * 8) / 8);
+}

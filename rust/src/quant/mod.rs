@@ -1,0 +1,17 @@
+//! Quantizers onto the bipolar-INT grid (mirrors `python/compile/quant.py`).
+//!
+//! Symmetric round-to-nearest-odd quantization: with scale
+//! `s = max|x| / (2^n − 1)`, each value maps to the nearest odd integer of
+//! `x/s`, clipped to ±(2^n−1).  Per-tensor and per-channel (per-row)
+//! granularities.  Baseline signed/asymmetric quantizers are included for
+//! the format ablation.
+
+mod quantize;
+
+pub use quantize::{
+    dequantize, quant_error, quantize_bipolar_per_channel, quantize_bipolar_per_tensor,
+    quantize_signed_per_channel, QuantError, Quantized,
+};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,126 @@
+//! Round-to-nearest quantizers and error metrics.
+
+use crate::bitfmt::{bipolar_encode, bipolar_qmax, signed_range};
+use crate::bitmm::CodeMatrix;
+
+/// A quantized matrix: codes + scales (`x ≈ decode(code) · scale`).
+#[derive(Debug, Clone)]
+pub struct Quantized {
+    pub codes: CodeMatrix,
+    /// One scale per row (per-channel) or a single element (per-tensor).
+    pub scales: Vec<f32>,
+}
+
+impl Quantized {
+    #[inline]
+    pub fn scale_for_row(&self, r: usize) -> f32 {
+        if self.scales.len() == 1 {
+            self.scales[0]
+        } else {
+            self.scales[r]
+        }
+    }
+}
+
+fn round_to_odd(t: f32) -> f32 {
+    2.0 * ((t - 1.0) / 2.0).round() + 1.0
+}
+
+fn quantize_rows(x: &[f32], rows: usize, cols: usize, bits: u32, per_channel: bool) -> Quantized {
+    assert_eq!(x.len(), rows * cols);
+    let qmax = bipolar_qmax(bits) as f32;
+    let scale_of = |slice: &[f32]| -> f32 {
+        let amax = slice.iter().fold(0f32, |a, &v| a.max(v.abs()));
+        amax.max(1e-8) / qmax
+    };
+    let mut scales = Vec::new();
+    let mut codes = vec![0u32; rows * cols];
+    if per_channel {
+        for r in 0..rows {
+            let row = &x[r * cols..(r + 1) * cols];
+            let s = scale_of(row);
+            scales.push(s);
+            for (c, &v) in row.iter().enumerate() {
+                let q = round_to_odd(v / s).clamp(-qmax, qmax) as i32;
+                codes[r * cols + c] = bipolar_encode(q, bits);
+            }
+        }
+    } else {
+        let s = scale_of(x);
+        scales.push(s);
+        for (idx, &v) in x.iter().enumerate() {
+            let q = round_to_odd(v / s).clamp(-qmax, qmax) as i32;
+            codes[idx] = bipolar_encode(q, bits);
+        }
+    }
+    Quantized { codes: CodeMatrix::new(rows, cols, bits, codes), scales }
+}
+
+/// Per-tensor symmetric bipolar quantization of a `(rows, cols)` matrix.
+pub fn quantize_bipolar_per_tensor(x: &[f32], rows: usize, cols: usize, bits: u32) -> Quantized {
+    quantize_rows(x, rows, cols, bits, false)
+}
+
+/// Per-row (output-channel) symmetric bipolar quantization.
+pub fn quantize_bipolar_per_channel(x: &[f32], rows: usize, cols: usize, bits: u32) -> Quantized {
+    quantize_rows(x, rows, cols, bits, true)
+}
+
+/// Baseline: per-row signed (two's-complement) RTN quantization.  Returns
+/// codes in `bits`-wide two's complement; used by the format ablation.
+pub fn quantize_signed_per_channel(x: &[f32], rows: usize, cols: usize, bits: u32) -> Quantized {
+    assert_eq!(x.len(), rows * cols);
+    let (lo, hi) = signed_range(bits);
+    let mut scales = Vec::with_capacity(rows);
+    let mut codes = vec![0u32; rows * cols];
+    for r in 0..rows {
+        let row = &x[r * cols..(r + 1) * cols];
+        let amax = row.iter().fold(0f32, |a, &v| a.max(v.abs()));
+        let s = amax.max(1e-8) / hi as f32;
+        scales.push(s);
+        for (c, &v) in row.iter().enumerate() {
+            let q = (v / s).round().clamp(lo as f32, hi as f32) as i32;
+            codes[r * cols + c] = (q as u32) & ((1u32 << bits) - 1);
+        }
+    }
+    Quantized { codes: CodeMatrix::new(rows, cols, bits, codes), scales }
+}
+
+/// Reconstruct floats from a quantized matrix under the given format.
+pub fn dequantize(q: &Quantized, fmt: crate::bitfmt::IntFormat) -> Vec<f32> {
+    let decoded = q.codes.decode(fmt);
+    let cols = q.codes.cols;
+    decoded
+        .iter()
+        .enumerate()
+        .map(|(idx, &v)| v as f32 * q.scale_for_row(idx / cols))
+        .collect()
+}
+
+/// Quantization error summary.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantError {
+    pub mse: f64,
+    pub max_abs: f32,
+    /// Relative L2: ‖x − x̂‖ / ‖x‖.
+    pub rel_l2: f64,
+}
+
+/// Compare original vs reconstruction.
+pub fn quant_error(x: &[f32], xhat: &[f32]) -> QuantError {
+    assert_eq!(x.len(), xhat.len());
+    let mut se = 0f64;
+    let mut nx = 0f64;
+    let mut max_abs = 0f32;
+    for (&a, &b) in x.iter().zip(xhat.iter()) {
+        let d = a - b;
+        se += (d as f64) * (d as f64);
+        nx += (a as f64) * (a as f64);
+        max_abs = max_abs.max(d.abs());
+    }
+    QuantError {
+        mse: se / x.len() as f64,
+        max_abs,
+        rel_l2: if nx > 0.0 { (se / nx).sqrt() } else { 0.0 },
+    }
+}

@@ -1,0 +1,117 @@
+use super::*;
+use crate::bitfmt::{bipolar_qmax, IntFormat};
+use crate::util::proptest::forall;
+use crate::util::Rng;
+
+fn randn(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::with_seed(seed);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+#[test]
+fn error_bound_per_channel() {
+    // RTN on the odd grid: |x − s·q| ≤ s per row
+    let x = randn(8 * 32, 0);
+    for bits in [2u32, 3, 4, 6] {
+        let q = quantize_bipolar_per_channel(&x, 8, 32, bits);
+        let xh = dequantize(&q, IntFormat::Bipolar);
+        for r in 0..8 {
+            let s = q.scales[r];
+            for c in 0..32 {
+                let d = (x[r * 32 + c] - xh[r * 32 + c]).abs();
+                assert!(d <= s * 1.0001, "bits={bits} r={r} c={c} d={d} s={s}");
+            }
+        }
+    }
+}
+
+#[test]
+fn error_decreases_with_bits() {
+    let x = randn(4 * 64, 1);
+    let mut last = f64::INFINITY;
+    for bits in [1u32, 2, 3, 4, 6, 8] {
+        let q = quantize_bipolar_per_channel(&x, 4, 64, bits);
+        let e = quant_error(&x, &dequantize(&q, IntFormat::Bipolar));
+        assert!(e.mse <= last * 1.0001, "bits={bits}: {} > {last}", e.mse);
+        last = e.mse;
+    }
+}
+
+#[test]
+fn one_bit_is_sign() {
+    let x = vec![0.5f32, -0.25, 1.5, -2.0];
+    let q = quantize_bipolar_per_tensor(&x, 1, 4, 1);
+    let d = q.codes.decode(IntFormat::Bipolar);
+    assert_eq!(d, vec![1, -1, 1, -1]);
+}
+
+#[test]
+fn per_tensor_single_scale() {
+    let x = randn(6 * 10, 2);
+    let q = quantize_bipolar_per_tensor(&x, 6, 10, 3);
+    assert_eq!(q.scales.len(), 1);
+    assert_eq!(q.scale_for_row(5), q.scales[0]);
+    let qc = quantize_bipolar_per_channel(&x, 6, 10, 3);
+    assert_eq!(qc.scales.len(), 6);
+}
+
+#[test]
+fn signed_baseline_in_range() {
+    let x = randn(4 * 16, 3);
+    let q = quantize_signed_per_channel(&x, 4, 16, 4);
+    for &c in &q.codes.data {
+        assert!(c < 16);
+    }
+    let xh = dequantize(&q, IntFormat::Signed);
+    let e = quant_error(&x, &xh);
+    assert!(e.rel_l2 < 0.2, "rel_l2={}", e.rel_l2);
+}
+
+#[test]
+fn quant_error_zero_for_identical() {
+    let x = randn(16, 4);
+    let e = quant_error(&x, &x);
+    assert_eq!(e.mse, 0.0);
+    assert_eq!(e.max_abs, 0.0);
+}
+
+#[test]
+fn prop_codes_in_range_and_odd() {
+    forall(32, |rng| {
+        let bits = rng.u32(1, 8);
+        let x = randn(3 * 20, rng.u64());
+        let q = quantize_bipolar_per_channel(&x, 3, 20, bits);
+        let qmax = bipolar_qmax(bits);
+        for v in q.codes.decode(IntFormat::Bipolar) {
+            assert!(v.abs() <= qmax);
+            assert_eq!(v.rem_euclid(2), 1);
+        }
+    });
+}
+
+#[test]
+fn prop_negation_symmetry() {
+    forall(32, |rng| {
+        let bits = rng.u32(1, 8);
+        // quantizing −x gives −q (same scale), modulo grid ties
+        let x = randn(40, rng.u64());
+        let xn: Vec<f32> = x.iter().map(|v| -v).collect();
+        let q1 = quantize_bipolar_per_tensor(&x, 1, 40, bits);
+        let q2 = quantize_bipolar_per_tensor(&xn, 1, 40, bits);
+        assert!((q1.scales[0] - q2.scales[0]).abs() < 1e-6);
+        let d1 = q1.codes.decode(IntFormat::Bipolar);
+        let d2 = q2.codes.decode(IntFormat::Bipolar);
+        let s = q1.scales[0];
+        for i in 0..40 {
+            // ties (x/s exactly even) may round either way: allow 2s slack there
+            let diff = (d1[i] + d2[i]).abs();
+            assert!(diff <= 2, "i={} d1={} d2={}", i, d1[i], d2[i]);
+            if diff != 0 {
+                let t = x[i] / s;
+                assert!(
+                    ((t - 1.0) / 2.0).fract().abs() < 1e-3 || ((t + 1.0) / 2.0).fract().abs() < 1e-3
+                );
+            }
+        }
+    });
+}

@@ -1,0 +1,65 @@
+//! `apllm gemm` — run a packed AP-GEMM through a PJRT artifact and verify
+//! it against the pure-Rust `bitmm` substrate.
+
+use super::{artifacts_dir, Engine};
+use crate::bitmm::{apmm_bipolar, pack_codes_u32, transpose_codes, ApmmOpts, CodeMatrix};
+use crate::model::PrecisionConfig;
+
+pub fn cmd_gemm(args: &[String]) {
+    let mut prec = PrecisionConfig::W2A2;
+    let mut iter = args.iter();
+    while let Some(a) = iter.next() {
+        if a == "--prec" {
+            let v = iter.next().expect("--prec needs a value");
+            prec = PrecisionConfig::parse(v).expect("bad precision (expected e.g. W2A2)");
+        }
+    }
+
+    let engine = Engine::load(&artifacts_dir()).expect("loading artifacts");
+    let specs: Vec<_> = engine
+        .manifest()
+        .by_kind("apmm")
+        .into_iter()
+        .filter(|e| {
+            e.meta.get("nw") == Some(&(prec.nw as usize))
+                && e.meta.get("nx") == Some(&(prec.nx as usize))
+        })
+        .cloned()
+        .collect();
+    if specs.is_empty() {
+        eprintln!("no apmm artifact for {prec} — regenerate with `make artifacts`");
+        std::process::exit(1);
+    }
+
+    for spec in specs {
+        let (m, k, n) = (
+            spec.meta_usize("m").unwrap(),
+            spec.meta_usize("k").unwrap(),
+            spec.meta_usize("n").unwrap(),
+        );
+        let w = CodeMatrix::random(m, k, prec.nw, 7);
+        let x = CodeMatrix::random(k, n, prec.nx, 8);
+        let xt = transpose_codes(&x);
+        let wp = pack_codes_u32(&w);
+        let xp = pack_codes_u32(&xt);
+
+        let t0 = std::time::Instant::now();
+        let y_pjrt = engine.run_apmm(&spec, &wp, &xp).expect("PJRT execution");
+        let t_pjrt = t0.elapsed();
+        let t0 = std::time::Instant::now();
+        let y_rust = apmm_bipolar(&w, &xt, ApmmOpts::default());
+        let t_rust = t0.elapsed();
+
+        let ok = y_pjrt == y_rust;
+        println!(
+            "{}: {}x{}x{}  pjrt={:.2?} rust={:.2?}  match={}",
+            spec.name, m, k, n, t_pjrt, t_rust, ok
+        );
+        if !ok {
+            let diff = y_pjrt.iter().zip(&y_rust).filter(|(a, b)| a != b).count();
+            eprintln!("MISMATCH: {diff}/{} elements differ", y_rust.len());
+            std::process::exit(1);
+        }
+    }
+    println!("gemm: all artifacts verified against bitmm");
+}

@@ -1,0 +1,280 @@
+//! The PJRT engine: compile-once executable cache + typed execution, and
+//! the `ModelRunner` serving the L2 model.
+
+use super::manifest::{ExecSpec, Manifest, ModelCfg};
+use super::tensor::{lit_i32, lit_u32};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// Loads the manifest, compiles HLO-text executables on the PJRT CPU
+/// client (once, cached), and executes them.
+///
+/// Not `Send`: PJRT handles are thread-affine here; the coordinator owns
+/// an `Engine` on a dedicated executor thread (see `coordinator`).
+pub struct Engine {
+    client: PjRtClient,
+    manifest: Manifest,
+    cache: std::cell::RefCell<HashMap<String, std::rc::Rc<PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Load `<dir>/manifest.json` and start a PJRT CPU client.
+    pub fn load(dir: &std::path::Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, manifest, cache: Default::default() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    /// Compile (or fetch the cached) executable by manifest name.
+    pub fn compile(&self, name: &str) -> Result<std::rc::Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.find(name)?;
+        let path = self.manifest.dir.join(&spec.hlo);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(
+            self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?,
+        );
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile every executable of the given kinds (startup
+    /// warm-up so the serve loop never compiles inline).
+    pub fn warmup(&self, kinds: &[&str]) -> Result<usize> {
+        let names: Vec<String> = self
+            .manifest
+            .executables
+            .iter()
+            .filter(|e| kinds.contains(&e.kind.as_str()))
+            .map(|e| e.name.clone())
+            .collect();
+        for n in &names {
+            self.compile(n)?;
+        }
+        Ok(names.len())
+    }
+
+    /// Number of executables compiled so far (cache introspection).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Execute by name; returns the flattened tuple outputs.
+    /// Accepts anything borrowing `Literal` (owned or `&Literal`).
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        name: &str,
+        inputs: &[L],
+    ) -> Result<Vec<Literal>> {
+        let exe = self.compile(name)?;
+        let out = exe.execute::<L>(inputs).map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let result =
+            out[0][0].to_literal_sync().map_err(|e| anyhow!("fetching {name} output: {e:?}"))?;
+        result.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))
+    }
+
+    /// Run a standalone AP-GEMM artifact on pre-packed u32 planes.
+    ///
+    /// `wp`: `(nw, M, Kp)` u32 planes; `xp`: `(nx, N, Kp)`.  Returns the
+    /// `(M, N)` i32 result.
+    pub fn run_apmm(&self, spec: &ExecSpec, wp: &[u32], xp: &[u32]) -> Result<Vec<i32>> {
+        if spec.kind != "apmm" {
+            bail!("{} is not an apmm executable", spec.name);
+        }
+        let wspec = &spec.inputs[0];
+        let xspec = &spec.inputs[1];
+        if wp.len() != wspec.elements() || xp.len() != xspec.elements() {
+            bail!(
+                "{}: operand sizes {}/{} don't match spec {}/{}",
+                spec.name,
+                wp.len(),
+                xp.len(),
+                wspec.elements(),
+                xspec.elements()
+            );
+        }
+        let inputs = [lit_u32(wp, &wspec.shape)?, lit_u32(xp, &xspec.shape)?];
+        let out = self.execute(&spec.name, &inputs)?;
+        let y = out.first().context("apmm output")?;
+        Ok(y.to_vec::<i32>().map_err(|e| anyhow!("apmm output: {e:?}"))?)
+    }
+}
+
+/// Serving-side handle to the L2 model: weights loaded once and reused
+/// across steps; KV caches threaded through as literals.
+pub struct ModelRunner<'e> {
+    engine: &'e Engine,
+    weights: Vec<Literal>,
+    pub cfg: ModelCfg,
+}
+
+/// A generation group's state (one prefill + N decode steps).
+pub struct KvState {
+    pub k: Literal,
+    pub v: Literal,
+    pub batch: usize,
+    /// Next position to be written, per batch slot (continuous batching:
+    /// slots may sit at different depths).
+    pub pos: Vec<usize>,
+}
+
+impl<'e> ModelRunner<'e> {
+    /// Load `weights.bin` into literals in manifest (== python
+    /// `param_spec`) order.
+    pub fn new(engine: &'e Engine) -> Result<Self> {
+        let spec = engine
+            .manifest()
+            .model
+            .as_ref()
+            .context("manifest has no model section (aot.py --skip-model?)")?
+            .clone();
+        let blob = std::fs::read(engine.manifest().dir.join(&spec.weights_file))
+            .context("reading weights.bin")?;
+        let mut weights = Vec::with_capacity(spec.weights.len());
+        for w in &spec.weights {
+            let raw = blob
+                .get(w.offset..w.offset + w.nbytes)
+                .with_context(|| format!("weight {} out of range", w.name))?;
+            // all dtypes are 4-byte little-endian; reinterpret accordingly
+            let lit = match w.dtype {
+                super::manifest::DType::F32 => {
+                    let v: Vec<f32> = raw
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    super::tensor::lit_f32(&v, &w.shape)?
+                }
+                super::manifest::DType::U32 => {
+                    let v: Vec<u32> = raw
+                        .chunks_exact(4)
+                        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    lit_u32(&v, &w.shape)?
+                }
+                super::manifest::DType::I32 => {
+                    let v: Vec<i32> = raw
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    lit_i32(&v, &w.shape)?
+                }
+            };
+            weights.push(lit);
+        }
+        Ok(Self { engine, weights, cfg: spec.config })
+    }
+
+    pub fn engine(&self) -> &Engine {
+        self.engine
+    }
+
+    /// Largest decode batch the artifacts support.
+    pub fn max_batch(&self) -> usize {
+        self.engine
+            .manifest()
+            .by_kind("decode")
+            .iter()
+            .filter_map(|e| e.meta.get("batch").copied())
+            .max()
+            .unwrap_or(1)
+    }
+
+    /// Prefill `tokens` (row-major `(b, t)`); returns logits
+    /// `(b, t_exec, vocab)` and the KV state positioned at `t_exec`.
+    pub fn prefill(&self, tokens: &[i32], b: usize, t: usize) -> Result<(Vec<f32>, KvState)> {
+        let spec = self.engine.manifest().prefill_for(b, t)?.clone();
+        let t_exec = spec.meta_usize("seq")?;
+        // pad the prompt into the compiled seq bucket
+        let mut padded = vec![0i32; b * t_exec];
+        for r in 0..b {
+            padded[r * t_exec..r * t_exec + t].copy_from_slice(&tokens[r * t..(r + 1) * t]);
+        }
+        let tok = lit_i32(&padded, &[b, t_exec])?;
+        let mut args: Vec<&Literal> = self.weights.iter().collect();
+        args.push(&tok);
+        let out = self.engine.execute(&spec.name, &args)?;
+        let mut it = out.into_iter();
+        let logits_lit = it.next().context("prefill logits")?;
+        let k = it.next().context("prefill k_cache")?;
+        let v = it.next().context("prefill v_cache")?;
+        let logits = logits_lit.to_vec::<f32>().map_err(|e| anyhow!("logits: {e:?}"))?;
+        Ok((logits, KvState { k, v, batch: b, pos: vec![t_exec; b] }))
+    }
+
+    /// One decode step for the group: `tokens` has `kv.batch` entries;
+    /// row `i` writes its KV at `kv.pos[i]`.  Returns per-row logits
+    /// `(b, vocab)` and advances every slot's position.
+    pub fn decode(&self, tokens: &[i32], kv: &mut KvState) -> Result<Vec<f32>> {
+        let b = kv.batch;
+        if tokens.len() != b {
+            bail!("decode: {} tokens for batch {b}", tokens.len());
+        }
+        if let Some(&p) = kv.pos.iter().find(|&&p| p >= self.cfg.max_seq) {
+            bail!("decode: KV cache exhausted (pos {p} >= max_seq {})", self.cfg.max_seq);
+        }
+        let spec = self.engine.manifest().decode_for_batch(b)?.clone();
+        let tok = lit_i32(tokens, &[b])?;
+        let pos_i32: Vec<i32> = kv.pos.iter().map(|&p| p as i32).collect();
+        let pos = lit_i32(&pos_i32, &[b])?;
+        let mut args: Vec<&Literal> = self.weights.iter().collect();
+        args.push(&tok);
+        args.push(&pos);
+        args.push(&kv.k);
+        args.push(&kv.v);
+        let out = self.engine.execute(&spec.name, &args)?;
+        let mut it = out.into_iter();
+        let logits_lit = it.next().context("decode logits")?;
+        kv.k = it.next().context("decode k_cache")?;
+        kv.v = it.next().context("decode v_cache")?;
+        for p in kv.pos.iter_mut() {
+            *p += 1;
+        }
+        Ok(logits_lit.to_vec::<f32>().map_err(|e| anyhow!("logits: {e:?}"))?)
+    }
+
+    /// Raw per-slot decode for the continuous scheduler: the caller owns
+    /// the KV literals and position vector explicitly.
+    pub fn decode_raw(
+        &self,
+        tokens: &[i32],
+        pos: &[i32],
+        k: &Literal,
+        v: &Literal,
+    ) -> Result<(Vec<f32>, Literal, Literal)> {
+        let b = tokens.len();
+        if pos.len() != b {
+            bail!("decode_raw: {} positions for {b} tokens", pos.len());
+        }
+        let spec = self.engine.manifest().decode_for_batch(b)?.clone();
+        let tok = lit_i32(tokens, &[b])?;
+        let pos_l = lit_i32(pos, &[b])?;
+        let mut args: Vec<&Literal> = self.weights.iter().collect();
+        args.push(&tok);
+        args.push(&pos_l);
+        args.push(k);
+        args.push(v);
+        let out = self.engine.execute(&spec.name, &args)?;
+        let mut it = out.into_iter();
+        let logits = it
+            .next()
+            .context("decode logits")?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("logits: {e:?}"))?;
+        let k_out = it.next().context("decode k_cache")?;
+        let v_out = it.next().context("decode v_cache")?;
+        Ok((logits, k_out, v_out))
+    }
+}

@@ -1,0 +1,246 @@
+//! Typed view of `artifacts/manifest.json` (parsed with `util::json`).
+
+use crate::util::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Artifact tensor element type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    U32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "u32" => Ok(DType::U32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype {other}"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// One input/output tensor of an executable.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled executable.
+#[derive(Debug, Clone)]
+pub struct ExecSpec {
+    pub name: String,
+    /// "apmm" | "prefill" | "decode".
+    pub kind: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub hlo: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    /// Free-form metadata (m/k/n/nw/nx for apmm; batch/seq for model).
+    pub meta: std::collections::BTreeMap<String, usize>,
+}
+
+impl ExecSpec {
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta.get(key).copied().ok_or_else(|| anyhow!("{}: missing meta {key}", self.name))
+    }
+}
+
+/// One tensor in `weights.bin`.
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// Model architecture parameters (mirrors python `ModelConfig`).
+#[derive(Debug, Clone, Copy)]
+pub struct ModelCfg {
+    pub vocab: usize,
+    pub dim: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub ffn: usize,
+    pub max_seq: usize,
+    pub nw: u32,
+    pub nx: u32,
+}
+
+impl ModelCfg {
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.n_heads
+    }
+
+    /// Elements of one KV cache tensor for batch `b`.
+    pub fn kv_elements(&self, b: usize) -> usize {
+        self.n_layers * b * self.max_seq * self.n_kv_heads * self.head_dim()
+    }
+}
+
+/// The model section of the manifest.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub config: ModelCfg,
+    pub weights_file: String,
+    pub weights: Vec<WeightEntry>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub version: usize,
+    pub model: Option<ModelSpec>,
+    pub executables: Vec<ExecSpec>,
+}
+
+fn io_spec(j: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: j.get("name").and_then(Json::as_str).unwrap_or_default().to_string(),
+        dtype: DType::parse(j.get("dtype").and_then(Json::as_str).context("io dtype")?)?,
+        shape: j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("io shape")?
+            .iter()
+            .map(|d| d.as_usize().context("shape dim"))
+            .collect::<Result<_>>()?,
+    })
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&src).map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+
+        let version = j.get("version").and_then(Json::as_usize).context("manifest version")?;
+        let mut executables = Vec::new();
+        for e in j.get("executables").and_then(Json::as_arr).context("executables")? {
+            let mut meta = std::collections::BTreeMap::new();
+            if let Some(Json::Obj(m)) = e.get("meta") {
+                for (k, v) in m {
+                    if let Some(u) = v.as_usize() {
+                        meta.insert(k.clone(), u);
+                    }
+                }
+            }
+            executables.push(ExecSpec {
+                name: e.get("name").and_then(Json::as_str).context("exe name")?.to_string(),
+                kind: e.get("kind").and_then(Json::as_str).context("exe kind")?.to_string(),
+                hlo: e.get("hlo").and_then(Json::as_str).context("exe hlo")?.to_string(),
+                inputs: e
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .context("inputs")?
+                    .iter()
+                    .map(io_spec)
+                    .collect::<Result<_>>()?,
+                outputs: e
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .context("outputs")?
+                    .iter()
+                    .map(io_spec)
+                    .collect::<Result<_>>()?,
+                meta,
+            });
+        }
+
+        let model = match j.get("model") {
+            None | Some(Json::Null) => None,
+            Some(mj) => {
+                let c = mj.get("config").context("model config")?;
+                let g = |k: &str| c.get(k).and_then(Json::as_usize).context(format!("config {k}"));
+                let config = ModelCfg {
+                    vocab: g("vocab")?,
+                    dim: g("dim")?,
+                    n_layers: g("n_layers")?,
+                    n_heads: g("n_heads")?,
+                    n_kv_heads: g("n_kv_heads")?,
+                    ffn: g("ffn")?,
+                    max_seq: g("max_seq")?,
+                    nw: g("nw")? as u32,
+                    nx: g("nx")? as u32,
+                };
+                let mut weights = Vec::new();
+                for w in mj.get("weights").and_then(Json::as_arr).context("weights")? {
+                    weights.push(WeightEntry {
+                        name: w.get("name").and_then(Json::as_str).context("w name")?.to_string(),
+                        dtype: DType::parse(w.get("dtype").and_then(Json::as_str).context("w dtype")?)?,
+                        shape: w
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .context("w shape")?
+                            .iter()
+                            .map(|d| d.as_usize().context("w dim"))
+                            .collect::<Result<_>>()?,
+                        offset: w.get("offset").and_then(Json::as_usize).context("w offset")?,
+                        nbytes: w.get("nbytes").and_then(Json::as_usize).context("w nbytes")?,
+                    });
+                }
+                Some(ModelSpec {
+                    config,
+                    weights_file: mj
+                        .get("weights_file")
+                        .and_then(Json::as_str)
+                        .context("weights_file")?
+                        .to_string(),
+                    weights,
+                })
+            }
+        };
+
+        Ok(Manifest { dir: dir.to_path_buf(), version, model, executables })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ExecSpec> {
+        self.executables
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("no executable named {name} in manifest"))
+    }
+
+    /// All executables of a given kind.
+    pub fn by_kind(&self, kind: &str) -> Vec<&ExecSpec> {
+        self.executables.iter().filter(|e| e.kind == kind).collect()
+    }
+
+    /// The decode executable for batch size `b`.
+    pub fn decode_for_batch(&self, b: usize) -> Result<&ExecSpec> {
+        self.by_kind("decode")
+            .into_iter()
+            .find(|e| e.meta.get("batch") == Some(&b))
+            .ok_or_else(|| anyhow!("no decode executable for batch {b}"))
+    }
+
+    /// The prefill executable for batch `b` (any seq bucket ≥ needed).
+    pub fn prefill_for(&self, b: usize, t: usize) -> Result<&ExecSpec> {
+        self.by_kind("prefill")
+            .into_iter()
+            .filter(|e| e.meta.get("batch") == Some(&b))
+            .find(|e| e.meta.get("seq").map(|s| *s >= t).unwrap_or(false))
+            .ok_or_else(|| anyhow!("no prefill executable for batch {b}, seq {t}"))
+    }
+}

@@ -1,0 +1,27 @@
+//! PJRT runtime: load + execute the AOT artifacts emitted by
+//! `python/compile/aot.py`.
+//!
+//! Flow (see /opt/xla-example and DESIGN.md): `artifacts/manifest.json`
+//! names HLO-text executables; each is parsed with
+//! `HloModuleProto::from_text_file`, compiled once on the PJRT CPU client,
+//! and cached.  Model weights load from `weights.bin` straight into
+//! device-resident `PjRtBuffer`s so the serving hot path never re-uploads
+//! them (`execute_b`).  Python is never on this path.
+
+mod engine;
+mod manifest;
+mod tensor;
+
+pub mod cli;
+
+pub use engine::{Engine, ModelRunner};
+pub use manifest::{DType, ExecSpec, IoSpec, Manifest, ModelCfg, ModelSpec, WeightEntry};
+pub use tensor::{lit_f32, lit_i32, lit_i32_scalar, lit_u32};
+
+/// Default artifacts directory (overridable with `APLLM_ARTIFACTS`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("APLLM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()).into()
+}
+
+#[cfg(test)]
+mod tests;

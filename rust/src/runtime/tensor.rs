@@ -1,0 +1,31 @@
+//! Literal construction helpers (typed host→XLA marshaling).
+
+use anyhow::Result;
+use xla::Literal;
+
+fn dims_i64(dims: &[usize]) -> Vec<i64> {
+    dims.iter().map(|&d| d as i64).collect()
+}
+
+/// `u32` tensor literal with the given shape.
+pub fn lit_u32(data: &[u32], dims: &[usize]) -> Result<Literal> {
+    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+    Ok(Literal::vec1(data).reshape(&dims_i64(dims))?)
+}
+
+/// `i32` tensor literal.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+    Ok(Literal::vec1(data).reshape(&dims_i64(dims))?)
+}
+
+/// `f32` tensor literal.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+    Ok(Literal::vec1(data).reshape(&dims_i64(dims))?)
+}
+
+/// Rank-0 `i32` literal (the decode `pos` argument).
+pub fn lit_i32_scalar(v: i32) -> Literal {
+    Literal::scalar(v)
+}

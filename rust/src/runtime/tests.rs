@@ -1,0 +1,100 @@
+//! Runtime unit tests that don't require artifacts (manifest parsing on
+//! synthetic JSON); the PJRT integration tests live in
+//! `rust/tests/integration.rs` and skip gracefully when `artifacts/` is
+//! absent.
+
+use super::manifest::*;
+use std::io::Write;
+
+fn write_manifest(dir: &std::path::Path, body: &str) {
+    let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+    f.write_all(body.as_bytes()).unwrap();
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("apllm-test-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+const SAMPLE: &str = r#"{
+ "version": 1,
+ "model": {
+   "config": {"vocab": 256, "dim": 64, "n_layers": 2, "n_heads": 4,
+              "n_kv_heads": 2, "ffn": 128, "max_seq": 32, "nw": 2, "nx": 2},
+   "weights_file": "weights.bin",
+   "weights": [
+     {"name": "tok_emb", "dtype": "f32", "shape": [256, 64], "offset": 0, "nbytes": 65536}
+   ]
+ },
+ "executables": [
+  {"name": "apmm_w2a2_64x256x64", "kind": "apmm", "hlo": "a.hlo.txt",
+   "inputs": [{"name": "wp", "dtype": "u32", "shape": [2, 64, 8]},
+              {"name": "xp", "dtype": "u32", "shape": [2, 64, 8]}],
+   "outputs": [{"name": "y", "dtype": "i32", "shape": [64, 64]}],
+   "meta": {"m": 64, "k": 256, "n": 64, "nw": 2, "nx": 2}},
+  {"name": "model_decode_b2", "kind": "decode", "hlo": "d.hlo.txt",
+   "inputs": [], "outputs": [], "meta": {"batch": 2}},
+  {"name": "model_prefill_b2_t16", "kind": "prefill", "hlo": "p.hlo.txt",
+   "inputs": [], "outputs": [], "meta": {"batch": 2, "seq": 16}}
+ ]
+}"#;
+
+#[test]
+fn manifest_parses_typed() {
+    let d = tmpdir("manifest");
+    write_manifest(&d, SAMPLE);
+    let m = Manifest::load(&d).unwrap();
+    assert_eq!(m.version, 1);
+    assert_eq!(m.executables.len(), 3);
+
+    let apmm = m.find("apmm_w2a2_64x256x64").unwrap();
+    assert_eq!(apmm.kind, "apmm");
+    assert_eq!(apmm.inputs[0].dtype, DType::U32);
+    assert_eq!(apmm.inputs[0].elements(), 2 * 64 * 8);
+    assert_eq!(apmm.meta_usize("k").unwrap(), 256);
+    assert!(apmm.meta_usize("missing").is_err());
+
+    let model = m.model.as_ref().unwrap();
+    assert_eq!(model.config.dim, 64);
+    assert_eq!(model.config.head_dim(), 16);
+    assert_eq!(model.config.kv_elements(2), 2 * 2 * 32 * 2 * 16);
+    assert_eq!(model.weights[0].nbytes, 65536);
+}
+
+#[test]
+fn manifest_lookup_helpers() {
+    let d = tmpdir("lookup");
+    write_manifest(&d, SAMPLE);
+    let m = Manifest::load(&d).unwrap();
+    assert_eq!(m.by_kind("decode").len(), 1);
+    assert!(m.decode_for_batch(2).is_ok());
+    assert!(m.decode_for_batch(4).is_err());
+    assert!(m.prefill_for(2, 10).is_ok(), "seq 16 bucket covers t=10");
+    assert!(m.prefill_for(2, 20).is_err(), "no bucket ≥ 20");
+    assert!(m.find("nope").is_err());
+}
+
+#[test]
+fn manifest_null_model() {
+    let d = tmpdir("nullmodel");
+    write_manifest(&d, r#"{"version": 1, "model": null, "executables": []}"#);
+    let m = Manifest::load(&d).unwrap();
+    assert!(m.model.is_none());
+    assert!(m.executables.is_empty());
+}
+
+#[test]
+fn manifest_missing_file_errors() {
+    let d = tmpdir("missing");
+    let _ = std::fs::remove_file(d.join("manifest.json"));
+    let err = Manifest::load(&d).unwrap_err().to_string();
+    assert!(err.contains("make artifacts"), "err was: {err}");
+}
+
+#[test]
+fn dtype_parse() {
+    assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+    assert_eq!(DType::parse("u32").unwrap(), DType::U32);
+    assert!(DType::parse("f64").is_err());
+}

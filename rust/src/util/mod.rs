@@ -1,0 +1,13 @@
+//! In-tree substrates replacing ecosystem crates (the build is fully
+//! offline — see Cargo.toml): a seeded PRNG (`rng`), scoped-thread data
+//! parallelism (`par`), a JSON parser/writer (`json`), and a lightweight
+//! property-testing harness (`proptest`).
+
+pub mod json;
+pub mod par;
+pub mod proptest;
+pub mod rng;
+
+pub use json::Json;
+pub use par::{num_threads, par_chunks_mut, par_for};
+pub use rng::Rng;

@@ -1,0 +1,141 @@
+//! Scoped-thread data parallelism (the rayon substitute).
+//!
+//! `par_chunks_mut` splits a mutable slice into contiguous chunks and
+//! processes them on `num_threads()` OS threads via `std::thread::scope`;
+//! `par_for` runs an index range the same way.  Closures receive the chunk
+//! (or index) plus its global offset.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Worker count: respects `APLLM_THREADS`, defaults to available
+/// parallelism (capped at 16 — the kernels saturate memory bandwidth well
+/// before that).
+pub fn num_threads() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let c = CACHED.load(Ordering::Relaxed);
+    if c != 0 {
+        return c;
+    }
+    let n = std::env::var("APLLM_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&v| v > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+        });
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Process `data` in contiguous chunks of `chunk_len` elements, in
+/// parallel.  `f(chunk_index, chunk)` — chunks are disjoint so no locking
+/// is needed.  Falls back to sequential for small inputs.
+pub fn par_chunks_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+    data: &mut [T],
+    chunk_len: usize,
+    f: F,
+) {
+    assert!(chunk_len > 0);
+    let n_chunks = data.len().div_ceil(chunk_len);
+    let threads = num_threads().min(n_chunks);
+    if threads <= 1 {
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    // hand out chunks through a work-stealing counter so uneven chunk
+    // costs balance across threads
+    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk_len).enumerate().collect();
+    let chunks = std::sync::Mutex::new(chunks.into_iter().map(Some).collect::<Vec<_>>());
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let idx = next.fetch_add(1, Ordering::Relaxed);
+                let item = {
+                    let mut guard = chunks.lock().unwrap();
+                    if idx >= guard.len() {
+                        return;
+                    }
+                    guard[idx].take()
+                };
+                if let Some((i, chunk)) = item {
+                    f(i, chunk);
+                }
+            });
+        }
+    });
+}
+
+/// Run `f(i)` for `i in 0..n` across threads (dynamic scheduling).
+pub fn par_for<F: Fn(usize) + Sync>(n: usize, f: F) {
+    let threads = num_threads().min(n.max(1));
+    if threads <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    return;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunks_cover_everything_once() {
+        let mut v = vec![0u32; 1003];
+        par_chunks_mut(&mut v, 17, |_, chunk| {
+            for x in chunk {
+                *x += 1;
+            }
+        });
+        assert!(v.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn chunk_indices_match_offsets() {
+        let mut v = vec![0usize; 256];
+        par_chunks_mut(&mut v, 10, |ci, chunk| {
+            for (j, x) in chunk.iter_mut().enumerate() {
+                *x = ci * 10 + j;
+            }
+        });
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i);
+        }
+    }
+
+    #[test]
+    fn par_for_runs_each_index_once() {
+        let sum = AtomicU64::new(0);
+        par_for(1000, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        let mut v: Vec<u8> = vec![];
+        par_chunks_mut(&mut v, 4, |_, _| panic!("no chunks expected"));
+        par_for(0, |_| panic!("no iterations expected"));
+        let mut one = vec![5u8];
+        par_chunks_mut(&mut one, 4, |_, c| c[0] = 6);
+        assert_eq!(one[0], 6);
+    }
+}

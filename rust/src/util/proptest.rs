@@ -1,0 +1,60 @@
+//! Lightweight property-testing harness (the proptest substitute).
+//!
+//! `forall(cases, |rng| { ... })` runs the closure `cases` times with
+//! independent seeded RNGs; on failure it reports the failing seed so the
+//! case replays deterministically via `replay(seed, f)`.  Shrinking is the
+//! caller's job (generate from small ranges).
+
+use super::rng::Rng;
+
+/// Base seed: override with `APLLM_PROPTEST_SEED` to replay a CI failure.
+fn base_seed() -> u64 {
+    std::env::var("APLLM_PROPTEST_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(0xA11A)
+}
+
+/// Run `f` for `cases` independent seeds; panics with the failing seed.
+pub fn forall<F: Fn(&mut Rng)>(cases: u64, f: F) {
+    let base = base_seed();
+    for i in 0..cases {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::with_seed(seed);
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed at case {i} (seed {seed}); replay with APLLM_PROPTEST_SEED={seed} and 1 case");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Replay a single failing seed.
+pub fn replay<F: Fn(&mut Rng)>(seed: u64, f: F) {
+    let mut rng = Rng::with_seed(seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        forall(32, |rng| {
+            let a = rng.usize(0, 100);
+            let b = rng.usize(0, 100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn reports_failing_seed() {
+        let r = std::panic::catch_unwind(|| {
+            forall(64, |rng| {
+                assert!(rng.usize(0, 10) < 10);
+                assert_ne!(rng.usize(0, 4), 3, "planted failure");
+            })
+        });
+        assert!(r.is_err(), "planted failure must surface");
+    }
+}

@@ -1,0 +1,131 @@
+//! Seeded xoshiro256** PRNG — deterministic test/bench data without the
+//! `rand` crate.
+
+/// xoshiro256** (Blackman & Vigna). Not cryptographic; excellent
+/// statistical quality for workload generation.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via SplitMix64 so nearby seeds give uncorrelated streams.
+    pub fn with_seed(seed: u64) -> Self {
+        let mut x = seed;
+        let mut next = || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Self { s: [next(), next(), next(), next()] }
+    }
+
+    #[inline]
+    pub fn u64(&mut self) -> u64 {
+        let r = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform in `[lo, hi)` (hi > lo).
+    #[inline]
+    pub fn u32(&mut self, lo: u32, hi: u32) -> u32 {
+        debug_assert!(hi > lo);
+        lo + (self.u64() % (hi - lo) as u64) as u32
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi > lo);
+        lo + (self.u64() % (hi - lo) as u64) as usize
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform in `[0, 1)`, double precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = (1.0 - self.f64()).max(1e-12);
+        let u2 = self.f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Exponential with rate `lambda` (inter-arrival sampling).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        -(1.0 - self.f64()).max(1e-12).ln() / lambda
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.u64() & 1 == 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::with_seed(42);
+        let mut b = Rng::with_seed(42);
+        for _ in 0..100 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+
+    #[test]
+    fn seeds_decorrelated() {
+        let mut a = Rng::with_seed(1);
+        let mut b = Rng::with_seed(2);
+        let same = (0..1000).filter(|_| a.u64() == b.u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn ranges_respected() {
+        let mut r = Rng::with_seed(7);
+        for _ in 0..10_000 {
+            let v = r.u32(3, 17);
+            assert!((3..17).contains(&v));
+            let f = r.f32();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::with_seed(9);
+        let n = 50_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::with_seed(11);
+        let n = 50_000;
+        let mean = (0..n).map(|_| r.exponential(4.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.25).abs() < 0.01, "mean={mean}");
+    }
+}

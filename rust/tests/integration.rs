@@ -1,0 +1,207 @@
+//! Integration tests over the real AOT artifacts: PJRT execution vs the
+//! pure-Rust substrate, golden cross-language vectors, and the model
+//! runner.  All tests skip (pass with a notice) when `artifacts/` is
+//! missing — run `make artifacts` first for full coverage.
+
+use apllm::bitmm::{apmm_bipolar, pack_codes_u32, transpose_codes, ApmmOpts, CodeMatrix};
+use apllm::runtime::{Engine, ModelRunner};
+use apllm::util::Json;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts/ (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn golden_vectors_match_python_oracle() {
+    let Some(dir) = artifacts() else { return };
+    let src = std::fs::read_to_string(dir.join("golden_apmm.json")).unwrap();
+    let j = Json::parse(&src).unwrap();
+    let cases = j.get("cases").and_then(Json::as_arr).unwrap();
+    assert!(cases.len() >= 4);
+    for case in cases {
+        let g = |k: &str| case.get(k).and_then(Json::as_usize).unwrap();
+        let (m, k, n, nw, nx) = (g("m"), g("k"), g("n"), g("nw") as u32, g("nx") as u32);
+        let vec_u32 = |key: &str| -> Vec<u32> {
+            case.get(key)
+                .and_then(Json::as_arr)
+                .unwrap()
+                .iter()
+                .map(|v| v.as_f64().unwrap() as u32)
+                .collect()
+        };
+        let w = CodeMatrix::new(m, k, nw, vec_u32("w_code"));
+        let x = CodeMatrix::new(k, n, nx, vec_u32("x_code"));
+        let want: Vec<i32> = case
+            .get("y")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as i32)
+            .collect();
+        let got = apmm_bipolar(&w, &transpose_codes(&x), ApmmOpts::default());
+        assert_eq!(got, want, "golden case {m}x{k}x{n} W{nw}A{nx}");
+    }
+}
+
+#[test]
+fn pjrt_apmm_matches_bitmm() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let specs: Vec<_> = engine.manifest().by_kind("apmm").into_iter().cloned().collect();
+    assert!(!specs.is_empty(), "manifest must list apmm executables");
+    for spec in specs {
+        let (m, k, n) = (
+            spec.meta_usize("m").unwrap(),
+            spec.meta_usize("k").unwrap(),
+            spec.meta_usize("n").unwrap(),
+        );
+        let (nw, nx) = (spec.meta_usize("nw").unwrap() as u32, spec.meta_usize("nx").unwrap() as u32);
+        let w = CodeMatrix::random(m, k, nw, 101);
+        let x = CodeMatrix::random(k, n, nx, 102);
+        let xt = transpose_codes(&x);
+        let y_pjrt = engine.run_apmm(&spec, &pack_codes_u32(&w), &pack_codes_u32(&xt)).unwrap();
+        let y_rust = apmm_bipolar(&w, &xt, ApmmOpts::default());
+        assert_eq!(y_pjrt, y_rust, "{}", spec.name);
+    }
+}
+
+#[test]
+fn pjrt_apmm_rejects_bad_operands() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let spec = engine.manifest().by_kind("apmm")[0].clone();
+    let err = engine.run_apmm(&spec, &[0u32; 3], &[0u32; 3]).unwrap_err().to_string();
+    assert!(err.contains("don't match"), "err: {err}");
+}
+
+#[test]
+fn model_prefill_decode_roundtrip() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let runner = ModelRunner::new(&engine).unwrap();
+    let cfg = runner.cfg;
+    assert!(runner.max_batch() >= 4);
+
+    // batch 1: prefill then three decode steps
+    let prompt: Vec<i32> = (1..9).collect();
+    let (logits, mut kv) = runner.prefill(&prompt, 1, 8).unwrap();
+    assert_eq!(logits.len() % cfg.vocab, 0);
+    assert!(logits.iter().all(|x| x.is_finite()), "prefill logits finite");
+    assert_eq!(kv.batch, 1);
+    let pos0 = kv.pos[0];
+
+    let mut tok = 9i32;
+    for step in 0..3 {
+        let lg = runner.decode(&[tok], &mut kv).unwrap();
+        assert_eq!(lg.len(), cfg.vocab);
+        assert!(lg.iter().all(|x| x.is_finite()), "decode step {step}");
+        // greedy next token
+        tok = lg
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap();
+        assert_eq!(kv.pos[0], pos0 + step + 1);
+    }
+}
+
+#[test]
+fn model_decode_batch2_consistent_with_batch1() {
+    // Row 0 of a batch-2 decode must equal the same request decoded alone.
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let runner = ModelRunner::new(&engine).unwrap();
+    let cfg = runner.cfg;
+
+    let p0: Vec<i32> = (1..17).collect();
+    let p1: Vec<i32> = (20..36).collect();
+    let (_, mut kv1) = runner.prefill(&p0, 1, 16).unwrap();
+    let lg1 = runner.decode(&[5], &mut kv1).unwrap();
+
+    let mut both = p0.clone();
+    both.extend(&p1);
+    let (_, mut kv2) = runner.prefill(&both, 2, 16).unwrap();
+    let lg2 = runner.decode(&[5, 7], &mut kv2).unwrap();
+
+    for i in 0..cfg.vocab {
+        assert!(
+            (lg1[i] - lg2[i]).abs() < 2e-3,
+            "batch invariance: logit {i}: {} vs {}",
+            lg1[i],
+            lg2[i]
+        );
+    }
+}
+
+#[test]
+fn decode_exhausts_kv_gracefully() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let runner = ModelRunner::new(&engine).unwrap();
+    let cfg = runner.cfg;
+    let (_, mut kv) = runner.prefill(&(1..17).collect::<Vec<_>>(), 1, 16).unwrap();
+    kv.pos = vec![cfg.max_seq; 1]; // fast-forward to the edge
+    let err = runner.decode(&[1], &mut kv).unwrap_err().to_string();
+    assert!(err.contains("exhausted"), "err: {err}");
+}
+
+// ------------------------------------------------------- failure injection --
+
+#[test]
+fn corrupt_weights_rejected() {
+    // truncated weights.bin must fail loading with a clear error, not UB
+    let Some(dir) = artifacts() else { return };
+    let tmp = std::env::temp_dir().join(format!("apllm-corrupt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).unwrap();
+    for f in std::fs::read_dir(&dir).unwrap() {
+        let f = f.unwrap();
+        std::fs::copy(f.path(), tmp.join(f.file_name())).unwrap();
+    }
+    let blob = std::fs::read(tmp.join("weights.bin")).unwrap();
+    std::fs::write(tmp.join("weights.bin"), &blob[..blob.len() / 2]).unwrap();
+    let engine = Engine::load(&tmp).unwrap();
+    let err = match ModelRunner::new(&engine) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("truncated weights must not load"),
+    };
+    assert!(err.contains("out of range"), "err: {err}");
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn truncated_hlo_rejected() {
+    // a mangled HLO file must fail at compile, not crash the client
+    let Some(dir) = artifacts() else { return };
+    let tmp = std::env::temp_dir().join(format!("apllm-badhlo-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).unwrap();
+    std::fs::copy(dir.join("manifest.json"), tmp.join("manifest.json")).unwrap();
+    // write garbage for every referenced HLO
+    let engine_src = Engine::load(&dir).unwrap();
+    for e in &engine_src.manifest().executables {
+        std::fs::write(tmp.join(&e.hlo), "HloModule broken\nENTRY {").unwrap();
+    }
+    let engine = Engine::load(&tmp).unwrap();
+    let name = engine.manifest().executables[0].name.clone();
+    assert!(engine.compile(&name).is_err(), "garbage HLO must not compile");
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn missing_executable_name_errors() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let err = match engine.compile("does_not_exist") {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("unknown executable must not compile"),
+    };
+    assert!(err.contains("does_not_exist"), "err: {err}");
+}
