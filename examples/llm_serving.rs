@@ -1,14 +1,18 @@
-//! END-TO-END driver (DESIGN.md E2E): load the AOT-compiled quantized
-//! model artifacts, serve a batched request stream through the
-//! continuous-batching coordinator over the real PJRT runtime, and report
+//! END-TO-END driver (DESIGN.md E2E): serve a batched request stream
+//! through the continuous-batching coordinator and report
 //! latency/throughput.
 //!
-//! This proves all three layers compose: L1 Pallas AP-GEMM kernels inside
-//! the L2 JAX model, AOT-lowered to HLO, executed by the L3 Rust
-//! coordinator with dynamic batching + per-slot KV positions — Python
-//! never runs.
+//! With the `pjrt` feature, this loads the AOT-compiled quantized model
+//! artifacts and runs the real PJRT runtime — proving all three layers
+//! compose (L1 Pallas AP-GEMM kernels inside the L2 JAX model, AOT-lowered
+//! to HLO, executed by the L3 Rust coordinator) with Python never running.
+//! Without it (the default offline build), the coordinator serves real
+//! bitmm logits through the §3.3 pack-once pipeline instead: weights
+//! packed once at startup, activations packed per step through the
+//! recycling arena.
 //!
-//! Run: `make artifacts && cargo run --release --example llm_serving -- [--requests N] [--rate R]`
+//! Run: `cargo run --release --example llm_serving -- [--requests N] [--rate R] [--sim]`
+//! (PJRT path additionally needs `make artifacts` and `--features pjrt`.)
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -20,7 +24,7 @@ fn main() {
         a.max_new = 8;
         a.prompt_len = 12;
     }
-    match apllm::coordinator::cli::run_serving_demo(&a) {
+    match apllm::coordinator::cli::run_demo(&a) {
         Ok(report) => {
             println!("{report}");
             println!("(record this run in EXPERIMENTS.md §E2E)");

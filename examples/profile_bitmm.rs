@@ -1,19 +1,45 @@
 //! Profiling helper for the §Perf pass: splits the bitmm hot path into
-//! packing vs GEMM-core time (EXPERIMENTS.md §Perf iteration log).
+//! packing vs prepacked GEMM-core time (EXPERIMENTS.md §Perf iteration
+//! log) — the measured version of the §3.3 pack-once argument.
 //!
 //! Run: `cargo run --release --example profile_bitmm`
 
-use apllm::bitmm::{pack_codes, apmm_bipolar, ApmmOpts, CodeMatrix};
+use apllm::bitmm::{apmm_bipolar, apmm_bipolar_packed, pack_codes, ApmmOpts, CodeMatrix};
 use std::time::Instant;
+
 fn main() {
     let (m, k, n) = (256usize, 2048usize, 256usize);
     let w = CodeMatrix::random(m, k, 2, 1);
     let xt = CodeMatrix::random(n, k, 2, 2);
-    for _ in 0..2 { let _ = pack_codes(&w); }
+    let wp = pack_codes(&w);
+    let xp = pack_codes(&xt);
+    for _ in 0..2 {
+        let _ = pack_codes(&w);
+    }
+
     let t0 = Instant::now();
-    for _ in 0..10 { std::hint::black_box(pack_codes(&w)); std::hint::black_box(pack_codes(&xt)); }
-    println!("pack both: {:?}/iter", t0.elapsed()/10);
+    for _ in 0..10 {
+        std::hint::black_box(pack_codes(&w));
+        std::hint::black_box(pack_codes(&xt));
+    }
+    let t_pack = t0.elapsed() / 10;
+    println!("pack both operands : {t_pack:?}/iter");
+
     let t0 = Instant::now();
-    for _ in 0..10 { std::hint::black_box(apmm_bipolar(&w, &xt, ApmmOpts::default())); }
-    println!("apmm total: {:?}/iter", t0.elapsed()/10);
+    for _ in 0..10 {
+        std::hint::black_box(apmm_bipolar_packed(&wp, &xp, ApmmOpts::default()));
+    }
+    let t_core = t0.elapsed() / 10;
+    println!("prepacked core     : {t_core:?}/iter");
+
+    let t0 = Instant::now();
+    for _ in 0..10 {
+        std::hint::black_box(apmm_bipolar(&w, &xt, ApmmOpts::default()));
+    }
+    let t_total = t0.elapsed() / 10;
+    println!("pack+compute total : {t_total:?}/iter");
+    println!(
+        "pack share if inline: {:.1}% (the pack-once ABI pays it exactly once)",
+        100.0 * t_pack.as_secs_f64() / t_total.as_secs_f64()
+    );
 }

@@ -41,6 +41,40 @@ fn main() {
         println!("  max_running={max_running}: {tput:.0} tok/s");
     }
 
+    println!("\n== coordinator: pack-once AP-GEMM backend (real bitmm logits) ==");
+    {
+        let run = || {
+            let mut s = Scheduler::new(
+                SimBackend::with_ap_gemm(256, 128, vec![1, 2, 4, 8], 256, 2, 2, 7),
+                SchedulerConfig { kv_blocks: 256, block_tokens: 16, max_running: 8 },
+            );
+            for i in 0..32usize {
+                s.submit(Request::new(
+                    i as u64,
+                    vec![1, 2, 3, 4, 5, 6, 7, 8],
+                    GenParams { max_new_tokens: 16, sample: false, seed: i as u64 },
+                ));
+            }
+            let out = s.run_to_completion().unwrap();
+            assert_eq!(out.len(), 32);
+            s
+        };
+        bench_fn("scheduler 32 reqs over prepacked W2A2 lm-head", 1, 5, || {
+            std::hint::black_box(run());
+        });
+        let s = run();
+        let stats = s.backend().ap_stats().unwrap();
+        println!(
+            "  tok/s {:.0}; weight packs {} (packed once, {} bytes resident), act packs {}, arena allocs {}, reuses {}",
+            s.metrics.throughput_tok_s(),
+            stats.weight_packs,
+            s.backend().packed_weight_bytes(),
+            stats.act_packs,
+            stats.arena_allocs,
+            stats.arena_reuses
+        );
+    }
+
     println!("\n== batcher: admission cost ==");
     bench_fn("batcher push+poll 10k requests", 1, 5, || {
         let mut b = Batcher::new(BatcherConfig::default());

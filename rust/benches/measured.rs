@@ -1,17 +1,20 @@
 //! MK: REAL measured latencies on this host (not simulated):
-//!   * pure-Rust bitmm AP-GEMM across precisions vs the f32 GEMM baseline
-//!     and the decoded-int naive GEMM;
-//!   * PJRT execution of the AOT Pallas artifacts (when artifacts exist).
+//!   * pure-Rust bitmm AP-GEMM across precisions — with **pack time and
+//!     compute time measured separately** (the §3.3 pack-once split), vs
+//!     the f32 GEMM baseline and the decoded-int naive GEMM;
+//!   * PJRT execution of the AOT Pallas artifacts (pjrt feature +
+//!     artifacts present).
 //!
 //! The relative ordering mirrors the paper's core claim at CPU scale:
 //! bit-packed XNOR-popcount GEMM beats dense arithmetic at equal logical
-//! shape, and cost scales with n_w·n_x.
+//! shape, cost scales with n_w·n_x, and packing is a one-time cost the
+//! prepacked ABI keeps off the hot path.
 
 use apllm::bench::bench_fn;
 use apllm::bitfmt::IntFormat;
 use apllm::bitmm::{
-    apmm_bipolar, apmm_bipolar_unfused, gemm_f32, naive_gemm_decoded, pack_codes_u32,
-    transpose_codes, ApmmOpts, CodeMatrix,
+    apmm_bipolar, apmm_bipolar_packed, apmm_bipolar_unfused_packed, gemm_f32, naive_gemm_decoded,
+    pack_codes, CodeMatrix,
 };
 use apllm::model::PrecisionConfig;
 use apllm::util::Rng;
@@ -21,7 +24,8 @@ fn main() {
     let (m, k, n) = (256usize, 2048usize, 256usize);
     println!("shape {m}x{k}x{n}\n");
 
-    let mut results = Vec::new();
+    // (label, pairs, pack_s, compute_s, total_s)
+    let mut rows = Vec::new();
     for prec in [
         PrecisionConfig::W1A1,
         PrecisionConfig::W1A2,
@@ -32,10 +36,20 @@ fn main() {
     ] {
         let w = CodeMatrix::random(m, k, prec.nw, 1);
         let xt = CodeMatrix::random(n, k, prec.nx, 2);
-        let r = bench_fn(&format!("bitmm {} (fused)", prec.label()), 1, 7, || {
-            std::hint::black_box(apmm_bipolar(&w, &xt, ApmmOpts::default()));
+        let wp = pack_codes(&w);
+        let xp = pack_codes(&xt);
+        let label = prec.label();
+        let rp = bench_fn(&format!("bitmm {label} pack (both operands)"), 1, 7, || {
+            std::hint::black_box(pack_codes(&w));
+            std::hint::black_box(pack_codes(&xt));
         });
-        results.push((prec.plane_pairs(), r.median_s));
+        let rc = bench_fn(&format!("bitmm {label} compute (prepacked core)"), 1, 7, || {
+            std::hint::black_box(apmm_bipolar_packed(&wp, &xp, Default::default()));
+        });
+        let rt = bench_fn(&format!("bitmm {label} pack+compute (wrapper)"), 1, 7, || {
+            std::hint::black_box(apmm_bipolar(&w, &xt, Default::default()));
+        });
+        rows.push((label, prec.plane_pairs(), rp.median_s, rc.median_s, rt.median_s));
     }
 
     // unfused (the paper's naive dataflow) at one precision for contrast
@@ -43,8 +57,10 @@ fn main() {
         let p = PrecisionConfig::W2A2;
         let w = CodeMatrix::random(m, k, p.nw, 1);
         let xt = CodeMatrix::random(n, k, p.nx, 2);
-        bench_fn("bitmm W2A2 (UNFUSED recovery)", 1, 5, || {
-            std::hint::black_box(apmm_bipolar_unfused(&w, &xt));
+        let wp = pack_codes(&w);
+        let xp = pack_codes(&xt);
+        bench_fn("bitmm W2A2 (UNFUSED recovery, prepacked)", 1, 5, || {
+            std::hint::black_box(apmm_bipolar_unfused_packed(&wp, &xp));
         });
     }
 
@@ -63,14 +79,39 @@ fn main() {
         });
     }
 
-    // scaling check: fused cost should grow ~linearly in plane pairs
-    println!("\nplane-pair scaling (median vs W1A1):");
-    let base = results[0].1;
-    for (pairs, t) in &results {
-        println!("  {:>2} pairs: {:>8.2} ms  ({:.2}× base)", pairs, t * 1e3, t / base);
+    // §3.3 split: pack is a near-constant tax the pack-once ABI pays once;
+    // compute scales with plane pairs
+    println!("\npack vs compute split (medians):");
+    println!(
+        "{:<8}{:>7}{:>12}{:>12}{:>12}{:>14}",
+        "config", "pairs", "pack ms", "compute ms", "total ms", "pack share"
+    );
+    for (label, pairs, tp, tc, tt) in &rows {
+        println!(
+            "{:<8}{:>7}{:>12.2}{:>12.2}{:>12.2}{:>13.1}%",
+            label,
+            pairs,
+            tp * 1e3,
+            tc * 1e3,
+            tt * 1e3,
+            100.0 * tp / tt
+        );
     }
 
-    // PJRT artifacts, if present
+    // scaling check: prepacked compute cost should grow ~linearly in
+    // plane pairs (packing excluded — it scales with bits, not pairs)
+    println!("\nplane-pair scaling of the prepacked core (median vs W1A1):");
+    let base = rows[0].3;
+    for (_, pairs, _, tc, _) in &rows {
+        println!("  {:>2} pairs: {:>8.2} ms  ({:.2}x base)", pairs, tc * 1e3, tc / base);
+    }
+
+    pjrt_section();
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_section() {
+    use apllm::bitmm::{pack_codes_u32, transpose_codes};
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.json").exists() {
         println!("\n== measured: PJRT Pallas artifacts (interpret-mode HLO on CPU) ==");
@@ -95,4 +136,9 @@ fn main() {
     } else {
         println!("\n(skipping PJRT section: run `make artifacts`)");
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_section() {
+    println!("\n(skipping PJRT section: built without the pjrt feature)");
 }

@@ -1,0 +1,133 @@
+//! In-tree `anyhow` substitute (the build is fully offline — see
+//! Cargo.toml).  Modules import it as `use crate::anyhow::{...}`; only
+//! the subset this codebase uses is provided: [`Error`], [`Result`],
+//! [`Context`], and the `anyhow!` / `bail!` macros.
+
+use std::fmt;
+
+/// A string-backed error with `context: inner` chaining via [`Context`].
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Self { msg: m.to_string() }
+    }
+
+    fn wrap<C: fmt::Display>(self, context: C) -> Self {
+        Self { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Mirrors anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket `?`-conversion
+// coherent alongside `impl From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow`-style result alias (error type defaults to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error/none arm of a `Result` or `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!(fmt, ...)` — build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! __apllm_anyhow {
+    ($($arg:tt)*) => {
+        $crate::anyhow::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!(fmt, ...)` — early-return `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! __apllm_bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow::Error::msg(format!($($arg)*)).into())
+    };
+}
+
+pub use crate::__apllm_anyhow as anyhow;
+pub use crate::__apllm_bail as bail;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/path").context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err().to_string();
+        assert!(e.starts_with("reading config: "), "got: {e}");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let none: Option<u32> = None;
+        assert_eq!(none.context("missing field").unwrap_err().to_string(), "missing field");
+        let e: Error = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        fn bails() -> Result<()> {
+            bail!("nope: {}", 1 + 1)
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "nope: 2");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let mut called = false;
+        let ok: std::result::Result<u32, String> = Ok(3);
+        let v = ok
+            .with_context(|| {
+                called = true;
+                "ctx"
+            })
+            .unwrap();
+        assert_eq!(v, 3);
+        assert!(!called, "context closure must not run on Ok");
+    }
+}

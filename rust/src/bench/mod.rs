@@ -9,7 +9,7 @@ mod tables;
 pub use harness::{bench_fn, BenchResult};
 pub use tables::{
     print_ablation_format, print_ablation_sched, print_all_tables, print_fig5, print_fig6,
-    print_fig7, print_table1, print_table2,
+    print_fig7, print_pack_split, print_table1, print_table2,
 };
 
 #[cfg(test)]
@@ -40,6 +40,10 @@ mod tests {
         assert!(t2.contains("1k/4k/10.5k") || t2.contains("11008"));
         let f7 = tables::fig7_string();
         assert!(f7.contains("Llama2-7B") && f7.contains("OPT-6.7B") && f7.contains("BLOOM-7B"));
+        let ps = tables::pack_split_string();
+        assert!(ps.contains("attn.q") && ps.contains("lm_head") && ps.contains("TOTAL"));
+        let ab = tables::ablation_sched_string();
+        assert!(ab.contains("§3.3 off"), "prepacked knob must appear in the ablation");
     }
 
     #[test]

@@ -3,9 +3,21 @@
 //! Operand convention: weights `W` are `(M, K)` codes; activations arrive
 //! **transposed** as `Xᵀ` `(N, K)` so both sides stream along packed-K —
 //! the same N-major layout the Pallas kernel uses.
+//!
+//! ## Prepacked ABI (§3.3)
+//!
+//! Every kernel has two entry points:
+//!
+//! * `apmm_*_packed` — the **hot-path core**: consumes [`PackedPlanes`]
+//!   operands, performs zero `pack_codes` calls and zero weight
+//!   allocations.  Weights should be packed once (see [`super::prepack`])
+//!   and reused across calls; activations pack through a `PackArena`.
+//! * `apmm_*` on [`CodeMatrix`] — thin pack-then-call convenience wrapper
+//!   (construction-time / test use; it re-packs both operands per call
+//!   and is therefore **not** hot-path-safe).
 
 use super::gemm1b::{and_popcount_dot, xor_popcount_dot};
-use super::planes::{pack_codes, CodeMatrix, PackedPlanes};
+use super::planes::{pack_codes, CodeMatrix, PackedPlanes, MAX_BITS};
 use crate::bitfmt::{plane_weight, IntFormat};
 use crate::util::par_chunks_mut;
 
@@ -40,6 +52,9 @@ pub fn transpose_codes(m: &CodeMatrix) -> CodeMatrix {
 ///
 /// `Y[m,n] = C − 2 · Σ_{i,j} popc(W_i[m] ^ X_j[n]) << (i+j)`,
 /// `C = K (2^{n_w}−1)(2^{n_x}−1)` — recovery runs entirely in registers.
+///
+/// Convenience wrapper: packs both operands, then delegates to
+/// [`apmm_bipolar_packed_into`].
 pub fn apmm_bipolar(w: &CodeMatrix, xt: &CodeMatrix, opts: ApmmOpts) -> Vec<i32> {
     let mut y = vec![0i32; w.rows * xt.rows];
     apmm_bipolar_into(w, xt, opts, &mut y);
@@ -50,31 +65,61 @@ pub fn apmm_bipolar(w: &CodeMatrix, xt: &CodeMatrix, opts: ApmmOpts) -> Vec<i32>
 /// serving hot path reuses output allocations).
 pub fn apmm_bipolar_into(w: &CodeMatrix, xt: &CodeMatrix, opts: ApmmOpts, y: &mut [i32]) {
     assert_eq!(w.cols, xt.cols, "inner dimension mismatch");
-    assert_eq!(y.len(), w.rows * xt.rows, "output buffer size");
-    let (m, n, k) = (w.rows, xt.rows, w.cols);
-    let (nw, nx) = (w.bits, xt.bits);
     let wp = pack_codes(w);
     let xp = pack_codes(xt);
+    apmm_bipolar_packed_into(&wp, &xp, opts, y);
+}
+
+/// Prepacked fused bipolar AP-GEMM core (allocates only the output).
+pub fn apmm_bipolar_packed(wp: &PackedPlanes, xp: &PackedPlanes, opts: ApmmOpts) -> Vec<i32> {
+    let mut y = vec![0i32; wp.rows * xp.rows];
+    apmm_bipolar_packed_into(wp, xp, opts, &mut y);
+    y
+}
+
+/// The hot-path core: prepacked operands in, caller-provided output
+/// buffer, **zero** packing and zero heap allocation.
+pub fn apmm_bipolar_packed_into(
+    wp: &PackedPlanes,
+    xp: &PackedPlanes,
+    opts: ApmmOpts,
+    y: &mut [i32],
+) {
+    assert_eq!(wp.cols, xp.cols, "inner dimension mismatch");
+    assert_eq!(wp.kw, xp.kw, "packed word-count mismatch");
+    assert_eq!(y.len(), wp.rows * xp.rows, "output buffer size");
+    assert!(opts.tile_m > 0 && opts.tile_n > 0, "tiles must be non-empty");
+    let (m, n, k) = (wp.rows, xp.rows, wp.cols);
+    if m == 0 || n == 0 {
+        return; // empty output; avoids the zero-size row-block chunks below
+    }
+    let (nw, nx) = (wp.bits, xp.bits);
+    // bits ≤ MAX_BITS is a PackedPlanes construction invariant, so these
+    // widened shifts cannot overflow.
     let c_const = (k as i64 * ((1i64 << nw) - 1) * ((1i64 << nx) - 1)) as i32;
 
     let body = |mb: usize, rows_out: &mut [i32]| {
-        let m_hi = (mb + rows_out.len() / n.max(1)).min(m);
-        let mut wr: Vec<&[u64]> = Vec::with_capacity(nw as usize);
-        let mut xr: Vec<&[u64]> = Vec::with_capacity(nx as usize);
+        // rows_out holds whole output rows, so this division is exact even
+        // for the ragged last chunk (m % tile_m != 0).
+        let m_hi = (mb + rows_out.len() / n).min(m);
+        // Fixed-size row-slice registers (bits ≤ MAX_BITS): plane slices
+        // are hoisted per output row/column (§4.2 ④'s reuse analog)
+        // without any per-tile allocation.
+        let mut wr: [&[u64]; MAX_BITS as usize] = [&[]; MAX_BITS as usize];
+        let mut xr: [&[u64]; MAX_BITS as usize] = [&[]; MAX_BITS as usize];
         for nb in (0..n).step_by(opts.tile_n) {
             let n_hi = (nb + opts.tile_n).min(n);
             for mi in mb..m_hi {
-                wr.clear();
-                for i in 0..nw {
-                    wr.push(wp.row(i, mi));
+                for (i, slot) in wr.iter_mut().enumerate().take(nw as usize) {
+                    *slot = wp.row(i as u32, mi);
                 }
                 let out_row = &mut rows_out[(mi - mb) * n..(mi - mb + 1) * n];
                 for ni in nb..n_hi {
-                    xr.clear();
-                    for j in 0..nx {
-                        xr.push(xp.row(j, ni));
+                    for (j, slot) in xr.iter_mut().enumerate().take(nx as usize) {
+                        *slot = xp.row(j as u32, ni);
                     }
-                    out_row[ni] = c_const - 2 * plane_pair_sum(&wr, &xr);
+                    out_row[ni] =
+                        c_const - 2 * plane_pair_sum(&wr[..nw as usize], &xr[..nx as usize]);
                 }
             }
         }
@@ -108,10 +153,15 @@ fn plane_pair_sum(wr: &[&[u64]], xr: &[&[u64]]) -> i32 {
 /// bench and as an internal cross-check of the fused kernel.
 pub fn apmm_bipolar_unfused(w: &CodeMatrix, xt: &CodeMatrix) -> Vec<i32> {
     assert_eq!(w.cols, xt.cols);
-    let (m, n, k) = (w.rows, xt.rows, w.cols);
-    let (nw, nx) = (w.bits, xt.bits);
-    let wp = pack_codes(w);
-    let xp = pack_codes(xt);
+    apmm_bipolar_unfused_packed(&pack_codes(w), &pack_codes(xt))
+}
+
+/// Prepacked unfused core (for the ablation bench to isolate recovery
+/// dataflow cost from packing cost).
+pub fn apmm_bipolar_unfused_packed(wp: &PackedPlanes, xp: &PackedPlanes) -> Vec<i32> {
+    assert_eq!(wp.cols, xp.cols, "inner dimension mismatch");
+    let (m, n, k) = (wp.rows, xp.rows, wp.cols);
+    let (nw, nx) = (wp.bits, xp.bits);
     // 1-bit GEMMs → intermediate tiles in "global memory"
     let mut tiles: Vec<(u32, u32, Vec<i32>)> = Vec::with_capacity((nw * nx) as usize);
     for i in 0..nw {
@@ -136,6 +186,11 @@ pub fn apmm_signed(w: &CodeMatrix, xt: &CodeMatrix) -> Vec<i32> {
     apmm_weighted(w, xt, IntFormat::Signed)
 }
 
+/// Prepacked core of [`apmm_signed`].
+pub fn apmm_signed_packed(wp: &PackedPlanes, xp: &PackedPlanes) -> Vec<i32> {
+    apmm_weighted_packed(wp, xp, IntFormat::Signed)
+}
+
 /// Unsigned decomposition GEMM via AND planes (values == codes; any
 /// zero-point correction is the caller's extra `J` GEMMs, see
 /// `IntFormat::correction_gemms`).
@@ -143,13 +198,26 @@ pub fn apmm_unsigned(w: &CodeMatrix, xt: &CodeMatrix) -> Vec<i32> {
     apmm_weighted(w, xt, IntFormat::Unsigned)
 }
 
+/// Prepacked core of [`apmm_unsigned`].
+pub fn apmm_unsigned_packed(wp: &PackedPlanes, xp: &PackedPlanes) -> Vec<i32> {
+    apmm_weighted_packed(wp, xp, IntFormat::Unsigned)
+}
+
 fn apmm_weighted(w: &CodeMatrix, xt: &CodeMatrix, fmt: IntFormat) -> Vec<i32> {
     assert_eq!(w.cols, xt.cols);
-    let (m, n) = (w.rows, xt.rows);
-    let (nw, nx) = (w.bits, xt.bits);
-    let wp = pack_codes(w);
-    let xp = pack_codes(xt);
+    apmm_weighted_packed(&pack_codes(w), &pack_codes(xt), fmt)
+}
+
+/// Prepacked AND-plane GEMM with per-plane recovery weights under `fmt`
+/// (the signed/unsigned baselines share this core).
+pub fn apmm_weighted_packed(wp: &PackedPlanes, xp: &PackedPlanes, fmt: IntFormat) -> Vec<i32> {
+    assert_eq!(wp.cols, xp.cols, "inner dimension mismatch");
+    let (m, n) = (wp.rows, xp.rows);
+    let (nw, nx) = (wp.bits, xp.bits);
     let mut y = vec![0i32; m * n];
+    if m == 0 || n == 0 {
+        return y;
+    }
     par_chunks_mut(&mut y, n, |mi, row| {
         for (ni, out) in row.iter_mut().enumerate() {
             let mut acc = 0i64;
@@ -175,6 +243,9 @@ pub fn naive_gemm_decoded(w: &CodeMatrix, xt: &CodeMatrix, fmt: IntFormat) -> Ve
     let wd = w.decode(fmt);
     let xd = xt.decode(fmt);
     let mut y = vec![0i32; m * n];
+    if m == 0 || n == 0 {
+        return y;
+    }
     par_chunks_mut(&mut y, n, |mi, row| {
         for (ni, out) in row.iter_mut().enumerate() {
             let mut acc = 0i64;
@@ -193,6 +264,9 @@ pub fn gemm_f32(a: &[f32], bt: &[f32], m: usize, n: usize, k: usize) -> Vec<f32>
     assert_eq!(a.len(), m * k);
     assert_eq!(bt.len(), n * k);
     let mut c = vec![0f32; m * n];
+    if m == 0 || n == 0 {
+        return c;
+    }
     par_chunks_mut(&mut c, n, |mi, row| {
         let ar = &a[mi * k..(mi + 1) * k];
         for (ni, out) in row.iter_mut().enumerate() {

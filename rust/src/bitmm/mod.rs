@@ -13,6 +13,28 @@
 //!    (§4.2's "recover in shared memory, not global memory" — here:
 //!    "recover in registers, not in a temporary buffer").
 //!
+//! ## Prepacked ABI and the pack-once lifecycle (§3.3)
+//!
+//! [`PackedPlanes`] — shape + bit-width + plane words — is the canonical
+//! kernel operand; [`CodeMatrix`] is a construction-time artifact.  The
+//! intended lifecycle:
+//!
+//! * **offline** — quantize weights, decompose+pack them once
+//!   ([`pack_codes`], or memoized via [`prepack::PlaneCache`] /
+//!   [`prepack::PackedWeightStore`]);
+//! * **hot path** — pack each decode step's activations through a
+//!   [`prepack::PackArena`] (recycled buffers, no allocation) and call the
+//!   `apmm_*_packed` cores, which never call `pack_codes` and never
+//!   allocate for weights.
+//!
+//! Hot-path-safe entry points: [`apmm_bipolar_packed`],
+//! [`apmm_bipolar_packed_into`], [`apmm_signed_packed`],
+//! [`apmm_unsigned_packed`], [`apmm_weighted_packed`],
+//! [`apmm_bipolar_unfused_packed`], [`pack_codes_into`].  The `CodeMatrix`
+//! entry points (`apmm_bipolar`, `apmm_signed`, …) are thin pack-then-call
+//! wrappers that re-pack both operands per call — convenient for tests and
+//! one-shot use, not for serving loops.
+//!
 //! The unfused variant (materializing every `D_ij`, then a second recovery
 //! pass — the paper's *naive* Fig. 4 baseline) is kept for the ablation
 //! bench and as an internal cross-check.
@@ -20,14 +42,18 @@
 mod apmm;
 mod gemm1b;
 mod planes;
+pub mod prepack;
 mod recover;
 
 pub use apmm::{
-    apmm_bipolar, apmm_bipolar_into, apmm_bipolar_unfused, apmm_signed, apmm_unsigned,
-    gemm_f32, naive_gemm_decoded, transpose_codes, ApmmOpts,
+    apmm_bipolar, apmm_bipolar_into, apmm_bipolar_packed, apmm_bipolar_packed_into,
+    apmm_bipolar_unfused, apmm_bipolar_unfused_packed, apmm_signed, apmm_signed_packed,
+    apmm_unsigned, apmm_unsigned_packed, apmm_weighted_packed, gemm_f32, naive_gemm_decoded,
+    transpose_codes, ApmmOpts,
 };
 pub use gemm1b::{and_popcount_dot, xnor_dot, xor_popcount_dot};
-pub use planes::{pack_codes, pack_codes_u32, CodeMatrix, PackedPlanes};
+pub use planes::{pack_codes, pack_codes_into, pack_codes_u32, CodeMatrix, PackedPlanes, MAX_BITS};
+pub use prepack::{PackArena, PackedWeight, PackedWeightStore, PlaneCache};
 pub use recover::recover_tiles;
 
 #[cfg(test)]

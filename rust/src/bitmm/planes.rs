@@ -1,12 +1,34 @@
-//! Bit-plane decomposition and word packing (paper §4.1).
+//! Bit-plane decomposition and word packing (paper §4.1) — the home of the
+//! **prepacked kernel ABI**.
 //!
 //! `PackedPlanes` is the operand layout every kernel here consumes: plane
 //! `i` of an n-bit code matrix is a `rows × kw` array of `u64` words, bit
 //! `b` of word `w` holding the code's bit `i` at column `w·64 + b`
 //! (LSB-first).  The n planes are stored **concatenated** in one contiguous
 //! allocation (§4.1 step 3), so a row of all planes streams as one slice.
+//!
+//! Lifecycle (§3.3 pack-once): a `CodeMatrix` is a **construction-time**
+//! artifact — quantizers produce it, `pack_codes` / `pack_codes_into`
+//! decompose it into `PackedPlanes` exactly once (weights via
+//! [`super::prepack::PlaneCache`] / [`super::prepack::PackedWeightStore`],
+//! decode-step activations via the [`super::prepack::PackArena`]), and the
+//! hot path only ever touches the packed form through the `apmm_*_packed`
+//! kernels.
 
 use crate::bitfmt::IntFormat;
+
+/// Widest per-operand bit-width the kernels support.  Bounded so plane
+/// loops can use fixed-size register arrays and so `1 << bits` shifts are
+/// always in range (shifting by ≥ 32 would be UB on the `u32` code type).
+pub const MAX_BITS: u32 = 16;
+
+#[inline]
+fn assert_bits(bits: u32) {
+    assert!(
+        (1..=MAX_BITS).contains(&bits),
+        "bit-width must be in 1..={MAX_BITS}, got {bits}"
+    );
+}
 
 /// A row-major matrix of n-bit integer codes (values `< 2^bits`).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -18,21 +40,31 @@ pub struct CodeMatrix {
 }
 
 impl CodeMatrix {
+    /// Panics unless `bits ∈ 1..=16` (wider would overflow the shift-add
+    /// recovery weights and the `u32` code storage).
     pub fn new(rows: usize, cols: usize, bits: u32, data: Vec<u32>) -> Self {
+        assert_bits(bits);
         assert_eq!(data.len(), rows * cols, "shape/data mismatch");
-        debug_assert!(data.iter().all(|&c| c < (1 << bits)), "code out of range");
+        // widened shift: safe for every validated bits (incl. 16)
+        debug_assert!(
+            data.iter().all(|&c| (c as u64) < (1u64 << bits)),
+            "code out of range"
+        );
         Self { rows, cols, bits, data }
     }
 
     /// Filled with a constant code.
     pub fn splat(rows: usize, cols: usize, bits: u32, code: u32) -> Self {
+        assert_bits(bits);
         Self::new(rows, cols, bits, vec![code; rows * cols])
     }
 
     /// Uniform random codes from a seeded generator (tests/benches).
     pub fn random(rows: usize, cols: usize, bits: u32, seed: u64) -> Self {
+        assert_bits(bits);
         let mut rng = crate::util::Rng::with_seed(seed);
-        let data = (0..rows * cols).map(|_| rng.u32(0, 1 << bits)).collect();
+        let hi = (1u64 << bits) as u32;
+        let data = (0..rows * cols).map(|_| rng.u32(0, hi)).collect();
         Self::new(rows, cols, bits, data)
     }
 
@@ -54,7 +86,10 @@ impl CodeMatrix {
 }
 
 /// Bit planes of a code matrix, packed along the column (K) axis into u64
-/// words, planes concatenated (§4.1).
+/// words, planes concatenated (§4.1).  **This is the kernel operand**: the
+/// `apmm_*_packed` cores take it directly and never re-pack; shape and
+/// bit-width metadata travel with the planes so a prepacked weight is
+/// self-describing.
 #[derive(Debug, Clone)]
 pub struct PackedPlanes {
     pub rows: usize,
@@ -67,6 +102,23 @@ pub struct PackedPlanes {
 }
 
 impl PackedPlanes {
+    /// Assemble from a raw plane-major buffer (the `PackArena` recycling
+    /// path).  The buffer must hold exactly `bits · rows · ceil(cols/64)`
+    /// words and the caller is responsible for every word being a freshly
+    /// packed value (padding bits zero) — `pack_codes_into` guarantees
+    /// both.
+    pub fn from_raw_parts(rows: usize, cols: usize, bits: u32, data: Vec<u64>) -> Self {
+        assert_bits(bits);
+        let kw = cols.div_ceil(64);
+        assert_eq!(data.len(), bits as usize * rows * kw, "plane buffer size");
+        Self { rows, cols, kw, bits, data }
+    }
+
+    /// Tear down into the backing buffer (so an arena can recycle it).
+    pub fn into_raw(self) -> Vec<u64> {
+        self.data
+    }
+
     /// Plane `i`, row `r` as a word slice.
     #[inline(always)]
     pub fn row(&self, plane: u32, r: usize) -> &[u64] {
@@ -119,9 +171,21 @@ pub fn pack_codes_u32(m: &CodeMatrix) -> Vec<u32> {
 /// layout; rows are processed in parallel (each row's writes are disjoint).
 pub fn pack_codes(m: &CodeMatrix) -> PackedPlanes {
     let kw = m.cols.div_ceil(64);
+    let mut data = vec![0u64; m.bits as usize * m.rows * kw];
+    pack_codes_into(m, &mut data);
+    PackedPlanes { rows: m.rows, cols: m.cols, kw, bits: m.bits, data }
+}
+
+/// As [`pack_codes`] but writing into a caller-provided buffer of exactly
+/// `bits · rows · ceil(cols/64)` words — the allocation-free path the
+/// [`super::prepack::PackArena`] uses on the decode hot path.  Every word
+/// of `data` is overwritten (stale contents are fine).
+pub fn pack_codes_into(m: &CodeMatrix, data: &mut [u64]) {
+    let kw = m.cols.div_ceil(64);
     let bits = m.bits as usize;
     let plane_stride = m.rows * kw;
-    let mut data = vec![0u64; bits * plane_stride];
+    assert_eq!(data.len(), bits * plane_stride, "plane buffer size");
+    debug_assert!(bits <= MAX_BITS as usize);
 
     // Disjoint-write parallelism over rows: every (plane, row) slot is
     // touched by exactly one row index, so the raw-pointer writes below
@@ -138,7 +202,7 @@ pub fn pack_codes(m: &CodeMatrix) -> PackedPlanes {
         for w in 0..kw {
             let c0 = w * 64;
             let chunk = &src[c0..cols.min(c0 + 64)];
-            let mut acc = [0u64; 16]; // bits ≤ 16
+            let mut acc = [0u64; MAX_BITS as usize];
             for (b, &code) in chunk.iter().enumerate() {
                 let mut c = code as u64;
                 for a in acc.iter_mut().take(bits) {
@@ -152,5 +216,4 @@ pub fn pack_codes(m: &CodeMatrix) -> PackedPlanes {
             }
         }
     });
-    PackedPlanes { rows: m.rows, cols: m.cols, kw, bits: m.bits, data }
 }

@@ -1,0 +1,259 @@
+//! Pack-once operand management (paper §3.3 matrix preprocessing + §3.4
+//! recovery-oriented memory management, realized on the CPU substrate).
+//!
+//! Three pieces, all keeping layout work **off the hot path**:
+//!
+//! * [`PlaneCache`] — key → `Arc<PackedPlanes>` memoizer: a weight matrix
+//!   is decomposed+packed on first use and every later lookup returns the
+//!   *same* buffer (no repack, no copy).
+//! * [`PackedWeightStore`] — the model-level registry: named prepacked
+//!   weights with their dequant scales, shared across serving steps and
+//!   replicas.
+//! * [`PackArena`] — shape-keyed scratch `u64` buffers for decode-step
+//!   **activation** packing (the shared-memory staging analog): after
+//!   warm-up, packing an activation batch performs zero heap allocations.
+
+use super::planes::{pack_codes, pack_codes_into, CodeMatrix, PackedPlanes};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Pack-once memoizer for weight planes.
+///
+/// Keys are caller-chosen (layer index, weight id, …).  A hit returns a
+/// clone of the stored `Arc` — the identical packed buffer, never a
+/// repack; the hit/miss counters let tests and benches prove it.
+#[derive(Default)]
+pub struct PlaneCache {
+    map: HashMap<u64, Arc<PackedPlanes>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl PlaneCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The pack-once entry point: packs `codes` on the first call for
+    /// `key`, returns the cached planes on every later call.
+    pub fn get_or_pack(&mut self, key: u64, codes: &CodeMatrix) -> Arc<PackedPlanes> {
+        if let Some(p) = self.map.get(&key) {
+            self.hits += 1;
+            return p.clone();
+        }
+        self.misses += 1;
+        let p = Arc::new(pack_codes(codes));
+        self.map.insert(key, p.clone());
+        p
+    }
+
+    /// Lookup without packing.
+    pub fn get(&self, key: u64) -> Option<Arc<PackedPlanes>> {
+        self.map.get(&key).cloned()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+}
+
+/// One named, prepacked weight: planes plus dequant scales (one per
+/// output row, or a single per-tensor element).
+#[derive(Clone)]
+pub struct PackedWeight {
+    pub planes: Arc<PackedPlanes>,
+    pub scales: Vec<f32>,
+}
+
+/// Name → prepacked weight registry — what a model replica loads once at
+/// startup and every serving step reads from.
+#[derive(Default)]
+pub struct PackedWeightStore {
+    map: HashMap<String, PackedWeight>,
+}
+
+impl PackedWeightStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pack `codes` once and register it under `name` (replacing any
+    /// previous entry).  Returns the shared planes handle.
+    pub fn insert_codes(
+        &mut self,
+        name: &str,
+        codes: &CodeMatrix,
+        scales: Vec<f32>,
+    ) -> Arc<PackedPlanes> {
+        let planes = Arc::new(pack_codes(codes));
+        self.map.insert(name.to_string(), PackedWeight { planes: planes.clone(), scales });
+        planes
+    }
+
+    /// Register an already-packed weight (e.g. from `Quantized::prepack`).
+    pub fn insert_packed(&mut self, name: &str, planes: Arc<PackedPlanes>, scales: Vec<f32>) {
+        self.map.insert(name.to_string(), PackedWeight { planes, scales });
+    }
+
+    pub fn get(&self, name: &str) -> Option<&PackedWeight> {
+        self.map.get(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Total packed footprint across all stored weights (§4.1 claim at
+    /// model scale).
+    pub fn packed_bytes(&self) -> usize {
+        self.map.values().map(|w| w.planes.nbytes()).sum()
+    }
+}
+
+/// Shape-keyed scratch buffers for hot-path activation packing.
+///
+/// `pack` pops a recycled buffer of the exact plane-buffer length (or
+/// allocates on first sight of a shape), packs into it, and hands back an
+/// owned [`PackedPlanes`]; `recycle` returns the buffer for the next
+/// step.  Decode steps run fixed shapes, so steady state is 100% reuse.
+#[derive(Default)]
+pub struct PackArena {
+    free: HashMap<usize, Vec<Vec<u64>>>,
+    allocs: u64,
+    reuses: u64,
+}
+
+impl PackArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pack `m` using a recycled buffer when one of the right size exists.
+    pub fn pack(&mut self, m: &CodeMatrix) -> PackedPlanes {
+        let need = m.bits as usize * m.rows * m.cols.div_ceil(64);
+        let mut buf = match self.free.get_mut(&need).and_then(Vec::pop) {
+            Some(b) => {
+                self.reuses += 1;
+                b
+            }
+            None => {
+                self.allocs += 1;
+                vec![0u64; need]
+            }
+        };
+        debug_assert_eq!(buf.len(), need);
+        pack_codes_into(m, &mut buf);
+        PackedPlanes::from_raw_parts(m.rows, m.cols, m.bits, buf)
+    }
+
+    /// Return a packed buffer to the arena for reuse.
+    pub fn recycle(&mut self, p: PackedPlanes) {
+        let buf = p.into_raw();
+        self.free.entry(buf.len()).or_default().push(buf);
+    }
+
+    /// Fresh buffers allocated so far (stays flat once shapes are warm).
+    pub fn allocs(&self) -> u64 {
+        self.allocs
+    }
+
+    /// Packs served from recycled buffers.
+    pub fn reuses(&self) -> u64 {
+        self.reuses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitmm::{apmm_bipolar, apmm_bipolar_packed, ApmmOpts};
+
+    #[test]
+    fn plane_cache_hits_return_identical_buffer() {
+        let w = CodeMatrix::random(6, 70, 3, 1);
+        let mut cache = PlaneCache::new();
+        let a = cache.get_or_pack(42, &w);
+        let b = cache.get_or_pack(42, &w);
+        assert!(Arc::ptr_eq(&a, &b), "hit must return the same packed buffer");
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        // and a different key packs independently
+        let c = cache.get_or_pack(43, &w);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn cached_planes_feed_packed_kernel_without_repacking() {
+        let w = CodeMatrix::random(8, 100, 2, 7);
+        let xt = CodeMatrix::random(5, 100, 2, 8);
+        let mut cache = PlaneCache::new();
+        let wp = cache.get_or_pack(0, &w);
+        let mut arena = PackArena::new();
+        let want = apmm_bipolar(&w, &xt, ApmmOpts::default());
+        // several "decode steps": weight planes come from the cache (one
+        // miss total), activations from the arena (one alloc total)
+        for step in 0..4 {
+            let xp = arena.pack(&xt);
+            let wp2 = cache.get_or_pack(0, &w);
+            assert!(Arc::ptr_eq(&wp, &wp2), "step {step} repacked the weight");
+            assert_eq!(apmm_bipolar_packed(&wp2, &xp, ApmmOpts::default()), want);
+            arena.recycle(xp);
+        }
+        assert_eq!(cache.misses(), 1, "weights packed exactly once");
+        assert_eq!(arena.allocs(), 1, "one activation buffer total");
+        assert_eq!(arena.reuses(), 3);
+    }
+
+    #[test]
+    fn arena_reuses_the_same_allocation() {
+        let m = CodeMatrix::random(4, 130, 2, 3);
+        let mut arena = PackArena::new();
+        let p1 = arena.pack(&m);
+        let ptr1 = p1.raw().as_ptr();
+        let reference = p1.clone();
+        arena.recycle(p1);
+        let p2 = arena.pack(&m);
+        assert_eq!(p2.raw().as_ptr(), ptr1, "recycled buffer must be reused");
+        assert_eq!(p2.raw(), reference.raw(), "repack into dirty buffer must be exact");
+        assert_eq!((arena.allocs(), arena.reuses()), (1, 1));
+        // a different shape takes a fresh buffer
+        let other = CodeMatrix::random(4, 131, 2, 3);
+        let p3 = arena.pack(&other);
+        assert_eq!(arena.allocs(), 2);
+        drop(p3);
+    }
+
+    #[test]
+    fn weight_store_registers_and_reports_footprint() {
+        let mut store = PackedWeightStore::new();
+        let w = CodeMatrix::random(16, 64, 2, 5);
+        let planes = store.insert_codes("attn.q", &w, vec![0.5; 16]);
+        assert_eq!(store.len(), 1);
+        let got = store.get("attn.q").unwrap();
+        assert!(Arc::ptr_eq(&got.planes, &planes));
+        assert_eq!(got.scales.len(), 16);
+        // 2 bits × 16 rows × 1 word = 32 u64 words
+        assert_eq!(store.packed_bytes(), 2 * 16 * 8);
+        assert!(store.get("mlp.up").is_none());
+    }
+}

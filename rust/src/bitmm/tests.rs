@@ -140,6 +140,128 @@ fn large_k_no_overflow() {
 }
 
 #[test]
+fn empty_shapes_are_nops() {
+    // regression: n == 0 used to hand par_chunks_mut a zero-length chunk
+    // (panic) when m was large enough to take the parallel path
+    let w = CodeMatrix::random(128, 64, 2, 60);
+    let xt = CodeMatrix::random(0, 64, 2, 61);
+    assert!(apmm_bipolar(&w, &xt, ApmmOpts::default()).is_empty());
+    assert!(apmm_signed(&w, &xt).is_empty());
+    assert!(apmm_unsigned(&w, &xt).is_empty());
+    // m == 0 side
+    let w0 = CodeMatrix::random(0, 64, 2, 62);
+    let x5 = CodeMatrix::random(5, 64, 2, 63);
+    assert!(apmm_bipolar(&w0, &x5, ApmmOpts::default()).is_empty());
+    // into-buffer variant with an (correctly) empty output
+    let mut buf: Vec<i32> = vec![];
+    apmm_bipolar_into(&w, &xt, ApmmOpts::default(), &mut buf);
+    assert!(buf.is_empty());
+}
+
+#[test]
+fn ragged_last_row_block() {
+    // regression: m % tile_m != 0 exercises the short final chunk's
+    // rows_out.len()/n row-count math on the parallel path
+    let (m, k, n) = (70usize, 96usize, 5usize);
+    let w = CodeMatrix::random(m, k, 2, 64);
+    let xt = CodeMatrix::random(n, k, 3, 65);
+    let opts = ApmmOpts { parallel: true, tile_m: 32, tile_n: 4 };
+    assert_eq!(
+        apmm_bipolar(&w, &xt, opts),
+        naive_gemm_decoded(&w, &xt, IntFormat::Bipolar)
+    );
+}
+
+#[test]
+fn max_bits_construct_and_pack() {
+    // bits = 16 is the widest supported width: construction, range checks
+    // and packing must use widened shifts (1 << 16 overflows u16-minded
+    // code paths).  The GEMM itself is i32-bounded, so only layout is
+    // exercised here.
+    let w = CodeMatrix::splat(2, 70, MAX_BITS, (1 << MAX_BITS) - 1);
+    let p = pack_codes(&w);
+    assert_eq!(p.bits, MAX_BITS);
+    assert_eq!(p.kw, 2);
+    // every plane of the all-ones code is all-ones over the 70 columns
+    for plane in 0..MAX_BITS {
+        assert_eq!(p.row(plane, 1)[0], u64::MAX);
+        assert_eq!(p.row(plane, 1)[1], (1u64 << 6) - 1, "plane {plane} padding");
+    }
+    let r = CodeMatrix::random(3, 40, MAX_BITS, 9);
+    assert!(r.data.iter().all(|&c| (c as u64) < (1u64 << MAX_BITS)));
+}
+
+#[test]
+fn out_of_range_bits_rejected() {
+    for bits in [0u32, 17, 32] {
+        let r = std::panic::catch_unwind(|| CodeMatrix::splat(1, 1, bits, 0));
+        assert!(r.is_err(), "bits={bits} must be rejected");
+        let r = std::panic::catch_unwind(|| CodeMatrix::random(1, 1, bits, 0));
+        assert!(r.is_err(), "random bits={bits} must be rejected");
+    }
+}
+
+#[test]
+fn prop_packed_cores_match_wrappers_and_naive() {
+    // the refactor's contract: packed core ≡ CodeMatrix wrapper ≡ decoded
+    // naive GEMM, across random shapes and bit-widths
+    forall(48, |rng| {
+        let (m, k, n) = (rng.usize(1, 12), rng.usize(1, 150), rng.usize(1, 12));
+        let (nw, nx) = (rng.u32(1, 6), rng.u32(1, 6));
+        let seed = rng.u64();
+        let w = CodeMatrix::random(m, k, nw, seed);
+        let xt = CodeMatrix::random(n, k, nx, seed ^ 0xbeef);
+        let wp = pack_codes(&w);
+        let xp = pack_codes(&xt);
+        let naive = naive_gemm_decoded(&w, &xt, IntFormat::Bipolar);
+        assert_eq!(
+            apmm_bipolar_packed(&wp, &xp, ApmmOpts::default()),
+            naive,
+            "packed core: m={m} k={k} n={n} nw={nw} nx={nx}"
+        );
+        assert_eq!(
+            apmm_bipolar(&w, &xt, ApmmOpts::default()),
+            naive,
+            "wrapper: m={m} k={k} n={n} nw={nw} nx={nx}"
+        );
+        assert_eq!(
+            apmm_bipolar_unfused_packed(&wp, &xp),
+            naive,
+            "unfused packed: m={m} k={k} n={n}"
+        );
+        assert_eq!(
+            apmm_signed_packed(&wp, &xp),
+            naive_gemm_decoded(&w, &xt, IntFormat::Signed),
+            "signed packed"
+        );
+        assert_eq!(
+            apmm_unsigned_packed(&wp, &xp),
+            naive_gemm_decoded(&w, &xt, IntFormat::Unsigned),
+            "unsigned packed"
+        );
+    });
+}
+
+#[test]
+fn packed_into_reuses_buffer_across_steps() {
+    // the serving pattern: prepacked weights + arena-packed activations +
+    // one output buffer, stepped repeatedly
+    let w = CodeMatrix::random(6, 77, 3, 70);
+    let wp = pack_codes(&w);
+    let mut arena = prepack::PackArena::new();
+    let mut y = vec![0i32; 6 * 4];
+    for step in 0..3u64 {
+        let xt = CodeMatrix::random(4, 77, 2, 80 + step);
+        let want = naive_gemm_decoded(&w, &xt, IntFormat::Bipolar);
+        let xp = arena.pack(&xt);
+        apmm_bipolar_packed_into(&wp, &xp, ApmmOpts::default(), &mut y);
+        assert_eq!(y, want, "step {step}");
+        arena.recycle(xp);
+    }
+    assert_eq!(arena.allocs(), 1);
+}
+
+#[test]
 fn prop_fused_matches_naive() {
     forall(48, |rng| {
         let (m, k, n) = (rng.usize(1, 12), rng.usize(1, 150), rng.usize(1, 12));

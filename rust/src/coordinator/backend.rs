@@ -2,12 +2,23 @@
 //!
 //! `Backend` abstracts one model replica at the granularity continuous
 //! batching needs: per-sequence prefill and per-slot batched decode.
-//! `PjrtBackend` runs the real AOT artifacts; `SimBackend` is a
-//! deterministic stand-in (fake logits, optional synthetic step latency)
-//! for scheduler tests and the coordinator bench.
+//! `PjrtBackend` runs the real AOT artifacts (`pjrt` cargo feature);
+//! `SimBackend` is a deterministic stand-in (fake logits, optional
+//! synthetic step latency) for scheduler tests and the coordinator bench.
+//! `SimBackend::with_ap_gemm` upgrades the stand-in to compute real
+//! logits through the **pack-once bitmm pipeline**: the weight matrix is
+//! decomposed+packed exactly once at construction and every decode step
+//! only packs its activation batch through a recycling arena — the §3.3
+//! flow, exercised end to end by the serving loop.
 
+use crate::anyhow::{bail, Result};
+#[cfg(feature = "pjrt")]
+use crate::anyhow::{anyhow, Context};
+
+use crate::bitmm::prepack::PackArena;
+use crate::bitmm::{apmm_bipolar_packed_into, pack_codes, ApmmOpts, CodeMatrix, PackedPlanes};
+#[cfg(feature = "pjrt")]
 use crate::runtime::{lit_f32, ModelRunner};
-use anyhow::{bail, Context, Result};
 
 /// Host-resident KV state of ONE sequence: `(L, max_seq, Hkv, Dh)` f32,
 /// plus the next write position.  The scheduler owns these; backends
@@ -38,6 +49,7 @@ pub trait Backend {
 // ------------------------------------------------------------------ PJRT --
 
 /// Real backend over the AOT model artifacts.
+#[cfg(feature = "pjrt")]
 pub struct PjrtBackend<'e> {
     runner: &'e ModelRunner<'e>,
     batches: Vec<usize>,
@@ -46,6 +58,7 @@ pub struct PjrtBackend<'e> {
     seq_kv_elems: usize,
 }
 
+#[cfg(feature = "pjrt")]
 impl<'e> PjrtBackend<'e> {
     pub fn new(runner: &'e ModelRunner<'e>) -> Result<Self> {
         let man = runner.engine().manifest();
@@ -100,6 +113,7 @@ impl<'e> PjrtBackend<'e> {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl<'e> Backend for PjrtBackend<'e> {
     fn vocab(&self) -> usize {
         self.runner.cfg.vocab
@@ -126,8 +140,8 @@ impl<'e> Backend for PjrtBackend<'e> {
         let cfg = self.runner.cfg;
         // last REAL token's logits (prefill pads to its bucket)
         let row = &logits[(t - 1) * cfg.vocab..t * cfg.vocab];
-        let k = kv.k.to_vec::<f32>().map_err(|e| anyhow::anyhow!("kv k: {e:?}"))?;
-        let v = kv.v.to_vec::<f32>().map_err(|e| anyhow::anyhow!("kv v: {e:?}"))?;
+        let k = kv.k.to_vec::<f32>().map_err(|e| anyhow!("kv k: {e:?}"))?;
+        let v = kv.v.to_vec::<f32>().map_err(|e| anyhow!("kv v: {e:?}"))?;
         debug_assert_eq!(k.len(), self.seq_kv_elems);
         // next write position is the true prompt end — pad-slot KV beyond
         // it is garbage but masked (rows only attend to [0, pos])
@@ -155,8 +169,8 @@ impl<'e> Backend for PjrtBackend<'e> {
         let k_lit = lit_f32(&self.gather(kvs, b, true), &kvshape)?;
         let v_lit = lit_f32(&self.gather(kvs, b, false), &kvshape)?;
         let (logits, k_out, v_out) = self.runner.decode_raw(&toks, &pos, &k_lit, &v_lit)?;
-        let k_host = k_out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("k out: {e:?}"))?;
-        let v_host = v_out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("v out: {e:?}"))?;
+        let k_host = k_out.to_vec::<f32>().map_err(|e| anyhow!("k out: {e:?}"))?;
+        let v_host = v_out.to_vec::<f32>().map_err(|e| anyhow!("v out: {e:?}"))?;
         self.scatter(&k_host, kvs, b, true);
         self.scatter(&v_host, kvs, b, false);
         for kv in kvs.iter_mut() {
@@ -168,9 +182,94 @@ impl<'e> Backend for PjrtBackend<'e> {
 
 // ------------------------------------------------------------------- sim --
 
+/// Pack-once AP-GEMM state for the sim backend: an LM-head-style weight
+/// `(vocab, dim)` decomposed+packed exactly once at construction; decode
+/// steps pack only their activation codes (through the recycling arena)
+/// and run the prepacked kernel core.
+struct ApGemm {
+    /// The prepacked weight — the only form the hot path ever touches.
+    weights: PackedPlanes,
+    arena: PackArena,
+    dim: usize,
+    nx: u32,
+    /// Reused output buffer, grown to the largest batch seen.
+    y: Vec<i32>,
+    /// Times the weight matrix was decomposed+packed (must stay at 1).
+    weight_packs: u64,
+    /// Activation batches packed (one per prefill tail + decode step).
+    act_packs: u64,
+}
+
+impl ApGemm {
+    fn new(vocab: usize, dim: usize, nw: u32, nx: u32, seed: u64) -> Self {
+        // construction-time artifact: the codes are dropped right after
+        // the one and only pack
+        let codes = CodeMatrix::random(vocab, dim, nw, seed);
+        Self {
+            weights: pack_codes(&codes),
+            arena: PackArena::new(),
+            dim,
+            nx,
+            y: Vec::new(),
+            weight_packs: 1,
+            act_packs: 0,
+        }
+    }
+
+    /// Deterministic activation codes for one (token, pos) slot.
+    fn act_row(&self, token: i32, pos: usize, out: &mut [u32]) {
+        let mut rng = crate::util::Rng::with_seed(
+            (token as u64).wrapping_mul(0x9E37_79B9).wrapping_add(pos as u64),
+        );
+        let hi = 1u32 << self.nx;
+        for c in out.iter_mut() {
+            *c = rng.u32(0, hi);
+        }
+    }
+
+    /// Logits for a batch of (token, pos) rows via the prepacked kernel.
+    fn logits(&mut self, rows: &[(i32, usize)]) -> Vec<Vec<f32>> {
+        let (vocab, n) = (self.weights.rows, rows.len());
+        let mut codes = vec![0u32; n * self.dim];
+        for (i, &(tok, pos)) in rows.iter().enumerate() {
+            self.act_row(tok, pos, &mut codes[i * self.dim..(i + 1) * self.dim]);
+        }
+        let xt = CodeMatrix::new(n, self.dim, self.nx, codes);
+        let xp = self.arena.pack(&xt);
+        self.act_packs += 1;
+        self.y.resize(vocab * n, 0);
+        // zero pack_codes calls, zero weight allocations from here on
+        apmm_bipolar_packed_into(
+            &self.weights,
+            &xp,
+            ApmmOpts { parallel: false, ..ApmmOpts::default() },
+            &mut self.y,
+        );
+        self.arena.recycle(xp);
+        let scale = 1.0 / (self.dim as f32);
+        (0..n)
+            .map(|ni| (0..vocab).map(|mi| self.y[mi * n + ni] as f32 * scale).collect())
+            .collect()
+    }
+}
+
+/// Counters proving the pack-once flow (see [`SimBackend::ap_stats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ApStats {
+    /// Times the weight matrix was packed — 1 for the whole lifetime.
+    pub weight_packs: u64,
+    /// Activation batches packed (one per backend step).
+    pub act_packs: u64,
+    /// Arena buffers allocated (one per distinct activation shape).
+    pub arena_allocs: u64,
+    /// Arena packs served from recycled buffers.
+    pub arena_reuses: u64,
+}
+
 /// Deterministic fake backend: logits depend only on (last token, pos) so
 /// scheduler behaviour is reproducible; per-step latency is configurable
-/// to emulate a device.
+/// to emulate a device.  With [`SimBackend::with_ap_gemm`], logits come
+/// from a real prepacked bitmm GEMM instead of the hash rule.
 pub struct SimBackend {
     pub vocab: usize,
     pub max_seq: usize,
@@ -178,6 +277,7 @@ pub struct SimBackend {
     pub step_latency: std::time::Duration,
     pub prefills: u64,
     pub decode_steps: u64,
+    ap: Option<ApGemm>,
 }
 
 impl SimBackend {
@@ -189,15 +289,55 @@ impl SimBackend {
             step_latency: std::time::Duration::ZERO,
             prefills: 0,
             decode_steps: 0,
+            ap: None,
         }
     }
 
-    fn logits_for(&self, token: i32, pos: usize) -> Vec<f32> {
-        let mut v = vec![0f32; self.vocab];
-        // deterministic "next token": mix of token and pos
-        let top = ((token as usize).wrapping_mul(31).wrapping_add(pos * 7)) % self.vocab;
-        v[top] = 10.0;
-        v
+    /// A sim backend whose logits are computed by the pack-once AP-GEMM
+    /// pipeline: a `(vocab, dim)` weight at `nw` bits packed once here,
+    /// activations at `nx` bits packed per step through the arena.
+    pub fn with_ap_gemm(
+        vocab: usize,
+        max_seq: usize,
+        batches: Vec<usize>,
+        dim: usize,
+        nw: u32,
+        nx: u32,
+        seed: u64,
+    ) -> Self {
+        let mut b = Self::new(vocab, max_seq, batches);
+        b.ap = Some(ApGemm::new(vocab, dim, nw, nx, seed));
+        b
+    }
+
+    /// Pack-once instrumentation (None for the hash-logits backend).
+    pub fn ap_stats(&self) -> Option<ApStats> {
+        self.ap.as_ref().map(|ap| ApStats {
+            weight_packs: ap.weight_packs,
+            act_packs: ap.act_packs,
+            arena_allocs: ap.arena.allocs(),
+            arena_reuses: ap.arena.reuses(),
+        })
+    }
+
+    /// Resident packed-weight footprint of the AP path, if enabled.
+    pub fn packed_weight_bytes(&self) -> usize {
+        self.ap.as_ref().map(|ap| ap.weights.nbytes()).unwrap_or(0)
+    }
+
+    fn logits_for(&mut self, rows: &[(i32, usize)]) -> Vec<Vec<f32>> {
+        if let Some(ap) = self.ap.as_mut() {
+            return ap.logits(rows);
+        }
+        rows.iter()
+            .map(|&(token, pos)| {
+                let mut v = vec![0f32; self.vocab];
+                // deterministic "next token": mix of token and pos
+                let top = ((token as usize).wrapping_mul(31).wrapping_add(pos * 7)) % self.vocab;
+                v[top] = 10.0;
+                v
+            })
+            .collect()
     }
 }
 
@@ -227,7 +367,8 @@ impl Backend for SimBackend {
             std::thread::sleep(self.step_latency);
         }
         let last = *prompt.last().unwrap();
-        Ok((self.logits_for(last, prompt.len()), SeqKv { k: vec![], v: vec![], pos: prompt.len() }))
+        let logits = self.logits_for(&[(last, prompt.len())]).remove(0);
+        Ok((logits, SeqKv { k: vec![], v: vec![], pos: prompt.len() }))
     }
 
     fn decode_batch(&mut self, tokens: &[i32], kvs: &mut [&mut SeqKv]) -> Result<Vec<Vec<f32>>> {
@@ -241,11 +382,9 @@ impl Backend for SimBackend {
         if !self.step_latency.is_zero() {
             std::thread::sleep(self.step_latency);
         }
-        let out = tokens
-            .iter()
-            .zip(kvs.iter())
-            .map(|(&t, kv)| self.logits_for(t, kv.pos))
-            .collect();
+        let rows: Vec<(i32, usize)> =
+            tokens.iter().zip(kvs.iter()).map(|(&t, kv)| (t, kv.pos)).collect();
+        let out = self.logits_for(&rows);
         for kv in kvs.iter_mut() {
             kv.pos += 1;
         }
@@ -285,5 +424,38 @@ mod tests {
         let mut b = SimBackend::new(64, 32, vec![1]);
         assert!(b.prefill_one(&[]).is_err());
         assert!(b.prefill_one(&vec![1; 17]).is_err());
+    }
+
+    #[test]
+    fn ap_backend_packs_weights_once() {
+        let mut b = SimBackend::with_ap_gemm(48, 64, vec![1, 2, 4], 96, 2, 2, 11);
+        assert!(b.packed_weight_bytes() > 0);
+        let (l, mut kva) = b.prefill_one(&[3, 1, 4]).unwrap();
+        assert_eq!(l.len(), 48);
+        assert!(l.iter().any(|&x| x != 0.0), "AP logits must be real GEMM output");
+        let (_, mut kvb) = b.prefill_one(&[1, 5]).unwrap();
+        for step in 0..5 {
+            let out = b.decode_batch(&[step, step + 1], &mut [&mut kva, &mut kvb]).unwrap();
+            assert_eq!(out.len(), 2);
+            assert_eq!(out[0].len(), 48);
+        }
+        let s = b.ap_stats().unwrap();
+        assert_eq!(s.weight_packs, 1, "weights must be packed exactly once");
+        assert_eq!(s.act_packs, 7, "2 prefills + 5 decode steps");
+        // activation shapes: batch 1 (prefills) and batch 2 (decodes) →
+        // two distinct arena buffers, everything else recycled
+        assert_eq!(s.arena_allocs, 2);
+        assert_eq!(s.arena_reuses, 5);
+    }
+
+    #[test]
+    fn ap_backend_deterministic() {
+        let run = || {
+            let mut b = SimBackend::with_ap_gemm(32, 64, vec![1, 2], 64, 1, 2, 9);
+            let (l, mut kv) = b.prefill_one(&[7, 8]).unwrap();
+            let d = b.decode_batch(&[9], &mut [&mut kv]).unwrap();
+            (l, d)
+        };
+        assert_eq!(run(), run());
     }
 }

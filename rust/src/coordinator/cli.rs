@@ -1,10 +1,16 @@
-//! `apllm serve` — the end-to-end serving demo: PJRT model artifacts +
-//! continuous-batching scheduler under a synthetic Poisson workload.
+//! `apllm serve` — the end-to-end serving demo: continuous-batching
+//! scheduler under a synthetic Poisson workload, over either the real
+//! PJRT model artifacts (`pjrt` feature) or the pack-once AP-GEMM sim
+//! backend (always available; `--sim` forces it).
 
+use super::backend::{Backend, SimBackend};
+#[cfg(feature = "pjrt")]
 use super::backend::PjrtBackend;
 use super::request::{GenParams, Request};
 use super::scheduler::{Scheduler, SchedulerConfig};
+#[cfg(feature = "pjrt")]
 use crate::runtime::{artifacts_dir, Engine, ModelRunner};
+use crate::anyhow::Result;
 use crate::util::Rng;
 use std::time::{Duration, Instant};
 
@@ -14,11 +20,13 @@ pub struct ServeArgs {
     pub max_new: usize,
     pub prompt_len: usize,
     pub seed: u64,
+    /// Use the pack-once sim backend even when `pjrt` is compiled in.
+    pub sim: bool,
 }
 
 impl Default for ServeArgs {
     fn default() -> Self {
-        Self { requests: 16, rate_per_s: 8.0, max_new: 8, prompt_len: 12, seed: 0 }
+        Self { requests: 16, rate_per_s: 8.0, max_new: 8, prompt_len: 12, seed: 0, sim: false }
     }
 }
 
@@ -35,25 +43,17 @@ pub fn parse_args(args: &[String]) -> ServeArgs {
             "--max-new" => a.max_new = val("--max-new").parse().expect("usize"),
             "--prompt-len" => a.prompt_len = val("--prompt-len").parse().expect("usize"),
             "--seed" => a.seed = val("--seed").parse().expect("u64"),
+            "--sim" => a.sim = true,
             other => panic!("unknown flag {other}"),
         }
     }
     a
 }
 
-/// Run the demo; returns (responses, metrics report).  Used by both the
-/// CLI and the llm_serving example.
-pub fn run_serving_demo(a: &ServeArgs) -> anyhow::Result<String> {
-    let dir = artifacts_dir();
-    eprintln!("loading artifacts from {} ...", dir.display());
-    let engine = Engine::load(&dir)?;
-    let runner = ModelRunner::new(&engine)?;
-    let t0 = Instant::now();
-    let n = engine.warmup(&["prefill", "decode"])?;
-    eprintln!("compiled {n} model executables in {:.2?}", t0.elapsed());
-
-    let backend = PjrtBackend::new(&runner)?;
-    let vocab = runner.cfg.vocab as i32;
+/// Drive one backend through the Poisson workload; returns (report,
+/// scheduler) so callers can append backend-specific stats.
+fn drive<B: Backend>(backend: B, a: &ServeArgs) -> Result<(String, Scheduler<B>)> {
+    let vocab = backend.vocab() as u32;
     let mut sched = Scheduler::new(
         backend,
         SchedulerConfig { kv_blocks: 128, block_tokens: 16, max_running: 8 },
@@ -65,7 +65,7 @@ pub fn run_serving_demo(a: &ServeArgs) -> anyhow::Result<String> {
     let mut t = 0.0;
     for i in 0..a.requests {
         t += rng.exponential(a.rate_per_s);
-        let prompt: Vec<i32> = (0..a.prompt_len).map(|_| rng.u32(1, vocab as u32) as i32).collect();
+        let prompt: Vec<i32> = (0..a.prompt_len).map(|_| rng.u32(1, vocab) as i32).collect();
         arrivals.push((
             t,
             Request::new(
@@ -112,12 +112,64 @@ pub fn run_serving_demo(a: &ServeArgs) -> anyhow::Result<String> {
         .map(|r| r.tokens.clone())
         .unwrap_or_default();
     report.push_str(&format!("request 0 generated: {sample:?}\n"));
+    Ok((report, sched))
+}
+
+/// Run the demo over the REAL PJRT artifacts; returns the metrics report.
+/// Used by the CLI and the llm_serving example.
+#[cfg(feature = "pjrt")]
+pub fn run_serving_demo(a: &ServeArgs) -> Result<String> {
+    let dir = artifacts_dir();
+    eprintln!("loading artifacts from {} ...", dir.display());
+    let engine = Engine::load(&dir)?;
+    let runner = ModelRunner::new(&engine)?;
+    let t0 = Instant::now();
+    let n = engine.warmup(&["prefill", "decode"])?;
+    eprintln!("compiled {n} model executables in {:.2?}", t0.elapsed());
+
+    let backend = PjrtBackend::new(&runner)?;
+    let (report, _sched) = drive(backend, a)?;
     Ok(report)
+}
+
+/// Run the demo over the pack-once AP-GEMM sim backend: weights are
+/// decomposed+packed once at startup, every decode step packs only its
+/// activation batch through the recycling arena — the §3.3 flow end to
+/// end, with the stats to prove it appended to the report.
+pub fn run_sim_serving_demo(a: &ServeArgs) -> Result<String> {
+    let (vocab, max_seq, dim) = (256usize, 256usize, 128usize);
+    let backend =
+        SimBackend::with_ap_gemm(vocab, max_seq, vec![1, 2, 4, 8], dim, 2, 2, a.seed ^ 0xAB);
+    let packed_bytes = backend.packed_weight_bytes();
+    let (mut report, sched) = drive(backend, a)?;
+    let s = sched.backend().ap_stats().expect("ap backend");
+    report.push_str(&format!(
+        "pack-once: weight packs {}, packed weight bytes {}, activation packs {}, \
+         arena allocs {}, arena reuses {}\n",
+        s.weight_packs, packed_bytes, s.act_packs, s.arena_allocs, s.arena_reuses
+    ));
+    Ok(report)
+}
+
+/// Pick the demo the build supports: real PJRT artifacts when the `pjrt`
+/// feature is compiled in (unless `--sim`), the pack-once sim backend
+/// otherwise.  Shared by `apllm serve` and the llm_serving example.
+pub fn run_demo(a: &ServeArgs) -> Result<String> {
+    #[cfg(feature = "pjrt")]
+    let result = if a.sim { run_sim_serving_demo(a) } else { run_serving_demo(a) };
+    #[cfg(not(feature = "pjrt"))]
+    let result = {
+        if !a.sim {
+            eprintln!("(pjrt feature not compiled in — serving over the pack-once sim backend)");
+        }
+        run_sim_serving_demo(a)
+    };
+    result
 }
 
 pub fn cmd_serve(args: &[String]) {
     let a = parse_args(args);
-    match run_serving_demo(&a) {
+    match run_demo(&a) {
         Ok(report) => println!("{report}"),
         Err(e) => {
             eprintln!("serve failed: {e:#}");

@@ -10,8 +10,9 @@
 //! * [`kv`]       — paged KV-cache block allocator (the continuous-
 //!   batching substrate; exercised by the scheduler + property tests).
 //! * [`backend`]  — execution backend trait: `PjrtBackend` (real model
-//!   artifacts) and `SimBackend` (gpusim-timed fake model for tests and
-//!   the coordinator bench).
+//!   artifacts, `pjrt` feature) and `SimBackend` (deterministic stand-in
+//!   for tests and the coordinator bench; `with_ap_gemm` serves real
+//!   bitmm logits through the §3.3 pack-once pipeline).
 //! * [`scheduler`]— continuous-batching scheduler over the backend trait:
 //!   admission, prefill/decode interleaving, slot recycling.
 //! * [`metrics`]  — counters + latency percentiles.
@@ -29,7 +30,7 @@ pub mod scheduler;
 pub mod server;
 pub mod trace;
 
-pub use backend::{Backend, SimBackend};
+pub use backend::{ApStats, Backend, SimBackend};
 pub use batcher::{Batcher, BatcherConfig};
 pub use kv::{BlockId, KvPool};
 pub use metrics::{LatencyStats, Metrics};

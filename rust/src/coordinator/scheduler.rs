@@ -19,7 +19,7 @@ use super::kv::KvPool;
 use super::metrics::Metrics;
 use super::request::{Request, Response};
 use crate::util::Rng;
-use anyhow::Result;
+use crate::anyhow::Result;
 use std::collections::VecDeque;
 use std::time::Instant;
 

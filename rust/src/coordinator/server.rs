@@ -8,7 +8,7 @@
 use super::backend::Backend;
 use super::request::{Request, Response};
 use super::scheduler::{Scheduler, SchedulerConfig};
-use anyhow::Result;
+use crate::anyhow::Result;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::time::Duration;
 

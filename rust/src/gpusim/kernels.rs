@@ -55,6 +55,10 @@ pub struct OursOpts {
     /// activation planes (off = weight planes re-fetched per activation
     /// plane).
     pub frag_reuse: bool,
+    /// §3.3: weights arrive pre-decomposed + pre-packed (pack-once, off
+    /// the hot path).  Off = every GEMM call decomposes and re-packs its
+    /// weight operand inline, paying an extra streaming pass over W.
+    pub prepacked: bool,
     pub tiles: TileConfig,
 }
 
@@ -66,6 +70,7 @@ impl OursOpts {
             packed: true,
             double_buffer: true,
             frag_reuse: true,
+            prepacked: true,
             tiles: TileConfig::default(),
         }
     }
@@ -77,9 +82,19 @@ impl OursOpts {
             packed: false,
             double_buffer: false,
             frag_reuse: false,
+            prepacked: false,
             tiles: TileConfig::default(),
         }
     }
+}
+
+/// Bytes one on-the-fly pack pass over a `rows × cols` operand at `bits`
+/// moves (§3.3 off): read the byte-padded codes, write the bit-exact
+/// packed planes.  Bandwidth-bound — the decomposition itself is shifts
+/// and masks.
+pub fn pack_pass_bytes(rows: usize, cols: usize, bits: u32) -> f64 {
+    let elems = rows as f64 * cols as f64;
+    elems * (stored_bits(bits, false) + stored_bits(bits, true)) / 8.0
 }
 
 /// Stored bits per element under the knobs: packed = exactly `bits`

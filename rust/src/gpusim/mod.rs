@@ -34,7 +34,7 @@ mod kernels;
 pub use arch::Gpu;
 pub use baselines::{scheme_traffic, scheme_work, Traffic};
 pub use calibrate::{fit_scheme, CalibrationReport, ANCHORS};
-pub use kernels::{smem_bytes_per_block, OursOpts, TileConfig};
+pub use kernels::{pack_pass_bytes, smem_bytes_per_block, OursOpts, TileConfig};
 
 use crate::model::{LlmArch, MatMulShape, PrecisionConfig};
 use std::collections::HashMap;
@@ -101,6 +101,10 @@ pub struct SimResult {
     pub t_mem_s: f64,
     /// Extra global-memory recovery pass (only when §4.2 fusion is off).
     pub t_recovery_s: f64,
+    /// Inline weight decompose+pack pass (only when the §3.3 `prepacked`
+    /// knob is off — the pack-once configuration pays this exactly once,
+    /// offline, so it never shows up in a simulated GEMM).
+    pub t_pack_s: f64,
     pub launch_s: f64,
     pub util: f64,
     pub traffic_bytes: f64,
@@ -198,17 +202,54 @@ impl Simulator {
             }
             _ => (true, 0.0),
         };
+        // §3.3 off: the weight operand is decomposed+packed inline, a
+        // serial bandwidth-bound pass before the kernel proper (the
+        // pack-once configuration does this offline instead).
+        let t_pack = match scheme {
+            Scheme::Ours(prec, opts) if !opts.prepacked => {
+                kernels::pack_pass_bytes(m, k, prec.nw) / self.gpu.eff_bandwidth()
+            }
+            _ => 0.0,
+        };
         let body = if overlap { t_compute.max(t_mem) } else { t_compute + t_mem };
         SimResult {
-            time_s: p.launch_s + body + t_recovery,
+            time_s: p.launch_s + body + t_recovery + t_pack,
             t_compute_s: t_compute,
             t_mem_s: t_mem,
             t_recovery_s: t_recovery,
+            t_pack_s: t_pack,
             launch_s: p.launch_s,
             util,
             traffic_bytes: traffic.total(),
             work_ops: work,
         }
+    }
+
+    /// §3.3 pack-vs-compute split over a model's forward GEMMs: for each
+    /// shape, the **one-time** weight pack cost, the **per-forward**
+    /// activation pack cost, and the per-forward prepacked GEMM time.
+    /// This is the structural argument for the pack-once pipeline: the
+    /// weight column amortizes to zero while the compute column repeats
+    /// every step.
+    pub fn llm_pack_split(
+        &self,
+        arch: &LlmArch,
+        prec: PrecisionConfig,
+        m: usize,
+    ) -> Vec<PackSplitRow> {
+        let bw = self.gpu.eff_bandwidth();
+        let scheme = Scheme::ours(prec);
+        arch.forward_shapes(m)
+            .iter()
+            .map(|s| PackSplitRow {
+                label: s.label,
+                weight_pack_once_s: kernels::pack_pass_bytes(s.k, s.n, prec.nw) / bw
+                    * s.count as f64,
+                act_pack_step_s: kernels::pack_pass_bytes(s.m, s.k, prec.nx) / bw
+                    * s.count as f64,
+                gemm_step_s: self.simulate(&scheme, s.m, s.k, s.n).time_s * s.count as f64,
+            })
+            .collect()
     }
 
     /// Total MatMul time of one forward pass over `m` tokens (Fig. 7).
@@ -238,6 +279,18 @@ impl Simulator {
             .map(|s| self.simulate(scheme, s.m, s.k, s.n).time_s * s.count as f64)
             .sum()
     }
+}
+
+/// One row of [`Simulator::llm_pack_split`].
+#[derive(Debug, Clone, Copy)]
+pub struct PackSplitRow {
+    pub label: &'static str,
+    /// Weight decompose+pack cost, paid ONCE at load time (§3.3).
+    pub weight_pack_once_s: f64,
+    /// Activation pack cost, paid every forward.
+    pub act_pack_step_s: f64,
+    /// Prepacked GEMM time per forward.
+    pub gemm_step_s: f64,
 }
 
 /// Fraction of FP16 MatMul time spent on non-MatMul work per forward

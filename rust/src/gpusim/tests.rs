@@ -111,6 +111,7 @@ fn ablation_knobs_strictly_hurt() {
         ("no packing", OursOpts { packed: false, ..OursOpts::paper() }),
         ("no double buffer", OursOpts { double_buffer: false, ..OursOpts::paper() }),
         ("no frag reuse", OursOpts { frag_reuse: false, ..OursOpts::paper() }),
+        ("no prepacking", OursOpts { prepacked: false, ..OursOpts::paper() }),
         ("naive", OursOpts::naive()),
     ] {
         let t = s.simulate(&Scheme::Ours(p, opts), 4096, 4096, 4096).time_s;
@@ -118,6 +119,45 @@ fn ablation_knobs_strictly_hurt() {
     }
     let naive = s.simulate(&Scheme::Ours(p, OursOpts::naive()), 4096, 4096, 4096).time_s;
     assert!(naive / base > 1.5, "all-off should cost ≥1.5×, got {:.2}", naive / base);
+}
+
+#[test]
+fn prepacked_knob_splits_pack_time() {
+    let s = sim();
+    let p = PrecisionConfig::W2A2;
+    let (m, k, n) = (1024, 4096, 4096);
+    let base = s.simulate(&Scheme::ours(p), m, k, n);
+    assert_eq!(base.t_pack_s, 0.0, "pack-once config pays no inline pack");
+    let inline = s.simulate(
+        &Scheme::Ours(p, OursOpts { prepacked: false, ..OursOpts::paper() }),
+        m,
+        k,
+        n,
+    );
+    assert!(inline.t_pack_s > 0.0);
+    let dt = inline.time_s - base.time_s;
+    assert!(
+        (dt - inline.t_pack_s).abs() < 1e-12,
+        "pack is additive: dt={dt:.3e} t_pack={:.3e}",
+        inline.t_pack_s
+    );
+    // the pack pass streams W once more: structural bytes match the knob
+    let bytes = pack_pass_bytes(m, k, p.nw);
+    assert!((inline.t_pack_s - bytes / s.gpu.eff_bandwidth()).abs() < 1e-15);
+}
+
+#[test]
+fn pack_split_amortizes() {
+    let s = sim();
+    let rows = s.llm_pack_split(&crate::model::LlmArch::llama2_7b(), PrecisionConfig::W2A2, 1024);
+    assert!(rows.iter().any(|r| r.label == "lm_head"));
+    let (pack, gemm): (f64, f64) = rows
+        .iter()
+        .fold((0.0, 0.0), |(p, g), r| (p + r.weight_pack_once_s, g + r.gemm_step_s));
+    assert!(pack > 0.0 && gemm > 0.0);
+    for r in &rows {
+        assert!(r.weight_pack_once_s > 0.0 && r.act_pack_step_s > 0.0 && r.gemm_step_s > 0.0);
+    }
 }
 
 #[test]

@@ -8,22 +8,35 @@
 //!
 //! * [`bitfmt`]   — the bipolar-INT data format (§3.1) plus the signed /
 //!   unsigned baselines it is compared against.
-//! * [`bitmm`]    — bit-wise MatMul reconstitution (§3.2): plane
-//!   decomposition, packed XNOR-popcount 1-bit GEMM, shift-add recovery.
+//! * [`bitmm`]    — bit-wise MatMul reconstitution (§3.2) around a
+//!   **prepacked kernel ABI**: [`bitmm::PackedPlanes`] is the canonical
+//!   operand every `apmm_*_packed` core consumes; `CodeMatrix` is a
+//!   construction-time artifact packed **once** via [`bitmm::prepack`]
+//!   (weight `PlaneCache` / `PackedWeightStore`, activation `PackArena` —
+//!   the paper's §3.3 preprocessing + §3.4 recovery-oriented memory
+//!   management, realized on the CPU substrate).
 //! * [`quant`]    — symmetric bipolar quantizers (per-tensor / per-channel)
-//!   and baseline quantizers.
+//!   and baseline quantizers; weight quantizers can emit prepacked planes
+//!   directly (`quantize_*_packed`, `Quantized::prepack`).
 //! * [`gpusim`]   — calibrated RTX 3090 tensor-core simulator: the
 //!   substitute for the paper's testbed (§5), including CUTLASS / APNN-TC /
-//!   BSTC / BTC baseline cost models and the §4.1/§4.2 ablation knobs.
+//!   BSTC / BTC baseline cost models, the §4.1/§4.2 ablation knobs and the
+//!   §3.3 `prepacked` knob (pack-once vs on-the-fly operand layout).
 //! * [`model`]    — LLM architecture tables (Llama2-7B, OPT-6.7B, BLOOM-7B)
-//!   and per-layer MatMul shape extraction.
+//!   and per-layer MatMul shape extraction (incl. packed-operand footprints).
 //! * [`runtime`]  — PJRT engine loading the AOT artifacts emitted by
-//!   `python/compile/aot.py` (HLO text → compile → execute).
+//!   `python/compile/aot.py` (HLO text → compile → execute).  The engine
+//!   itself is gated behind the `pjrt` cargo feature; manifest parsing is
+//!   always available.
 //! * [`coordinator`] — the serving layer: router, dynamic batcher, KV
-//!   manager, scheduler, metrics.
+//!   manager, scheduler, metrics.  Its `SimBackend` can serve real bitmm
+//!   logits through the pack-once pipeline (`SimBackend::with_ap_gemm`).
 //! * [`bench`]    — harness regenerating every table/figure of the paper's
-//!   evaluation section.
+//!   evaluation section, plus the §3.3 pack-vs-compute split table.
+//! * [`anyhow`]   — in-tree error-handling substrate (offline substitute
+//!   for the `anyhow` crate; see `util` for the other substrates).
 
+pub mod anyhow;
 pub mod bench;
 pub mod bitfmt;
 pub mod bitmm;

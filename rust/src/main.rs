@@ -86,7 +86,15 @@ fn main() {
         Some("calibrate") => cmd_calibrate(),
         Some("simulate") => cmd_simulate(&args[1..]),
         Some("tables") => apllm::bench::print_all_tables(),
-        Some("gemm") => apllm::runtime::cli::cmd_gemm(&args[1..]),
+        Some("gemm") => {
+            #[cfg(feature = "pjrt")]
+            apllm::runtime::cli::cmd_gemm(&args[1..]);
+            #[cfg(not(feature = "pjrt"))]
+            {
+                eprintln!("gemm needs the PJRT runtime: rebuild with --features pjrt");
+                std::process::exit(2);
+            }
+        }
         Some("serve") => apllm::coordinator::cli::cmd_serve(&args[1..]),
         _ => {
             eprintln!("usage: apllm <calibrate|simulate|tables|gemm|serve> [args]");

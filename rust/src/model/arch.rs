@@ -25,6 +25,19 @@ impl MatMulShape {
     pub fn flops(&self) -> u128 {
         2 * self.m as u128 * self.n as u128 * self.k as u128 * self.count as u128
     }
+
+    /// Prepacked weight footprint for all `count` instances: the `(K, N)`
+    /// operand at `nw` bits per element (§4.1 — what a
+    /// `PackedWeightStore` holds resident for this layer).
+    pub fn packed_weight_bytes(&self, nw: u32) -> usize {
+        (self.k * self.n * nw as usize).div_ceil(8) * self.count
+    }
+
+    /// Packed activation footprint per forward: the `(M, K)` operand at
+    /// `nx` bits (what the packing arena cycles through each step).
+    pub fn packed_act_bytes(&self, nx: u32) -> usize {
+        (self.m * self.k * nx as usize).div_ceil(8)
+    }
 }
 
 /// An LLM architecture (decoder-only transformer).

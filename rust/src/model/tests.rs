@@ -48,6 +48,21 @@ fn forward_flops_scale_with_m() {
 }
 
 #[test]
+fn packed_footprints() {
+    let s = MatMulShape { m: 16, k: 64, n: 32, count: 2, label: "t" };
+    // 64·32 elems at 2 bits = 512 bytes, twice
+    assert_eq!(s.packed_weight_bytes(2), 1024);
+    // 16·64 elems at 3 bits = 384 bytes (per step, count-independent)
+    assert_eq!(s.packed_act_bytes(3), 384);
+    // whole-model resident packed weights stay far below the f16 footprint
+    let a = LlmArch::llama2_7b();
+    // forward_shapes already scales count by n_layers
+    let packed: usize = a.forward_shapes(1).iter().map(|s| s.packed_weight_bytes(2)).sum();
+    let f16 = a.weight_params() as usize * 2;
+    assert!(packed < f16 / 4, "packed={packed} f16={f16}");
+}
+
+#[test]
 fn precision_parse_roundtrip() {
     for p in [PrecisionConfig::W1A2, PrecisionConfig::W3A4, PrecisionConfig::W8A8] {
         assert_eq!(PrecisionConfig::parse(&p.label()), Some(p));

@@ -5,12 +5,17 @@
 //! `x/s`, clipped to ±(2^n−1).  Per-tensor and per-channel (per-row)
 //! granularities.  Baseline signed/asymmetric quantizers are included for
 //! the format ablation.
+//!
+//! Weight quantizers can emit prepacked planes directly
+//! (`quantize_*_packed` / [`Quantized::prepack`]) so serving never holds
+//! unpacked weight codes — see `bitmm::prepack` for the pack-once stores.
 
 mod quantize;
 
 pub use quantize::{
-    dequantize, quant_error, quantize_bipolar_per_channel, quantize_bipolar_per_tensor,
-    quantize_signed_per_channel, QuantError, Quantized,
+    dequantize, quant_error, quantize_bipolar_per_channel, quantize_bipolar_per_channel_packed,
+    quantize_bipolar_per_tensor, quantize_bipolar_per_tensor_packed, quantize_signed_per_channel,
+    QuantError, Quantized, QuantizedPacked,
 };
 
 #[cfg(test)]

@@ -1,7 +1,12 @@
 //! Round-to-nearest quantizers and error metrics.
+//!
+//! Weight quantizers can emit **prepacked** planes directly
+//! (`quantize_*_packed`, [`Quantized::prepack`]) so the §3.3 pack-once
+//! pipeline starts here: quantize → decompose+pack once → serve through
+//! the `apmm_*_packed` kernels without ever touching codes again.
 
 use crate::bitfmt::{bipolar_encode, bipolar_qmax, signed_range};
-use crate::bitmm::CodeMatrix;
+use crate::bitmm::{pack_codes, CodeMatrix, PackedPlanes};
 
 /// A quantized matrix: codes + scales (`x ≈ decode(code) · scale`).
 #[derive(Debug, Clone)]
@@ -12,6 +17,39 @@ pub struct Quantized {
 }
 
 impl Quantized {
+    #[inline]
+    pub fn scale_for_row(&self, r: usize) -> f32 {
+        if self.scales.len() == 1 {
+            self.scales[0]
+        } else {
+            self.scales[r]
+        }
+    }
+
+    /// Decompose+pack the codes for the prepacked kernel ABI, keeping
+    /// `self` (construction-time use; for weights prefer [`Self::into_packed`]).
+    pub fn prepack(&self) -> QuantizedPacked {
+        QuantizedPacked { planes: pack_codes(&self.codes), scales: self.scales.clone() }
+    }
+
+    /// Consume into the packed form — the codes are dropped, which is the
+    /// point: after this, only the kernel-ready layout exists.
+    pub fn into_packed(self) -> QuantizedPacked {
+        QuantizedPacked { planes: pack_codes(&self.codes), scales: self.scales }
+    }
+}
+
+/// A quantized matrix already decomposed+packed for the kernel ABI (§3.3
+/// pack-once: the `CodeMatrix` is a construction-time artifact and is not
+/// retained).
+#[derive(Debug, Clone)]
+pub struct QuantizedPacked {
+    pub planes: PackedPlanes,
+    /// One scale per row (per-channel) or a single element (per-tensor).
+    pub scales: Vec<f32>,
+}
+
+impl QuantizedPacked {
     #[inline]
     pub fn scale_for_row(&self, r: usize) -> f32 {
         if self.scales.len() == 1 {
@@ -64,6 +102,27 @@ pub fn quantize_bipolar_per_tensor(x: &[f32], rows: usize, cols: usize, bits: u3
 /// Per-row (output-channel) symmetric bipolar quantization.
 pub fn quantize_bipolar_per_channel(x: &[f32], rows: usize, cols: usize, bits: u32) -> Quantized {
     quantize_rows(x, rows, cols, bits, true)
+}
+
+/// Per-channel weight quantization that emits the prepacked kernel
+/// operand directly (the §3.3 offline pipeline in one call).
+pub fn quantize_bipolar_per_channel_packed(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    bits: u32,
+) -> QuantizedPacked {
+    quantize_rows(x, rows, cols, bits, true).into_packed()
+}
+
+/// Per-tensor variant of [`quantize_bipolar_per_channel_packed`].
+pub fn quantize_bipolar_per_tensor_packed(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    bits: u32,
+) -> QuantizedPacked {
+    quantize_rows(x, rows, cols, bits, false).into_packed()
 }
 
 /// Baseline: per-row signed (two's-complement) RTN quantization.  Returns

@@ -76,6 +76,27 @@ fn quant_error_zero_for_identical() {
 }
 
 #[test]
+fn packed_quantizer_matches_quantize_then_pack() {
+    use crate::bitmm::{apmm_bipolar, apmm_bipolar_packed, pack_codes, ApmmOpts, CodeMatrix};
+    let w = randn(8 * 48, 5);
+    let q = quantize_bipolar_per_channel(&w, 8, 48, 3);
+    let qp = quantize_bipolar_per_channel_packed(&w, 8, 48, 3);
+    assert_eq!(qp.scales, q.scales);
+    assert_eq!(qp.planes.raw(), pack_codes(&q.codes).raw());
+    assert_eq!(qp.scale_for_row(7), q.scale_for_row(7));
+    // and the packed form drives the kernel identically to the codes
+    let mut rng = Rng::with_seed(6);
+    let xt = CodeMatrix::random(4, 48, 2, rng.u64());
+    let xp = pack_codes(&xt);
+    assert_eq!(
+        apmm_bipolar_packed(&qp.planes, &xp, ApmmOpts::default()),
+        apmm_bipolar(&q.codes, &xt, ApmmOpts::default())
+    );
+    // prepack on a borrowed Quantized agrees with into_packed
+    assert_eq!(q.prepack().planes.raw(), qp.planes.raw());
+}
+
+#[test]
 fn prop_codes_in_range_and_odd() {
     forall(32, |rng| {
         let bits = rng.u32(1, 8);

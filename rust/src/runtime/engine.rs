@@ -3,7 +3,7 @@
 
 use super::manifest::{ExecSpec, Manifest, ModelCfg};
 use super::tensor::{lit_i32, lit_u32};
-use anyhow::{anyhow, bail, Context, Result};
+use crate::anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
 

@@ -1,7 +1,7 @@
 //! Typed view of `artifacts/manifest.json` (parsed with `util::json`).
 
 use crate::util::Json;
-use anyhow::{anyhow, bail, Context, Result};
+use crate::anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// Artifact tensor element type.

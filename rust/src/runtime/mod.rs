@@ -7,15 +7,24 @@
 //! and cached.  Model weights load from `weights.bin` straight into
 //! device-resident `PjRtBuffer`s so the serving hot path never re-uploads
 //! them (`execute_b`).  Python is never on this path.
+//!
+//! The engine (and everything touching the external `xla` crate) is gated
+//! behind the `pjrt` cargo feature so the default build stays fully
+//! offline; manifest parsing is always available.
 
+#[cfg(feature = "pjrt")]
 mod engine;
 mod manifest;
+#[cfg(feature = "pjrt")]
 mod tensor;
 
+#[cfg(feature = "pjrt")]
 pub mod cli;
 
+#[cfg(feature = "pjrt")]
 pub use engine::{Engine, ModelRunner};
 pub use manifest::{DType, ExecSpec, IoSpec, Manifest, ModelCfg, ModelSpec, WeightEntry};
+#[cfg(feature = "pjrt")]
 pub use tensor::{lit_f32, lit_i32, lit_i32_scalar, lit_u32};
 
 /// Default artifacts directory (overridable with `APLLM_ARTIFACTS`).

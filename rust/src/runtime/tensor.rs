@@ -1,6 +1,6 @@
 //! Literal construction helpers (typed host→XLA marshaling).
 
-use anyhow::Result;
+use crate::anyhow::Result;
 use xla::Literal;
 
 fn dims_i64(dims: &[usize]) -> Vec<i64> {

@@ -1,6 +1,7 @@
 //! Coordinator over the REAL PJRT backend: continuous batching with
 //! mixed-depth sequences against the AOT model artifacts.
-//! Skips gracefully when `artifacts/` is absent.
+//! Skips gracefully when `artifacts/` is absent; needs the `pjrt` feature.
+#![cfg(feature = "pjrt")]
 
 use apllm::coordinator::backend::{Backend, PjrtBackend};
 use apllm::coordinator::{GenParams, Request, Scheduler, SchedulerConfig};

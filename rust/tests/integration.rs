@@ -1,7 +1,9 @@
 //! Integration tests over the real AOT artifacts: PJRT execution vs the
 //! pure-Rust substrate, golden cross-language vectors, and the model
 //! runner.  All tests skip (pass with a notice) when `artifacts/` is
-//! missing — run `make artifacts` first for full coverage.
+//! missing — run `make artifacts` first for full coverage.  Needs the
+//! `pjrt` feature (the default build is offline).
+#![cfg(feature = "pjrt")]
 
 use apllm::bitmm::{apmm_bipolar, pack_codes_u32, transpose_codes, ApmmOpts, CodeMatrix};
 use apllm::runtime::{Engine, ModelRunner};
