@@ -6,17 +6,25 @@
 //! artifacts and runs the real PJRT runtime — proving all three layers
 //! compose (L1 Pallas AP-GEMM kernels inside the L2 JAX model, AOT-lowered
 //! to HLO, executed by the L3 Rust coordinator) with Python never running.
-//! Without it (the default offline build), the coordinator serves real
-//! bitmm logits through the §3.3 pack-once pipeline instead: weights
-//! packed once at startup, activations packed per step through the
-//! recycling arena.
+//! Without it (the default offline build), the **continuous-batching
+//! engine** serves real bitmm logits through the §3.3 pack-once pipeline:
+//! weights packed once at startup, each step packing only its activation
+//! batch through the recycling arena, sequences joining and leaving the
+//! batch every iteration (swap-preemption under KV pressure).
 //!
 //! Run: `cargo run --release --example llm_serving -- [--requests N] [--rate R] [--sim]`
-//! (PJRT path additionally needs `make artifacts` and `--features pjrt`.)
+//! (PJRT path additionally needs `make artifacts` and `--features pjrt`;
+//! `--group-scheduler` falls back to the group-batching scheduler.)
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let mut a = apllm::coordinator::cli::parse_args(&args);
+    let mut a = match apllm::coordinator::cli::parse_args(&args) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("llm_serving: {e}");
+            std::process::exit(2);
+        }
+    };
     if args.is_empty() {
         // demo defaults: enough load that batching engages
         a.requests = 24;

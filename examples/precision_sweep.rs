@@ -55,20 +55,11 @@ fn main() {
             .collect();
         let oerr = quant_error(&y_ref, &y);
 
-        // simulated LLM speedup (precisions beyond the calibrated set use
-        // the nearest fitted curve — skip those)
-        let speedup = if [
-            PrecisionConfig::W1A1,
-            PrecisionConfig::W1A2,
-            PrecisionConfig::W2A2,
-            PrecisionConfig::W3A4,
-            PrecisionConfig::W4A4,
-        ]
-        .contains(&p)
-        {
-            format!("{:.2}×", sim.llm_speedup_vs_fp16(&arch, &Scheme::ours(p), 1024))
-        } else {
-            "-".into()
+        // simulated LLM speedup — precisions outside the calibrated set
+        // come back as a clean error, rendered as "-"
+        let speedup = match sim.llm_speedup_vs_fp16(&arch, &Scheme::ours(p), 1024) {
+            Ok(sp) => format!("{sp:.2}×"),
+            Err(_) => "-".into(),
         };
         println!(
             "{:<8} {:>14.4} {:>14.4} {:>16} {:>18}",

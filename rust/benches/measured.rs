@@ -20,20 +20,28 @@ use apllm::model::PrecisionConfig;
 use apllm::util::Rng;
 
 fn main() {
+    // --smoke: the CI job runs one tiny shape through every section so
+    // the perf tables can't rot unbuilt
+    let smoke = std::env::args().any(|a| a == "--smoke");
     println!("== measured: CPU bitmm vs dense baselines ==");
-    let (m, k, n) = (256usize, 2048usize, 256usize);
-    println!("shape {m}x{k}x{n}\n");
+    let (m, k, n) = if smoke { (64usize, 512usize, 64usize) } else { (256, 2048, 256) };
+    println!("shape {m}x{k}x{n}{}\n", if smoke { " (smoke)" } else { "" });
 
+    let precisions: &[PrecisionConfig] = if smoke {
+        &[PrecisionConfig::W1A1, PrecisionConfig::W2A2]
+    } else {
+        &[
+            PrecisionConfig::W1A1,
+            PrecisionConfig::W1A2,
+            PrecisionConfig::W2A2,
+            PrecisionConfig::W3A4,
+            PrecisionConfig::W4A4,
+            PrecisionConfig::W8A8,
+        ]
+    };
     // (label, pairs, pack_s, compute_s, total_s)
     let mut rows = Vec::new();
-    for prec in [
-        PrecisionConfig::W1A1,
-        PrecisionConfig::W1A2,
-        PrecisionConfig::W2A2,
-        PrecisionConfig::W3A4,
-        PrecisionConfig::W4A4,
-        PrecisionConfig::W8A8,
-    ] {
+    for &prec in precisions {
         let w = CodeMatrix::random(m, k, prec.nw, 1);
         let xt = CodeMatrix::random(n, k, prec.nx, 2);
         let wp = pack_codes(&w);

@@ -1,0 +1,74 @@
+//! Steady-state serving bench: Poisson arrivals replayed in wall-clock
+//! time through the continuous-batching engine over the pack-once AP-GEMM
+//! backend (real prepacked bitmm logits).  Prints a rate × throughput /
+//! latency table — the serving-layer counterpart of the kernel benches.
+//!
+//! `cargo bench --bench serving` for the full table; pass `--smoke` for
+//! the one-row CI job that keeps this target building and running.
+
+use apllm::coordinator::trace::{generate, TraceConfig};
+use apllm::coordinator::{
+    replay_trace, ArrivalKind, BatcherConfig, Engine, EngineConfig, SimBackend,
+};
+use std::time::Duration;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (rates, requests): (&[f64], usize) =
+        if smoke { (&[400.0], 8) } else { (&[50.0, 200.0, 800.0], 48) };
+
+    println!("== serving: continuous-batching engine, Poisson arrivals, prepacked W2A2 lm-head ==");
+    println!(
+        "{:>8} {:>6} {:>9} {:>6} {:>9} {:>14} {:>14} {:>14}",
+        "rate/s", "done", "tok/s", "occ", "preempt", "queue p50/p95", "ttft p50/p95", "total p50/p95"
+    );
+    for &rate in rates {
+        let backend = SimBackend::with_ap_gemm(256, 512, vec![1, 2, 4, 8], 128, 2, 2, 7);
+        let mut eng = Engine::new(
+            backend,
+            EngineConfig {
+                kv_blocks: 96,
+                block_tokens: 8,
+                max_running: 8,
+                batcher: BatcherConfig {
+                    batch_sizes: vec![1, 2, 4, 8],
+                    max_wait: Duration::ZERO,
+                },
+            },
+        );
+        let trace = generate(&TraceConfig {
+            kind: ArrivalKind::Poisson { rate },
+            requests,
+            prompt_len: (4, 16),
+            max_new: (4, 12),
+            vocab: 256,
+            seed: 7,
+        });
+        let out = replay_trace(&mut eng, &trace).expect("replay");
+        assert_eq!(out.len() as u64, eng.counters().completed);
+        assert_eq!(
+            eng.pool().free_blocks(),
+            eng.pool().total_blocks(),
+            "steady-state run must not leak KV blocks"
+        );
+        let m = &eng.metrics;
+        let ms = |v: f64| v * 1e3;
+        println!(
+            "{:>8.0} {:>6} {:>9.0} {:>6.2} {:>9} {:>7.1}/{:<6.1} {:>7.1}/{:<6.1} {:>7.1}/{:<6.1}",
+            rate,
+            m.requests_done,
+            m.throughput_tok_s(),
+            m.mean_occupancy(),
+            m.preemptions,
+            ms(m.queue.percentile(50.0)),
+            ms(m.queue.percentile(95.0)),
+            ms(m.ttft.percentile(50.0)),
+            ms(m.ttft.percentile(95.0)),
+            ms(m.total.percentile(50.0)),
+            ms(m.total.percentile(95.0)),
+        );
+        let s = eng.backend().ap_stats().expect("ap backend");
+        assert_eq!(s.weight_packs, 1, "weights must be packed once per run");
+    }
+    println!("(latencies in ms; occupancy = mean decode batch size; weights packed once per run)");
+}

@@ -2,8 +2,16 @@
 //! experiment index).  Each returns a formatted string so tests can check
 //! structure; `print_*` wrappers go to stdout.
 
-use crate::gpusim::{OursOpts, Scheme, Simulator};
+use crate::gpusim::{OursOpts, Scheme, SimResult, Simulator};
 use crate::model::{LlmArch, PrecisionConfig};
+
+/// Every scheme the tables print is built from the repo's own enums and
+/// calibrated at `Simulator::rtx3090` construction, so the fallible
+/// lookup cannot miss here; user-supplied schemes go through the CLI's
+/// error path instead.
+fn sim1(sim: &Simulator, sch: &Scheme, m: usize, k: usize, n: usize) -> SimResult {
+    sim.simulate(sch, m, k, n).expect("paper-table scheme is calibrated")
+}
 
 const T1_SIZES: [usize; 3] = [1024, 2048, 4096];
 
@@ -37,7 +45,7 @@ fn t1_schemes() -> Vec<Scheme> {
 pub fn table1_rows() -> Vec<(String, Vec<(usize, f64, f64)>)> {
     let sim = Simulator::rtx3090();
     let fp32: Vec<f64> =
-        T1_SIZES.iter().map(|&s| sim.simulate(&Scheme::Fp32, s, s, s).time_s).collect();
+        T1_SIZES.iter().map(|&s| sim1(&sim, &Scheme::Fp32, s, s, s).time_s).collect();
     t1_schemes()
         .into_iter()
         .map(|sch| {
@@ -45,7 +53,7 @@ pub fn table1_rows() -> Vec<(String, Vec<(usize, f64, f64)>)> {
                 .iter()
                 .enumerate()
                 .map(|(i, &s)| {
-                    let t = sim.simulate(&sch, s, s, s).time_s;
+                    let t = sim1(&sim, &sch, s, s, s).time_s;
                     (s, t, fp32[i] / t)
                 })
                 .collect();
@@ -102,7 +110,7 @@ fn paper_t2(label: &str) -> Option<[f64; 3]> {
 pub fn table2_string() -> String {
     let sim = Simulator::rtx3090();
     let fp32: Vec<f64> =
-        T2_PAPER.iter().map(|&(_, m, k, n)| sim.simulate(&Scheme::Fp32, m, k, n).time_s).collect();
+        T2_PAPER.iter().map(|&(_, m, k, n)| sim1(&sim, &Scheme::Fp32, m, k, n).time_s).collect();
     let mut out = String::from(
         "Table 2 — Llama2-7B MatMul latency & speedup vs FP32 (simulated; paper value in parens)\n",
     );
@@ -115,7 +123,7 @@ pub fn table2_string() -> String {
         let paper = paper_t2(&label);
         let mut cells = Vec::new();
         for (i, &(_, m, k, n)) in T2_PAPER.iter().enumerate() {
-            let t = sim.simulate(&sch, m, k, n).time_s;
+            let t = sim1(&sim, &sch, m, k, n).time_s;
             let p = paper.map(|p| format!(" ({:.0})", p[i])).unwrap_or_default();
             cells.push(format!("{:>8.1}µs{p} {:>6.1}×", t * 1e6, fp32[i] / t));
         }
@@ -151,7 +159,7 @@ pub fn fig5_string() -> String {
     for (label, sch) in series {
         out.push_str(&format!("{label:<16}"));
         for &s in &sizes {
-            let r = sim.simulate(&sch, s, s, s);
+            let r = sim1(&sim, &sch, s, s, s);
             out.push_str(&format!("{:>9.2}", r.tops_effective(s, s, s)));
         }
         out.push('\n');
@@ -188,7 +196,7 @@ pub fn fig6_string() -> String {
     for (label, sch) in series {
         out.push_str(&format!("{label:<16}"));
         for s in &shapes {
-            let r = sim.simulate(&sch, s.m, s.k, s.n);
+            let r = sim1(&sim, &sch, s.m, s.k, s.n);
             out.push_str(&format!("{:>16.2}", r.tops_effective(s.m, s.k, s.n)));
         }
         out.push('\n');
@@ -220,7 +228,9 @@ pub fn fig7_string() -> String {
     for (label, sch) in schemes {
         out.push_str(&format!("{label:<22}"));
         for m in &models {
-            let sp = sim.llm_speedup_vs_fp16(m, &sch, 1024);
+            let sp = sim
+                .llm_speedup_vs_fp16(m, &sch, 1024)
+                .expect("paper-table scheme is calibrated");
             out.push_str(&format!("{sp:>11.2}×"));
         }
         out.push('\n');
@@ -245,11 +255,11 @@ pub fn ablation_sched_string() -> String {
     let mut out = String::from("Ablation — memory-scheduling knobs, W2A2 (simulated latency, × vs paper config)\n");
     out.push_str(&format!("{:<34}{:>16}{:>16}\n", "variant", sizes[0].1, sizes[1].1));
     let base: Vec<f64> =
-        sizes.iter().map(|&(s, _)| sim.simulate(&Scheme::ours(p), s, s, s).time_s).collect();
+        sizes.iter().map(|&(s, _)| sim1(&sim, &Scheme::ours(p), s, s, s).time_s).collect();
     for (label, opts) in variants {
         out.push_str(&format!("{label:<34}"));
         for (i, &(s, _)) in sizes.iter().enumerate() {
-            let t = sim.simulate(&Scheme::Ours(p, opts), s, s, s).time_s;
+            let t = sim1(&sim, &Scheme::Ours(p, opts), s, s, s).time_s;
             out.push_str(&format!("{:>9.1}µs {:>4.2}×", t * 1e6, t / base[i]));
         }
         out.push('\n');
@@ -317,7 +327,9 @@ pub fn pack_split_string() -> String {
     let sim = Simulator::rtx3090();
     let prec = PrecisionConfig::W2A2;
     let m = 1024;
-    let rows = sim.llm_pack_split(&LlmArch::llama2_7b(), prec, m);
+    let rows = sim
+        .llm_pack_split(&LlmArch::llama2_7b(), prec, m)
+        .expect("paper-table scheme is calibrated");
     let mut out = format!(
         "Pack-once split — Llama2-7B forward, {} @ M={m} (simulated; weight pack paid ONCE at load)\n",
         prec.label()

@@ -95,8 +95,9 @@ pub fn apmm_bipolar_packed_into(
     }
     let (nw, nx) = (wp.bits, xp.bits);
     // bits ≤ MAX_BITS is a PackedPlanes construction invariant, so these
-    // widened shifts cannot overflow.
-    let c_const = (k as i64 * ((1i64 << nw) - 1) * ((1i64 << nx) - 1)) as i32;
+    // widened shifts cannot overflow.  C stays in i64: at 16×16 bits and
+    // LLM-scale K it exceeds i32::MAX long before the final result does.
+    let c_const = k as i64 * ((1i64 << nw) - 1) * ((1i64 << nx) - 1);
 
     let body = |mb: usize, rows_out: &mut [i32]| {
         // rows_out holds whole output rows, so this division is exact even
@@ -118,8 +119,9 @@ pub fn apmm_bipolar_packed_into(
                     for (j, slot) in xr.iter_mut().enumerate().take(nx as usize) {
                         *slot = xp.row(j as u32, ni);
                     }
-                    out_row[ni] =
-                        c_const - 2 * plane_pair_sum(&wr[..nw as usize], &xr[..nx as usize]);
+                    out_row[ni] = checked_i32(
+                        c_const - 2 * plane_pair_sum(&wr[..nw as usize], &xr[..nx as usize]),
+                    );
                 }
             }
         }
@@ -136,15 +138,32 @@ pub fn apmm_bipolar_packed_into(
 /// are hoisted by the caller (§4.2 ④'s reuse analog); each pair runs a
 /// tight 4-way-unrolled XOR/popcount loop with independent accumulators
 /// to break the popcnt dependency chain.
+///
+/// Accumulates in `i64`: popc ≤ K and the shift reaches 2·(bits−1), so at
+/// LLM-scale K (≈4k–100k) with 8-bit operands the partial sum overflows
+/// both the `u32` shift and an `i32` accumulator — the result would wrap
+/// silently and the kernel would return wrong logits at exactly the
+/// shapes that matter.
 #[inline(always)]
-fn plane_pair_sum(wr: &[&[u64]], xr: &[&[u64]]) -> i32 {
-    let mut acc = 0i32;
+fn plane_pair_sum(wr: &[&[u64]], xr: &[&[u64]]) -> i64 {
+    let mut acc = 0i64;
     for (i, w) in wr.iter().enumerate() {
         for (j, x) in xr.iter().enumerate() {
-            acc += (xor_popcount_dot(w, x) << (i + j)) as i32;
+            acc += (xor_popcount_dot(w, x) as i64) << (i + j);
         }
     }
     acc
+}
+
+/// Final cast of a widened accumulator into the `i32` output buffer.
+/// The *true* product fits i32 for every shape the kernels serve today;
+/// if a caller ever exceeds it, fail loudly rather than wrap.  Shared
+/// with the standalone recovery pass so fused and unfused paths agree
+/// in the overflow regime too.
+#[inline(always)]
+pub(super) fn checked_i32(v: i64) -> i32 {
+    i32::try_from(v)
+        .unwrap_or_else(|_| panic!("AP-GEMM output {v} overflows i32 (widen the output type)"))
 }
 
 /// The *unfused* pipeline (paper's naive Fig. 4 flow): materialize every
@@ -160,6 +179,7 @@ pub fn apmm_bipolar_unfused(w: &CodeMatrix, xt: &CodeMatrix) -> Vec<i32> {
 /// dataflow cost from packing cost).
 pub fn apmm_bipolar_unfused_packed(wp: &PackedPlanes, xp: &PackedPlanes) -> Vec<i32> {
     assert_eq!(wp.cols, xp.cols, "inner dimension mismatch");
+    assert_eq!(wp.kw, xp.kw, "packed word-count mismatch");
     let (m, n, k) = (wp.rows, xp.rows, wp.cols);
     let (nw, nx) = (wp.bits, xp.bits);
     // 1-bit GEMMs → intermediate tiles in "global memory"
@@ -212,6 +232,7 @@ fn apmm_weighted(w: &CodeMatrix, xt: &CodeMatrix, fmt: IntFormat) -> Vec<i32> {
 /// (the signed/unsigned baselines share this core).
 pub fn apmm_weighted_packed(wp: &PackedPlanes, xp: &PackedPlanes, fmt: IntFormat) -> Vec<i32> {
     assert_eq!(wp.cols, xp.cols, "inner dimension mismatch");
+    assert_eq!(wp.kw, xp.kw, "packed word-count mismatch");
     let (m, n) = (wp.rows, xp.rows);
     let (nw, nx) = (wp.bits, xp.bits);
     let mut y = vec![0i32; m * n];
@@ -229,7 +250,7 @@ pub fn apmm_weighted_packed(wp: &PackedPlanes, xp: &PackedPlanes, fmt: IntFormat
                     acc += wi * xj * and_popcount_dot(wr, xp.row(j, ni)) as i64;
                 }
             }
-            *out = acc as i32;
+            *out = checked_i32(acc);
         }
     });
     y
@@ -252,7 +273,7 @@ pub fn naive_gemm_decoded(w: &CodeMatrix, xt: &CodeMatrix, fmt: IntFormat) -> Ve
             for ki in 0..k {
                 acc += wd[mi * k + ki] as i64 * xd[ni * k + ki] as i64;
             }
-            *out = acc as i32;
+            *out = checked_i32(acc);
         }
     });
     y

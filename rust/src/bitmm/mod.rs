@@ -52,7 +52,9 @@ pub use apmm::{
     transpose_codes, ApmmOpts,
 };
 pub use gemm1b::{and_popcount_dot, xnor_dot, xor_popcount_dot};
-pub use planes::{pack_codes, pack_codes_into, pack_codes_u32, CodeMatrix, PackedPlanes, MAX_BITS};
+pub use planes::{
+    pack_codes, pack_codes_into, pack_codes_u32, pack_rows_into, CodeMatrix, PackedPlanes, MAX_BITS,
+};
 pub use prepack::{PackArena, PackedWeight, PackedWeightStore, PlaneCache};
 pub use recover::recover_tiles;
 

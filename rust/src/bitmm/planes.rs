@@ -181,11 +181,26 @@ pub fn pack_codes(m: &CodeMatrix) -> PackedPlanes {
 /// [`super::prepack::PackArena`] uses on the decode hot path.  Every word
 /// of `data` is overwritten (stale contents are fine).
 pub fn pack_codes_into(m: &CodeMatrix, data: &mut [u64]) {
-    let kw = m.cols.div_ceil(64);
-    let bits = m.bits as usize;
-    let plane_stride = m.rows * kw;
+    pack_rows_into(m.rows, m.cols, m.bits, &m.data, data);
+}
+
+/// The `CodeMatrix`-free core of [`pack_codes_into`]: packs a raw
+/// row-major code buffer (`rows × cols`, values `< 2^bits`).  This is the
+/// **batched-activation pack entry** — the serving hot path stages each
+/// decode step's activation rows into a recycled `u32` buffer
+/// ([`super::prepack::PackArena::pack_batch`]) and packs them in one shot
+/// without constructing an owning `CodeMatrix`.
+pub fn pack_rows_into(rows: usize, cols: usize, bits: u32, codes: &[u32], data: &mut [u64]) {
+    assert_bits(bits);
+    assert_eq!(codes.len(), rows * cols, "codes shape");
+    debug_assert!(
+        codes.iter().all(|&c| (c as u64) < (1u64 << bits)),
+        "code out of range"
+    );
+    let kw = cols.div_ceil(64);
+    let bits = bits as usize;
+    let plane_stride = rows * kw;
     assert_eq!(data.len(), bits * plane_stride, "plane buffer size");
-    debug_assert!(bits <= MAX_BITS as usize);
 
     // Disjoint-write parallelism over rows: every (plane, row) slot is
     // touched by exactly one row index, so the raw-pointer writes below
@@ -193,9 +208,7 @@ pub fn pack_codes_into(m: &CodeMatrix, data: &mut [u64]) {
     struct Ptr(*mut u64);
     unsafe impl Sync for Ptr {}
     let ptr = Ptr(data.as_mut_ptr());
-    let rows = m.rows;
-    let cols = m.cols;
-    let src_all = &m.data;
+    let src_all = codes;
     crate::util::par_for(rows, |r| {
         let p = &ptr;
         let src = &src_all[r * cols..(r + 1) * cols];

@@ -13,7 +13,7 @@
 //!   **activation** packing (the shared-memory staging analog): after
 //!   warm-up, packing an activation batch performs zero heap allocations.
 
-use super::planes::{pack_codes, pack_codes_into, CodeMatrix, PackedPlanes};
+use super::planes::{pack_codes, pack_codes_into, pack_rows_into, CodeMatrix, PackedPlanes};
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -139,6 +139,9 @@ impl PackedWeightStore {
 #[derive(Default)]
 pub struct PackArena {
     free: HashMap<usize, Vec<Vec<u64>>>,
+    /// Recycled row-major code staging buffer for [`PackArena::pack_batch`]
+    /// (grows to the largest batch seen, then never reallocates).
+    stage: Vec<u32>,
     allocs: u64,
     reuses: u64,
 }
@@ -148,22 +151,55 @@ impl PackArena {
         Self::default()
     }
 
-    /// Pack `m` using a recycled buffer when one of the right size exists.
-    pub fn pack(&mut self, m: &CodeMatrix) -> PackedPlanes {
-        let need = m.bits as usize * m.rows * m.cols.div_ceil(64);
-        let mut buf = match self.free.get_mut(&need).and_then(Vec::pop) {
+    /// Pop a recycled plane buffer of exactly `need` words (or allocate on
+    /// first sight of a shape), updating the alloc/reuse counters.
+    fn checkout(&mut self, need: usize) -> Vec<u64> {
+        match self.free.get_mut(&need).and_then(Vec::pop) {
             Some(b) => {
                 self.reuses += 1;
+                debug_assert_eq!(b.len(), need);
                 b
             }
             None => {
                 self.allocs += 1;
                 vec![0u64; need]
             }
-        };
-        debug_assert_eq!(buf.len(), need);
+        }
+    }
+
+    /// Pack `m` using a recycled buffer when one of the right size exists.
+    pub fn pack(&mut self, m: &CodeMatrix) -> PackedPlanes {
+        let need = m.bits as usize * m.rows * m.cols.div_ceil(64);
+        let mut buf = self.checkout(need);
         pack_codes_into(m, &mut buf);
         PackedPlanes::from_raw_parts(m.rows, m.cols, m.bits, buf)
+    }
+
+    /// **Batched-activation pack entry** (the continuous-batching decode
+    /// hot path): stage `rows` activation code rows via `fill(row, out)`
+    /// into the arena's recycled staging buffer, then decompose+pack them
+    /// in one shot.  After warm-up neither the staging codes nor the plane
+    /// buffer allocate, and no intermediate `CodeMatrix` is built.
+    pub fn pack_batch(
+        &mut self,
+        rows: usize,
+        cols: usize,
+        bits: u32,
+        mut fill: impl FnMut(usize, &mut [u32]),
+    ) -> PackedPlanes {
+        let len = rows * cols;
+        if self.stage.len() < len {
+            // grow-only: `fill` overwrites the whole prefix below, so no
+            // per-call zeroing of the staging buffer
+            self.stage.resize(len, 0);
+        }
+        for r in 0..rows {
+            fill(r, &mut self.stage[r * cols..(r + 1) * cols]);
+        }
+        let need = bits as usize * rows * cols.div_ceil(64);
+        let mut buf = self.checkout(need);
+        pack_rows_into(rows, cols, bits, &self.stage[..len], &mut buf);
+        PackedPlanes::from_raw_parts(rows, cols, bits, buf)
     }
 
     /// Return a packed buffer to the arena for reuse.
@@ -241,6 +277,31 @@ mod tests {
         let p3 = arena.pack(&other);
         assert_eq!(arena.allocs(), 2);
         drop(p3);
+    }
+
+    #[test]
+    fn pack_batch_matches_pack_and_recycles_everything() {
+        let m = CodeMatrix::random(5, 130, 2, 9);
+        let mut arena = PackArena::new();
+        let via_batch = arena.pack_batch(m.rows, m.cols, m.bits, |r, out| {
+            out.copy_from_slice(&m.data[r * m.cols..(r + 1) * m.cols]);
+        });
+        assert_eq!(via_batch.raw(), crate::bitmm::pack_codes(&m).raw());
+        let ptr = via_batch.raw().as_ptr();
+        arena.recycle(via_batch);
+        // same shape again: plane buffer recycled, staging reused in place
+        let again = arena.pack_batch(m.rows, m.cols, m.bits, |r, out| {
+            out.copy_from_slice(&m.data[r * m.cols..(r + 1) * m.cols]);
+        });
+        assert_eq!(again.raw().as_ptr(), ptr, "plane buffer must be recycled");
+        assert_eq!((arena.allocs(), arena.reuses()), (1, 1));
+        // a smaller batch fits the existing staging buffer but takes a
+        // fresh plane buffer (different word count)
+        let small = arena.pack_batch(2, 130, 2, |r, out| {
+            out.copy_from_slice(&m.data[r * m.cols..(r + 1) * m.cols]);
+        });
+        assert_eq!(small.rows, 2);
+        assert_eq!(arena.allocs(), 2);
     }
 
     #[test]

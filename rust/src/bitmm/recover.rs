@@ -16,5 +16,7 @@ pub fn recover_tiles(m: usize, n: usize, tiles: &[(u32, u32, Vec<i32>)]) -> Vec<
             *acc += (v as i64) << shift;
         }
     }
-    y.into_iter().map(|v| v as i32).collect()
+    // same fail-loudly cast as the fused kernel, so the cross-check pair
+    // cannot silently diverge in the overflow regime
+    y.into_iter().map(super::apmm::checked_i32).collect()
 }

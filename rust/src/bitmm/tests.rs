@@ -303,3 +303,54 @@ fn prop_signed_unsigned_match_naive() {
         assert_eq!(apmm_unsigned(&w, &xt), naive_gemm_decoded(&w, &xt, IntFormat::Unsigned));
     });
 }
+
+#[test]
+fn fused_bipolar_llm_scale_k_8x8_matches_naive() {
+    // the ISSUE shape: K=4096 at 8×8 bits — the fused kernel's
+    // Σ popc·2^(i+j) partial sum runs right up against i32 here and the
+    // headline logits must stay exact
+    let k = 4096;
+    let w = CodeMatrix::random(3, k, 8, 90);
+    let xt = CodeMatrix::random(2, k, 8, 91);
+    assert_eq!(
+        apmm_bipolar(&w, &xt, ApmmOpts::default()),
+        naive_gemm_decoded(&w, &xt, IntFormat::Bipolar)
+    );
+}
+
+#[test]
+fn fused_bipolar_huge_k_intermediate_exceeds_i32() {
+    // K=100k at 8×8: the Σ popc·2^(i+j) intermediate is ≈ K·(2^8−1)²/2
+    // ≈ 3.2e9 > i32::MAX, so the pre-widening i32 accumulator wrapped
+    // here even though the true outputs (random ± codes concentrate near
+    // zero) still fit the i32 output buffer comfortably
+    let k = 100_000;
+    let w = CodeMatrix::random(2, k, 8, 92);
+    let xt = CodeMatrix::random(2, k, 8, 93);
+    assert_eq!(
+        apmm_bipolar(&w, &xt, ApmmOpts::default()),
+        naive_gemm_decoded(&w, &xt, IntFormat::Bipolar)
+    );
+}
+
+#[test]
+#[should_panic(expected = "inner dimension mismatch")]
+fn weighted_packed_rejects_mismatched_plane_widths() {
+    // mismatched operands must die on the width asserts, not index out
+    // of bounds or silently truncate the zipped inner product.  (Every
+    // public constructor derives kw from cols, so the cols assert is the
+    // one reachable here; the kw assert added alongside it is
+    // defense-in-depth parity with `apmm_bipolar_packed_into` for any
+    // future constructor that decouples them.)
+    let wp = pack_codes(&CodeMatrix::random(4, 64, 2, 94));
+    let xp = pack_codes(&CodeMatrix::random(4, 130, 2, 95));
+    apmm_weighted_packed(&wp, &xp, IntFormat::Signed);
+}
+
+#[test]
+#[should_panic(expected = "inner dimension mismatch")]
+fn unfused_packed_rejects_mismatched_plane_widths() {
+    let wp = pack_codes(&CodeMatrix::random(4, 64, 2, 96));
+    let xp = pack_codes(&CodeMatrix::random(4, 70, 2, 97));
+    apmm_bipolar_unfused_packed(&wp, &xp);
+}

@@ -11,12 +11,13 @@
 //! only packs its activation batch through a recycling arena — the §3.3
 //! flow, exercised end to end by the serving loop.
 
+use super::request::{sample_token, GenParams};
 use crate::anyhow::{bail, Result};
 #[cfg(feature = "pjrt")]
 use crate::anyhow::{anyhow, Context};
 
-use crate::bitmm::prepack::PackArena;
-use crate::bitmm::{apmm_bipolar_packed_into, pack_codes, ApmmOpts, CodeMatrix, PackedPlanes};
+use crate::bitmm::prepack::{PackArena, PackedWeightStore};
+use crate::bitmm::{apmm_bipolar_packed_into, ApmmOpts, CodeMatrix};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{lit_f32, ModelRunner};
 
@@ -28,6 +29,55 @@ pub struct SeqKv {
     pub k: Vec<f32>,
     pub v: Vec<f32>,
     pub pos: usize,
+}
+
+/// Drive one request through a backend **unbatched**: prefill plus a
+/// chain of single-row decode steps, sampled with the serving layer's
+/// own [`sample_token`].  This is the reference oracle the
+/// continuous-batching tests compare token streams against — exported so
+/// the engine's unit tests and the integration tests share one
+/// definition and cannot drift apart.
+pub fn drive_unbatched<B: Backend>(
+    backend: &mut B,
+    prompt: &[i32],
+    params: &GenParams,
+) -> Result<Vec<i32>> {
+    let (logits, mut kv) = backend.prefill_one(prompt)?;
+    let mut toks = vec![sample_token(&logits, params, 0)];
+    while toks.len() < params.max_new_tokens {
+        let step = toks.len();
+        let l = backend.decode_batch(&[toks[step - 1]], &mut [&mut kv])?;
+        toks.push(sample_token(&l[0], params, step));
+    }
+    Ok(toks)
+}
+
+/// Per-sequence decode state that exposes its KV buffer — lets
+/// [`gather_kv_refs`] serve both steppers' private sequence structs.
+pub(crate) trait HasSeqKv {
+    fn kv_mut(&mut self) -> &mut SeqKv;
+}
+
+/// Collect `&mut SeqKv` at the ascending `idx` positions of `seqs`
+/// without unsafe or a double mutable borrow (split_at_mut
+/// partitioning).  Shared by the scheduler's and the engine's
+/// batched-decode gather so the tricky slice arithmetic lives once.
+pub(crate) fn gather_kv_refs<'a, T: HasSeqKv>(
+    seqs: &'a mut [T],
+    idx: &[usize],
+) -> Vec<&'a mut SeqKv> {
+    debug_assert!(idx.windows(2).all(|w| w[0] < w[1]), "indices must ascend");
+    let mut out = Vec::with_capacity(idx.len());
+    let mut rest = seqs;
+    let mut base = 0usize;
+    for &i in idx {
+        let (_, tail) = rest.split_at_mut(i - base);
+        let (head, tail2) = tail.split_at_mut(1);
+        out.push(head[0].kv_mut());
+        rest = tail2;
+        base = i + 1;
+    }
+    out
 }
 
 /// One model replica.
@@ -182,13 +232,21 @@ impl<'e> Backend for PjrtBackend<'e> {
 
 // ------------------------------------------------------------------- sim --
 
+/// Name the sim backend's single weight is registered under in its
+/// [`PackedWeightStore`].
+const LM_HEAD: &str = "lm_head";
+
 /// Pack-once AP-GEMM state for the sim backend: an LM-head-style weight
-/// `(vocab, dim)` decomposed+packed exactly once at construction; decode
-/// steps pack only their activation codes (through the recycling arena)
-/// and run the prepacked kernel core.
+/// `(vocab, dim)` decomposed+packed exactly once at construction into a
+/// [`PackedWeightStore`] (the model-level §3.3 registry); decode steps
+/// stage+pack only their activation batch through the recycling arena's
+/// batched entry ([`PackArena::pack_batch`]) and run the prepacked kernel
+/// core.
 struct ApGemm {
-    /// The prepacked weight — the only form the hot path ever touches.
-    weights: PackedPlanes,
+    /// Prepacked weight registry — the only weight form the hot path ever
+    /// touches (here one entry, `LM_HEAD`; a full model registers one per
+    /// layer weight).
+    store: PackedWeightStore,
     arena: PackArena,
     dim: usize,
     nx: u32,
@@ -203,10 +261,12 @@ struct ApGemm {
 impl ApGemm {
     fn new(vocab: usize, dim: usize, nw: u32, nx: u32, seed: u64) -> Self {
         // construction-time artifact: the codes are dropped right after
-        // the one and only pack
+        // the one and only pack, into the store
         let codes = CodeMatrix::random(vocab, dim, nw, seed);
+        let mut store = PackedWeightStore::new();
+        store.insert_codes(LM_HEAD, &codes, vec![1.0; vocab]);
         Self {
-            weights: pack_codes(&codes),
+            store,
             arena: PackArena::new(),
             dim,
             nx,
@@ -217,11 +277,11 @@ impl ApGemm {
     }
 
     /// Deterministic activation codes for one (token, pos) slot.
-    fn act_row(&self, token: i32, pos: usize, out: &mut [u32]) {
+    fn act_row(nx: u32, token: i32, pos: usize, out: &mut [u32]) {
         let mut rng = crate::util::Rng::with_seed(
             (token as u64).wrapping_mul(0x9E37_79B9).wrapping_add(pos as u64),
         );
-        let hi = 1u32 << self.nx;
+        let hi = 1u32 << nx;
         for c in out.iter_mut() {
             *c = rng.u32(0, hi);
         }
@@ -229,24 +289,24 @@ impl ApGemm {
 
     /// Logits for a batch of (token, pos) rows via the prepacked kernel.
     fn logits(&mut self, rows: &[(i32, usize)]) -> Vec<Vec<f32>> {
-        let (vocab, n) = (self.weights.rows, rows.len());
-        let mut codes = vec![0u32; n * self.dim];
-        for (i, &(tok, pos)) in rows.iter().enumerate() {
-            self.act_row(tok, pos, &mut codes[i * self.dim..(i + 1) * self.dim]);
-        }
-        let xt = CodeMatrix::new(n, self.dim, self.nx, codes);
-        let xp = self.arena.pack(&xt);
+        let planes = self.store.get(LM_HEAD).expect("registered at construction").planes.clone();
+        let (vocab, n) = (planes.rows, rows.len());
+        let (dim, nx) = (self.dim, self.nx);
+        let xp = self.arena.pack_batch(n, dim, nx, |i, out| {
+            let (tok, pos) = rows[i];
+            Self::act_row(nx, tok, pos, out);
+        });
         self.act_packs += 1;
         self.y.resize(vocab * n, 0);
         // zero pack_codes calls, zero weight allocations from here on
         apmm_bipolar_packed_into(
-            &self.weights,
+            &planes,
             &xp,
             ApmmOpts { parallel: false, ..ApmmOpts::default() },
             &mut self.y,
         );
         self.arena.recycle(xp);
-        let scale = 1.0 / (self.dim as f32);
+        let scale = 1.0 / (dim as f32);
         (0..n)
             .map(|ni| (0..vocab).map(|mi| self.y[mi * n + ni] as f32 * scale).collect())
             .collect()
@@ -322,7 +382,7 @@ impl SimBackend {
 
     /// Resident packed-weight footprint of the AP path, if enabled.
     pub fn packed_weight_bytes(&self) -> usize {
-        self.ap.as_ref().map(|ap| ap.weights.nbytes()).unwrap_or(0)
+        self.ap.as_ref().map(|ap| ap.store.packed_bytes()).unwrap_or(0)
     }
 
     fn logits_for(&mut self, rows: &[(i32, usize)]) -> Vec<Vec<f32>> {

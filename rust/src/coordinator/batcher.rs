@@ -85,6 +85,17 @@ impl Batcher {
         Some(group)
     }
 
+    /// Drain the whole queue immediately, ignoring the deadline and the
+    /// supported group sizes.  The continuous-batching engine calls this
+    /// when it is otherwise idle: an empty engine should never sit out a
+    /// batching deadline, because iteration-level scheduling can admit the
+    /// stragglers one by one as later arrivals trickle in.
+    pub fn flush(&mut self) -> Vec<Request> {
+        let group: Vec<Request> = self.queue.drain(..).collect();
+        self.released += group.len() as u64;
+        group
+    }
+
     /// Time until the oldest request's deadline (for sleep scheduling).
     pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
         self.queue.front().map(|r| {
@@ -134,6 +145,20 @@ mod tests {
         assert_eq!(b.queued(), 1);
         let g2 = b.poll(later + Duration::from_millis(11)).expect("second flush");
         assert_eq!(g2.len(), 1);
+    }
+
+    #[test]
+    fn flush_drains_everything_and_keeps_counts() {
+        let mut b = mk(vec![4], 1000);
+        for i in 0..3 {
+            b.push(req(i));
+        }
+        assert!(b.poll(Instant::now()).is_none(), "below group size, before deadline");
+        let g = b.flush();
+        assert_eq!(g.len(), 3);
+        assert_eq!(b.queued(), 0);
+        assert_eq!(b.counts(), (3, 3));
+        assert!(b.flush().is_empty());
     }
 
     #[test]

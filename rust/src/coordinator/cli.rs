@@ -1,18 +1,23 @@
-//! `apllm serve` — the end-to-end serving demo: continuous-batching
-//! scheduler under a synthetic Poisson workload, over either the real
-//! PJRT model artifacts (`pjrt` feature) or the pack-once AP-GEMM sim
-//! backend (always available; `--sim` forces it).
+//! `apllm serve` — the end-to-end serving demo: a synthetic Poisson
+//! workload over either the real PJRT model artifacts (`pjrt` feature) or
+//! the pack-once AP-GEMM sim backend (always available; `--sim` forces
+//! it).  The sim path serves through the **continuous-batching engine**
+//! by default; `--group-scheduler` falls back to the group scheduler.
 
-use super::backend::{Backend, SimBackend};
 #[cfg(feature = "pjrt")]
 use super::backend::PjrtBackend;
-use super::request::{GenParams, Request};
+use super::backend::SimBackend;
+use super::engine::{Engine, EngineConfig};
+use super::request::Response;
 use super::scheduler::{Scheduler, SchedulerConfig};
+use super::server::{replay_trace, Stepper};
+use super::trace::{generate, ArrivalKind, TimedRequest, TraceConfig};
 #[cfg(feature = "pjrt")]
-use crate::runtime::{artifacts_dir, Engine, ModelRunner};
-use crate::anyhow::Result;
-use crate::util::Rng;
-use std::time::{Duration, Instant};
+use crate::runtime::{artifacts_dir, Engine as PjrtEngine, ModelRunner};
+use crate::anyhow::{bail, Context, Result};
+use std::time::Duration;
+#[cfg(feature = "pjrt")]
+use std::time::Instant;
 
 pub struct ServeArgs {
     pub requests: usize,
@@ -22,89 +27,86 @@ pub struct ServeArgs {
     pub seed: u64,
     /// Use the pack-once sim backend even when `pjrt` is compiled in.
     pub sim: bool,
+    /// Serve through the continuous-batching engine (sim path default);
+    /// false = the group scheduler.
+    pub engine: bool,
 }
 
 impl Default for ServeArgs {
     fn default() -> Self {
-        Self { requests: 16, rate_per_s: 8.0, max_new: 8, prompt_len: 12, seed: 0, sim: false }
+        Self {
+            requests: 16,
+            rate_per_s: 8.0,
+            max_new: 8,
+            prompt_len: 12,
+            seed: 0,
+            sim: false,
+            engine: true,
+        }
     }
 }
 
-pub fn parse_args(args: &[String]) -> ServeArgs {
+/// The flag list every parse error repeats — a bad flag must produce a
+/// recoverable error naming the alternatives, never kill the process.
+const VALID_FLAGS: &str =
+    "--requests N, --rate R, --max-new N, --prompt-len N, --seed N, --sim, --group-scheduler";
+
+fn take_value<'a>(it: &mut std::slice::Iter<'a, String>, name: &str) -> Result<&'a str> {
+    it.next()
+        .map(String::as_str)
+        .with_context(|| format!("{name} needs a value (valid flags: {VALID_FLAGS})"))
+}
+
+fn parse_value<T>(it: &mut std::slice::Iter<'_, String>, name: &str, kind: &str) -> Result<T>
+where
+    T: std::str::FromStr,
+    T::Err: std::fmt::Display,
+{
+    let raw = take_value(it, name)?;
+    raw.parse().with_context(|| format!("{name} expects {kind}, got {raw:?}"))
+}
+
+pub fn parse_args(args: &[String]) -> Result<ServeArgs> {
     let mut a = ServeArgs::default();
     let mut it = args.iter();
     while let Some(flag) = it.next() {
-        let mut val = |name: &str| -> String {
-            it.next().unwrap_or_else(|| panic!("{name} needs a value")).clone()
-        };
         match flag.as_str() {
-            "--requests" => a.requests = val("--requests").parse().expect("usize"),
-            "--rate" => a.rate_per_s = val("--rate").parse().expect("f64"),
-            "--max-new" => a.max_new = val("--max-new").parse().expect("usize"),
-            "--prompt-len" => a.prompt_len = val("--prompt-len").parse().expect("usize"),
-            "--seed" => a.seed = val("--seed").parse().expect("u64"),
+            "--requests" => a.requests = parse_value(&mut it, "--requests", "a count")?,
+            "--rate" => a.rate_per_s = parse_value(&mut it, "--rate", "a rate (req/s)")?,
+            "--max-new" => a.max_new = parse_value(&mut it, "--max-new", "a token count")?,
+            "--prompt-len" => a.prompt_len = parse_value(&mut it, "--prompt-len", "a length")?,
+            "--seed" => a.seed = parse_value(&mut it, "--seed", "an integer seed")?,
             "--sim" => a.sim = true,
-            other => panic!("unknown flag {other}"),
+            "--group-scheduler" => a.engine = false,
+            other => bail!("unknown flag {other} (valid flags: {VALID_FLAGS})"),
         }
     }
-    a
+    Ok(a)
 }
 
-/// Drive one backend through the Poisson workload; returns (report,
-/// scheduler) so callers can append backend-specific stats.
-fn drive<B: Backend>(backend: B, a: &ServeArgs) -> Result<(String, Scheduler<B>)> {
-    let vocab = backend.vocab() as u32;
-    let mut sched = Scheduler::new(
-        backend,
-        SchedulerConfig { kv_blocks: 128, block_tokens: 16, max_running: 8 },
-    );
+/// Deterministic Poisson trace for the demo workload.
+fn build_trace(a: &ServeArgs, vocab: usize) -> Vec<TimedRequest> {
+    generate(&TraceConfig {
+        kind: ArrivalKind::Poisson { rate: a.rate_per_s },
+        requests: a.requests,
+        prompt_len: (a.prompt_len, a.prompt_len + 1),
+        max_new: (a.max_new, a.max_new + 1),
+        vocab,
+        seed: a.seed,
+    })
+}
 
-    // Poisson arrivals, fixed prompt length, deterministic content
-    let mut rng = Rng::with_seed(a.seed);
-    let mut arrivals: Vec<(f64, Request)> = Vec::new();
-    let mut t = 0.0;
-    for i in 0..a.requests {
-        t += rng.exponential(a.rate_per_s);
-        let prompt: Vec<i32> = (0..a.prompt_len).map(|_| rng.u32(1, vocab) as i32).collect();
-        arrivals.push((
-            t,
-            Request::new(
-                i as u64,
-                prompt,
-                GenParams { max_new_tokens: a.max_new, sample: false, seed: i as u64 },
-            ),
-        ));
-    }
-
-    sched.metrics.start();
-    let start = Instant::now();
-    let mut next = 0;
-    let mut responses = Vec::new();
-    while next < arrivals.len() || !sched.is_idle() {
-        let now = start.elapsed().as_secs_f64();
-        while next < arrivals.len() && arrivals[next].0 <= now {
-            let (_, mut req) = arrivals[next].clone();
-            req.arrived = Instant::now();
-            sched.submit(req);
-            next += 1;
-        }
-        if sched.is_idle() {
-            if next < arrivals.len() {
-                let wait = arrivals[next].0 - now;
-                std::thread::sleep(Duration::from_secs_f64(wait.max(0.0).min(0.05)));
-            }
-            continue;
-        }
-        responses.extend(sched.step()?);
-    }
-    sched.metrics.finish();
-
+/// Drive one stepper through the Poisson workload; returns (report,
+/// responses) so callers can append backend-specific stats.
+fn drive<S: Stepper>(s: &mut S, a: &ServeArgs, vocab: usize) -> Result<(String, Vec<Response>)> {
+    let trace = build_trace(a, vocab);
+    let responses = replay_trace(s, &trace)?;
     let mut report = String::new();
     report.push_str(&format!(
         "serving demo: {} requests, Poisson rate {}/s, prompt {} tokens, {} new tokens each\n",
         a.requests, a.rate_per_s, a.prompt_len, a.max_new
     ));
-    report.push_str(&sched.metrics.report());
+    report.push_str(&s.metrics().report());
     report.push('\n');
     let sample: Vec<i32> = responses
         .iter()
@@ -112,7 +114,21 @@ fn drive<B: Backend>(backend: B, a: &ServeArgs) -> Result<(String, Scheduler<B>)
         .map(|r| r.tokens.clone())
         .unwrap_or_default();
     report.push_str(&format!("request 0 generated: {sample:?}\n"));
-    Ok((report, sched))
+    Ok((report, responses))
+}
+
+fn ap_sim_backend(seed: u64) -> (SimBackend, usize) {
+    let (vocab, max_seq, dim) = (256usize, 256usize, 128usize);
+    (SimBackend::with_ap_gemm(vocab, max_seq, vec![1, 2, 4, 8], dim, 2, 2, seed ^ 0xAB), vocab)
+}
+
+fn pack_once_stats(backend: &SimBackend, packed_bytes: usize) -> String {
+    let s = backend.ap_stats().expect("ap backend");
+    format!(
+        "pack-once: weight packs {}, packed weight bytes {}, activation packs {}, \
+         arena allocs {}, arena reuses {}\n",
+        s.weight_packs, packed_bytes, s.act_packs, s.arena_allocs, s.arena_reuses
+    )
 }
 
 /// Run the demo over the REAL PJRT artifacts; returns the metrics report.
@@ -121,59 +137,135 @@ fn drive<B: Backend>(backend: B, a: &ServeArgs) -> Result<(String, Scheduler<B>)
 pub fn run_serving_demo(a: &ServeArgs) -> Result<String> {
     let dir = artifacts_dir();
     eprintln!("loading artifacts from {} ...", dir.display());
-    let engine = Engine::load(&dir)?;
+    let engine = PjrtEngine::load(&dir)?;
     let runner = ModelRunner::new(&engine)?;
     let t0 = Instant::now();
     let n = engine.warmup(&["prefill", "decode"])?;
     eprintln!("compiled {n} model executables in {:.2?}", t0.elapsed());
 
     let backend = PjrtBackend::new(&runner)?;
-    let (report, _sched) = drive(backend, a)?;
+    let vocab = runner.cfg.vocab;
+    let mut sched = Scheduler::new(
+        backend,
+        SchedulerConfig { kv_blocks: 128, block_tokens: 16, max_running: 8 },
+    );
+    let (report, _) = drive(&mut sched, a, vocab)?;
     Ok(report)
 }
 
-/// Run the demo over the pack-once AP-GEMM sim backend: weights are
-/// decomposed+packed once at startup, every decode step packs only its
-/// activation batch through the recycling arena — the §3.3 flow end to
-/// end, with the stats to prove it appended to the report.
+/// Group-scheduler demo over the pack-once AP-GEMM sim backend (kept as
+/// the baseline the engine demo is compared against).
 pub fn run_sim_serving_demo(a: &ServeArgs) -> Result<String> {
-    let (vocab, max_seq, dim) = (256usize, 256usize, 128usize);
-    let backend =
-        SimBackend::with_ap_gemm(vocab, max_seq, vec![1, 2, 4, 8], dim, 2, 2, a.seed ^ 0xAB);
+    let (backend, vocab) = ap_sim_backend(a.seed);
     let packed_bytes = backend.packed_weight_bytes();
-    let (mut report, sched) = drive(backend, a)?;
-    let s = sched.backend().ap_stats().expect("ap backend");
+    let mut sched = Scheduler::new(
+        backend,
+        SchedulerConfig { kv_blocks: 128, block_tokens: 16, max_running: 8 },
+    );
+    let (mut report, _) = drive(&mut sched, a, vocab)?;
+    report.push_str(&pack_once_stats(sched.backend(), packed_bytes));
+    Ok(report)
+}
+
+/// Continuous-batching engine demo over the pack-once AP-GEMM sim
+/// backend: batcher-fed admission, incremental KV with swap preemption,
+/// per-step join/leave batching — weights decomposed+packed once at
+/// startup, every step packing only its activation batch through the
+/// recycling arena, with the counters to prove both appended.
+pub fn run_engine_serving_demo(a: &ServeArgs) -> Result<String> {
+    let (backend, vocab) = ap_sim_backend(a.seed);
+    let packed_bytes = backend.packed_weight_bytes();
+    let mut eng = Engine::new(
+        backend,
+        EngineConfig {
+            kv_blocks: 64,
+            block_tokens: 16,
+            max_running: 8,
+            batcher: super::batcher::BatcherConfig {
+                batch_sizes: vec![1, 2, 4, 8],
+                max_wait: Duration::from_millis(2),
+            },
+        },
+    );
+    let (mut report, _) = drive(&mut eng, a, vocab)?;
+    let c = eng.counters();
     report.push_str(&format!(
-        "pack-once: weight packs {}, packed weight bytes {}, activation packs {}, \
-         arena allocs {}, arena reuses {}\n",
-        s.weight_packs, packed_bytes, s.act_packs, s.arena_allocs, s.arena_reuses
+        "engine: steps {}, prefills {}, preemptions {}, resumes {}, rejected {}\n",
+        c.steps, c.prefills, c.preemptions, c.resumes, c.rejected
     ));
+    report.push_str(&format!(
+        "kv: {}/{} blocks free after drain\n",
+        eng.pool().free_blocks(),
+        eng.pool().total_blocks()
+    ));
+    report.push_str(&pack_once_stats(eng.backend(), packed_bytes));
     Ok(report)
 }
 
 /// Pick the demo the build supports: real PJRT artifacts when the `pjrt`
-/// feature is compiled in (unless `--sim`), the pack-once sim backend
-/// otherwise.  Shared by `apllm serve` and the llm_serving example.
+/// feature is compiled in (unless `--sim`); otherwise the pack-once sim
+/// backend, through the continuous-batching engine unless
+/// `--group-scheduler`.  Shared by `apllm serve` and the llm_serving
+/// example.
 pub fn run_demo(a: &ServeArgs) -> Result<String> {
     #[cfg(feature = "pjrt")]
-    let result = if a.sim { run_sim_serving_demo(a) } else { run_serving_demo(a) };
+    if !a.sim {
+        return run_serving_demo(a);
+    }
     #[cfg(not(feature = "pjrt"))]
-    let result = {
-        if !a.sim {
-            eprintln!("(pjrt feature not compiled in — serving over the pack-once sim backend)");
-        }
+    if !a.sim {
+        eprintln!("(pjrt feature not compiled in — serving over the pack-once sim backend)");
+    }
+    if a.engine {
+        run_engine_serving_demo(a)
+    } else {
         run_sim_serving_demo(a)
-    };
-    result
+    }
 }
 
 pub fn cmd_serve(args: &[String]) {
-    let a = parse_args(args);
+    let a = match parse_args(args) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("serve: {e}");
+            std::process::exit(2);
+        }
+    };
     match run_demo(&a) {
         Ok(report) => println!("{report}"),
         Err(e) => {
             eprintln!("serve failed: {e:#}");
             std::process::exit(1);
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_args_roundtrip() {
+        let a = parse_args(&s(&["--requests", "3", "--rate", "2.5", "--sim"])).unwrap();
+        assert_eq!(a.requests, 3);
+        assert_eq!(a.rate_per_s, 2.5);
+        assert!(a.sim);
+        assert!(a.engine, "engine is the default");
+        let a = parse_args(&s(&["--group-scheduler"])).unwrap();
+        assert!(!a.engine);
+    }
+
+    #[test]
+    fn parse_args_bad_flag_is_an_error_not_a_panic() {
+        let e = parse_args(&s(&["--bogus"])).unwrap_err().to_string();
+        assert!(e.contains("--bogus") && e.contains("--requests"), "lists options: {e}");
+        let e = parse_args(&s(&["--requests"])).unwrap_err().to_string();
+        assert!(e.contains("needs a value") && e.contains("--rate"), "{e}");
+        let e = parse_args(&s(&["--requests", "many"])).unwrap_err().to_string();
+        assert!(e.contains("expects a count") && e.contains("many"), "{e}");
     }
 }

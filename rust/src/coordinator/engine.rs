@@ -1,0 +1,611 @@
+//! Continuous-batching decode engine — the serving loop that finally
+//! composes the coordinator's pieces end to end (Orca/vLLM-style
+//! iteration-level scheduling, per PAPERS.md):
+//!
+//! * the [`Batcher`] shapes raw arrivals into admission groups (flushed
+//!   early whenever the engine is otherwise idle);
+//! * the [`KvPool`] owns per-sequence block tables, growing them one
+//!   token at a time as sequences decode;
+//! * each [`Engine::step`] runs **one batched decode over whatever is
+//!   resident** — sequences join and leave the batch every step instead
+//!   of waiting for a group to drain;
+//! * logits come from the backend's pack-once pipeline
+//!   ([`SimBackend::with_ap_gemm`](super::backend::SimBackend::with_ap_gemm)
+//!   routes them through the `PackedWeightStore`/`PackArena` prepacked
+//!   kernel path), so the §3.4 memory-management story is exercised under
+//!   real churn.
+//!
+//! ## The step loop
+//!
+//! 1. **Arrivals** — poll the batcher; released groups enter the
+//!    admission queue (FIFO).
+//! 2. **Swap-in** — preempted sequences re-acquire KV blocks and rejoin
+//!    the batch, oldest first, before any new admission.
+//! 3. **Admission + prefill** — while a decode slot and the *prompt's*
+//!    KV blocks are free, pop the queue, prefill (batch-1) and emit the
+//!    first token.  Only the prompt is reserved up front — unlike the
+//!    group scheduler, decode-time KV is claimed incrementally, which is
+//!    what lets more sequences share the pool (and what makes preemption
+//!    reachable).
+//! 4. **Decode** — every resident sequence first grows its block table by
+//!    one slot through the pool; an [`KvError::OutOfBlocks`] clean
+//!    failure triggers **preemption** (below).  Survivors then advance
+//!    one token in a single batched backend call.
+//! 5. **Completion** — finished sequences release their blocks and emit
+//!    a [`Response`].  (Completion also runs *before* decode so freshly
+//!    finished sequences free blocks for the current step.)
+//!
+//! ## Preemption policy
+//!
+//! Swap-style, youngest-victim-first: when the pool cannot grow a
+//! sequence, the most recently admitted *other* sequence is swapped out —
+//! its (host-resident) [`SeqKv`] state is kept, its pool blocks are
+//! released, and it joins a FIFO resume queue that has priority over new
+//! admissions.  Submission rejects any request whose full
+//! `prompt + max_new` stream exceeds the backend context window (no
+//! silently truncated tails) or whose KV could never fit the pool alone,
+//! the latter of which guarantees
+//! the block-requester can always be satisfied after preempting — the
+//! engine cannot deadlock, and every step a non-empty batch generates at
+//! least one token, so it cannot livelock either.  Because resume keeps
+//! the KV state and [`sample_token`] is seeded per (request, step),
+//! preemption never changes a request's token stream.
+
+use super::backend::{gather_kv_refs, Backend, HasSeqKv, SeqKv};
+use super::batcher::{Batcher, BatcherConfig};
+use super::kv::{KvError, KvPool};
+use super::metrics::Metrics;
+use super::request::{sample_token, Request, Response};
+use super::server::Stepper;
+use crate::anyhow::{bail, Result};
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// KV pool capacity in blocks.
+    pub kv_blocks: usize,
+    /// Tokens per KV block.
+    pub block_tokens: usize,
+    /// Max sequences decoding concurrently (clamped to the backend's
+    /// largest supported batch).
+    pub max_running: usize,
+    /// Admission batcher (deadline + supported group sizes).
+    pub batcher: BatcherConfig,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            kv_blocks: 64,
+            block_tokens: 16,
+            max_running: 8,
+            // zero deadline: groups release as soon as the engine polls —
+            // iteration-level scheduling rarely wants to hold arrivals back
+            batcher: BatcherConfig { batch_sizes: vec![1, 2, 4, 8], max_wait: Duration::ZERO },
+        }
+    }
+}
+
+/// Conservation/churn counters the integration tests assert on.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct EngineCounters {
+    pub submitted: u64,
+    /// Requests dropped at submit (empty/oversized prompt, zero budget, or
+    /// a KV footprint the pool could never hold).
+    pub rejected: u64,
+    pub prefills: u64,
+    pub preemptions: u64,
+    pub resumes: u64,
+    pub completed: u64,
+    pub steps: u64,
+}
+
+/// One resident (or swapped-out) sequence.
+struct RunSeq {
+    req: Request,
+    kv: SeqKv,
+    next_token: i32,
+    generated: Vec<i32>,
+    first_token_at: Instant,
+    /// Admission order (monotone, assigned once at first admission and
+    /// kept across preemption) — victim selection preempts the largest,
+    /// so a just-resumed old sequence is never mistaken for the youngest.
+    admitted_at: u64,
+}
+
+impl HasSeqKv for RunSeq {
+    fn kv_mut(&mut self) -> &mut SeqKv {
+        &mut self.kv
+    }
+}
+
+/// The continuous-batching engine.  Single-threaded state machine — wrap
+/// it in a [`Server`](super::server::Server) for the channel serve loop.
+pub struct Engine<B: Backend> {
+    backend: B,
+    cfg: EngineConfig,
+    pool: KvPool,
+    batcher: Batcher,
+    /// Admission queue (batcher-released groups, FIFO).
+    wait: VecDeque<Request>,
+    /// Resident sequences.  Mostly admission-ordered (resumes re-append
+    /// at the back), so victim selection compares `admitted_at` rather
+    /// than trusting positions.
+    running: Vec<RunSeq>,
+    /// Swapped-out sequences awaiting blocks, FIFO.
+    swapped: VecDeque<RunSeq>,
+    /// Monotone admission counter feeding `RunSeq::admitted_at`.
+    admissions: u64,
+    pub metrics: Metrics,
+    counters: EngineCounters,
+}
+
+impl<B: Backend> Engine<B> {
+    pub fn new(backend: B, cfg: EngineConfig) -> Self {
+        let cap = cfg.max_running.min(*backend.supported_batches().last().unwrap()).max(1);
+        let cfg = EngineConfig { max_running: cap, ..cfg };
+        Self {
+            pool: KvPool::new(cfg.kv_blocks, cfg.block_tokens),
+            batcher: Batcher::new(cfg.batcher.clone()),
+            backend,
+            cfg,
+            wait: VecDeque::new(),
+            running: Vec::new(),
+            swapped: VecDeque::new(),
+            admissions: 0,
+            metrics: Metrics::default(),
+            counters: EngineCounters::default(),
+        }
+    }
+
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    pub fn pool(&self) -> &KvPool {
+        &self.pool
+    }
+
+    pub fn counters(&self) -> EngineCounters {
+        self.counters
+    }
+
+    pub fn queued(&self) -> usize {
+        self.batcher.queued() + self.wait.len()
+    }
+
+    pub fn running(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn swapped(&self) -> usize {
+        self.swapped.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.batcher.queued() == 0
+            && self.wait.is_empty()
+            && self.running.is_empty()
+            && self.swapped.is_empty()
+    }
+
+    /// Submit a request.  Requests that could never run to completion —
+    /// empty or oversized prompt, zero token budget, a `prompt + max_new`
+    /// stream exceeding the backend's context window, or a KV footprint
+    /// exceeding the whole pool (the preemption progress guarantee needs
+    /// one sequence to fit alone) — are rejected immediately and counted,
+    /// never queued.  Rejecting up front keeps the engine's contract
+    /// honest: an accepted request always gets its full `max_new` tokens,
+    /// identical to the unbatched path, never a silently truncated tail.
+    pub fn submit(&mut self, req: Request) {
+        self.metrics.requests_in += 1;
+        self.counters.submitted += 1;
+        let budget = req.prompt.len() + req.params.max_new_tokens;
+        if req.prompt.is_empty()
+            || req.prompt.len() > self.backend.max_prompt()
+            || req.params.max_new_tokens == 0
+            || budget > self.backend.max_seq()
+            || self.pool.blocks_for(budget) > self.pool.total_blocks()
+        {
+            self.counters.rejected += 1;
+            self.metrics.requests_done += 1;
+            return;
+        }
+        self.batcher.push(req);
+    }
+
+    /// Swap out the youngest resident sequence other than `keep`: its pool
+    /// blocks are released (the KV data itself lives host-side in `SeqKv`)
+    /// and it joins the resume queue.  Youth is judged by the original
+    /// admission order, not the position in `running` — a resumed old
+    /// sequence sits at the back of the vec but must not ping-pong
+    /// straight back out.
+    fn preempt_youngest_except(&mut self, keep: u64) -> Result<()> {
+        let victim_idx = self
+            .running
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.req.id.0 != keep)
+            .max_by_key(|(_, s)| s.admitted_at)
+            .map(|(i, _)| i);
+        let Some(vi) = victim_idx else {
+            // unreachable given the submit() capacity guard — a lone
+            // sequence can always grow to its own prompt+max_new budget
+            bail!("KV pool exhausted by a single sequence (pool smaller than one request)");
+        };
+        let victim = self.running.remove(vi);
+        self.pool.release(victim.req.id.0)?;
+        self.counters.preemptions += 1;
+        self.metrics.preemptions += 1;
+        self.swapped.push_back(victim);
+        Ok(())
+    }
+
+    /// Move finished sequences out of the running set, releasing blocks.
+    fn collect_finished(&mut self, done: &mut Vec<Response>) -> Result<()> {
+        let mut i = 0;
+        while i < self.running.len() {
+            let finished = self.running[i].generated.len()
+                >= self.running[i].req.params.max_new_tokens
+                || self.running[i].kv.pos >= self.backend.max_seq();
+            if !finished {
+                i += 1;
+                continue;
+            }
+            // Vec::remove, not swap_remove: keeps `running` (and thus the
+            // decode batch) in a stable order; victim selection itself
+            // goes by `admitted_at`, not position.
+            let a = self.running.remove(i);
+            self.pool.release(a.req.id.0)?;
+            self.counters.completed += 1;
+            self.metrics.requests_done += 1;
+            let total = Instant::now().duration_since(a.req.arrived).as_secs_f64();
+            self.metrics.total.record(total);
+            done.push(Response {
+                id: a.req.id,
+                tokens: a.generated,
+                queue_s: 0.0,
+                total_s: total,
+                ttft_s: a.first_token_at.duration_since(a.req.arrived).as_secs_f64(),
+            });
+        }
+        Ok(())
+    }
+
+    /// One engine iteration (see the module docs for the five phases).
+    /// Returns the responses completed this step.
+    pub fn step(&mut self) -> Result<Vec<Response>> {
+        let now = Instant::now();
+        self.counters.steps += 1;
+
+        // 1: arrivals — batcher groups flow into the admission queue; an
+        // otherwise-empty engine flushes the batcher instead of idling
+        // through its deadline.
+        while let Some(group) = self.batcher.poll(now) {
+            self.wait.extend(group);
+        }
+        if self.wait.is_empty() && self.running.is_empty() && self.swapped.is_empty() {
+            self.wait.extend(self.batcher.flush());
+        }
+
+        // 2: swap-in — resume preempted sequences (FIFO) before admitting
+        // anything new; they are older by definition.
+        while self.running.len() < self.cfg.max_running {
+            let Some(front) = self.swapped.front() else { break };
+            let kv_tokens = front.kv.pos;
+            if !self.pool.can_admit(kv_tokens) {
+                break;
+            }
+            let seq = self.swapped.pop_front().unwrap();
+            self.pool.admit(seq.req.id.0, kv_tokens)?;
+            self.counters.resumes += 1;
+            self.metrics.resumes += 1;
+            self.running.push(seq);
+        }
+
+        // 3: admission + prefill — reserve only the prompt's KV; decode
+        // growth is incremental (that is the continuous-batching bet).
+        while self.swapped.is_empty() && self.running.len() < self.cfg.max_running {
+            let Some(front) = self.wait.front() else { break };
+            if !self.pool.can_admit(front.prompt.len()) {
+                break; // head-of-line waits for memory
+            }
+            let req = self.wait.pop_front().unwrap();
+            self.pool.admit(req.id.0, req.prompt.len())?;
+            self.metrics.queue.record(now.duration_since(req.arrived).as_secs_f64());
+            let (logits, kv) = match self.backend.prefill_one(&req.prompt) {
+                Ok(r) => r,
+                Err(e) => {
+                    // a failed prefill must not strand the admission's
+                    // blocks — release before surfacing the error
+                    self.pool.release(req.id.0)?;
+                    return Err(e);
+                }
+            };
+            self.counters.prefills += 1;
+            let tok = sample_token(&logits, &req.params, 0);
+            let first_token_at = Instant::now();
+            self.metrics.ttft.record(first_token_at.duration_since(req.arrived).as_secs_f64());
+            self.metrics.tokens_generated += 1;
+            let admitted_at = self.admissions;
+            self.admissions += 1;
+            self.running.push(RunSeq {
+                req,
+                kv,
+                next_token: tok,
+                generated: vec![tok],
+                first_token_at,
+                admitted_at,
+            });
+        }
+
+        let mut done = Vec::new();
+        // early completion: a prefill can satisfy max_new == 1 outright,
+        // and freshly freed blocks should help the decode below
+        self.collect_finished(&mut done)?;
+
+        // 4: decode — secure one KV slot per participant (preempting on
+        // the allocator's clean failure), then one batched call.
+        let mut ids: Vec<u64> = self.running.iter().map(|s| s.req.id.0).collect();
+        let mut i = 0;
+        while i < ids.len() {
+            let id = ids[i];
+            if !self.running.iter().any(|s| s.req.id.0 == id) {
+                // was preempted as a victim below: drop from this batch
+                // (its pool table — including any slot it secured this
+                // step — was released wholesale; resume re-admits at the
+                // sequence's true KV length)
+                ids.remove(i);
+                continue;
+            }
+            match self.pool.append_token(id) {
+                Ok(()) => i += 1,
+                Err(KvError::OutOfBlocks { .. }) => self.preempt_youngest_except(id)?,
+                Err(e) => return Err(e.into()),
+            }
+        }
+        if !ids.is_empty() {
+            let idx: Vec<usize> = self
+                .running
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| ids.contains(&s.req.id.0))
+                .map(|(i, _)| i)
+                .collect();
+            let tokens: Vec<i32> = idx.iter().map(|&i| self.running[i].next_token).collect();
+            let mut kv_refs = gather_kv_refs(&mut self.running, &idx);
+            let logits = self.backend.decode_batch(&tokens, &mut kv_refs)?;
+            self.metrics.groups_executed += 1;
+            self.metrics.batch_occupancy_sum += idx.len() as u64;
+            for (j, &i) in idx.iter().enumerate() {
+                let step = self.running[i].generated.len();
+                let tok = sample_token(&logits[j], &self.running[i].req.params, step);
+                let a = &mut self.running[i];
+                a.next_token = tok;
+                a.generated.push(tok);
+                self.metrics.tokens_generated += 1;
+            }
+        }
+
+        // 5: completion
+        self.collect_finished(&mut done)?;
+        Ok(done)
+    }
+
+    /// Step until every submitted request completed; returns all responses.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Response>> {
+        let mut out = Vec::new();
+        self.metrics.start();
+        while !self.is_idle() {
+            out.extend(self.step()?);
+        }
+        self.metrics.finish();
+        Ok(out)
+    }
+}
+
+impl<B: Backend> Stepper for Engine<B> {
+    fn submit(&mut self, r: Request) {
+        Engine::submit(self, r);
+    }
+
+    fn step(&mut self) -> Result<Vec<Response>> {
+        Engine::step(self)
+    }
+
+    fn is_idle(&self) -> bool {
+        Engine::is_idle(self)
+    }
+
+    fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    fn metrics_mut(&mut self) -> &mut Metrics {
+        &mut self.metrics
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::SimBackend;
+    use crate::coordinator::request::GenParams;
+    use crate::util::proptest::forall;
+
+    fn cfg(kv_blocks: usize, block_tokens: usize, max_running: usize) -> EngineConfig {
+        EngineConfig { kv_blocks, block_tokens, max_running, ..EngineConfig::default() }
+    }
+
+    fn req(id: u64, prompt_len: usize, max_new: usize) -> Request {
+        Request::new(
+            id,
+            (1..=prompt_len as i32).collect(),
+            GenParams { max_new_tokens: max_new, sample: false, seed: id },
+        )
+    }
+
+    /// Unbatched ground truth: the same request driven alone, straight
+    /// against a backend with identical construction parameters.
+    fn reference(backend: &mut SimBackend, prompt: &[i32], params: &GenParams) -> Vec<i32> {
+        super::super::backend::drive_unbatched(backend, prompt, params).unwrap()
+    }
+
+    #[test]
+    fn single_request_generates_exactly_max_new() {
+        let mut e = Engine::new(SimBackend::new(64, 64, vec![1, 2, 4, 8]), cfg(64, 8, 4));
+        e.submit(req(1, 5, 7));
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].tokens.len(), 7);
+        assert_eq!(e.pool().free_blocks(), 64, "all blocks returned");
+        assert_eq!(e.counters().completed, 1);
+    }
+
+    #[test]
+    fn sequences_join_and_leave_mid_flight() {
+        // iteration-level scheduling: short and long requests share steps
+        let mut e = Engine::new(SimBackend::new(64, 64, vec![1, 2, 4, 8]), cfg(64, 8, 8));
+        e.submit(req(0, 2, 2));
+        e.submit(req(1, 3, 12));
+        e.submit(req(2, 4, 1));
+        let mut out = e.run_to_completion().unwrap();
+        out.sort_by_key(|r| r.id);
+        assert_eq!(out[0].tokens.len(), 2);
+        assert_eq!(out[1].tokens.len(), 12);
+        assert_eq!(out[2].tokens.len(), 1);
+        // the long request kept decoding after the short ones left
+        assert!(e.metrics.groups_executed >= 11);
+    }
+
+    #[test]
+    fn preemption_swaps_out_and_resumes_correctly() {
+        // pool: 4 blocks × 4 tokens.  Two requests of budget 16 tokens
+        // (4 blocks) each — both admit on their 8-token prompts (2 blocks
+        // each), then decode growth exhausts the pool and the younger one
+        // must be swapped out and finish later.
+        let mut plain = SimBackend::new(64, 64, vec![1, 2, 4, 8]);
+        let want_a = reference(&mut plain, &req(0, 8, 8).prompt, &req(0, 8, 8).params);
+        let want_b = reference(&mut plain, &req(1, 8, 8).prompt, &req(1, 8, 8).params);
+
+        let mut e = Engine::new(SimBackend::new(64, 64, vec![1, 2, 4, 8]), cfg(4, 4, 4));
+        e.submit(req(0, 8, 8));
+        e.submit(req(1, 8, 8));
+        let mut out = e.run_to_completion().unwrap();
+        out.sort_by_key(|r| r.id);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].tokens, want_a, "preemption must not change tokens");
+        assert_eq!(out[1].tokens, want_b);
+        let c = e.counters();
+        assert!(c.preemptions >= 1, "pool pressure must trigger preemption");
+        assert_eq!(c.resumes, c.preemptions, "every swap-out swapped back in");
+        assert_eq!(e.pool().free_blocks(), 4, "no leaked blocks");
+        e.pool().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn rejects_what_can_never_run() {
+        let mut e = Engine::new(SimBackend::new(64, 64, vec![1, 2]), cfg(2, 4, 2));
+        e.submit(req(0, 0, 4)); // empty prompt
+        e.submit(req(1, 33, 4)); // over max_prompt (32)
+        e.submit(req(2, 4, 0)); // zero budget
+        e.submit(req(3, 6, 8)); // 14 tokens > 2×4 pool capacity
+        e.submit(req(4, 3, 4)); // fits
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].id.0, 4);
+        assert_eq!(e.counters().rejected, 4);
+        assert_eq!(e.metrics.requests_done, 5, "rejects are accounted");
+
+        // context-window guard, with a pool big enough that capacity is
+        // not the binding constraint: 20 + 60 > max_seq 64 must reject
+        // up front rather than return a silently truncated stream
+        let mut e2 = Engine::new(SimBackend::new(64, 64, vec![1, 2]), cfg(64, 4, 2));
+        e2.submit(req(0, 20, 60));
+        assert_eq!(e2.counters().rejected, 1);
+        e2.submit(req(1, 20, 44)); // exactly max_seq: runs to completion
+        let out = e2.run_to_completion().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].tokens.len(), 44);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let run = || {
+            let mut e = Engine::new(SimBackend::new(64, 64, vec![1, 2, 4, 8]), cfg(8, 4, 4));
+            for i in 0..6 {
+                e.submit(req(i, 3 + i as usize % 4, 6));
+            }
+            let mut out = e.run_to_completion().unwrap();
+            out.sort_by_key(|r| r.id);
+            out.iter().map(|r| r.tokens.clone()).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn batch_composition_does_not_change_tokens() {
+        // the core continuous-batching correctness claim: whatever the
+        // admission interleaving, each request's stream matches the
+        // unbatched reference
+        let mut plain = SimBackend::new(64, 64, vec![1, 2, 4, 8]);
+        let reqs: Vec<Request> = (0..10)
+            .map(|i| req(i, 1 + (i as usize * 3) % 9, 1 + (i as usize * 5) % 11))
+            .collect();
+        let want: Vec<Vec<i32>> =
+            reqs.iter().map(|r| reference(&mut plain, &r.prompt, &r.params)).collect();
+        for (kv_blocks, max_running) in [(64, 8), (6, 3), (5, 8)] {
+            let backend = SimBackend::new(64, 64, vec![1, 2, 4, 8]);
+            let mut e = Engine::new(backend, cfg(kv_blocks, 4, max_running));
+            for r in &reqs {
+                e.submit(r.clone());
+            }
+            let mut out = e.run_to_completion().unwrap();
+            out.sort_by_key(|r| r.id);
+            assert_eq!(out.len(), reqs.len());
+            for (r, w) in out.iter().zip(&want) {
+                assert_eq!(&r.tokens, w, "req {} under pool={kv_blocks}", r.id.0);
+            }
+            assert_eq!(e.pool().free_blocks(), kv_blocks);
+        }
+    }
+
+    #[test]
+    fn prop_kv_churn_conserves_blocks() {
+        // the KvPool + engine churn property: random admit/decode/finish/
+        // preempt interleavings hold used+free == total and never
+        // double-own a block, checked after EVERY step
+        forall(24, |rng| {
+            let block_tokens = rng.usize(2, 6);
+            let kv_blocks = rng.usize(3, 16);
+            let max_running = rng.usize(1, 9);
+            let mut e = Engine::new(
+                SimBackend::new(32, 128, vec![1, 2, 4, 8]),
+                cfg(kv_blocks, block_tokens, max_running),
+            );
+            let n = rng.usize(1, 20);
+            let mut pending: Vec<Request> = (0..n)
+                .map(|i| req(i as u64, rng.usize(1, 12), rng.usize(1, 10)))
+                .collect();
+            let mut out = Vec::new();
+            while !pending.is_empty() || !e.is_idle() {
+                // interleave arrivals with steps
+                for _ in 0..rng.usize(0, 3).min(pending.len()) {
+                    e.submit(pending.remove(0));
+                }
+                out.extend(e.step().unwrap());
+                e.pool().check_invariants().unwrap_or_else(|err| panic!("invariant: {err}"));
+                assert_eq!(
+                    e.pool().used_blocks() + e.pool().free_blocks(),
+                    e.pool().total_blocks()
+                );
+            }
+            assert_eq!(e.pool().free_blocks(), kv_blocks, "drained pool leaks nothing");
+            let c = e.counters();
+            assert_eq!(c.completed + c.rejected, c.submitted, "every request resolves");
+            assert_eq!(out.len() as u64, c.completed);
+            assert_eq!(c.resumes, c.preemptions);
+        });
+    }
+}

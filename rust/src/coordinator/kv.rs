@@ -47,6 +47,12 @@ impl KvPool {
         self.total_blocks - self.free.len()
     }
 
+    /// Pool capacity — `used_blocks() + free_blocks()` always equals this
+    /// (the conservation law the churn tests pin down).
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
+    }
+
     pub fn block_tokens(&self) -> usize {
         self.block_tokens
     }

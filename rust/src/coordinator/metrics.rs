@@ -49,6 +49,10 @@ pub struct Metrics {
     pub tokens_generated: u64,
     pub groups_executed: u64,
     pub batch_occupancy_sum: u64,
+    /// Sequences swapped out by the engine when the KV pool ran dry.
+    pub preemptions: u64,
+    /// Preempted sequences swapped back in (resumed decoding).
+    pub resumes: u64,
     pub queue: LatencyStats,
     pub ttft: LatencyStats,
     pub total: LatencyStats,
@@ -93,7 +97,8 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         format!(
-            "requests: {}/{} done | tokens: {} | wall: {:.2}s | {:.1} tok/s | occupancy {:.2}\n\
+            "requests: {}/{} done | tokens: {} | wall: {:.2}s | {:.1} tok/s | occupancy {:.2} | \
+             preempted {} (resumed {})\n\
              queue  p50/p95/max: {:.1}/{:.1}/{:.1} ms\n\
              ttft   p50/p95/max: {:.1}/{:.1}/{:.1} ms\n\
              total  p50/p95/max: {:.1}/{:.1}/{:.1} ms",
@@ -103,6 +108,8 @@ impl Metrics {
             self.wall_seconds(),
             self.throughput_tok_s(),
             self.mean_occupancy(),
+            self.preemptions,
+            self.resumes,
             self.queue.percentile(50.0) * 1e3,
             self.queue.percentile(95.0) * 1e3,
             self.queue.max() * 1e3,

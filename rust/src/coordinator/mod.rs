@@ -13,15 +13,23 @@
 //!   artifacts, `pjrt` feature) and `SimBackend` (deterministic stand-in
 //!   for tests and the coordinator bench; `with_ap_gemm` serves real
 //!   bitmm logits through the §3.3 pack-once pipeline).
-//! * [`scheduler`]— continuous-batching scheduler over the backend trait:
-//!   admission, prefill/decode interleaving, slot recycling.
+//! * [`scheduler`]— group scheduler over the backend trait: admission,
+//!   prefill/decode interleaving, slot recycling (reserves each
+//!   sequence's full budget up front).
+//! * [`engine`]   — **continuous-batching decode engine**: batcher-fed
+//!   admission, incremental KV growth with swap-style preemption on the
+//!   allocator's clean failure, per-step join/leave batching over the
+//!   pack-once kernel path — the serving loop the ROADMAP's heavy-traffic
+//!   north star needs.
 //! * [`metrics`]  — counters + latency percentiles.
-//! * [`server`]   — ties engine + batcher into a multi-threaded serve
-//!   loop over mpsc channels (PJRT handles stay on one executor thread).
+//! * [`server`]   — the [`server::Stepper`] abstraction (scheduler and
+//!   engine both implement it), the channel serve loop, and the
+//!   wall-clock trace replay driver.
 
 pub mod backend;
 pub mod batcher;
 pub mod cli;
+pub mod engine;
 pub mod kv;
 pub mod metrics;
 pub mod request;
@@ -30,12 +38,13 @@ pub mod scheduler;
 pub mod server;
 pub mod trace;
 
-pub use backend::{ApStats, Backend, SimBackend};
+pub use backend::{drive_unbatched, ApStats, Backend, SimBackend};
 pub use batcher::{Batcher, BatcherConfig};
+pub use engine::{Engine, EngineConfig, EngineCounters};
 pub use kv::{BlockId, KvPool};
 pub use metrics::{LatencyStats, Metrics};
-pub use request::{GenParams, Request, RequestId, Response};
+pub use request::{sample_token, GenParams, Request, RequestId, Response};
 pub use router::{RoutePolicy, Router};
 pub use scheduler::{Scheduler, SchedulerConfig};
-pub use server::{Server, ServerConfig};
+pub use server::{replay_trace, Server, ServerConfig, Stepper};
 pub use trace::{ArrivalKind, TraceConfig};

@@ -37,6 +37,33 @@ impl Request {
     }
 }
 
+/// Pick the next token from a logits row: greedy argmax, or (when
+/// `params.sample`) argmax over Gumbel-perturbed logits seeded by the
+/// request seed and the decode step.  The perturbation stream depends on
+/// nothing else, so batched, unbatched and preempted-then-resumed
+/// execution of the same request produce the **identical** token stream —
+/// the property the engine's correctness tests pin down.
+pub fn sample_token(logits: &[f32], params: &GenParams, step: usize) -> i32 {
+    let mut rng = crate::util::Rng::with_seed(
+        params.seed ^ (step as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    );
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        let v = if params.sample {
+            // seeded Gumbel-max: argmax(v + G) samples softmax(v)
+            v - (-rng.f64().max(1e-12).ln()).ln() as f32
+        } else {
+            v
+        };
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
 /// A completed generation.
 #[derive(Debug, Clone)]
 pub struct Response {

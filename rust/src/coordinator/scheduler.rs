@@ -14,11 +14,11 @@
 //!   4. **Completion** — finished sequences release their blocks and
 //!      produce a [`Response`].
 
-use super::backend::{Backend, SeqKv};
+use super::backend::{gather_kv_refs, Backend, HasSeqKv, SeqKv};
 use super::kv::KvPool;
 use super::metrics::Metrics;
-use super::request::{Request, Response};
-use crate::util::Rng;
+use super::request::{sample_token, Request, Response};
+use super::server::Stepper;
 use crate::anyhow::Result;
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -47,6 +47,12 @@ struct Active {
     first_token_at: Instant,
 }
 
+impl HasSeqKv for Active {
+    fn kv_mut(&mut self) -> &mut SeqKv {
+        &mut self.kv
+    }
+}
+
 /// The scheduler: single-threaded state machine (the server wraps it).
 pub struct Scheduler<B: Backend> {
     backend: B,
@@ -55,7 +61,6 @@ pub struct Scheduler<B: Backend> {
     queue: VecDeque<Request>,
     running: Vec<Active>,
     pub metrics: Metrics,
-    rng: Rng,
 }
 
 impl<B: Backend> Scheduler<B> {
@@ -69,7 +74,6 @@ impl<B: Backend> Scheduler<B> {
             queue: VecDeque::new(),
             running: Vec::new(),
             metrics: Metrics::default(),
-            rng: Rng::with_seed(0x5EED),
         }
     }
 
@@ -94,25 +98,6 @@ impl<B: Backend> Scheduler<B> {
         self.queue.is_empty() && self.running.is_empty()
     }
 
-    fn sample(&mut self, logits: &[f32], sample: bool, seed: u64) -> i32 {
-        let mut best = 0usize;
-        let mut best_v = f32::NEG_INFINITY;
-        for (i, &v) in logits.iter().enumerate() {
-            let v = if sample {
-                // seeded Gumbel perturbation (deterministic per request)
-                let mut r = Rng::with_seed(seed ^ (i as u64) ^ self.rng.u64());
-                v - (-r.f64().max(1e-12).ln()).ln() as f32
-            } else {
-                v
-            };
-            if v > best_v {
-                best_v = v;
-                best = i;
-            }
-        }
-        best as i32
-    }
-
     /// One scheduling iteration.  Returns completed responses.
     pub fn step(&mut self) -> Result<Vec<Response>> {
         let now = Instant::now();
@@ -133,8 +118,16 @@ impl<B: Backend> Scheduler<B> {
             let req = self.queue.pop_front().unwrap();
             self.pool.admit(req.id.0, budget)?;
             self.metrics.queue.record(now.duration_since(req.arrived).as_secs_f64());
-            let (logits, kv) = self.backend.prefill_one(&req.prompt)?;
-            let tok = self.sample(&logits, req.params.sample, req.params.seed);
+            let (logits, kv) = match self.backend.prefill_one(&req.prompt) {
+                Ok(r) => r,
+                Err(e) => {
+                    // a failed prefill must not strand the admission's
+                    // blocks — release before surfacing the error
+                    self.pool.release(req.id.0)?;
+                    return Err(e);
+                }
+            };
+            let tok = sample_token(&logits, &req.params, 0);
             let first_token_at = Instant::now();
             self.metrics.ttft.record(first_token_at.duration_since(req.arrived).as_secs_f64());
             self.metrics.tokens_generated += 1;
@@ -159,26 +152,13 @@ impl<B: Backend> Scheduler<B> {
         }
         if !decode_idx.is_empty() {
             let tokens: Vec<i32> = decode_idx.iter().map(|&i| self.running[i].next_token).collect();
-            // split_at_mut gymnastics: collect &mut SeqKv in index order
-            let mut kv_refs: Vec<&mut SeqKv> = Vec::with_capacity(decode_idx.len());
-            {
-                let mut rest: &mut [Active] = &mut self.running;
-                let mut base = 0usize;
-                for &i in &decode_idx {
-                    let (_, tail) = rest.split_at_mut(i - base);
-                    let (head, tail2) = tail.split_at_mut(1);
-                    kv_refs.push(&mut head[0].kv);
-                    rest = tail2;
-                    base = i + 1;
-                }
-            }
+            let mut kv_refs = gather_kv_refs(&mut self.running, &decode_idx);
             let logits = self.backend.decode_batch(&tokens, &mut kv_refs)?;
             self.metrics.groups_executed += 1;
             self.metrics.batch_occupancy_sum += decode_idx.len() as u64;
             for (j, &i) in decode_idx.iter().enumerate() {
-                let (sample, seed) =
-                    (self.running[i].req.params.sample, self.running[i].req.params.seed);
-                let tok = self.sample(&logits[j], sample, seed);
+                let step = self.running[i].generated.len();
+                let tok = sample_token(&logits[j], &self.running[i].req.params, step);
                 let a = &mut self.running[i];
                 a.next_token = tok;
                 a.generated.push(tok);
@@ -230,6 +210,28 @@ impl<B: Backend> Scheduler<B> {
     /// KV pool introspection for tests.
     pub fn pool(&self) -> &KvPool {
         &self.pool
+    }
+}
+
+impl<B: Backend> Stepper for Scheduler<B> {
+    fn submit(&mut self, r: Request) {
+        Scheduler::submit(self, r);
+    }
+
+    fn step(&mut self) -> Result<Vec<Response>> {
+        Scheduler::step(self)
+    }
+
+    fn is_idle(&self) -> bool {
+        Scheduler::is_idle(self)
+    }
+
+    fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    fn metrics_mut(&mut self) -> &mut Metrics {
+        &mut self.metrics
     }
 }
 

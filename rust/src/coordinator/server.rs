@@ -1,16 +1,33 @@
-//! The serve loop: channels in, responses out.
+//! The serve loop: channels in, responses out — plus the [`Stepper`]
+//! abstraction both serving state machines implement and the wall-clock
+//! trace replay driver the demos and benches share.
 //!
 //! PJRT handles are not `Send`, so the backend lives on the thread that
 //! calls [`Server::serve`]; request producers feed the `Sender` from any
 //! thread.  The loop interleaves admission (non-blocking channel drain)
-//! with scheduler steps and parks briefly when idle.
+//! with stepper iterations and parks briefly when idle.
 
 use super::backend::Backend;
+use super::metrics::Metrics;
 use super::request::{Request, Response};
 use super::scheduler::{Scheduler, SchedulerConfig};
+use super::trace::TimedRequest;
 use crate::anyhow::Result;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// One serving state machine the serve loop can drive.  Implemented by
+/// the group [`Scheduler`] and the continuous-batching
+/// [`Engine`](super::engine::Engine); everything above this trait
+/// (channel serve loop, trace replay, demos, benches) works with either.
+pub trait Stepper {
+    fn submit(&mut self, r: Request);
+    /// One scheduling iteration; returns completed responses.
+    fn step(&mut self) -> Result<Vec<Response>>;
+    fn is_idle(&self) -> bool;
+    fn metrics(&self) -> &Metrics;
+    fn metrics_mut(&mut self) -> &mut Metrics;
+}
 
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -25,28 +42,38 @@ impl Default for ServerConfig {
     }
 }
 
-/// Single-replica server.
-pub struct Server<B: Backend> {
-    sched: Scheduler<B>,
-    cfg: ServerConfig,
+/// Single-replica server over any [`Stepper`].
+pub struct Server<S: Stepper> {
+    inner: S,
+    idle_wait: Duration,
 }
 
-impl<B: Backend> Server<B> {
+impl<B: Backend> Server<Scheduler<B>> {
+    /// Convenience: wrap a backend in the group scheduler (the original
+    /// serve path).
     pub fn new(backend: B, cfg: ServerConfig) -> Self {
-        Self { sched: Scheduler::new(backend, cfg.scheduler.clone()), cfg }
+        Self::from_stepper(Scheduler::new(backend, cfg.scheduler.clone()), cfg.idle_wait)
+    }
+}
+
+impl<S: Stepper> Server<S> {
+    /// Wrap an already-built stepper (e.g. a continuous-batching
+    /// [`Engine`](super::engine::Engine)).
+    pub fn from_stepper(inner: S, idle_wait: Duration) -> Self {
+        Self { inner, idle_wait }
     }
 
     /// Run until `rx` disconnects AND all admitted work drained.  Sends
-    /// every completion to `tx`.  Returns the scheduler (for metrics).
-    pub fn serve(mut self, rx: Receiver<Request>, tx: Sender<Response>) -> Result<Scheduler<B>> {
-        self.sched.metrics.start();
+    /// every completion to `tx`.  Returns the stepper (for metrics).
+    pub fn serve(mut self, rx: Receiver<Request>, tx: Sender<Response>) -> Result<S> {
+        self.inner.metrics_mut().start();
         let mut open = true;
         loop {
             // drain arrivals; block briefly only when fully idle
             loop {
-                if self.sched.is_idle() && open {
-                    match rx.recv_timeout(self.cfg.idle_wait) {
-                        Ok(r) => self.sched.submit(r),
+                if self.inner.is_idle() && open {
+                    match rx.recv_timeout(self.idle_wait) {
+                        Ok(r) => self.inner.submit(r),
                         Err(RecvTimeoutError::Timeout) => break,
                         Err(RecvTimeoutError::Disconnected) => {
                             open = false;
@@ -55,7 +82,7 @@ impl<B: Backend> Server<B> {
                     }
                 } else {
                     match rx.try_recv() {
-                        Ok(r) => self.sched.submit(r),
+                        Ok(r) => self.inner.submit(r),
                         Err(std::sync::mpsc::TryRecvError::Empty) => break,
                         Err(std::sync::mpsc::TryRecvError::Disconnected) => {
                             open = false;
@@ -64,25 +91,56 @@ impl<B: Backend> Server<B> {
                     }
                 }
             }
-            if self.sched.is_idle() {
+            if self.inner.is_idle() {
                 if !open {
                     break;
                 }
                 continue;
             }
-            for resp in self.sched.step()? {
+            for resp in self.inner.step()? {
                 let _ = tx.send(resp); // receiver may have hung up; fine
             }
         }
-        self.sched.metrics.finish();
-        Ok(self.sched)
+        self.inner.metrics_mut().finish();
+        Ok(self.inner)
     }
+}
+
+/// Replay a timed trace against a stepper in wall-clock time (the serving
+/// demos and the steady-state bench share this driver): each request is
+/// submitted at its arrival offset, the stepper steps whenever work is
+/// outstanding, and the loop parks only when fully idle.
+pub fn replay_trace<S: Stepper>(s: &mut S, trace: &[TimedRequest]) -> Result<Vec<Response>> {
+    s.metrics_mut().start();
+    let start = Instant::now();
+    let mut next = 0;
+    let mut out = Vec::new();
+    while next < trace.len() || !s.is_idle() {
+        let now = start.elapsed().as_secs_f64();
+        while next < trace.len() && trace[next].at_s <= now {
+            let mut r = trace[next].request.clone();
+            r.arrived = Instant::now();
+            s.submit(r);
+            next += 1;
+        }
+        if s.is_idle() {
+            if next < trace.len() {
+                let wait = (trace[next].at_s - now).max(0.0).min(0.05);
+                std::thread::sleep(Duration::from_secs_f64(wait));
+            }
+            continue;
+        }
+        out.extend(s.step()?);
+    }
+    s.metrics_mut().finish();
+    Ok(out)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::backend::SimBackend;
+    use crate::coordinator::engine::{Engine, EngineConfig};
     use crate::coordinator::request::GenParams;
     use std::sync::mpsc::channel;
 
@@ -116,6 +174,29 @@ mod tests {
     }
 
     #[test]
+    fn serve_loop_over_continuous_batching_engine() {
+        let eng = Engine::new(SimBackend::new(64, 64, vec![1, 2, 4, 8]), EngineConfig::default());
+        let server = Server::from_stepper(eng, Duration::from_millis(1));
+        let (tx_req, rx_req) = channel();
+        let (tx_resp, rx_resp) = channel();
+        for i in 0..12u64 {
+            tx_req
+                .send(Request::new(
+                    i,
+                    vec![1, 2, 3],
+                    GenParams { max_new_tokens: 3 + (i as usize % 4), sample: false, seed: i },
+                ))
+                .unwrap();
+        }
+        drop(tx_req);
+        let eng = server.serve(rx_req, tx_resp).unwrap();
+        let responses: Vec<Response> = rx_resp.iter().collect();
+        assert_eq!(responses.len(), 12);
+        assert_eq!(eng.metrics.requests_done, 12);
+        assert_eq!(eng.pool().free_blocks(), eng.pool().total_blocks());
+    }
+
+    #[test]
     fn serve_with_sampling_varies_but_is_seeded() {
         let run = |seed: u64| {
             let backend = SimBackend::new(64, 64, vec![1, 2]);
@@ -133,8 +214,8 @@ mod tests {
             server.serve(rx_req, tx_resp).unwrap();
             rx_resp.iter().next().unwrap().tokens
         };
-        // sampling path produces tokens (cannot assert equality across
-        // seeds — scheduler rng is shared — but lengths are exact)
+        // sampling is fully seeded per request: same seed → same tokens
+        assert_eq!(run(1), run(1));
         assert_eq!(run(1).len(), 5);
         assert_eq!(run(2).len(), 5);
     }

@@ -36,6 +36,7 @@ pub use baselines::{scheme_traffic, scheme_work, Traffic};
 pub use calibrate::{fit_scheme, CalibrationReport, ANCHORS};
 pub use kernels::{pack_pass_bytes, smem_bytes_per_block, OursOpts, TileConfig};
 
+use crate::anyhow::{anyhow, Result};
 use crate::model::{LlmArch, MatMulShape, PrecisionConfig};
 use std::collections::HashMap;
 
@@ -161,17 +162,22 @@ impl Simulator {
         Self { gpu, params }
     }
 
-    pub fn scheme_params(&self, scheme: &Scheme) -> SchemeParams {
+    /// Fitted rate curve for `scheme`.  A scheme outside the calibrated
+    /// set (e.g. an APNN-TC precision beyond its documented W ≤ 2 limit)
+    /// is a recoverable error naming the valid keys — a bad user flag
+    /// must never kill a serving process.
+    pub fn scheme_params(&self, scheme: &Scheme) -> Result<SchemeParams> {
         let key = scheme.fit_key();
-        *self
-            .params
-            .get(&key)
-            .unwrap_or_else(|| panic!("no calibration for scheme {key}"))
+        self.params.get(&key).copied().ok_or_else(|| {
+            let mut keys: Vec<&str> = self.params.keys().map(String::as_str).collect();
+            keys.sort_unstable();
+            anyhow!("no calibration for scheme {key} (calibrated schemes: {})", keys.join(", "))
+        })
     }
 
     /// Simulate one `(M,K) × (K,N)` GEMM under `scheme`.
-    pub fn simulate(&self, scheme: &Scheme, m: usize, k: usize, n: usize) -> SimResult {
-        let p = self.scheme_params(scheme);
+    pub fn simulate(&self, scheme: &Scheme, m: usize, k: usize, n: usize) -> Result<SimResult> {
+        let p = self.scheme_params(scheme)?;
         let util = p.util(m, k, n);
         let work = baselines::scheme_work(scheme, m, k, n);
         let traffic = baselines::scheme_traffic(scheme, m, k, n);
@@ -212,7 +218,7 @@ impl Simulator {
             _ => 0.0,
         };
         let body = if overlap { t_compute.max(t_mem) } else { t_compute + t_mem };
-        SimResult {
+        Ok(SimResult {
             time_s: p.launch_s + body + t_recovery + t_pack,
             t_compute_s: t_compute,
             t_mem_s: t_mem,
@@ -222,7 +228,7 @@ impl Simulator {
             util,
             traffic_bytes: traffic.total(),
             work_ops: work,
-        }
+        })
     }
 
     /// §3.3 pack-vs-compute split over a model's forward GEMMs: for each
@@ -236,28 +242,30 @@ impl Simulator {
         arch: &LlmArch,
         prec: PrecisionConfig,
         m: usize,
-    ) -> Vec<PackSplitRow> {
+    ) -> Result<Vec<PackSplitRow>> {
         let bw = self.gpu.eff_bandwidth();
         let scheme = Scheme::ours(prec);
-        arch.forward_shapes(m)
-            .iter()
-            .map(|s| PackSplitRow {
+        let mut rows = Vec::new();
+        for s in arch.forward_shapes(m) {
+            rows.push(PackSplitRow {
                 label: s.label,
                 weight_pack_once_s: kernels::pack_pass_bytes(s.k, s.n, prec.nw) / bw
                     * s.count as f64,
                 act_pack_step_s: kernels::pack_pass_bytes(s.m, s.k, prec.nx) / bw
                     * s.count as f64,
-                gemm_step_s: self.simulate(&scheme, s.m, s.k, s.n).time_s * s.count as f64,
-            })
-            .collect()
+                gemm_step_s: self.simulate(&scheme, s.m, s.k, s.n)?.time_s * s.count as f64,
+            });
+        }
+        Ok(rows)
     }
 
     /// Total MatMul time of one forward pass over `m` tokens (Fig. 7).
-    pub fn llm_matmul_time(&self, arch: &LlmArch, scheme: &Scheme, m: usize) -> f64 {
-        arch.forward_shapes(m)
-            .iter()
-            .map(|s| self.simulate(scheme, s.m, s.k, s.n).time_s * s.count as f64)
-            .sum()
+    pub fn llm_matmul_time(&self, arch: &LlmArch, scheme: &Scheme, m: usize) -> Result<f64> {
+        let mut total = 0.0;
+        for s in arch.forward_shapes(m) {
+            total += self.simulate(scheme, s.m, s.k, s.n)?.time_s * s.count as f64;
+        }
+        Ok(total)
     }
 
     /// End-to-end inference speedup over FP16 (Fig. 7's metric).
@@ -265,19 +273,20 @@ impl Simulator {
     /// Non-MatMul work (attention softmax, norms, KV traffic, sampling) is
     /// `NON_MATMUL_FRAC` of the FP16 MatMul time and identical across
     /// schemes — quantization does not touch it.
-    pub fn llm_speedup_vs_fp16(&self, arch: &LlmArch, scheme: &Scheme, m: usize) -> f64 {
-        let fp16 = self.llm_matmul_time(arch, &Scheme::Fp16, m);
+    pub fn llm_speedup_vs_fp16(&self, arch: &LlmArch, scheme: &Scheme, m: usize) -> Result<f64> {
+        let fp16 = self.llm_matmul_time(arch, &Scheme::Fp16, m)?;
         let other = NON_MATMUL_FRAC * fp16;
-        let t = self.llm_matmul_time(arch, scheme, m);
-        (fp16 + other) / (t + other)
+        let t = self.llm_matmul_time(arch, scheme, m)?;
+        Ok((fp16 + other) / (t + other))
     }
 
     /// Simulated per-GEMM times for a set of shapes (helper for benches).
-    pub fn simulate_shapes(&self, scheme: &Scheme, shapes: &[MatMulShape]) -> f64 {
-        shapes
-            .iter()
-            .map(|s| self.simulate(scheme, s.m, s.k, s.n).time_s * s.count as f64)
-            .sum()
+    pub fn simulate_shapes(&self, scheme: &Scheme, shapes: &[MatMulShape]) -> Result<f64> {
+        let mut total = 0.0;
+        for s in shapes {
+            total += self.simulate(scheme, s.m, s.k, s.n)?.time_s * s.count as f64;
+        }
+        Ok(total)
     }
 }
 

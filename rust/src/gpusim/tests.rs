@@ -30,7 +30,7 @@ fn calibration_hits_anchors() {
 fn table1_ordering_at_4k() {
     // paper Table 1, 4k column: FP32 > FP16 > INT4 > W3A4 ≈ INT1 > W2A2 > W1A2
     let s = sim();
-    let t = |sc: &Scheme| s.simulate(sc, 4096, 4096, 4096).time_s;
+    let t = |sc: &Scheme| s.simulate(sc, 4096, 4096, 4096).unwrap().time_s;
     let fp32 = t(&Scheme::Fp32);
     let fp16 = t(&Scheme::Fp16);
     let i4 = t(&Scheme::CutlassInt4);
@@ -52,9 +52,9 @@ fn table1_ordering_at_4k() {
 fn table1_speedups_vs_fp32() {
     // W1A2 @4k ≈ 193× FP32; W2A2 ≈ 122×; tolerate ±40%
     let s = sim();
-    let fp32 = s.simulate(&Scheme::Fp32, 4096, 4096, 4096).time_s;
-    let w1a2 = s.simulate(&Scheme::ours(PrecisionConfig::W1A2), 4096, 4096, 4096).time_s;
-    let w2a2 = s.simulate(&Scheme::ours(PrecisionConfig::W2A2), 4096, 4096, 4096).time_s;
+    let fp32 = s.simulate(&Scheme::Fp32, 4096, 4096, 4096).unwrap().time_s;
+    let w1a2 = s.simulate(&Scheme::ours(PrecisionConfig::W1A2), 4096, 4096, 4096).unwrap().time_s;
+    let w2a2 = s.simulate(&Scheme::ours(PrecisionConfig::W2A2), 4096, 4096, 4096).unwrap().time_s;
     assert!((120.0..280.0).contains(&(fp32 / w1a2)), "got {:.0}", fp32 / w1a2);
     assert!((75.0..180.0).contains(&(fp32 / w2a2)), "got {:.0}", fp32 / w2a2);
 }
@@ -65,11 +65,11 @@ fn apnn_crossover() {
     let s = sim();
     let ours = Scheme::ours(PrecisionConfig::W1A2);
     let apnn = Scheme::ApnnTc(PrecisionConfig::W1A2);
-    let small_ours = s.simulate(&ours, 256, 256, 256).time_s;
-    let small_apnn = s.simulate(&apnn, 256, 256, 256).time_s;
+    let small_ours = s.simulate(&ours, 256, 256, 256).unwrap().time_s;
+    let small_apnn = s.simulate(&apnn, 256, 256, 256).unwrap().time_s;
     assert!(small_apnn < small_ours, "APNN should win at 256³");
-    let big_ours = s.simulate(&ours, 4096, 4096, 4096).time_s;
-    let big_apnn = s.simulate(&apnn, 4096, 4096, 4096).time_s;
+    let big_ours = s.simulate(&ours, 4096, 4096, 4096).unwrap().time_s;
+    let big_apnn = s.simulate(&apnn, 4096, 4096, 4096).unwrap().time_s;
     assert!(big_apnn / big_ours > 20.0, "ours ≥20× at 4k, got {:.1}", big_apnn / big_ours);
 }
 
@@ -83,7 +83,7 @@ fn monotonicity_in_size() {
     ] {
         let mut last = 0.0;
         for size in [128, 256, 512, 1024, 2048, 4096] {
-            let t = s.simulate(&scheme, size, size, size).time_s;
+            let t = s.simulate(&scheme, size, size, size).unwrap().time_s;
             assert!(t > last, "{}: non-monotone at {size}", scheme.label());
             last = t;
         }
@@ -105,7 +105,7 @@ fn monotonicity_in_bits() {
 fn ablation_knobs_strictly_hurt() {
     let s = sim();
     let p = PrecisionConfig::W2A2;
-    let base = s.simulate(&Scheme::ours(p), 4096, 4096, 4096).time_s;
+    let base = s.simulate(&Scheme::ours(p), 4096, 4096, 4096).unwrap().time_s;
     for (name, opts) in [
         ("no fused recovery", OursOpts { fused_recovery: false, ..OursOpts::paper() }),
         ("no packing", OursOpts { packed: false, ..OursOpts::paper() }),
@@ -114,10 +114,10 @@ fn ablation_knobs_strictly_hurt() {
         ("no prepacking", OursOpts { prepacked: false, ..OursOpts::paper() }),
         ("naive", OursOpts::naive()),
     ] {
-        let t = s.simulate(&Scheme::Ours(p, opts), 4096, 4096, 4096).time_s;
+        let t = s.simulate(&Scheme::Ours(p, opts), 4096, 4096, 4096).unwrap().time_s;
         assert!(t > base, "{name} should not be faster ({t:.3e} vs {base:.3e})");
     }
-    let naive = s.simulate(&Scheme::Ours(p, OursOpts::naive()), 4096, 4096, 4096).time_s;
+    let naive = s.simulate(&Scheme::Ours(p, OursOpts::naive()), 4096, 4096, 4096).unwrap().time_s;
     assert!(naive / base > 1.5, "all-off should cost ≥1.5×, got {:.2}", naive / base);
 }
 
@@ -126,14 +126,11 @@ fn prepacked_knob_splits_pack_time() {
     let s = sim();
     let p = PrecisionConfig::W2A2;
     let (m, k, n) = (1024, 4096, 4096);
-    let base = s.simulate(&Scheme::ours(p), m, k, n);
+    let base = s.simulate(&Scheme::ours(p), m, k, n).unwrap();
     assert_eq!(base.t_pack_s, 0.0, "pack-once config pays no inline pack");
-    let inline = s.simulate(
-        &Scheme::Ours(p, OursOpts { prepacked: false, ..OursOpts::paper() }),
-        m,
-        k,
-        n,
-    );
+    let inline = s
+        .simulate(&Scheme::Ours(p, OursOpts { prepacked: false, ..OursOpts::paper() }), m, k, n)
+        .unwrap();
     assert!(inline.t_pack_s > 0.0);
     let dt = inline.time_s - base.time_s;
     assert!(
@@ -149,7 +146,8 @@ fn prepacked_knob_splits_pack_time() {
 #[test]
 fn pack_split_amortizes() {
     let s = sim();
-    let rows = s.llm_pack_split(&crate::model::LlmArch::llama2_7b(), PrecisionConfig::W2A2, 1024);
+    let rows =
+        s.llm_pack_split(&crate::model::LlmArch::llama2_7b(), PrecisionConfig::W2A2, 1024).unwrap();
     assert!(rows.iter().any(|r| r.label == "lm_head"));
     let (pack, gemm): (f64, f64) = rows
         .iter()
@@ -196,12 +194,15 @@ fn fig7_speedup_bands() {
     let s = sim();
     for arch in crate::model::LlmArch::all_paper_models() {
         let m = 1024;
-        let ours_w1a1 = s.llm_speedup_vs_fp16(&arch, &Scheme::ours(PrecisionConfig::W1A1), m);
-        let ours_w2a2 = s.llm_speedup_vs_fp16(&arch, &Scheme::ours(PrecisionConfig::W2A2), m);
-        let ours_w4a4 = s.llm_speedup_vs_fp16(&arch, &Scheme::ours(PrecisionConfig::W4A4), m);
-        let qlora = s.llm_speedup_vs_fp16(&arch, &Scheme::QloraW4, m);
-        let gptq = s.llm_speedup_vs_fp16(&arch, &Scheme::CutlassInt4, m);
-        let onebit = s.llm_speedup_vs_fp16(&arch, &Scheme::CutlassInt1, m);
+        let ours = |p: PrecisionConfig| {
+            s.llm_speedup_vs_fp16(&arch, &Scheme::ours(p), m).unwrap()
+        };
+        let ours_w1a1 = ours(PrecisionConfig::W1A1);
+        let ours_w2a2 = ours(PrecisionConfig::W2A2);
+        let ours_w4a4 = ours(PrecisionConfig::W4A4);
+        let qlora = s.llm_speedup_vs_fp16(&arch, &Scheme::QloraW4, m).unwrap();
+        let gptq = s.llm_speedup_vs_fp16(&arch, &Scheme::CutlassInt4, m).unwrap();
+        let onebit = s.llm_speedup_vs_fp16(&arch, &Scheme::CutlassInt1, m).unwrap();
         assert!(qlora < 1.05, "{}: QLoRA {qlora:.2}", arch.name);
         assert!((3.0..7.5).contains(&ours_w1a1), "{}: W1A1 {ours_w1a1:.2}", arch.name);
         assert!((2.5..7.5).contains(&ours_w4a4), "{}: W4A4 {ours_w4a4:.2}", arch.name);
@@ -218,6 +219,18 @@ fn fig7_speedup_bands() {
 }
 
 #[test]
+fn uncalibrated_scheme_is_an_error_not_a_panic() {
+    // APNN-TC beyond its documented W ≤ 2 limit has no anchors: the
+    // lookup must return a recoverable error naming the valid keys
+    let s = sim();
+    let bad = Scheme::ApnnTc(PrecisionConfig::W8A8);
+    let e = s.simulate(&bad, 64, 64, 64).unwrap_err().to_string();
+    assert!(e.contains("no calibration"), "{e}");
+    assert!(e.contains("calibrated schemes") && e.contains("FP16"), "must list options: {e}");
+    assert!(s.scheme_params(&Scheme::Fp16).is_ok());
+}
+
+#[test]
 fn roofline_reporting() {
     let gpu = Gpu::rtx3090();
     assert!((gpu.roofline_fraction(35.6e12, "fp32") - 1.0).abs() < 1e-9);
@@ -230,7 +243,7 @@ fn prop_time_positive_and_finite() {
     forall(24, |rng| {
         let (m, k, n) = (rng.usize(1, 8192), rng.usize(1, 16384), rng.usize(1, 8192));
         for scheme in [Scheme::Fp16, Scheme::CutlassInt1, Scheme::ours(PrecisionConfig::W2A2)] {
-            let r = sim.simulate(&scheme, m, k, n);
+            let r = sim.simulate(&scheme, m, k, n).unwrap();
             assert!(r.time_s.is_finite() && r.time_s > 0.0);
             assert!(r.time_s >= r.launch_s);
             assert!(r.util > 0.0 && r.util < 1.0);

@@ -29,8 +29,12 @@
 //!   itself is gated behind the `pjrt` cargo feature; manifest parsing is
 //!   always available.
 //! * [`coordinator`] — the serving layer: router, dynamic batcher, KV
-//!   manager, scheduler, metrics.  Its `SimBackend` can serve real bitmm
-//!   logits through the pack-once pipeline (`SimBackend::with_ap_gemm`).
+//!   manager, group scheduler, metrics, and the **continuous-batching
+//!   decode engine** (`coordinator::engine`): batcher-fed admission,
+//!   incremental KV growth with swap-preemption on the allocator's clean
+//!   failure, per-step join/leave batching.  Its `SimBackend` serves real
+//!   bitmm logits through the pack-once pipeline
+//!   (`SimBackend::with_ap_gemm`).
 //! * [`bench`]    — harness regenerating every table/figure of the paper's
 //!   evaluation section, plus the §3.3 pack-vs-compute split table.
 //! * [`anyhow`]   — in-tree error-handling substrate (offline substitute

@@ -60,14 +60,34 @@ fn cmd_simulate(args: &[String]) {
         eprintln!("usage: apllm simulate M K N SCHEME");
         std::process::exit(2);
     }
-    let (m, k, n) = (
-        args[0].parse().expect("M"),
-        args[1].parse().expect("K"),
-        args[2].parse().expect("N"),
-    );
-    let scheme = parse_scheme(&args[3]).expect("unknown scheme");
+    let dim = |i: usize, name: &str| -> usize {
+        match args[i].parse() {
+            Ok(v) if v > 0 => v,
+            _ => {
+                eprintln!("simulate: {name} must be a positive integer, got {:?}", args[i]);
+                std::process::exit(2);
+            }
+        }
+    };
+    let (m, k, n) = (dim(0, "M"), dim(1, "K"), dim(2, "N"));
+    let Some(scheme) = parse_scheme(&args[3]) else {
+        eprintln!(
+            "simulate: unknown scheme {:?} (valid: fp32, fp16, int4, int1, bstc, btc, qlora, \
+             wXaY, apnn-wXaY)",
+            args[3]
+        );
+        std::process::exit(2);
+    };
     let sim = Simulator::rtx3090();
-    let r = sim.simulate(&scheme, m, k, n);
+    // an uncalibrated-but-parseable scheme (e.g. apnn-w8a8) is a user
+    // error, not a crash: report it and the valid options
+    let r = match sim.simulate(&scheme, m, k, n) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("simulate: {e}");
+            std::process::exit(2);
+        }
+    };
     println!("scheme       : {}", scheme.label());
     println!("shape        : {m} x {k} x {n}");
     println!("time         : {:.2} µs", r.time_s * 1e6);

@@ -74,8 +74,26 @@ fn sim_serving_demo_reports_pack_once() {
         prompt_len: 5,
         seed: 1,
         sim: true,
+        ..Default::default()
     };
     let report = apllm::coordinator::cli::run_sim_serving_demo(&a).unwrap();
     assert!(report.contains("pack-once: weight packs 1"), "report was:\n{report}");
     assert!(report.contains("arena reuses"));
+}
+
+#[test]
+fn engine_serving_demo_reports_pack_once_and_clean_kv() {
+    let a = apllm::coordinator::cli::ServeArgs {
+        requests: 8,
+        rate_per_s: 500.0,
+        max_new: 4,
+        prompt_len: 5,
+        seed: 2,
+        sim: true,
+        ..Default::default()
+    };
+    let report = apllm::coordinator::cli::run_engine_serving_demo(&a).unwrap();
+    assert!(report.contains("pack-once: weight packs 1"), "report was:\n{report}");
+    assert!(report.contains("kv: 64/64 blocks free"), "report was:\n{report}");
+    assert!(report.contains("engine: steps"));
 }
