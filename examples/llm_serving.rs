@@ -10,9 +10,14 @@
 //! engine** serves real bitmm logits through the §3.3 pack-once pipeline:
 //! weights packed once at startup, each step packing only its activation
 //! batch through the recycling arena, sequences joining and leaving the
-//! batch every iteration (swap-preemption under KV pressure).
+//! batch every iteration (swap-preemption under KV pressure), prompt
+//! prefixes sharing refcounted KV blocks, every token streamed as a
+//! `TokenEvent`.  With `--replicas N` (≥2) the workload is served by a
+//! **router-driven cluster** of N engine replicas
+//! (`--route-policy round-robin|least-loaded`).
 //!
-//! Run: `cargo run --release --example llm_serving -- [--requests N] [--rate R] [--sim]`
+//! Run: `cargo run --release --example llm_serving -- [--requests N] [--rate R] [--sim]
+//!       [--replicas N] [--route-policy least-loaded]`
 //! (PJRT path additionally needs `make artifacts` and `--features pjrt`;
 //! `--group-scheduler` falls back to the group-batching scheduler.)
 

@@ -1,41 +1,77 @@
 //! Steady-state serving bench: Poisson arrivals replayed in wall-clock
 //! time through the continuous-batching engine over the pack-once AP-GEMM
-//! backend (real prepacked bitmm logits).  Prints a rate × throughput /
-//! latency table — the serving-layer counterpart of the kernel benches.
+//! backend (real prepacked bitmm logits).  Three sections:
+//!
+//! 1. rate × throughput/latency table (TTFT/ITL percentiles come from the
+//!    streamed per-token events);
+//! 2. **prefix-sharing workload** — Poisson arrivals over a small set of
+//!    shared system prompts, run with the hash-based prefix cache on and
+//!    off, reporting the KV blocks sharing saved;
+//! 3. (`--cluster`) a multi-replica cluster behind `Router::LeastLoaded`
+//!    on the shared-prefix trace, with per-replica load/KV breakdown.
 //!
 //! `cargo bench --bench serving` for the full table; pass `--smoke` for
-//! the one-row CI job that keeps this target building and running.
+//! the one-row CI job (and `--smoke --cluster` for the cluster smoke)
+//! that keeps these paths building and running.
 
 use apllm::coordinator::trace::{generate, TraceConfig};
 use apllm::coordinator::{
-    replay_trace, ArrivalKind, BatcherConfig, Engine, EngineConfig, SimBackend,
+    replay_trace, responses_of, ArrivalKind, BatcherConfig, Cluster, Engine, EngineConfig,
+    KvSharing, RoutePolicy, SimBackend, Stepper, TokenEvent,
 };
+use apllm::model::PrecisionConfig;
 use std::time::Duration;
 
-fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke");
-    let (rates, requests): (&[f64], usize) =
-        if smoke { (&[400.0], 8) } else { (&[50.0, 200.0, 800.0], 48) };
+fn ap_backend() -> SimBackend {
+    SimBackend::with_ap_gemm(256, 512, vec![1, 2, 4, 8], 128, 2, 2, 7)
+}
 
+fn engine_cfg(prefix_sharing: bool) -> EngineConfig {
+    EngineConfig {
+        kv_blocks: 96,
+        block_tokens: 8,
+        max_running: 8,
+        batcher: BatcherConfig { batch_sizes: vec![1, 2, 4, 8], max_wait: Duration::ZERO },
+        prefix_sharing,
+    }
+}
+
+fn shared_prefix_trace(rate: f64, requests: usize) -> Vec<apllm::coordinator::trace::TimedRequest> {
+    generate(&TraceConfig {
+        kind: ArrivalKind::Poisson { rate },
+        requests,
+        prompt_len: (2, 8), // tail after the shared prefix
+        max_new: (4, 12),
+        vocab: 256,
+        seed: 7,
+        shared_prefixes: 4, // a small pool of "system prompts"
+        prefix_len: 24,
+    })
+}
+
+fn kv_line(s: &KvSharing) -> String {
+    format!(
+        "fresh {:>5} | shared {:>5} | restored {:>5} | cow {:>3} | peak used {:>4}",
+        s.fresh_allocs, s.shared_live, s.cache_restores, s.cow_copies, s.peak_used
+    )
+}
+
+fn steady_state(rates: &[f64], requests: usize) {
     println!("== serving: continuous-batching engine, Poisson arrivals, prepacked W2A2 lm-head ==");
     println!(
-        "{:>8} {:>6} {:>9} {:>6} {:>9} {:>14} {:>14} {:>14}",
-        "rate/s", "done", "tok/s", "occ", "preempt", "queue p50/p95", "ttft p50/p95", "total p50/p95"
+        "{:>8} {:>6} {:>9} {:>6} {:>9} {:>14} {:>14} {:>14} {:>14}",
+        "rate/s",
+        "done",
+        "tok/s",
+        "occ",
+        "preempt",
+        "queue p50/p95",
+        "ttft p50/p95",
+        "itl p50/p95",
+        "total p50/p95"
     );
     for &rate in rates {
-        let backend = SimBackend::with_ap_gemm(256, 512, vec![1, 2, 4, 8], 128, 2, 2, 7);
-        let mut eng = Engine::new(
-            backend,
-            EngineConfig {
-                kv_blocks: 96,
-                block_tokens: 8,
-                max_running: 8,
-                batcher: BatcherConfig {
-                    batch_sizes: vec![1, 2, 4, 8],
-                    max_wait: Duration::ZERO,
-                },
-            },
-        );
+        let mut eng = Engine::new(ap_backend(), engine_cfg(true));
         let trace = generate(&TraceConfig {
             kind: ArrivalKind::Poisson { rate },
             requests,
@@ -43,18 +79,22 @@ fn main() {
             max_new: (4, 12),
             vocab: 256,
             seed: 7,
+            ..TraceConfig::default()
         });
-        let out = replay_trace(&mut eng, &trace).expect("replay");
-        assert_eq!(out.len() as u64, eng.counters().completed);
+        let events = replay_trace(&mut eng, &trace).expect("replay");
+        let out = responses_of(&events);
+        assert_eq!(out.len() as u64, eng.counters().completed + eng.counters().rejected);
         assert_eq!(
             eng.pool().free_blocks(),
             eng.pool().total_blocks(),
             "steady-state run must not leak KV blocks"
         );
+        let n_tok = events.iter().filter(|e| matches!(e, TokenEvent::Token { .. })).count();
+        assert_eq!(n_tok as u64, eng.metrics.tokens_generated, "every token streamed");
         let m = &eng.metrics;
         let ms = |v: f64| v * 1e3;
         println!(
-            "{:>8.0} {:>6} {:>9.0} {:>6.2} {:>9} {:>7.1}/{:<6.1} {:>7.1}/{:<6.1} {:>7.1}/{:<6.1}",
+            "{:>8.0} {:>6} {:>9.0} {:>6.2} {:>9} {:>7.1}/{:<6.1} {:>7.1}/{:<6.1} {:>7.1}/{:<6.1} {:>7.1}/{:<6.1}",
             rate,
             m.requests_done,
             m.throughput_tok_s(),
@@ -64,6 +104,8 @@ fn main() {
             ms(m.queue.percentile(95.0)),
             ms(m.ttft.percentile(50.0)),
             ms(m.ttft.percentile(95.0)),
+            ms(m.itl.percentile(50.0)),
+            ms(m.itl.percentile(95.0)),
             ms(m.total.percentile(50.0)),
             ms(m.total.percentile(95.0)),
         );
@@ -71,4 +113,92 @@ fn main() {
         assert_eq!(s.weight_packs, 1, "weights must be packed once per run");
     }
     println!("(latencies in ms; occupancy = mean decode batch size; weights packed once per run)");
+}
+
+fn prefix_sharing(rate: f64, requests: usize) {
+    println!("\n== serving: shared-prefix workload (4 system prompts × 24 tokens), rate {rate}/s ==");
+    let mut saved = [0u64; 2];
+    for (slot, sharing) in [(0usize, true), (1usize, false)] {
+        let mut eng = Engine::new(ap_backend(), engine_cfg(sharing));
+        let trace = shared_prefix_trace(rate, requests);
+        let events = replay_trace(&mut eng, &trace).expect("replay");
+        let out = responses_of(&events);
+        assert_eq!(out.len(), requests);
+        assert_eq!(eng.pool().free_blocks(), eng.pool().total_blocks(), "no leaked blocks");
+        eng.pool().check_invariants().expect("pool invariants after drain");
+        let s = eng.pool().sharing();
+        saved[slot] = s.fresh_allocs;
+        let m = &eng.metrics;
+        let ms = |v: f64| v * 1e3;
+        println!(
+            "  prefix cache {:>3}: {} | ttft p50/p95 {:>6.1}/{:<6.1} ms | itl p50/p95 {:>5.1}/{:<5.1} ms",
+            if sharing { "on" } else { "off" },
+            kv_line(&s),
+            ms(m.ttft.percentile(50.0)),
+            ms(m.ttft.percentile(95.0)),
+            ms(m.itl.percentile(50.0)),
+            ms(m.itl.percentile(95.0)),
+        );
+    }
+    let (with, without) = (saved[0], saved[1]);
+    println!(
+        "  KV blocks saved by sharing: {} of {} ({:.0}%)",
+        without.saturating_sub(with),
+        without,
+        100.0 * without.saturating_sub(with) as f64 / without.max(1) as f64
+    );
+}
+
+fn cluster(rate: f64, requests: usize, replicas: usize) {
+    println!(
+        "\n== serving: {replicas}-replica cluster (LeastLoaded router), shared-prefix trace, rate {rate}/s =="
+    );
+    let mut c = Cluster::new(RoutePolicy::LeastLoaded);
+    for i in 0..replicas {
+        c.add_replica(format!("r{i}"), PrecisionConfig::W2A2, ap_backend(), engine_cfg(true));
+    }
+    let trace = shared_prefix_trace(rate, requests);
+    let events = replay_trace(&mut c, &trace).expect("replay");
+    let out = responses_of(&events);
+    assert_eq!(out.len(), requests);
+    assert_eq!(c.router().inflight(), 0, "router load accounting drained");
+    c.check_invariants().expect("cluster invariants after drain");
+    let m = c.metrics();
+    let ms = |v: f64| v * 1e3;
+    println!(
+        "  merged: {} done | {:.0} tok/s | ttft p50/p95 {:.1}/{:.1} ms | itl p50/p95 {:.1}/{:.1} ms",
+        m.requests_done,
+        m.throughput_tok_s(),
+        ms(m.ttft.percentile(50.0)),
+        ms(m.ttft.percentile(95.0)),
+        ms(m.itl.percentile(50.0)),
+        ms(m.itl.percentile(95.0)),
+    );
+    for (eng, rep) in c.engines().iter().zip(c.router().replicas()) {
+        println!(
+            "  {} ({}): completed {:>4} | {}",
+            rep.name,
+            rep.precision.label(),
+            eng.counters().completed,
+            kv_line(&eng.pool().sharing()),
+        );
+        assert_eq!(eng.pool().free_blocks(), eng.pool().total_blocks(), "replica leaked blocks");
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let cluster_mode = args.iter().any(|a| a == "--cluster");
+
+    if cluster_mode {
+        let (rate, requests, replicas) = if smoke { (400.0, 12, 2) } else { (200.0, 64, 3) };
+        cluster(rate, requests, replicas);
+        return;
+    }
+    let (rates, requests): (&[f64], usize) =
+        if smoke { (&[400.0], 8) } else { (&[50.0, 200.0, 800.0], 48) };
+    steady_state(rates, requests);
+    let (pr_rate, pr_requests) = if smoke { (400.0, 12) } else { (200.0, 64) };
+    prefix_sharing(pr_rate, pr_requests);
 }

@@ -2,19 +2,24 @@
 //! workload over either the real PJRT model artifacts (`pjrt` feature) or
 //! the pack-once AP-GEMM sim backend (always available; `--sim` forces
 //! it).  The sim path serves through the **continuous-batching engine**
-//! by default; `--group-scheduler` falls back to the group scheduler.
+//! by default; `--replicas N` (≥2) serves a **multi-replica cluster**
+//! behind the router (`--route-policy round-robin|least-loaded`), and
+//! `--group-scheduler` falls back to the group scheduler.
 
 #[cfg(feature = "pjrt")]
 use super::backend::PjrtBackend;
 use super::backend::SimBackend;
+use super::cluster::Cluster;
 use super::engine::{Engine, EngineConfig};
-use super::request::Response;
+use super::request::{responses_of, Response};
+use super::router::RoutePolicy;
 use super::scheduler::{Scheduler, SchedulerConfig};
 use super::server::{replay_trace, Stepper};
 use super::trace::{generate, ArrivalKind, TimedRequest, TraceConfig};
+use crate::anyhow::{bail, Context, Result};
+use crate::model::PrecisionConfig;
 #[cfg(feature = "pjrt")]
 use crate::runtime::{artifacts_dir, Engine as PjrtEngine, ModelRunner};
-use crate::anyhow::{bail, Context, Result};
 use std::time::Duration;
 #[cfg(feature = "pjrt")]
 use std::time::Instant;
@@ -30,6 +35,10 @@ pub struct ServeArgs {
     /// Serve through the continuous-batching engine (sim path default);
     /// false = the group scheduler.
     pub engine: bool,
+    /// Engine replicas behind the router (≥2 = cluster demo).
+    pub replicas: usize,
+    /// How the router picks a replica.
+    pub route_policy: RoutePolicy,
 }
 
 impl Default for ServeArgs {
@@ -42,14 +51,16 @@ impl Default for ServeArgs {
             seed: 0,
             sim: false,
             engine: true,
+            replicas: 1,
+            route_policy: RoutePolicy::LeastLoaded,
         }
     }
 }
 
 /// The flag list every parse error repeats — a bad flag must produce a
 /// recoverable error naming the alternatives, never kill the process.
-const VALID_FLAGS: &str =
-    "--requests N, --rate R, --max-new N, --prompt-len N, --seed N, --sim, --group-scheduler";
+const VALID_FLAGS: &str = "--requests N, --rate R, --max-new N, --prompt-len N, --seed N, \
+     --replicas N, --route-policy round-robin|least-loaded, --sim, --group-scheduler";
 
 fn take_value<'a>(it: &mut std::slice::Iter<'a, String>, name: &str) -> Result<&'a str> {
     it.next()
@@ -76,10 +87,28 @@ pub fn parse_args(args: &[String]) -> Result<ServeArgs> {
             "--max-new" => a.max_new = parse_value(&mut it, "--max-new", "a token count")?,
             "--prompt-len" => a.prompt_len = parse_value(&mut it, "--prompt-len", "a length")?,
             "--seed" => a.seed = parse_value(&mut it, "--seed", "an integer seed")?,
+            "--replicas" => {
+                a.replicas = parse_value(&mut it, "--replicas", "a replica count")?;
+                if a.replicas == 0 {
+                    bail!("--replicas must be ≥ 1");
+                }
+            }
+            "--route-policy" => {
+                let raw = take_value(&mut it, "--route-policy")?;
+                a.route_policy = RoutePolicy::parse(raw).with_context(|| {
+                    format!("--route-policy expects round-robin|least-loaded, got {raw:?}")
+                })?;
+            }
             "--sim" => a.sim = true,
             "--group-scheduler" => a.engine = false,
             other => bail!("unknown flag {other} (valid flags: {VALID_FLAGS})"),
         }
+    }
+    if !a.engine && a.replicas > 1 {
+        bail!(
+            "--group-scheduler serves a single replica (the cluster drives \
+             continuous-batching engines); drop it or use --replicas 1"
+        );
     }
     Ok(a)
 }
@@ -93,6 +122,7 @@ fn build_trace(a: &ServeArgs, vocab: usize) -> Vec<TimedRequest> {
         max_new: (a.max_new, a.max_new + 1),
         vocab,
         seed: a.seed,
+        ..TraceConfig::default()
     })
 }
 
@@ -100,7 +130,8 @@ fn build_trace(a: &ServeArgs, vocab: usize) -> Vec<TimedRequest> {
 /// responses) so callers can append backend-specific stats.
 fn drive<S: Stepper>(s: &mut S, a: &ServeArgs, vocab: usize) -> Result<(String, Vec<Response>)> {
     let trace = build_trace(a, vocab);
-    let responses = replay_trace(s, &trace)?;
+    let events = replay_trace(s, &trace)?;
+    let responses = responses_of(&events);
     let mut report = String::new();
     report.push_str(&format!(
         "serving demo: {} requests, Poisson rate {}/s, prompt {} tokens, {} new tokens each\n",
@@ -117,9 +148,15 @@ fn drive<S: Stepper>(s: &mut S, a: &ServeArgs, vocab: usize) -> Result<(String, 
     Ok((report, responses))
 }
 
+/// Vocab of the demo sim model (shared by every replica).
+const DEMO_VOCAB: usize = 256;
+
 fn ap_sim_backend(seed: u64) -> (SimBackend, usize) {
-    let (vocab, max_seq, dim) = (256usize, 256usize, 128usize);
-    (SimBackend::with_ap_gemm(vocab, max_seq, vec![1, 2, 4, 8], dim, 2, 2, seed ^ 0xAB), vocab)
+    let (max_seq, dim) = (256usize, 128usize);
+    (
+        SimBackend::with_ap_gemm(DEMO_VOCAB, max_seq, vec![1, 2, 4, 8], dim, 2, 2, seed ^ 0xAB),
+        DEMO_VOCAB,
+    )
 }
 
 fn pack_once_stats(backend: &SimBackend, packed_bytes: usize) -> String {
@@ -129,6 +166,19 @@ fn pack_once_stats(backend: &SimBackend, packed_bytes: usize) -> String {
          arena allocs {}, arena reuses {}\n",
         s.weight_packs, packed_bytes, s.act_packs, s.arena_allocs, s.arena_reuses
     )
+}
+
+fn demo_engine_config() -> EngineConfig {
+    EngineConfig {
+        kv_blocks: 64,
+        block_tokens: 16,
+        max_running: 8,
+        batcher: super::batcher::BatcherConfig {
+            batch_sizes: vec![1, 2, 4, 8],
+            max_wait: Duration::from_millis(2),
+        },
+        prefix_sharing: true,
+    }
 }
 
 /// Run the demo over the REAL PJRT artifacts; returns the metrics report.
@@ -168,55 +218,106 @@ pub fn run_sim_serving_demo(a: &ServeArgs) -> Result<String> {
 }
 
 /// Continuous-batching engine demo over the pack-once AP-GEMM sim
-/// backend: batcher-fed admission, incremental KV with swap preemption,
-/// per-step join/leave batching — weights decomposed+packed once at
-/// startup, every step packing only its activation batch through the
-/// recycling arena, with the counters to prove both appended.
+/// backend: batcher-fed admission, prefix-shared incremental KV with swap
+/// preemption, per-step join/leave batching — weights decomposed+packed
+/// once at startup, every step packing only its activation batch through
+/// the recycling arena, with the counters to prove both appended.
 pub fn run_engine_serving_demo(a: &ServeArgs) -> Result<String> {
     let (backend, vocab) = ap_sim_backend(a.seed);
     let packed_bytes = backend.packed_weight_bytes();
-    let mut eng = Engine::new(
-        backend,
-        EngineConfig {
-            kv_blocks: 64,
-            block_tokens: 16,
-            max_running: 8,
-            batcher: super::batcher::BatcherConfig {
-                batch_sizes: vec![1, 2, 4, 8],
-                max_wait: Duration::from_millis(2),
-            },
-        },
-    );
+    let mut eng = Engine::new(backend, demo_engine_config());
     let (mut report, _) = drive(&mut eng, a, vocab)?;
     let c = eng.counters();
     report.push_str(&format!(
         "engine: steps {}, prefills {}, preemptions {}, resumes {}, rejected {}\n",
         c.steps, c.prefills, c.preemptions, c.resumes, c.rejected
     ));
+    let sh = eng.pool().sharing();
     report.push_str(&format!(
-        "kv: {}/{} blocks free after drain\n",
+        "kv: {}/{} blocks free after drain | fresh {}, shared {}, restored {}, cow {}, peak {}\n",
         eng.pool().free_blocks(),
-        eng.pool().total_blocks()
+        eng.pool().total_blocks(),
+        sh.fresh_allocs,
+        sh.shared_live,
+        sh.cache_restores,
+        sh.cow_copies,
+        sh.peak_used,
     ));
     report.push_str(&pack_once_stats(eng.backend(), packed_bytes));
     Ok(report)
 }
 
+/// Multi-replica cluster demo: `a.replicas` identically-built pack-once
+/// engine replicas (all W2A2 here; the cluster API itself takes mixed
+/// precisions) behind the router, with merged metrics plus a per-replica
+/// load/KV breakdown.
+pub fn run_cluster_serving_demo(a: &ServeArgs) -> Result<String> {
+    let mut cluster = Cluster::new(a.route_policy);
+    for i in 0..a.replicas {
+        let (backend, _) = ap_sim_backend(a.seed);
+        cluster.add_replica(
+            format!("r{i}"),
+            PrecisionConfig::W2A2,
+            backend,
+            demo_engine_config(),
+        );
+    }
+    let (mut report, _) = drive(&mut cluster, a, DEMO_VOCAB)?;
+    report.push_str(&format!(
+        "cluster: {} replicas, policy {:?}, routed {}, completed {}, unroutable {}\n",
+        cluster.replicas(),
+        cluster.router().policy(),
+        cluster.router().routed,
+        cluster.router().completed,
+        cluster.unroutable(),
+    ));
+    for (eng, rep) in cluster.engines().iter().zip(cluster.router().replicas()) {
+        let c = eng.counters();
+        let sh = eng.pool().sharing();
+        report.push_str(&format!(
+            "  {} ({}): completed {}, steps {}, preempt {}, kv free {}/{}, \
+             fresh {}, shared {}, cow {}\n",
+            rep.name,
+            rep.precision.label(),
+            c.completed,
+            c.steps,
+            c.preemptions,
+            eng.pool().free_blocks(),
+            eng.pool().total_blocks(),
+            sh.fresh_allocs,
+            sh.shared_live,
+            sh.cow_copies,
+        ));
+    }
+    cluster.check_invariants().context("cluster invariants after drain")?;
+    Ok(report)
+}
+
 /// Pick the demo the build supports: real PJRT artifacts when the `pjrt`
 /// feature is compiled in (unless `--sim`); otherwise the pack-once sim
-/// backend, through the continuous-batching engine unless
+/// backend — a router-driven cluster when `--replicas ≥ 2`, the
+/// continuous-batching engine by default, or the group scheduler under
 /// `--group-scheduler`.  Shared by `apllm serve` and the llm_serving
 /// example.
 pub fn run_demo(a: &ServeArgs) -> Result<String> {
     #[cfg(feature = "pjrt")]
     if !a.sim {
-        return run_serving_demo(a);
+        if a.replicas <= 1 {
+            return run_serving_demo(a);
+        }
+        eprintln!(
+            "(cluster serving is sim-only for now — {} replicas run over the pack-once sim \
+             backend, NOT the PJRT artifacts)",
+            a.replicas
+        );
     }
     #[cfg(not(feature = "pjrt"))]
     if !a.sim {
         eprintln!("(pjrt feature not compiled in — serving over the pack-once sim backend)");
     }
-    if a.engine {
+    if a.replicas > 1 {
+        run_cluster_serving_demo(a)
+    } else if a.engine {
         run_engine_serving_demo(a)
     } else {
         run_sim_serving_demo(a)
@@ -255,8 +356,14 @@ mod tests {
         assert_eq!(a.rate_per_s, 2.5);
         assert!(a.sim);
         assert!(a.engine, "engine is the default");
+        assert_eq!(a.replicas, 1, "single replica is the default");
         let a = parse_args(&s(&["--group-scheduler"])).unwrap();
         assert!(!a.engine);
+        let a = parse_args(&s(&["--replicas", "3", "--route-policy", "round-robin"])).unwrap();
+        assert_eq!(a.replicas, 3);
+        assert_eq!(a.route_policy, RoutePolicy::RoundRobin);
+        let a = parse_args(&s(&["--route-policy", "least-loaded"])).unwrap();
+        assert_eq!(a.route_policy, RoutePolicy::LeastLoaded);
     }
 
     #[test]
@@ -267,5 +374,12 @@ mod tests {
         assert!(e.contains("needs a value") && e.contains("--rate"), "{e}");
         let e = parse_args(&s(&["--requests", "many"])).unwrap_err().to_string();
         assert!(e.contains("expects a count") && e.contains("many"), "{e}");
+        let e = parse_args(&s(&["--route-policy", "fastest"])).unwrap_err().to_string();
+        assert!(e.contains("round-robin") && e.contains("fastest"), "{e}");
+        let e = parse_args(&s(&["--replicas", "0"])).unwrap_err().to_string();
+        assert!(e.contains("≥ 1"), "{e}");
+        // conflicting mode flags are refused, not silently resolved
+        let e = parse_args(&s(&["--replicas", "2", "--group-scheduler"])).unwrap_err().to_string();
+        assert!(e.contains("--group-scheduler") && e.contains("single replica"), "{e}");
     }
 }

@@ -1,0 +1,283 @@
+//! Multi-replica serving cluster: N independent continuous-batching
+//! [`Engine`] replicas — each with its own [`KvPool`](super::kv::KvPool),
+//! batcher, and pack-once backend, possibly at different W/A precisions —
+//! driven behind the [`Router`].
+//!
+//! This is the deployment shape the related work motivates: FP6-LLM
+//! frames low-bit kernels as one half of an end-to-end serving co-design,
+//! and Any-Precision LLM serves several precisions from one deployment —
+//! which is exactly what a router over per-precision replicas provides.
+//! A request optionally pins a [`PrecisionConfig`]
+//! ([`Request::precision`]); the router narrows to matching replicas and
+//! picks by policy (round-robin, or least outstanding token budget).
+//!
+//! The cluster is itself a [`Stepper`]: `submit` routes, `step` advances
+//! every busy replica and merges their streamed [`TokenEvent`]s (tagging
+//! completions back to the router so its load accounting drains), and
+//! `metrics` merges per-replica metrics into one view.  Everything that
+//! serves a single engine — [`Server`](super::server::Server),
+//! [`replay_trace`](super::server::replay_trace), the benches — serves a
+//! cluster unchanged.
+
+use super::backend::Backend;
+use super::engine::{Engine, EngineConfig};
+use super::metrics::Metrics;
+use super::request::{Request, Response, TokenEvent};
+use super::router::{RoutePolicy, Router};
+use super::server::Stepper;
+use crate::anyhow::Result;
+use crate::model::PrecisionConfig;
+
+/// N engine replicas behind one router.
+pub struct Cluster<B: Backend> {
+    router: Router,
+    engines: Vec<Engine<B>>,
+    /// Cluster-level clock + router-reject accounting; per-replica
+    /// metrics merge into this for the aggregate view.
+    clock: Metrics,
+    /// Requests no replica could serve (precision pinned to nothing).
+    unroutable: u64,
+    /// Terminal events for unroutable requests, drained next step.
+    pending_events: Vec<TokenEvent>,
+}
+
+impl<B: Backend> Cluster<B> {
+    pub fn new(policy: RoutePolicy) -> Self {
+        Self {
+            router: Router::new(policy),
+            engines: Vec::new(),
+            clock: Metrics::default(),
+            unroutable: 0,
+            pending_events: Vec::new(),
+        }
+    }
+
+    /// Register a replica: a backend wrapped in its own engine, serving
+    /// `precision`.  Returns the replica index.
+    pub fn add_replica(
+        &mut self,
+        name: impl Into<String>,
+        precision: PrecisionConfig,
+        backend: B,
+        cfg: EngineConfig,
+    ) -> usize {
+        let idx = self.router.add_replica(name, precision);
+        self.engines.push(Engine::new(backend, cfg));
+        debug_assert_eq!(self.engines.len(), idx + 1);
+        idx
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    pub fn engines(&self) -> &[Engine<B>] {
+        &self.engines
+    }
+
+    pub fn engine(&self, idx: usize) -> &Engine<B> {
+        &self.engines[idx]
+    }
+
+    /// Requests rejected at the router (no replica for the pinned
+    /// precision).
+    pub fn unroutable(&self) -> u64 {
+        self.unroutable
+    }
+
+    /// Whole-cluster consistency: router load accounting conserves and
+    /// every replica's pool holds its block invariants.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.router.check_invariants()?;
+        for (i, e) in self.engines.iter().enumerate() {
+            e.pool().check_invariants().map_err(|err| format!("replica {i}: {err}"))?;
+        }
+        Ok(())
+    }
+
+    /// Step until every submitted request resolved; returns the full
+    /// event stream.
+    pub fn run_to_completion_events(&mut self) -> Result<Vec<TokenEvent>> {
+        self.start_clock();
+        let out = super::server::drain(self)?;
+        self.stop_clock();
+        Ok(out)
+    }
+}
+
+impl<B: Backend> Stepper for Cluster<B> {
+    /// Route to a replica by policy (respecting the request's precision
+    /// pin).  An unroutable request resolves with a terminal empty-stream
+    /// `Finished` on the next step.
+    fn submit(&mut self, r: Request) {
+        match self.router.route(&r, r.precision) {
+            Some(idx) => self.engines[idx].submit(r),
+            None => {
+                self.unroutable += 1;
+                self.clock.requests_in += 1;
+                self.clock.requests_done += 1;
+                self.pending_events
+                    .push(TokenEvent::Finished { id: r.id, response: Response::rejected(r.id) });
+            }
+        }
+    }
+
+    /// Advance every busy replica one iteration; merge their event
+    /// streams and drain completions out of the router's load accounting.
+    fn step(&mut self) -> Result<Vec<TokenEvent>> {
+        let mut events = std::mem::take(&mut self.pending_events);
+        for e in &mut self.engines {
+            if !e.is_idle() {
+                events.extend(e.step()?);
+            }
+        }
+        for ev in &events {
+            if let TokenEvent::Finished { id, .. } = ev {
+                // unroutable terminals were never routed; ignore those
+                let _ = self.router.complete(*id);
+            }
+        }
+        Ok(events)
+    }
+
+    fn is_idle(&self) -> bool {
+        self.pending_events.is_empty() && self.engines.iter().all(|e| e.is_idle())
+    }
+
+    /// Merged snapshot: per-replica counters/latencies summed onto the
+    /// cluster clock (wall time is the cluster's own bracket).
+    fn metrics(&self) -> Metrics {
+        let mut m = self.clock.clone();
+        for e in &self.engines {
+            m.merge(&e.metrics);
+        }
+        m
+    }
+
+    fn start_clock(&mut self) {
+        self.clock.start();
+        for e in &mut self.engines {
+            e.metrics.start();
+        }
+    }
+
+    fn stop_clock(&mut self) {
+        self.clock.finish();
+        for e in &mut self.engines {
+            e.metrics.finish();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::SimBackend;
+    use crate::coordinator::request::{responses_of, GenParams};
+
+    fn sim() -> SimBackend {
+        SimBackend::new(64, 64, vec![1, 2, 4, 8])
+    }
+
+    fn req(id: u64, prompt_len: usize, max_new: usize) -> Request {
+        Request::new(
+            id,
+            (1..=prompt_len as i32).collect(),
+            GenParams { max_new_tokens: max_new, sample: false, seed: id },
+        )
+    }
+
+    fn cluster3() -> Cluster<SimBackend> {
+        let mut c = Cluster::new(RoutePolicy::LeastLoaded);
+        for i in 0..3 {
+            c.add_replica(
+                format!("r{i}"),
+                PrecisionConfig::W2A2,
+                sim(),
+                EngineConfig { kv_blocks: 16, block_tokens: 4, ..EngineConfig::default() },
+            );
+        }
+        c
+    }
+
+    #[test]
+    fn cluster_serves_and_drains_router_accounting() {
+        let mut c = cluster3();
+        for i in 0..12u64 {
+            c.submit(req(i, 4, 5));
+        }
+        let events = c.run_to_completion_events().unwrap();
+        let out = responses_of(&events);
+        assert_eq!(out.len(), 12);
+        assert!(out.iter().all(|r| r.tokens.len() == 5));
+        assert_eq!(c.router().inflight(), 0, "completions drained the router");
+        assert_eq!(c.router().routed, 12);
+        assert_eq!(c.router().completed, 12);
+        c.check_invariants().unwrap();
+        // least-loaded actually spread the work
+        let busy = c.engines().iter().filter(|e| e.counters().completed > 0).count();
+        assert_eq!(busy, 3, "all replicas served");
+        let m = c.metrics();
+        assert_eq!(m.requests_done, 12);
+        assert_eq!(m.tokens_generated, 60);
+    }
+
+    #[test]
+    fn precision_pinning_routes_or_rejects() {
+        let mut c = Cluster::new(RoutePolicy::RoundRobin);
+        c.add_replica("w2", PrecisionConfig::W2A2, sim(), EngineConfig::default());
+        c.add_replica("w1", PrecisionConfig::W1A1, sim(), EngineConfig::default());
+        c.submit(req(0, 4, 3).with_precision(PrecisionConfig::W1A1));
+        c.submit(req(1, 4, 3).with_precision(PrecisionConfig::W8A8)); // nobody serves this
+        c.submit(req(2, 4, 3));
+        let events = c.run_to_completion_events().unwrap();
+        let out = responses_of(&events);
+        assert_eq!(out.len(), 3);
+        assert_eq!(c.unroutable(), 1);
+        let rej: Vec<_> = out.iter().filter(|r| r.tokens.is_empty()).collect();
+        assert_eq!(rej.len(), 1);
+        assert_eq!(rej[0].id.0, 1);
+        // the pinned request landed on the W1A1 replica
+        assert_eq!(c.engine(1).counters().completed, 1);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn engine_level_rejects_still_drain_the_router() {
+        let mut c = Cluster::new(RoutePolicy::RoundRobin);
+        c.add_replica(
+            "r0",
+            PrecisionConfig::W2A2,
+            sim(),
+            EngineConfig { kv_blocks: 2, block_tokens: 4, ..EngineConfig::default() },
+        );
+        // routed fine, but the engine's capacity guard rejects it (budget
+        // 40 tokens > 2×4 pool) — the Finished event must still release
+        // the router's load accounting
+        c.submit(req(0, 8, 32));
+        let events = c.run_to_completion_events().unwrap();
+        let out = responses_of(&events);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].tokens.is_empty());
+        assert_eq!(c.router().inflight(), 0);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cluster_is_deterministic() {
+        let run = || {
+            let mut c = cluster3();
+            for i in 0..9u64 {
+                c.submit(req(i, 3 + i as usize % 4, 4));
+            }
+            let mut out = responses_of(&c.run_to_completion_events().unwrap());
+            out.sort_by_key(|r| r.id);
+            out.iter().map(|r| r.tokens.clone()).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

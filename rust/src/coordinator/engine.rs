@@ -1,14 +1,18 @@
-//! Continuous-batching decode engine — the serving loop that finally
-//! composes the coordinator's pieces end to end (Orca/vLLM-style
-//! iteration-level scheduling, per PAPERS.md):
+//! Continuous-batching decode engine — the serving loop that composes
+//! the coordinator's pieces end to end (Orca/vLLM-style iteration-level
+//! scheduling, per PAPERS.md):
 //!
 //! * the [`Batcher`] shapes raw arrivals into admission groups (flushed
 //!   early whenever the engine is otherwise idle);
-//! * the [`KvPool`] owns per-sequence block tables, growing them one
-//!   token at a time as sequences decode;
+//! * the [`KvPool`] owns per-sequence block tables — admission maps
+//!   shared prompt prefixes onto refcounted cached blocks
+//!   ([`KvPool::admit_shared`]), decode grows tables one token at a time;
 //! * each [`Engine::step`] runs **one batched decode over whatever is
 //!   resident** — sequences join and leave the batch every step instead
 //!   of waiting for a group to drain;
+//! * every step **streams [`TokenEvent`]s**: admissions, each generated
+//!   token, preempt/resume transitions, and terminal completions — the
+//!   delivery path TTFT/ITL metrics are measured on;
 //! * logits come from the backend's pack-once pipeline
 //!   ([`SimBackend::with_ap_gemm`](super::backend::SimBackend::with_ap_gemm)
 //!   routes them through the `PackedWeightStore`/`PackArena` prepacked
@@ -19,43 +23,50 @@
 //!
 //! 1. **Arrivals** — poll the batcher; released groups enter the
 //!    admission queue (FIFO).
-//! 2. **Swap-in** — preempted sequences re-acquire KV blocks and rejoin
-//!    the batch, oldest first, before any new admission.
+//! 2. **Swap-in** — preempted sequences re-acquire KV blocks (back
+//!    through the prefix cache, so a resumed sequence re-shares what it
+//!    shared before) and rejoin the batch, oldest first, before any new
+//!    admission.
 //! 3. **Admission + prefill** — while a decode slot and the *prompt's*
-//!    KV blocks are free, pop the queue, prefill (batch-1) and emit the
-//!    first token.  Only the prompt is reserved up front — unlike the
-//!    group scheduler, decode-time KV is claimed incrementally, which is
-//!    what lets more sequences share the pool (and what makes preemption
-//!    reachable).
+//!    KV blocks are free, pop the queue, prefill (batch-1) and stream the
+//!    first token.  Only the prompt is reserved up front — and with the
+//!    prefix cache, a prompt whose leading blocks are already resident
+//!    admits without allocating them at all.
 //! 4. **Decode** — every resident sequence first grows its block table by
 //!    one slot through the pool; an [`KvError::OutOfBlocks`] clean
 //!    failure triggers **preemption** (below).  Survivors then advance
-//!    one token in a single batched backend call.
-//! 5. **Completion** — finished sequences release their blocks and emit
-//!    a [`Response`].  (Completion also runs *before* decode so freshly
-//!    finished sequences free blocks for the current step.)
+//!    one token in a single batched backend call, streaming each token.
+//! 5. **Completion** — finished sequences release their block references
+//!    and stream a terminal [`TokenEvent::Finished`].  (Completion also
+//!    runs *before* decode so freshly finished sequences free blocks for
+//!    the current step.)
 //!
 //! ## Preemption policy
 //!
 //! Swap-style, youngest-victim-first: when the pool cannot grow a
 //! sequence, the most recently admitted *other* sequence is swapped out —
-//! its (host-resident) [`SeqKv`] state is kept, its pool blocks are
-//! released, and it joins a FIFO resume queue that has priority over new
-//! admissions.  Submission rejects any request whose full
-//! `prompt + max_new` stream exceeds the backend context window (no
-//! silently truncated tails) or whose KV could never fit the pool alone,
-//! the latter of which guarantees
-//! the block-requester can always be satisfied after preempting — the
+//! its (host-resident) [`SeqKv`] state is kept, its pool block references
+//! are released (shared blocks stay resident for their other owners), and
+//! it joins a FIFO resume queue that has priority over new admissions.
+//! Submission rejects any request whose full `prompt + max_new` stream
+//! exceeds the backend context window (no silently truncated tails) or
+//! whose KV could never fit the pool alone, the latter of which
+//! guarantees the block-requester can always be satisfied after
+//! preempting — once every other sequence is swapped out, only the
+//! requester's own references remain, so its next block is free; the
 //! engine cannot deadlock, and every step a non-empty batch generates at
 //! least one token, so it cannot livelock either.  Because resume keeps
 //! the KV state and [`sample_token`] is seeded per (request, step),
-//! preemption never changes a request's token stream.
+//! preemption never changes a request's token stream.  Swapped sequences
+//! report their retained token footprint
+//! ([`Metrics::kv_swapped_tokens`]), so capacity planning can tell
+//! resident from swapped KV.
 
 use super::backend::{gather_kv_refs, Backend, HasSeqKv, SeqKv};
 use super::batcher::{Batcher, BatcherConfig};
 use super::kv::{KvError, KvPool};
 use super::metrics::Metrics;
-use super::request::{sample_token, Request, Response};
+use super::request::{responses_of, sample_token, Request, Response, TokenEvent};
 use super::server::Stepper;
 use crate::anyhow::{bail, Result};
 use std::collections::VecDeque;
@@ -72,6 +83,10 @@ pub struct EngineConfig {
     pub max_running: usize,
     /// Admission batcher (deadline + supported group sizes).
     pub batcher: BatcherConfig,
+    /// Admit through the hash-based prefix cache (copy-on-write shared
+    /// blocks).  Off = the PR 2 private-allocation baseline, kept so the
+    /// serving bench can report the blocks sharing saves.
+    pub prefix_sharing: bool,
 }
 
 impl Default for EngineConfig {
@@ -83,6 +98,7 @@ impl Default for EngineConfig {
             // zero deadline: groups release as soon as the engine polls —
             // iteration-level scheduling rarely wants to hold arrivals back
             batcher: BatcherConfig { batch_sizes: vec![1, 2, 4, 8], max_wait: Duration::ZERO },
+            prefix_sharing: true,
         }
     }
 }
@@ -108,10 +124,27 @@ struct RunSeq {
     next_token: i32,
     generated: Vec<i32>,
     first_token_at: Instant,
+    /// When this sequence's previous token streamed (ITL measurement;
+    /// spans swap-out time, so preemption is visible in the percentiles).
+    last_token_at: Instant,
+    /// KV content tokens, materialized once at preemption so the swap-in
+    /// loop doesn't rebuild prompt+decoded every blocked step.
+    swap_content: Option<Vec<i32>>,
     /// Admission order (monotone, assigned once at first admission and
     /// kept across preemption) — victim selection preempts the largest,
     /// so a just-resumed old sequence is never mistaken for the youngest.
     admitted_at: u64,
+}
+
+impl RunSeq {
+    /// The tokens whose KV this sequence currently holds (prompt plus
+    /// the decoded inputs) — what a prefix-cache re-admission hashes.
+    fn kv_content(&self) -> Vec<i32> {
+        let decoded = self.kv.pos - self.req.prompt.len();
+        let mut c = self.req.prompt.clone();
+        c.extend_from_slice(&self.generated[..decoded]);
+        c
+    }
 }
 
 impl HasSeqKv for RunSeq {
@@ -121,7 +154,8 @@ impl HasSeqKv for RunSeq {
 }
 
 /// The continuous-batching engine.  Single-threaded state machine — wrap
-/// it in a [`Server`](super::server::Server) for the channel serve loop.
+/// it in a [`Server`](super::server::Server) for the channel serve loop,
+/// or several of them in a [`Cluster`](super::cluster::Cluster).
 pub struct Engine<B: Backend> {
     backend: B,
     cfg: EngineConfig,
@@ -137,6 +171,9 @@ pub struct Engine<B: Backend> {
     swapped: VecDeque<RunSeq>,
     /// Monotone admission counter feeding `RunSeq::admitted_at`.
     admissions: u64,
+    /// Events produced outside `step` (submit-time rejections), drained
+    /// into the next step's stream.
+    pending_events: Vec<TokenEvent>,
     pub metrics: Metrics,
     counters: EngineCounters,
 }
@@ -154,6 +191,7 @@ impl<B: Backend> Engine<B> {
             running: Vec::new(),
             swapped: VecDeque::new(),
             admissions: 0,
+            pending_events: Vec::new(),
             metrics: Metrics::default(),
             counters: EngineCounters::default(),
         }
@@ -183,21 +221,28 @@ impl<B: Backend> Engine<B> {
         self.swapped.len()
     }
 
+    /// KV tokens retained host-side by swapped-out sequences.
+    pub fn swapped_tokens(&self) -> usize {
+        self.swapped.iter().map(|s| s.kv.pos).sum()
+    }
+
     pub fn is_idle(&self) -> bool {
         self.batcher.queued() == 0
             && self.wait.is_empty()
             && self.running.is_empty()
             && self.swapped.is_empty()
+            && self.pending_events.is_empty()
     }
 
     /// Submit a request.  Requests that could never run to completion —
     /// empty or oversized prompt, zero token budget, a `prompt + max_new`
     /// stream exceeding the backend's context window, or a KV footprint
     /// exceeding the whole pool (the preemption progress guarantee needs
-    /// one sequence to fit alone) — are rejected immediately and counted,
-    /// never queued.  Rejecting up front keeps the engine's contract
-    /// honest: an accepted request always gets its full `max_new` tokens,
-    /// identical to the unbatched path, never a silently truncated tail.
+    /// one sequence to fit alone) — are rejected immediately and resolve
+    /// with a terminal empty-stream [`TokenEvent::Finished`] on the next
+    /// step.  Rejecting up front keeps the engine's contract honest: an
+    /// accepted request always gets its full `max_new` tokens, identical
+    /// to the unbatched path, never a silently truncated tail.
     pub fn submit(&mut self, req: Request) {
         self.metrics.requests_in += 1;
         self.counters.submitted += 1;
@@ -210,18 +255,38 @@ impl<B: Backend> Engine<B> {
         {
             self.counters.rejected += 1;
             self.metrics.requests_done += 1;
+            self.pending_events
+                .push(TokenEvent::Finished { id: req.id, response: Response::rejected(req.id) });
             return;
         }
         self.batcher.push(req);
     }
 
+    /// Admit a sequence's KV — through the prefix cache when sharing is
+    /// on, privately otherwise.  `content` is the tokens the KV holds
+    /// (the prompt at first admission, prompt+decoded at resume).  Fails
+    /// without side effects, so admission loops simply try and break on
+    /// the allocator's clean refusal.
+    fn pool_admit(&mut self, seq: u64, content: &[i32]) -> Result<(), KvError> {
+        if self.cfg.prefix_sharing {
+            self.pool.admit_shared(seq, content)
+        } else {
+            self.pool.admit(seq, content.len())
+        }
+    }
+
     /// Swap out the youngest resident sequence other than `keep`: its pool
-    /// blocks are released (the KV data itself lives host-side in `SeqKv`)
+    /// block references are released (the KV data itself lives host-side
+    /// in `SeqKv`; shared blocks stay resident for their other owners)
     /// and it joins the resume queue.  Youth is judged by the original
     /// admission order, not the position in `running` — a resumed old
     /// sequence sits at the back of the vec but must not ping-pong
     /// straight back out.
-    fn preempt_youngest_except(&mut self, keep: u64) -> Result<()> {
+    fn preempt_youngest_except(
+        &mut self,
+        keep: u64,
+        events: &mut Vec<TokenEvent>,
+    ) -> Result<()> {
         let victim_idx = self
             .running
             .iter()
@@ -234,16 +299,19 @@ impl<B: Backend> Engine<B> {
             // sequence can always grow to its own prompt+max_new budget
             bail!("KV pool exhausted by a single sequence (pool smaller than one request)");
         };
-        let victim = self.running.remove(vi);
+        let mut victim = self.running.remove(vi);
+        victim.swap_content = Some(victim.kv_content());
         self.pool.release(victim.req.id.0)?;
         self.counters.preemptions += 1;
         self.metrics.preemptions += 1;
+        events.push(TokenEvent::Preempted { id: victim.req.id });
         self.swapped.push_back(victim);
         Ok(())
     }
 
-    /// Move finished sequences out of the running set, releasing blocks.
-    fn collect_finished(&mut self, done: &mut Vec<Response>) -> Result<()> {
+    /// Move finished sequences out of the running set, releasing blocks
+    /// and streaming their terminal events.
+    fn collect_finished(&mut self, events: &mut Vec<TokenEvent>) -> Result<()> {
         let mut i = 0;
         while i < self.running.len() {
             let finished = self.running[i].generated.len()
@@ -262,22 +330,35 @@ impl<B: Backend> Engine<B> {
             self.metrics.requests_done += 1;
             let total = Instant::now().duration_since(a.req.arrived).as_secs_f64();
             self.metrics.total.record(total);
-            done.push(Response {
+            events.push(TokenEvent::Finished {
                 id: a.req.id,
-                tokens: a.generated,
-                queue_s: 0.0,
-                total_s: total,
-                ttft_s: a.first_token_at.duration_since(a.req.arrived).as_secs_f64(),
+                response: Response {
+                    id: a.req.id,
+                    tokens: a.generated,
+                    queue_s: 0.0,
+                    total_s: total,
+                    ttft_s: a.first_token_at.duration_since(a.req.arrived).as_secs_f64(),
+                },
             });
         }
         Ok(())
     }
 
+    /// Refresh the resident/swapped KV footprint gauges.
+    fn note_kv_footprint(&mut self) {
+        self.metrics.kv_resident_tokens =
+            self.running.iter().map(|s| s.kv.pos as u64).sum();
+        self.metrics.kv_swapped_tokens = self.swapped_tokens() as u64;
+        self.metrics.kv_swapped_peak =
+            self.metrics.kv_swapped_peak.max(self.metrics.kv_swapped_tokens);
+    }
+
     /// One engine iteration (see the module docs for the five phases).
-    /// Returns the responses completed this step.
-    pub fn step(&mut self) -> Result<Vec<Response>> {
+    /// Returns the events produced this step, in order.
+    pub fn step(&mut self) -> Result<Vec<TokenEvent>> {
         let now = Instant::now();
         self.counters.steps += 1;
+        let mut events = std::mem::take(&mut self.pending_events);
 
         // 1: arrivals — batcher groups flow into the admission queue; an
         // otherwise-empty engine flushes the batcher instead of idling
@@ -290,30 +371,47 @@ impl<B: Backend> Engine<B> {
         }
 
         // 2: swap-in — resume preempted sequences (FIFO) before admitting
-        // anything new; they are older by definition.
+        // anything new; they are older by definition.  Resume goes back
+        // through the prefix cache: an identical prefix another sequence
+        // kept resident is re-shared instead of re-allocated.
         while self.running.len() < self.cfg.max_running {
-            let Some(front) = self.swapped.front() else { break };
-            let kv_tokens = front.kv.pos;
-            if !self.pool.can_admit(kv_tokens) {
-                break;
+            let Some(mut seq) = self.swapped.pop_front() else { break };
+            let content = seq.swap_content.take().unwrap_or_else(|| seq.kv_content());
+            match self.pool_admit(seq.req.id.0, &content) {
+                Ok(()) => {
+                    self.counters.resumes += 1;
+                    self.metrics.resumes += 1;
+                    events.push(TokenEvent::Resumed { id: seq.req.id });
+                    self.running.push(seq);
+                }
+                Err(e) => {
+                    // still blocked (or an engine bug): park it back at
+                    // the head, content retained for the next attempt
+                    seq.swap_content = Some(content);
+                    self.swapped.push_front(seq);
+                    match e {
+                        KvError::OutOfBlocks { .. } => break,
+                        other => return Err(other.into()),
+                    }
+                }
             }
-            let seq = self.swapped.pop_front().unwrap();
-            self.pool.admit(seq.req.id.0, kv_tokens)?;
-            self.counters.resumes += 1;
-            self.metrics.resumes += 1;
-            self.running.push(seq);
         }
 
         // 3: admission + prefill — reserve only the prompt's KV; decode
         // growth is incremental (that is the continuous-batching bet).
         while self.swapped.is_empty() && self.running.len() < self.cfg.max_running {
-            let Some(front) = self.wait.front() else { break };
-            if !self.pool.can_admit(front.prompt.len()) {
-                break; // head-of-line waits for memory
+            let Some(req) = self.wait.pop_front() else { break };
+            if let Err(e) = self.pool_admit(req.id.0, &req.prompt) {
+                // head-of-line waits for memory (admit has no side
+                // effects on refusal)
+                self.wait.push_front(req);
+                match e {
+                    KvError::OutOfBlocks { .. } => break,
+                    other => return Err(other.into()),
+                }
             }
-            let req = self.wait.pop_front().unwrap();
-            self.pool.admit(req.id.0, req.prompt.len())?;
             self.metrics.queue.record(now.duration_since(req.arrived).as_secs_f64());
+            events.push(TokenEvent::Admitted { id: req.id });
             let (logits, kv) = match self.backend.prefill_one(&req.prompt) {
                 Ok(r) => r,
                 Err(e) => {
@@ -328,6 +426,7 @@ impl<B: Backend> Engine<B> {
             let first_token_at = Instant::now();
             self.metrics.ttft.record(first_token_at.duration_since(req.arrived).as_secs_f64());
             self.metrics.tokens_generated += 1;
+            events.push(TokenEvent::Token { id: req.id, token: tok, step: 0 });
             let admitted_at = self.admissions;
             self.admissions += 1;
             self.running.push(RunSeq {
@@ -336,14 +435,15 @@ impl<B: Backend> Engine<B> {
                 next_token: tok,
                 generated: vec![tok],
                 first_token_at,
+                last_token_at: first_token_at,
+                swap_content: None,
                 admitted_at,
             });
         }
 
-        let mut done = Vec::new();
         // early completion: a prefill can satisfy max_new == 1 outright,
         // and freshly freed blocks should help the decode below
-        self.collect_finished(&mut done)?;
+        self.collect_finished(&mut events)?;
 
         // 4: decode — secure one KV slot per participant (preempting on
         // the allocator's clean failure), then one batched call.
@@ -361,7 +461,9 @@ impl<B: Backend> Engine<B> {
             }
             match self.pool.append_token(id) {
                 Ok(()) => i += 1,
-                Err(KvError::OutOfBlocks { .. }) => self.preempt_youngest_except(id)?,
+                Err(KvError::OutOfBlocks { .. }) => {
+                    self.preempt_youngest_except(id, &mut events)?
+                }
                 Err(e) => return Err(e.into()),
             }
         }
@@ -384,22 +486,30 @@ impl<B: Backend> Engine<B> {
                 let a = &mut self.running[i];
                 a.next_token = tok;
                 a.generated.push(tok);
+                let t = Instant::now();
+                self.metrics.itl.record(t.duration_since(a.last_token_at).as_secs_f64());
+                a.last_token_at = t;
                 self.metrics.tokens_generated += 1;
+                events.push(TokenEvent::Token { id: a.req.id, token: tok, step });
             }
         }
 
         // 5: completion
-        self.collect_finished(&mut done)?;
-        Ok(done)
+        self.collect_finished(&mut events)?;
+        self.note_kv_footprint();
+        Ok(events)
     }
 
-    /// Step until every submitted request completed; returns all responses.
+    /// Step until every submitted request resolved; returns the terminal
+    /// responses (rejected requests appear with empty token streams).
     pub fn run_to_completion(&mut self) -> Result<Vec<Response>> {
-        let mut out = Vec::new();
+        Ok(responses_of(&self.run_to_completion_events()?))
+    }
+
+    /// Step until idle, returning the full event stream.
+    pub fn run_to_completion_events(&mut self) -> Result<Vec<TokenEvent>> {
         self.metrics.start();
-        while !self.is_idle() {
-            out.extend(self.step()?);
-        }
+        let out = super::server::drain(self)?;
         self.metrics.finish();
         Ok(out)
     }
@@ -410,7 +520,7 @@ impl<B: Backend> Stepper for Engine<B> {
         Engine::submit(self, r);
     }
 
-    fn step(&mut self) -> Result<Vec<Response>> {
+    fn step(&mut self) -> Result<Vec<TokenEvent>> {
         Engine::step(self)
     }
 
@@ -418,12 +528,16 @@ impl<B: Backend> Stepper for Engine<B> {
         Engine::is_idle(self)
     }
 
-    fn metrics(&self) -> &Metrics {
-        &self.metrics
+    fn metrics(&self) -> Metrics {
+        self.metrics.clone()
     }
 
-    fn metrics_mut(&mut self) -> &mut Metrics {
-        &mut self.metrics
+    fn start_clock(&mut self) {
+        self.metrics.start();
+    }
+
+    fn stop_clock(&mut self) {
+        self.metrics.finish();
     }
 }
 
@@ -480,19 +594,50 @@ mod tests {
     }
 
     #[test]
+    fn streams_tokens_and_lifecycle_events_in_order() {
+        let mut e = Engine::new(SimBackend::new(64, 64, vec![1, 2, 4, 8]), cfg(64, 8, 4));
+        e.submit(req(0, 3, 5));
+        let events = e.run_to_completion_events().unwrap();
+        // exactly: Admitted, 5 Tokens with ascending steps, Finished
+        assert!(matches!(events[0], TokenEvent::Admitted { id } if id.0 == 0));
+        let toks: Vec<(i32, usize)> = events
+            .iter()
+            .filter_map(|ev| match ev {
+                TokenEvent::Token { token, step, .. } => Some((*token, *step)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(toks.len(), 5);
+        assert!(toks.iter().enumerate().all(|(i, &(_, st))| st == i));
+        let resp = match events.last().unwrap() {
+            TokenEvent::Finished { response, .. } => response.clone(),
+            other => panic!("last event {other:?}"),
+        };
+        assert_eq!(resp.tokens, toks.iter().map(|&(t, _)| t).collect::<Vec<_>>());
+        // per-token ITL: one gap per non-first token
+        assert_eq!(e.metrics.itl.count(), 4);
+        assert_eq!(e.metrics.ttft.count(), 1);
+    }
+
+    #[test]
     fn preemption_swaps_out_and_resumes_correctly() {
         // pool: 4 blocks × 4 tokens.  Two requests of budget 16 tokens
         // (4 blocks) each — both admit on their 8-token prompts (2 blocks
         // each), then decode growth exhausts the pool and the younger one
-        // must be swapped out and finish later.
+        // must be swapped out and finish later.  Sharing is OFF so the
+        // identical prompts don't defuse the pressure.
         let mut plain = SimBackend::new(64, 64, vec![1, 2, 4, 8]);
         let want_a = reference(&mut plain, &req(0, 8, 8).prompt, &req(0, 8, 8).params);
         let want_b = reference(&mut plain, &req(1, 8, 8).prompt, &req(1, 8, 8).params);
 
-        let mut e = Engine::new(SimBackend::new(64, 64, vec![1, 2, 4, 8]), cfg(4, 4, 4));
+        let mut e = Engine::new(
+            SimBackend::new(64, 64, vec![1, 2, 4, 8]),
+            EngineConfig { prefix_sharing: false, ..cfg(4, 4, 4) },
+        );
         e.submit(req(0, 8, 8));
         e.submit(req(1, 8, 8));
-        let mut out = e.run_to_completion().unwrap();
+        let events = e.run_to_completion_events().unwrap();
+        let mut out = responses_of(&events);
         out.sort_by_key(|r| r.id);
         assert_eq!(out.len(), 2);
         assert_eq!(out[0].tokens, want_a, "preemption must not change tokens");
@@ -502,6 +647,63 @@ mod tests {
         assert_eq!(c.resumes, c.preemptions, "every swap-out swapped back in");
         assert_eq!(e.pool().free_blocks(), 4, "no leaked blocks");
         e.pool().check_invariants().unwrap();
+        // the lifecycle is streamed: Preempted/Resumed pairs in order
+        let preempts =
+            events.iter().filter(|ev| matches!(ev, TokenEvent::Preempted { .. })).count();
+        let resumes = events.iter().filter(|ev| matches!(ev, TokenEvent::Resumed { .. })).count();
+        assert_eq!(preempts as u64, c.preemptions);
+        assert_eq!(resumes as u64, c.resumes);
+        // swapped footprint was visible while a sequence was out
+        assert!(e.metrics.kv_swapped_peak >= 8, "peak {}", e.metrics.kv_swapped_peak);
+        assert_eq!(e.metrics.kv_swapped_tokens, 0, "nothing swapped after drain");
+    }
+
+    #[test]
+    fn shared_prefixes_decode_identically_and_save_blocks() {
+        // 6 requests over ONE long shared prompt, sharing on vs off: the
+        // token streams must match the unbatched oracle bit-for-bit both
+        // ways, and sharing must allocate measurably fewer fresh blocks.
+        let shared: Vec<i32> = (1..=16).collect();
+        let reqs: Vec<Request> = (0..6u64)
+            .map(|i| {
+                Request::new(
+                    i,
+                    shared.clone(),
+                    GenParams { max_new_tokens: 4, sample: false, seed: i },
+                )
+            })
+            .collect();
+        let mut plain = SimBackend::new(64, 64, vec![1, 2, 4, 8]);
+        let want: Vec<Vec<i32>> =
+            reqs.iter().map(|r| reference(&mut plain, &r.prompt, &r.params)).collect();
+
+        let mut fresh = [0u64; 2];
+        for (slot, sharing) in [(0usize, true), (1usize, false)] {
+            let mut e = Engine::new(
+                SimBackend::new(64, 64, vec![1, 2, 4, 8]),
+                EngineConfig { prefix_sharing: sharing, ..cfg(32, 4, 8) },
+            );
+            for r in &reqs {
+                e.submit(r.clone());
+            }
+            let mut out = e.run_to_completion().unwrap();
+            out.sort_by_key(|r| r.id);
+            for (r, w) in out.iter().zip(&want) {
+                assert_eq!(&r.tokens, w, "sharing={sharing} req {}", r.id.0);
+            }
+            assert_eq!(e.pool().free_blocks(), 32, "no leaks (sharing={sharing})");
+            e.pool().check_invariants().unwrap();
+            fresh[slot] = e.pool().sharing().fresh_allocs;
+            if sharing {
+                assert!(e.pool().sharing().shared_live > 0, "prefix cache must hit");
+            }
+        }
+        assert!(
+            fresh[0] < fresh[1],
+            "sharing allocated {} fresh blocks, baseline {}",
+            fresh[0],
+            fresh[1]
+        );
     }
 
     #[test]
@@ -513,8 +715,12 @@ mod tests {
         e.submit(req(3, 6, 8)); // 14 tokens > 2×4 pool capacity
         e.submit(req(4, 3, 4)); // fits
         let out = e.run_to_completion().unwrap();
-        assert_eq!(out.len(), 1);
-        assert_eq!(out[0].id.0, 4);
+        // rejects resolve terminally with empty streams
+        assert_eq!(out.len(), 5);
+        let (ok, rejected): (Vec<_>, Vec<_>) = out.iter().partition(|r| !r.tokens.is_empty());
+        assert_eq!(ok.len(), 1);
+        assert_eq!(ok[0].id.0, 4);
+        assert_eq!(rejected.len(), 4);
         assert_eq!(e.counters().rejected, 4);
         assert_eq!(e.metrics.requests_done, 5, "rejects are accounted");
 
@@ -526,8 +732,9 @@ mod tests {
         assert_eq!(e2.counters().rejected, 1);
         e2.submit(req(1, 20, 44)); // exactly max_seq: runs to completion
         let out = e2.run_to_completion().unwrap();
-        assert_eq!(out.len(), 1);
-        assert_eq!(out[0].tokens.len(), 44);
+        let ok: Vec<_> = out.iter().filter(|r| !r.tokens.is_empty()).collect();
+        assert_eq!(ok.len(), 1);
+        assert_eq!(ok[0].tokens.len(), 44);
     }
 
     #[test]
@@ -547,17 +754,22 @@ mod tests {
     #[test]
     fn batch_composition_does_not_change_tokens() {
         // the core continuous-batching correctness claim: whatever the
-        // admission interleaving, each request's stream matches the
-        // unbatched reference
+        // admission interleaving (and whether or not prefixes share
+        // blocks), each request's stream matches the unbatched reference
         let mut plain = SimBackend::new(64, 64, vec![1, 2, 4, 8]);
         let reqs: Vec<Request> = (0..10)
             .map(|i| req(i, 1 + (i as usize * 3) % 9, 1 + (i as usize * 5) % 11))
             .collect();
         let want: Vec<Vec<i32>> =
             reqs.iter().map(|r| reference(&mut plain, &r.prompt, &r.params)).collect();
-        for (kv_blocks, max_running) in [(64, 8), (6, 3), (5, 8)] {
+        for (kv_blocks, max_running, sharing) in
+            [(64, 8, true), (6, 3, true), (5, 8, true), (6, 3, false)]
+        {
             let backend = SimBackend::new(64, 64, vec![1, 2, 4, 8]);
-            let mut e = Engine::new(backend, cfg(kv_blocks, 4, max_running));
+            let mut e = Engine::new(
+                backend,
+                EngineConfig { prefix_sharing: sharing, ..cfg(kv_blocks, 4, max_running) },
+            );
             for r in &reqs {
                 e.submit(r.clone());
             }
@@ -574,19 +786,36 @@ mod tests {
     #[test]
     fn prop_kv_churn_conserves_blocks() {
         // the KvPool + engine churn property: random admit/decode/finish/
-        // preempt interleavings hold used+free == total and never
-        // double-own a block, checked after EVERY step
+        // preempt interleavings — with prefix sharing on and off — hold
+        // used+free == total and never double-own a block, checked after
+        // EVERY step
         forall(24, |rng| {
             let block_tokens = rng.usize(2, 6);
             let kv_blocks = rng.usize(3, 16);
             let max_running = rng.usize(1, 9);
+            let sharing = rng.bool();
             let mut e = Engine::new(
                 SimBackend::new(32, 128, vec![1, 2, 4, 8]),
-                cfg(kv_blocks, block_tokens, max_running),
+                EngineConfig {
+                    prefix_sharing: sharing,
+                    ..cfg(kv_blocks, block_tokens, max_running)
+                },
             );
             let n = rng.usize(1, 20);
+            // a few shared prompt shapes so the sharing path actually hits
             let mut pending: Vec<Request> = (0..n)
-                .map(|i| req(i as u64, rng.usize(1, 12), rng.usize(1, 10)))
+                .map(|i| {
+                    let shape = rng.u32(0, 3);
+                    let plen = match shape {
+                        0 => 2 * block_tokens, // full shared blocks
+                        _ => rng.usize(1, 12),
+                    };
+                    let mut r = req(i as u64, plen.max(1), rng.usize(1, 10));
+                    if shape == 0 {
+                        r.prompt = (100..100 + plen as i32).collect();
+                    }
+                    r
+                })
                 .collect();
             let mut out = Vec::new();
             while !pending.is_empty() || !e.is_idle() {
@@ -594,7 +823,7 @@ mod tests {
                 for _ in 0..rng.usize(0, 3).min(pending.len()) {
                     e.submit(pending.remove(0));
                 }
-                out.extend(e.step().unwrap());
+                out.extend(responses_of(&e.step().unwrap()));
                 e.pool().check_invariants().unwrap_or_else(|err| panic!("invariant: {err}"));
                 assert_eq!(
                     e.pool().used_blocks() + e.pool().free_blocks(),
@@ -604,7 +833,7 @@ mod tests {
             assert_eq!(e.pool().free_blocks(), kv_blocks, "drained pool leaks nothing");
             let c = e.counters();
             assert_eq!(c.completed + c.rejected, c.submitted, "every request resolves");
-            assert_eq!(out.len() as u64, c.completed);
+            assert_eq!(out.len() as u64, c.completed + c.rejected);
             assert_eq!(c.resumes, c.preemptions);
         });
     }

@@ -1,11 +1,33 @@
-//! Paged KV-cache block allocator (vLLM-style) — the memory-management
-//! substrate for continuous batching.
+//! Paged KV-cache block allocator with **refcounted copy-on-write blocks
+//! and a hash-based prefix cache** (vLLM-style automatic prefix caching)
+//! — the memory-management substrate for continuous batching.
 //!
 //! The cache is a pool of fixed-size blocks (`block_tokens` KV slots
 //! each); a sequence owns an ordered block list that grows as it decodes.
-//! The allocator guarantees: no block is owned twice, frees are idempotent
-//! per sequence, and capacity is respected (allocation fails cleanly when
-//! the pool is exhausted — the scheduler's preemption signal).
+//! Unlike the PR 2 allocator, blocks are no longer private: every block
+//! carries a reference count, and **full** blocks are content-addressed
+//! by a chained hash of the tokens they hold.  Admitting a prompt through
+//! [`KvPool::admit_shared`] maps its leading full blocks onto any cached
+//! block with the same chained hash — requests sharing a system prompt
+//! share physical KV blocks instead of duplicating them.  Three sharing
+//! mechanisms compose:
+//!
+//! * **prefix hits** — an admit whose leading blocks hash-match blocks
+//!   another live sequence holds bumps their refcounts (`shared_live`);
+//! * **cache restores** — a hash-match against a block whose last owner
+//!   already released it (refcount 0, content retained on the free list)
+//!   revives it without a fresh allocation (`cache_restores`);
+//! * **fork** — [`KvPool::fork`] clones a whole table refcount-only, and
+//!   the first append into a shared *partial* block triggers a true
+//!   **copy-on-write** split (`cow_copies`).
+//!
+//! The allocator guarantees: a block's refcount always equals the number
+//! of table references to it, a block is freed exactly when its last
+//! reference drops, frees never orphan a live reference, and capacity is
+//! respected (allocation fails cleanly when the pool is exhausted — the
+//! engine's preemption signal).  [`KvPool::check_invariants`] proves
+//! block conservation under sharing after every churn step of the
+//! property tests.
 
 use std::collections::HashMap;
 
@@ -20,12 +42,76 @@ pub struct BlockTable {
     pub tokens: usize,
 }
 
-/// Fixed-capacity block pool.
+/// Sharing / allocation counters (cumulative for the pool's lifetime).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct KvSharing {
+    /// Blocks taken fresh off the free list (cached content, if any,
+    /// invalidated).  The no-sharing baseline allocates one of these per
+    /// logical block; the difference is the blocks sharing saved.
+    pub fresh_allocs: u64,
+    /// Admitted blocks mapped onto a block another sequence holds
+    /// (refcount bumped — zero allocation cost).
+    pub shared_live: u64,
+    /// Admitted blocks revived from the free list by hash (content
+    /// retained from a released sequence — costs a free slot, saves the
+    /// prefill recompute).
+    pub cache_restores: u64,
+    /// Copy-on-write splits: appends into a block with refcount > 1.
+    pub cow_copies: u64,
+    /// High-water mark of simultaneously used (refcount > 0) blocks.
+    pub peak_used: usize,
+}
+
+impl KvSharing {
+    /// Logical blocks admitted = fresh + shared + restored.
+    pub fn logical_blocks(&self) -> u64 {
+        self.fresh_allocs + self.shared_live + self.cache_restores
+    }
+}
+
+/// Chained FNV-1a over a block's tokens: `prev` is the hash of the whole
+/// prefix before this block, so equal hashes mean equal full prefixes
+/// (modulo 64-bit collisions).
+fn chain_hash(prev: u64, tokens: &[i32]) -> u64 {
+    let mut h = prev ^ 0xcbf2_9ce4_8422_2325;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Fixed-capacity refcounted block pool with a prefix cache.
 pub struct KvPool {
     block_tokens: usize,
-    free: Vec<BlockId>,
-    tables: HashMap<u64, BlockTable>,
     total_blocks: usize,
+    /// Per-block reference count; 0 = free (possibly still cached).
+    refs: Vec<u32>,
+    /// The chained content hash a block is registered under, if any.
+    hash_of: Vec<Option<u64>>,
+    /// Blocks with refcount 0 (content retained until reallocated).
+    free: Vec<BlockId>,
+    /// Prefix cache: chained hash → the block holding that content.
+    cache: HashMap<u64, BlockId>,
+    tables: HashMap<u64, BlockTable>,
+    /// Used-block counter (kept in lockstep; verified by the invariants).
+    used: usize,
+    stats: KvSharing,
+}
+
+/// One admit's sharing plan: which leading full blocks hit the cache.
+struct SharePlan {
+    /// (block, was_live) per hash hit, in prefix order.
+    hits: Vec<(BlockId, bool)>,
+    /// Hashes of ALL full blocks (hits first, then misses to register).
+    full_hashes: Vec<u64>,
+    /// Total blocks the sequence needs.
+    need_total: usize,
+    /// How many must come off the free list (misses + partial tail +
+    /// refcount-0 cache hits — live hits are free).
+    need_from_free: usize,
 }
 
 impl KvPool {
@@ -33,9 +119,14 @@ impl KvPool {
         assert!(block_tokens > 0 && total_blocks > 0);
         Self {
             block_tokens,
-            free: (0..total_blocks as u32).rev().map(BlockId).collect(),
-            tables: HashMap::new(),
             total_blocks,
+            refs: vec![0; total_blocks],
+            hash_of: vec![None; total_blocks],
+            free: (0..total_blocks as u32).rev().map(BlockId).collect(),
+            cache: HashMap::new(),
+            tables: HashMap::new(),
+            used: 0,
+            stats: KvSharing::default(),
         }
     }
 
@@ -43,8 +134,9 @@ impl KvPool {
         self.free.len()
     }
 
+    /// Blocks with at least one live reference.
     pub fn used_blocks(&self) -> usize {
-        self.total_blocks - self.free.len()
+        self.used
     }
 
     /// Pool capacity — `used_blocks() + free_blocks()` always equals this
@@ -57,18 +149,80 @@ impl KvPool {
         self.block_tokens
     }
 
+    /// Sharing/allocation counters.
+    pub fn sharing(&self) -> KvSharing {
+        self.stats
+    }
+
+    /// Reference count of one block (tests / introspection).
+    pub fn refcount(&self, b: BlockId) -> u32 {
+        self.refs[b.0 as usize]
+    }
+
     /// Blocks needed to hold `tokens` KV entries.
     pub fn blocks_for(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.block_tokens)
     }
 
-    /// Can a sequence of `tokens` be admitted right now?
+    /// Can a sequence of `tokens` be admitted privately right now?
     pub fn can_admit(&self, tokens: usize) -> bool {
-        self.blocks_for(tokens) <= self.free.len()
+        self.blocks_for(tokens.max(1)) <= self.free.len()
     }
 
-    /// Allocate the blocks for a new sequence of `tokens` (its prompt).
-    /// Fails (without side effects) if the pool can't hold it.
+    /// Can `prompt` be admitted through the prefix cache right now?
+    /// (Live hash hits cost nothing, so this can pass where [`can_admit`]
+    /// fails — sharing is what lets more sequences fit the pool.)
+    pub fn can_admit_shared(&self, prompt: &[i32]) -> bool {
+        self.plan_shared(prompt).need_from_free <= self.free.len()
+    }
+
+    /// Pop one block off the free list for exclusive use, invalidating
+    /// whatever cached content it retained.
+    fn alloc_fresh(&mut self) -> Option<BlockId> {
+        let b = self.free.pop()?;
+        if let Some(h) = self.hash_of[b.0 as usize].take() {
+            self.cache.remove(&h);
+        }
+        self.refs[b.0 as usize] = 1;
+        self.used += 1;
+        self.stats.fresh_allocs += 1;
+        self.note_peak();
+        Some(b)
+    }
+
+    fn note_peak(&mut self) {
+        self.stats.peak_used = self.stats.peak_used.max(self.used);
+    }
+
+    /// Compute the sharing plan for a prompt without mutating anything.
+    /// Sharing stops at the first cache miss: a chained hash identifies
+    /// the entire prefix, so anything after a miss is new content.
+    fn plan_shared(&self, prompt: &[i32]) -> SharePlan {
+        let tokens = prompt.len();
+        let full = tokens / self.block_tokens;
+        let need_total = self.blocks_for(tokens.max(1));
+        let mut full_hashes = Vec::with_capacity(full);
+        let mut hits = Vec::new();
+        let mut h = 0u64;
+        let mut missed = false;
+        for i in 0..full {
+            h = chain_hash(h, &prompt[i * self.block_tokens..(i + 1) * self.block_tokens]);
+            full_hashes.push(h);
+            if !missed {
+                match self.cache.get(&h) {
+                    Some(&b) => hits.push((b, self.refs[b.0 as usize] > 0)),
+                    None => missed = true,
+                }
+            }
+        }
+        let live_hits = hits.iter().filter(|(_, live)| *live).count();
+        SharePlan { hits, full_hashes, need_total, need_from_free: need_total - live_hits }
+    }
+
+    /// Allocate the blocks for a new sequence of `tokens` (its prompt)
+    /// **privately** — no prefix sharing, every block fresh.  Fails
+    /// (without side effects) if the pool can't hold it.  This is the
+    /// baseline path (and the group scheduler's only path).
     pub fn admit(&mut self, seq: u64, tokens: usize) -> Result<(), KvError> {
         if self.tables.contains_key(&seq) {
             return Err(KvError::AlreadyAdmitted(seq));
@@ -77,30 +231,134 @@ impl KvPool {
         if need > self.free.len() {
             return Err(KvError::OutOfBlocks { need, free: self.free.len() });
         }
-        let blocks = self.free.split_off(self.free.len() - need);
+        let blocks: Vec<BlockId> = (0..need).map(|_| self.alloc_fresh().unwrap()).collect();
         self.tables.insert(seq, BlockTable { blocks, tokens });
         Ok(())
     }
 
-    /// Extend a sequence by one decoded token, growing its table if it
-    /// crosses a block boundary.
-    pub fn append_token(&mut self, seq: u64) -> Result<(), KvError> {
-        let t = self.tables.get_mut(&seq).ok_or(KvError::UnknownSeq(seq))?;
-        if t.tokens % self.block_tokens == 0 && t.tokens > 0 || t.blocks.is_empty() {
-            // need a fresh block (or first block for an empty admit)
-            if t.tokens.div_ceil(self.block_tokens) >= t.blocks.len() {
-                let b = self.free.pop().ok_or(KvError::OutOfBlocks { need: 1, free: 0 })?;
-                t.blocks.push(b);
-            }
+    /// Allocate the blocks for a new sequence whose KV holds exactly
+    /// `prompt`, mapping leading full blocks onto cached blocks with the
+    /// same chained content hash.  Newly filled full blocks are
+    /// registered in the prefix cache for later arrivals; the partial
+    /// tail block (where decoding writes) is always private.  Fails
+    /// without side effects when even sharing can't fit the prompt.
+    pub fn admit_shared(&mut self, seq: u64, prompt: &[i32]) -> Result<(), KvError> {
+        if self.tables.contains_key(&seq) {
+            return Err(KvError::AlreadyAdmitted(seq));
         }
-        t.tokens += 1;
+        let plan = self.plan_shared(prompt);
+        if plan.need_from_free > self.free.len() {
+            return Err(KvError::OutOfBlocks {
+                need: plan.need_from_free,
+                free: self.free.len(),
+            });
+        }
+        let mut blocks = Vec::with_capacity(plan.need_total);
+        for &(b, live) in &plan.hits {
+            if live {
+                self.refs[b.0 as usize] += 1;
+                self.stats.shared_live += 1;
+            } else {
+                // revive the cached block off the free list.  The linear
+                // scan + remove is O(free) per restored block — fine at
+                // demo pool sizes; a production pool wants an O(1)
+                // intrusive free list (ROADMAP known gap; swap_remove
+                // would break the documented LIFO eviction order).
+                let pos = self
+                    .free
+                    .iter()
+                    .position(|&f| f == b)
+                    .expect("refcount-0 block must be on the free list");
+                self.free.remove(pos);
+                self.refs[b.0 as usize] = 1;
+                self.used += 1;
+                self.stats.cache_restores += 1;
+                self.note_peak();
+            }
+            blocks.push(b);
+        }
+        // full blocks past the hit prefix: fresh, and registered so the
+        // NEXT request with this prefix shares them.  A deeper-chain
+        // entry can outlive an evicted earlier-chain one (eviction is
+        // per-block), so the plan's first-miss cutoff does not mean the
+        // later hashes are absent — displace any stale registration or
+        // the cache↔hash_of bijection breaks.
+        for &h in &plan.full_hashes[blocks.len()..] {
+            let b = self.alloc_fresh().unwrap();
+            if let Some(old) = self.cache.insert(h, b) {
+                self.hash_of[old.0 as usize] = None;
+            }
+            self.hash_of[b.0 as usize] = Some(h);
+            blocks.push(b);
+        }
+        // private partial tail (where decode appends land)
+        while blocks.len() < plan.need_total {
+            blocks.push(self.alloc_fresh().unwrap());
+        }
+        self.tables.insert(seq, BlockTable { blocks, tokens: prompt.len() });
         Ok(())
     }
 
-    /// Release every block a sequence holds.
+    /// Clone `parent`'s table for `child` by bumping refcounts only —
+    /// zero blocks allocated.  The first divergent append on either side
+    /// copy-on-writes the shared partial tail.
+    pub fn fork(&mut self, parent: u64, child: u64) -> Result<(), KvError> {
+        if self.tables.contains_key(&child) {
+            return Err(KvError::AlreadyAdmitted(child));
+        }
+        let t = self.tables.get(&parent).ok_or(KvError::UnknownSeq(parent))?.clone();
+        for b in &t.blocks {
+            self.refs[b.0 as usize] += 1;
+        }
+        self.tables.insert(child, t);
+        Ok(())
+    }
+
+    /// Extend a sequence by one decoded token.  Crossing a block boundary
+    /// allocates a fresh private block; writing into a block shared with
+    /// another table (refcount > 1) first splits it copy-on-write.
+    pub fn append_token(&mut self, seq: u64) -> Result<(), KvError> {
+        let t = self.tables.get(&seq).ok_or(KvError::UnknownSeq(seq))?;
+        let write_block = t.tokens / self.block_tokens;
+        if write_block >= t.blocks.len() {
+            // boundary: the write lands past every owned block
+            let b = self
+                .alloc_fresh()
+                .ok_or(KvError::OutOfBlocks { need: 1, free: 0 })?;
+            self.tables.get_mut(&seq).unwrap().blocks.push(b);
+        } else {
+            let b = t.blocks[write_block];
+            if self.refs[b.0 as usize] > 1 {
+                // copy-on-write: split before mutating shared content
+                let nb = self
+                    .alloc_fresh()
+                    .ok_or(KvError::OutOfBlocks { need: 1, free: 0 })?;
+                self.refs[b.0 as usize] -= 1;
+                self.stats.cow_copies += 1;
+                // (on a real device this is where the block's KV rows
+                // would be memcpy'd; here content lives host-side)
+                self.tables.get_mut(&seq).unwrap().blocks[write_block] = nb;
+            }
+        }
+        self.tables.get_mut(&seq).unwrap().tokens += 1;
+        Ok(())
+    }
+
+    /// Release every reference a sequence holds; blocks whose refcount
+    /// drops to zero return to the free list **with their prefix-cache
+    /// registration retained**, so a later identical prompt can revive
+    /// them until the slot is reallocated.
     pub fn release(&mut self, seq: u64) -> Result<(), KvError> {
         let t = self.tables.remove(&seq).ok_or(KvError::UnknownSeq(seq))?;
-        self.free.extend(t.blocks);
+        for b in t.blocks {
+            let r = &mut self.refs[b.0 as usize];
+            debug_assert!(*r > 0, "release of unreferenced block {}", b.0);
+            *r -= 1;
+            if *r == 0 {
+                self.used -= 1;
+                self.free.push(b);
+            }
+        }
         Ok(())
     }
 
@@ -112,26 +370,67 @@ impl KvPool {
         self.tables.len()
     }
 
-    /// Internal consistency: every block owned exactly once.
+    /// Internal consistency under sharing:
+    /// * every block's refcount equals the number of table references;
+    /// * the free list holds exactly the refcount-0 blocks, once each;
+    /// * no table references the same block twice;
+    /// * every cache entry is a bijection with `hash_of`;
+    /// * `used + free == total` (block conservation);
+    /// * every table holds enough blocks for its token count.
     pub fn check_invariants(&self) -> Result<(), String> {
-        let mut seen = std::collections::HashSet::new();
-        for b in &self.free {
-            if !seen.insert(b.0) {
-                return Err(format!("block {} double-freed", b.0));
-            }
-        }
+        let mut counted = vec![0u32; self.total_blocks];
         for (seq, t) in &self.tables {
+            let mut seen = std::collections::HashSet::new();
             for b in &t.blocks {
                 if !seen.insert(b.0) {
-                    return Err(format!("block {} owned twice (seq {seq})", b.0));
+                    return Err(format!("seq {seq} references block {} twice", b.0));
                 }
+                counted[b.0 as usize] += 1;
             }
             if t.blocks.len() < self.blocks_for(t.tokens) {
                 return Err(format!("seq {seq}: {} tokens in {} blocks", t.tokens, t.blocks.len()));
             }
         }
-        if seen.len() != self.total_blocks {
-            return Err(format!("{} blocks tracked, expected {}", seen.len(), self.total_blocks));
+        for (i, (&c, &r)) in counted.iter().zip(&self.refs).enumerate() {
+            if c != r {
+                return Err(format!("block {i}: refcount {r} but {c} table references"));
+            }
+        }
+        let mut free_seen = std::collections::HashSet::new();
+        for b in &self.free {
+            if !free_seen.insert(b.0) {
+                return Err(format!("block {} double-freed", b.0));
+            }
+            if self.refs[b.0 as usize] != 0 {
+                return Err(format!(
+                    "block {} on the free list with refcount {}",
+                    b.0, self.refs[b.0 as usize]
+                ));
+            }
+        }
+        let used = self.refs.iter().filter(|&&r| r > 0).count();
+        if used != self.used {
+            return Err(format!("used counter {} but {used} referenced blocks", self.used));
+        }
+        if used + self.free.len() != self.total_blocks {
+            return Err(format!(
+                "{} used + {} free != {} total",
+                used,
+                self.free.len(),
+                self.total_blocks
+            ));
+        }
+        for (&h, &b) in &self.cache {
+            if self.hash_of[b.0 as usize] != Some(h) {
+                return Err(format!("cache hash {h:#x} points at block {} not holding it", b.0));
+            }
+        }
+        for (i, h) in self.hash_of.iter().enumerate() {
+            if let Some(h) = h {
+                if self.cache.get(h) != Some(&BlockId(i as u32)) {
+                    return Err(format!("block {i} registered under {h:#x} but cache disagrees"));
+                }
+            }
         }
         Ok(())
     }
@@ -209,6 +508,8 @@ mod tests {
         assert!(matches!(p.admit(1, 2), Err(KvError::AlreadyAdmitted(1))));
         assert!(matches!(p.release(9), Err(KvError::UnknownSeq(9))));
         assert!(matches!(p.append_token(9), Err(KvError::UnknownSeq(9))));
+        assert!(matches!(p.fork(9, 10), Err(KvError::UnknownSeq(9))));
+        assert!(matches!(p.fork(1, 1), Err(KvError::AlreadyAdmitted(1))));
     }
 
     #[test]
@@ -220,16 +521,179 @@ mod tests {
         p.check_invariants().unwrap();
     }
 
+    // ------------------------------------------------ prefix sharing --
+
+    fn prompt(len: usize, tag: i32) -> Vec<i32> {
+        (0..len as i32).map(|i| i * 31 + tag).collect()
+    }
+
     #[test]
-    fn prop_invariants_under_random_ops() {
-        forall(64, |rng| {
+    fn shared_prefix_maps_onto_live_blocks() {
+        let mut p = KvPool::new(16, 4);
+        // 10-token prompt: 2 full blocks + 1 partial
+        let a: Vec<i32> = prompt(10, 1);
+        p.admit_shared(1, &a).unwrap();
+        assert_eq!(p.used_blocks(), 3);
+        // identical prompt: shares both full blocks, private tail only
+        p.admit_shared(2, &a).unwrap();
+        assert_eq!(p.used_blocks(), 4, "only the partial tail is new");
+        assert_eq!(p.table(1).unwrap().blocks[..2], p.table(2).unwrap().blocks[..2]);
+        assert_ne!(p.table(1).unwrap().blocks[2], p.table(2).unwrap().blocks[2]);
+        let s = p.sharing();
+        assert_eq!(s.shared_live, 2);
+        assert_eq!(s.fresh_allocs, 4);
+        p.check_invariants().unwrap();
+
+        // divergent prompt with the same FIRST block only
+        let mut b = a.clone();
+        b[5] += 1000; // mutate inside block 1
+        p.admit_shared(3, &b).unwrap();
+        assert_eq!(p.table(3).unwrap().blocks[0], p.table(1).unwrap().blocks[0]);
+        assert_ne!(p.table(3).unwrap().blocks[1], p.table(1).unwrap().blocks[1]);
+        assert_eq!(p.refcount(p.table(1).unwrap().blocks[0]), 3);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn release_keeps_cache_and_restores() {
+        let mut p = KvPool::new(8, 4);
+        let a = prompt(8, 7); // exactly 2 full blocks
+        p.admit_shared(1, &a).unwrap();
+        let blocks: Vec<BlockId> = p.table(1).unwrap().blocks.clone();
+        p.release(1).unwrap();
+        assert_eq!(p.free_blocks(), 8, "released blocks are free again");
+        // same prompt revives the SAME physical blocks off the free list
+        p.admit_shared(2, &a).unwrap();
+        assert_eq!(p.table(2).unwrap().blocks, blocks, "cache restore reuses content");
+        assert_eq!(p.sharing().cache_restores, 2);
+        assert_eq!(p.sharing().fresh_allocs, 2, "no new fills for the restore");
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fresh_alloc_evicts_cached_content() {
+        let mut p = KvPool::new(2, 4);
+        let a = prompt(8, 3);
+        p.admit_shared(1, &a).unwrap();
+        p.release(1).unwrap();
+        // a private admit cycles both blocks through alloc_fresh,
+        // invalidating the cached hashes
+        p.admit(2, 8).unwrap();
+        p.release(2).unwrap();
+        p.admit_shared(3, &a).unwrap();
+        assert_eq!(p.sharing().cache_restores, 0, "evicted content cannot restore");
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sharing_admits_where_private_cannot() {
+        let mut p = KvPool::new(3, 4);
+        let a = prompt(12, 5); // 3 full blocks
+        p.admit_shared(1, &a).unwrap();
+        assert_eq!(p.free_blocks(), 0);
+        assert!(!p.can_admit(12), "no free blocks for a private admit");
+        assert!(p.can_admit_shared(&a), "but the full-prefix hit needs none");
+        p.admit_shared(2, &a).unwrap();
+        assert_eq!(p.used_blocks(), 3);
+        p.release(1).unwrap();
+        p.release(2).unwrap();
+        assert_eq!(p.free_blocks(), 3);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reregistering_a_prefix_displaces_a_stale_deeper_chain_entry() {
+        // eviction is per-block, so the hA entry can die while the hAB
+        // entry survives; a later admit of [A,B] misses hA, re-fills both
+        // blocks, and must displace the stale hAB registration instead of
+        // leaving two blocks claiming the same hash (bijection break)
+        let mut p = KvPool::new(5, 4);
+        let ab = prompt(8, 1); // blocks [A|B] → hashes hA, hAB
+        p.admit_shared(1, &ab).unwrap();
+        p.admit(2, 8).unwrap(); // pins two more blocks
+        p.release(1).unwrap();
+        p.admit_shared(3, &ab[..4]).unwrap(); // restores the hA block...
+        p.release(3).unwrap(); // ...and re-frees it above the hAB block
+        p.admit(4, 4).unwrap(); // pops exactly the hA block → hA evicted
+        p.release(2).unwrap(); // buries the stale hAB block in the free list
+        p.admit_shared(5, &ab).unwrap(); // miss on hA → re-registers hAB
+        p.check_invariants().unwrap_or_else(|e| panic!("bijection broke: {e}"));
+        // and the fresh registration is the live one: a sixth admit
+        // shares the new blocks rather than the stale ones
+        p.admit_shared(6, &ab).unwrap();
+        assert_eq!(p.table(5).unwrap().blocks, p.table(6).unwrap().blocks);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn failed_shared_admit_has_no_side_effects() {
+        let mut p = KvPool::new(3, 4);
+        p.admit(1, 8).unwrap(); // 2 blocks used, 1 free
+        let big = prompt(12, 9); // needs 3 fresh
+        let err = p.admit_shared(2, &big).unwrap_err();
+        assert!(matches!(err, KvError::OutOfBlocks { need: 3, free: 1 }));
+        assert_eq!(p.free_blocks(), 1);
+        assert_eq!(p.sharing().fresh_allocs, 2, "only the first admit allocated");
+        p.check_invariants().unwrap();
+    }
+
+    // ------------------------------------------------- fork + CoW --
+
+    #[test]
+    fn fork_shares_everything_and_cow_splits_on_append() {
+        let mut p = KvPool::new(8, 4);
+        p.admit(1, 6).unwrap(); // 2 blocks, partial tail at 6 % 4 = 2
+        p.fork(1, 2).unwrap();
+        assert_eq!(p.used_blocks(), 2, "fork allocates nothing");
+        assert_eq!(p.table(1).unwrap().blocks, p.table(2).unwrap().blocks);
+        // appending on the child writes into the shared partial tail →
+        // copy-on-write
+        p.append_token(2).unwrap();
+        assert_eq!(p.sharing().cow_copies, 1);
+        assert_eq!(p.used_blocks(), 3);
+        assert_eq!(p.table(1).unwrap().blocks[0], p.table(2).unwrap().blocks[0]);
+        assert_ne!(p.table(1).unwrap().blocks[1], p.table(2).unwrap().blocks[1]);
+        // the parent's tail is private again: no further CoW
+        p.append_token(1).unwrap();
+        assert_eq!(p.sharing().cow_copies, 1);
+        p.check_invariants().unwrap();
+        // releases free everything exactly once
+        p.release(1).unwrap();
+        p.release(2).unwrap();
+        assert_eq!(p.free_blocks(), 8);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_at_block_boundary_needs_no_cow() {
+        let mut p = KvPool::new(8, 4);
+        p.admit(1, 4).unwrap(); // exactly one full block
+        p.fork(1, 2).unwrap();
+        // both appends cross the boundary into fresh private blocks
+        p.append_token(1).unwrap();
+        p.append_token(2).unwrap();
+        assert_eq!(p.sharing().cow_copies, 0);
+        assert_eq!(p.used_blocks(), 3);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prop_invariants_under_shared_churn() {
+        // admit/admit_shared/append/fork/release churn: refcounts always
+        // match table references, no block is freed with live references,
+        // used + free == total after EVERY op, and a full drain frees all
+        forall(48, |rng| {
             let blocks = rng.usize(1, 32);
             let btok = rng.usize(1, 9);
             let mut p = KvPool::new(blocks, btok);
             let mut live: Vec<u64> = Vec::new();
             let mut next = 0u64;
+            // a small set of shared prompts so admit_shared actually hits
+            let prompts: Vec<Vec<i32>> = (0..3)
+                .map(|t| prompt(rng.usize(1, 3 * btok + 1), t))
+                .collect();
             for _ in 0..rng.usize(10, 200) {
-                match rng.u32(0, 3) {
+                match rng.u32(0, 5) {
                     0 => {
                         let toks = rng.usize(1, 3 * btok + 1);
                         if p.admit(next, toks).is_ok() {
@@ -238,9 +702,25 @@ mod tests {
                         next += 1;
                     }
                     1 => {
+                        let pr = &prompts[rng.usize(0, prompts.len())];
+                        if p.admit_shared(next, pr).is_ok() {
+                            live.push(next);
+                        }
+                        next += 1;
+                    }
+                    2 => {
                         if !live.is_empty() {
                             let i = rng.usize(0, live.len());
                             let _ = p.append_token(live[i]);
+                        }
+                    }
+                    3 => {
+                        if !live.is_empty() {
+                            let i = rng.usize(0, live.len());
+                            if p.fork(live[i], next).is_ok() {
+                                live.push(next);
+                            }
+                            next += 1;
                         }
                     }
                     _ => {
@@ -252,12 +732,14 @@ mod tests {
                     }
                 }
                 p.check_invariants().unwrap_or_else(|e| panic!("invariant: {e}"));
+                assert_eq!(p.used_blocks() + p.free_blocks(), p.total_blocks());
             }
             // drain
             for s in live {
                 p.release(s).unwrap();
             }
             assert_eq!(p.free_blocks(), blocks);
+            p.check_invariants().unwrap();
         });
     }
 }

@@ -1,4 +1,7 @@
-//! Serving metrics: counters + latency percentiles.
+//! Serving metrics: counters + latency percentiles, including the
+//! per-token latencies (TTFT, inter-token) the streaming delivery path
+//! records, and resident-vs-swapped KV footprint gauges.  Replica
+//! metrics merge into one cluster view via [`Metrics::merge`].
 
 use std::time::Instant;
 
@@ -39,6 +42,11 @@ impl LatencyStats {
     pub fn max(&self) -> f64 {
         self.samples.iter().copied().fold(0.0, f64::max)
     }
+
+    /// Fold another store's samples into this one (cluster aggregation).
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.samples.extend_from_slice(&other.samples);
+    }
 }
 
 /// Aggregated serving metrics.
@@ -53,8 +61,20 @@ pub struct Metrics {
     pub preemptions: u64,
     /// Preempted sequences swapped back in (resumed decoding).
     pub resumes: u64,
+    /// KV tokens of resident (decoding) sequences — gauge, refreshed per
+    /// step.
+    pub kv_resident_tokens: u64,
+    /// KV tokens retained host-side by swapped-out sequences — gauge,
+    /// refreshed per step.  Swapped KV still costs memory; this is what
+    /// lets capacity planning distinguish it from resident KV.
+    pub kv_swapped_tokens: u64,
+    /// High-water mark of `kv_swapped_tokens`.
+    pub kv_swapped_peak: u64,
     pub queue: LatencyStats,
     pub ttft: LatencyStats,
+    /// Inter-token latency: gap between consecutive streamed tokens of
+    /// one request (spans swap-out time — preemption is visible here).
+    pub itl: LatencyStats,
     pub total: LatencyStats,
     started: Option<Instant>,
     finished: Option<Instant>,
@@ -95,12 +115,39 @@ impl Metrics {
         self.batch_occupancy_sum as f64 / self.groups_executed as f64
     }
 
+    /// Fold a replica's metrics into this aggregate: counters and the
+    /// simultaneous KV gauges sum, latency samples concatenate, and
+    /// **this** metrics' wall clock is kept (the cluster brackets the
+    /// run; per-replica clocks measure the same wall time).  Peaks take
+    /// the max: per-replica high-water marks happen at different steps,
+    /// so summing them would claim a simultaneous footprint that never
+    /// existed (the max is a conservative lower bound on the true
+    /// cluster-wide peak).
+    pub fn merge(&mut self, other: &Metrics) {
+        self.requests_in += other.requests_in;
+        self.requests_done += other.requests_done;
+        self.tokens_generated += other.tokens_generated;
+        self.groups_executed += other.groups_executed;
+        self.batch_occupancy_sum += other.batch_occupancy_sum;
+        self.preemptions += other.preemptions;
+        self.resumes += other.resumes;
+        self.kv_resident_tokens += other.kv_resident_tokens;
+        self.kv_swapped_tokens += other.kv_swapped_tokens;
+        self.kv_swapped_peak = self.kv_swapped_peak.max(other.kv_swapped_peak);
+        self.queue.merge(&other.queue);
+        self.ttft.merge(&other.ttft);
+        self.itl.merge(&other.itl);
+        self.total.merge(&other.total);
+    }
+
     pub fn report(&self) -> String {
         format!(
             "requests: {}/{} done | tokens: {} | wall: {:.2}s | {:.1} tok/s | occupancy {:.2} | \
              preempted {} (resumed {})\n\
+             kv tokens resident/swapped: {}/{} (peak swapped {})\n\
              queue  p50/p95/max: {:.1}/{:.1}/{:.1} ms\n\
              ttft   p50/p95/max: {:.1}/{:.1}/{:.1} ms\n\
+             itl    p50/p95/max: {:.1}/{:.1}/{:.1} ms\n\
              total  p50/p95/max: {:.1}/{:.1}/{:.1} ms",
             self.requests_done,
             self.requests_in,
@@ -110,12 +157,18 @@ impl Metrics {
             self.mean_occupancy(),
             self.preemptions,
             self.resumes,
+            self.kv_resident_tokens,
+            self.kv_swapped_tokens,
+            self.kv_swapped_peak,
             self.queue.percentile(50.0) * 1e3,
             self.queue.percentile(95.0) * 1e3,
             self.queue.max() * 1e3,
             self.ttft.percentile(50.0) * 1e3,
             self.ttft.percentile(95.0) * 1e3,
             self.ttft.max() * 1e3,
+            self.itl.percentile(50.0) * 1e3,
+            self.itl.percentile(95.0) * 1e3,
+            self.itl.max() * 1e3,
             self.total.percentile(50.0) * 1e3,
             self.total.percentile(95.0) * 1e3,
             self.total.max() * 1e3,
@@ -160,5 +213,32 @@ mod tests {
         m.finish();
         assert!(m.throughput_tok_s() > 0.0);
         assert!(m.report().contains("occupancy 2.50"));
+    }
+
+    #[test]
+    fn merge_sums_counters_and_concats_samples() {
+        let mut a = Metrics::default();
+        a.start();
+        a.tokens_generated = 10;
+        a.requests_done = 2;
+        a.ttft.record(0.5);
+        a.itl.record(0.1);
+        let b = Metrics {
+            tokens_generated: 5,
+            requests_done: 1,
+            kv_swapped_peak: 7,
+            ..Metrics::default()
+        };
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        a.finish();
+        let wall = a.wall_seconds();
+        a.merge(&b);
+        a.ttft.record(1.5);
+        assert_eq!(a.tokens_generated, 15);
+        assert_eq!(a.requests_done, 3);
+        assert_eq!(a.ttft.count(), 2);
+        assert_eq!(a.itl.count(), 1);
+        assert_eq!(a.kv_swapped_peak, 7);
+        assert_eq!(a.wall_seconds(), wall, "merge keeps the aggregate's clock");
     }
 }

@@ -3,12 +3,18 @@
 //! The paper integrates its kernels into LLM inference (§5.2); this module
 //! is the serving system that integration needs in production:
 //!
-//! * [`request`]  — request/response types and generation parameters.
+//! * [`request`]  — request/response types, generation parameters, and
+//!   the streaming [`TokenEvent`] protocol (admission, per-token,
+//!   preempt/resume, terminal — tokens reach clients as generated).
 //! * [`batcher`]  — dynamic batcher: collects arrivals into the batch
 //!   sizes the AOT artifacts support, under a deadline (vLLM-style
 //!   admission, group-static execution — see DESIGN.md).
-//! * [`kv`]       — paged KV-cache block allocator (the continuous-
-//!   batching substrate; exercised by the scheduler + property tests).
+//! * [`kv`]       — paged KV-cache allocator with **refcounted
+//!   copy-on-write blocks and a hash-based prefix cache**: requests
+//!   sharing a prompt prefix map their block-table heads onto shared
+//!   physical blocks; released full blocks stay content-addressable until
+//!   reallocated; `fork` clones tables refcount-only and the first
+//!   divergent append copy-on-writes.
 //! * [`backend`]  — execution backend trait: `PjrtBackend` (real model
 //!   artifacts, `pjrt` feature) and `SimBackend` (deterministic stand-in
 //!   for tests and the coordinator bench; `with_ap_gemm` serves real
@@ -17,18 +23,26 @@
 //!   prefill/decode interleaving, slot recycling (reserves each
 //!   sequence's full budget up front).
 //! * [`engine`]   — **continuous-batching decode engine**: batcher-fed
-//!   admission, incremental KV growth with swap-style preemption on the
-//!   allocator's clean failure, per-step join/leave batching over the
-//!   pack-once kernel path — the serving loop the ROADMAP's heavy-traffic
-//!   north star needs.
-//! * [`metrics`]  — counters + latency percentiles.
-//! * [`server`]   — the [`server::Stepper`] abstraction (scheduler and
-//!   engine both implement it), the channel serve loop, and the
-//!   wall-clock trace replay driver.
+//!   admission, prefix-shared incremental KV with swap-style preemption
+//!   on the allocator's clean failure, per-step join/leave batching over
+//!   the pack-once kernel path, streaming every token as an event.
+//! * [`router`]   — per-request replica selection (round-robin or
+//!   least-loaded, with optional precision pinning) and conserved load
+//!   accounting.
+//! * [`cluster`]  — **the multi-replica composition**: N engine replicas
+//!   (each its own `KvPool`/batcher/backend, possibly different W/A
+//!   precisions) behind the router, itself a [`Stepper`] — the serving
+//!   topology the ROADMAP's heavy-traffic north star calls for.
+//! * [`metrics`]  — counters, latency percentiles (incl. streamed
+//!   TTFT/ITL), resident-vs-swapped KV gauges, and cross-replica merge.
+//! * [`server`]   — the [`server::Stepper`] abstraction (scheduler,
+//!   engine, and cluster all implement it), the channel serve loop that
+//!   streams events, and the wall-clock trace replay driver.
 
 pub mod backend;
 pub mod batcher;
 pub mod cli;
+pub mod cluster;
 pub mod engine;
 pub mod kv;
 pub mod metrics;
@@ -40,11 +54,14 @@ pub mod trace;
 
 pub use backend::{drive_unbatched, ApStats, Backend, SimBackend};
 pub use batcher::{Batcher, BatcherConfig};
+pub use cluster::Cluster;
 pub use engine::{Engine, EngineConfig, EngineCounters};
-pub use kv::{BlockId, KvPool};
+pub use kv::{BlockId, KvPool, KvSharing};
 pub use metrics::{LatencyStats, Metrics};
-pub use request::{sample_token, GenParams, Request, RequestId, Response};
+pub use request::{
+    responses_of, sample_token, GenParams, Request, RequestId, Response, TokenEvent,
+};
 pub use router::{RoutePolicy, Router};
 pub use scheduler::{Scheduler, SchedulerConfig};
-pub use server::{replay_trace, Server, ServerConfig, Stepper};
+pub use server::{drain, replay_trace, Server, ServerConfig, Stepper};
 pub use trace::{ArrivalKind, TraceConfig};

@@ -1,5 +1,6 @@
-//! Request/response types.
+//! Request/response types and the streaming [`TokenEvent`] protocol.
 
+use crate::model::PrecisionConfig;
 use std::time::Instant;
 
 /// Monotonically assigned request identifier.
@@ -29,11 +30,20 @@ pub struct Request {
     pub prompt: Vec<i32>,
     pub params: GenParams,
     pub arrived: Instant,
+    /// Pin the request to replicas serving this W/A precision (a cluster
+    /// routes it; `None` accepts any replica).
+    pub precision: Option<PrecisionConfig>,
 }
 
 impl Request {
     pub fn new(id: u64, prompt: Vec<i32>, params: GenParams) -> Self {
-        Self { id: RequestId(id), prompt, params, arrived: Instant::now() }
+        Self { id: RequestId(id), prompt, params, arrived: Instant::now(), precision: None }
+    }
+
+    /// Pin this request to replicas serving `precision`.
+    pub fn with_precision(mut self, precision: PrecisionConfig) -> Self {
+        self.precision = Some(precision);
+        self
     }
 }
 
@@ -68,6 +78,8 @@ pub fn sample_token(logits: &[f32], params: &GenParams, step: usize) -> i32 {
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: RequestId,
+    /// Generated tokens; **empty means the request was rejected** (an
+    /// accepted request always streams at least its first token).
     pub tokens: Vec<i32>,
     /// Queue time (arrival → prefill start).
     pub queue_s: f64,
@@ -75,4 +87,59 @@ pub struct Response {
     pub total_s: f64,
     /// Time to first token.
     pub ttft_s: f64,
+}
+
+impl Response {
+    /// A rejected request's terminal response (zero tokens).
+    pub fn rejected(id: RequestId) -> Self {
+        Self { id, tokens: Vec::new(), queue_s: 0.0, total_s: 0.0, ttft_s: 0.0 }
+    }
+}
+
+/// One streamed serving event.  Every [`Stepper`](super::server::Stepper)
+/// `step` returns the events its iteration produced, in order, so
+/// tokens reach clients as they are generated instead of at completion —
+/// per-request lifecycle plus one [`TokenEvent::Token`] per token.  Per
+/// request the stream is: `Admitted`, then `Token*` interleaved with
+/// `Preempted`/`Resumed` pairs, then `Finished`; a rejected request emits
+/// only `Finished` with an empty response.  The concatenation of a
+/// request's `Token` payloads is byte-identical to its final
+/// [`Response::tokens`] — pinned by the integration tests.
+#[derive(Debug, Clone)]
+pub enum TokenEvent {
+    /// The request acquired KV blocks and prefilled.
+    Admitted { id: RequestId },
+    /// One generated token (`step` is its index in the output stream).
+    Token { id: RequestId, token: i32, step: usize },
+    /// Swapped out under KV pressure (stream pauses, nothing is lost).
+    Preempted { id: RequestId },
+    /// Swapped back in; the stream resumes where it paused.
+    Resumed { id: RequestId },
+    /// Terminal: the full response (empty tokens = rejected).
+    Finished { id: RequestId, response: Response },
+}
+
+impl TokenEvent {
+    /// The request this event belongs to.
+    pub fn id(&self) -> RequestId {
+        match self {
+            TokenEvent::Admitted { id }
+            | TokenEvent::Token { id, .. }
+            | TokenEvent::Preempted { id }
+            | TokenEvent::Resumed { id }
+            | TokenEvent::Finished { id, .. } => *id,
+        }
+    }
+}
+
+/// Extract the terminal responses from an event stream (completion-style
+/// view for callers that don't stream).
+pub fn responses_of(events: &[TokenEvent]) -> Vec<Response> {
+    events
+        .iter()
+        .filter_map(|e| match e {
+            TokenEvent::Finished { response, .. } => Some(response.clone()),
+            _ => None,
+        })
+        .collect()
 }

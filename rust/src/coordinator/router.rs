@@ -18,6 +18,17 @@ pub enum RoutePolicy {
     LeastLoaded,
 }
 
+impl RoutePolicy {
+    /// Parse a CLI spelling (`round-robin`/`rr`, `least-loaded`/`least`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "round-robin" | "rr" => Some(RoutePolicy::RoundRobin),
+            "least-loaded" | "least" => Some(RoutePolicy::LeastLoaded),
+            _ => None,
+        }
+    }
+}
+
 /// A registered replica.
 #[derive(Debug, Clone)]
 pub struct Replica {
@@ -25,6 +36,13 @@ pub struct Replica {
     pub precision: PrecisionConfig,
     /// Outstanding work in tokens (prompt + max_new of in-flight requests).
     outstanding: u64,
+}
+
+impl Replica {
+    /// Outstanding token budget (load the router steers by).
+    pub fn outstanding(&self) -> u64 {
+        self.outstanding
+    }
 }
 
 /// The router: owns replica bookkeeping, returns an index per request.
@@ -57,6 +75,10 @@ impl Router {
 
     pub fn replicas(&self) -> &[Replica] {
         &self.replicas
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
     }
 
     /// Replicas able to serve a precision (exact match).
@@ -187,7 +209,8 @@ mod tests {
     #[test]
     fn prop_conservation() {
         forall(48, |rng| {
-            let policy = if rng.bool() { RoutePolicy::RoundRobin } else { RoutePolicy::LeastLoaded };
+            let policy =
+                if rng.bool() { RoutePolicy::RoundRobin } else { RoutePolicy::LeastLoaded };
             let mut r = Router::new(policy);
             let n_rep = rng.usize(1, 5);
             for i in 0..n_rep {

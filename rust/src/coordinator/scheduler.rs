@@ -1,5 +1,6 @@
-//! Continuous-batching scheduler (vLLM/Orca-style iteration-level
-//! scheduling) over a [`Backend`].
+//! Group scheduler (the original iteration-level path) over a
+//! [`Backend`], now a streaming [`Stepper`]: every iteration emits
+//! [`TokenEvent`]s as sequences admit, generate, and finish.
 //!
 //! Every `step()`:
 //!   1. **Admission** — move queued requests into the running set while a
@@ -7,17 +8,17 @@
 //!      tokens, reserved up front so a running sequence can never hit an
 //!      out-of-blocks mid-generation).
 //!   2. **Prefill** — new admissions prefill individually (batch-1
-//!      artifact) and emit their first token.
+//!      artifact) and stream their first token.
 //!   3. **Decode** — all running sequences advance one token in a single
 //!      batched step (per-slot positions; the decode artifacts accept
-//!      mixed depths).
+//!      mixed depths), each token streamed as produced.
 //!   4. **Completion** — finished sequences release their blocks and
-//!      produce a [`Response`].
+//!      stream a terminal [`TokenEvent::Finished`].
 
 use super::backend::{gather_kv_refs, Backend, HasSeqKv, SeqKv};
 use super::kv::KvPool;
 use super::metrics::Metrics;
-use super::request::{sample_token, Request, Response};
+use super::request::{responses_of, sample_token, Request, Response, TokenEvent};
 use super::server::Stepper;
 use crate::anyhow::Result;
 use std::collections::VecDeque;
@@ -45,6 +46,8 @@ struct Active {
     next_token: i32,
     generated: Vec<i32>,
     first_token_at: Instant,
+    /// When this sequence's previous token streamed (ITL measurement).
+    last_token_at: Instant,
 }
 
 impl HasSeqKv for Active {
@@ -98,17 +101,22 @@ impl<B: Backend> Scheduler<B> {
         self.queue.is_empty() && self.running.is_empty()
     }
 
-    /// One scheduling iteration.  Returns completed responses.
-    pub fn step(&mut self) -> Result<Vec<Response>> {
+    /// One scheduling iteration.  Returns the events it produced.
+    pub fn step(&mut self) -> Result<Vec<TokenEvent>> {
         let now = Instant::now();
+        let mut events = Vec::new();
 
         // 1+2: admission + prefill
         while self.running.len() < self.cfg.max_running {
             let Some(front) = self.queue.front() else { break };
             if front.prompt.is_empty() || front.prompt.len() > self.backend.max_prompt() {
-                // reject malformed request (counted done, no response)
-                let _ = self.queue.pop_front();
+                // reject malformed request: terminal event, empty stream
+                let req = self.queue.pop_front().unwrap();
                 self.metrics.requests_done += 1;
+                events.push(TokenEvent::Finished {
+                    id: req.id,
+                    response: Response::rejected(req.id),
+                });
                 continue;
             }
             let budget = front.prompt.len() + front.params.max_new_tokens;
@@ -118,6 +126,7 @@ impl<B: Backend> Scheduler<B> {
             let req = self.queue.pop_front().unwrap();
             self.pool.admit(req.id.0, budget)?;
             self.metrics.queue.record(now.duration_since(req.arrived).as_secs_f64());
+            events.push(TokenEvent::Admitted { id: req.id });
             let (logits, kv) = match self.backend.prefill_one(&req.prompt) {
                 Ok(r) => r,
                 Err(e) => {
@@ -131,12 +140,14 @@ impl<B: Backend> Scheduler<B> {
             let first_token_at = Instant::now();
             self.metrics.ttft.record(first_token_at.duration_since(req.arrived).as_secs_f64());
             self.metrics.tokens_generated += 1;
+            events.push(TokenEvent::Token { id: req.id, token: tok, step: 0 });
             self.running.push(Active {
                 req,
                 kv,
                 next_token: tok,
                 generated: vec![tok],
                 first_token_at,
+                last_token_at: first_token_at,
             });
         }
 
@@ -162,14 +173,17 @@ impl<B: Backend> Scheduler<B> {
                 let a = &mut self.running[i];
                 a.next_token = tok;
                 a.generated.push(tok);
+                let t = Instant::now();
+                self.metrics.itl.record(t.duration_since(a.last_token_at).as_secs_f64());
+                a.last_token_at = t;
                 // no pool.append_token here: admission reserved the full
                 // prompt+max_new budget up front, so decoding can't OOM
                 self.metrics.tokens_generated += 1;
+                events.push(TokenEvent::Token { id: a.req.id, token: tok, step });
             }
         }
 
         // 4: completion
-        let mut done = Vec::new();
         let mut i = 0;
         while i < self.running.len() {
             let finished = self.running[i].generated.len()
@@ -182,29 +196,30 @@ impl<B: Backend> Scheduler<B> {
                 self.metrics.requests_done += 1;
                 let total = now.duration_since(a.req.arrived).as_secs_f64();
                 self.metrics.total.record(total);
-                done.push(Response {
+                events.push(TokenEvent::Finished {
                     id: a.req.id,
-                    tokens: a.generated,
-                    queue_s: 0.0, // recorded in metrics; per-response uses ttft/total
-                    total_s: total,
-                    ttft_s: a.first_token_at.duration_since(a.req.arrived).as_secs_f64(),
+                    response: Response {
+                        id: a.req.id,
+                        tokens: a.generated,
+                        queue_s: 0.0, // recorded in metrics; per-response uses ttft/total
+                        total_s: total,
+                        ttft_s: a.first_token_at.duration_since(a.req.arrived).as_secs_f64(),
+                    },
                 });
             } else {
                 i += 1;
             }
         }
-        Ok(done)
+        Ok(events)
     }
 
-    /// Step until every submitted request completed; returns all responses.
+    /// Step until every submitted request resolved; returns the terminal
+    /// responses (rejected requests appear with empty token streams).
     pub fn run_to_completion(&mut self) -> Result<Vec<Response>> {
-        let mut out = Vec::new();
         self.metrics.start();
-        while !self.is_idle() {
-            out.extend(self.step()?);
-        }
+        let events = super::server::drain(self)?;
         self.metrics.finish();
-        Ok(out)
+        Ok(responses_of(&events))
     }
 
     /// KV pool introspection for tests.
@@ -218,7 +233,7 @@ impl<B: Backend> Stepper for Scheduler<B> {
         Scheduler::submit(self, r);
     }
 
-    fn step(&mut self) -> Result<Vec<Response>> {
+    fn step(&mut self) -> Result<Vec<TokenEvent>> {
         Scheduler::step(self)
     }
 
@@ -226,12 +241,16 @@ impl<B: Backend> Stepper for Scheduler<B> {
         Scheduler::is_idle(self)
     }
 
-    fn metrics(&self) -> &Metrics {
-        &self.metrics
+    fn metrics(&self) -> Metrics {
+        self.metrics.clone()
     }
 
-    fn metrics_mut(&mut self) -> &mut Metrics {
-        &mut self.metrics
+    fn start_clock(&mut self) {
+        self.metrics.start();
+    }
+
+    fn stop_clock(&mut self) {
+        self.metrics.finish();
     }
 }
 
@@ -279,6 +298,8 @@ mod tests {
         // prefill) → occupancy near 8
         assert!(s.metrics.mean_occupancy() > 6.0, "occ {}", s.metrics.mean_occupancy());
         assert_eq!(s.metrics.tokens_generated, 80);
+        // streaming ITL: one inter-token gap per decoded (non-first) token
+        assert_eq!(s.metrics.itl.count() as u64, s.metrics.tokens_generated - 8);
     }
 
     #[test]
@@ -326,8 +347,36 @@ mod tests {
         s.submit(req(0, 33, 4)); // SimBackend max_prompt = 32
         s.submit(req(1, 4, 4));
         let out = s.run_to_completion().unwrap();
-        assert_eq!(out.len(), 1, "only the valid request responds");
-        assert_eq!(out[0].id.0, 1);
+        // the reject resolves terminally (empty stream), the valid
+        // request completes normally
+        assert_eq!(out.len(), 2);
+        let rejected: Vec<_> = out.iter().filter(|r| r.tokens.is_empty()).collect();
+        assert_eq!(rejected.len(), 1);
+        assert_eq!(rejected[0].id.0, 0);
+        assert_eq!(out.iter().find(|r| r.id.0 == 1).unwrap().tokens.len(), 4);
+    }
+
+    #[test]
+    fn step_streams_tokens_in_generation_order() {
+        let mut s = mk(2, 64);
+        s.submit(req(0, 3, 4));
+        let mut events = Vec::new();
+        while !s.is_idle() {
+            events.extend(s.step().unwrap());
+        }
+        let toks: Vec<(i32, usize)> = events
+            .iter()
+            .filter_map(|e| match e {
+                TokenEvent::Token { token, step, .. } => Some((*token, *step)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(toks.len(), 4);
+        assert!(toks.iter().enumerate().all(|(i, &(_, st))| st == i), "steps ascend");
+        let resp = responses_of(&events).remove(0);
+        assert_eq!(resp.tokens, toks.iter().map(|&(t, _)| t).collect::<Vec<_>>());
+        assert!(matches!(events.first(), Some(TokenEvent::Admitted { .. })));
+        assert!(matches!(events.last(), Some(TokenEvent::Finished { .. })));
     }
 
     #[test]

@@ -1,6 +1,15 @@
-//! The serve loop: channels in, responses out — plus the [`Stepper`]
-//! abstraction both serving state machines implement and the wall-clock
-//! trace replay driver the demos and benches share.
+//! The serve loop: requests in, **streamed [`TokenEvent`]s out** — plus
+//! the [`Stepper`] abstraction every serving state machine implements
+//! (group scheduler, continuous-batching engine, and the multi-replica
+//! [`Cluster`](super::cluster::Cluster)) and the wall-clock trace replay
+//! driver the demos and benches share.
+//!
+//! Delivery is streaming: each `step()` returns the events the iteration
+//! produced (admissions, individual tokens, preempt/resume transitions,
+//! completions), and [`Server::serve`] forwards them to the response
+//! channel as they happen — clients see tokens at generation time, which
+//! is what makes TTFT/ITL real measurements instead of end-to-end
+//! latencies sliced after the fact.
 //!
 //! PJRT handles are not `Send`, so the backend lives on the thread that
 //! calls [`Server::serve`]; request producers feed the `Sender` from any
@@ -9,24 +18,32 @@
 
 use super::backend::Backend;
 use super::metrics::Metrics;
-use super::request::{Request, Response};
+use super::request::{Request, TokenEvent};
 use super::scheduler::{Scheduler, SchedulerConfig};
 use super::trace::TimedRequest;
 use crate::anyhow::Result;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
 
+pub use super::request::responses_of;
+
 /// One serving state machine the serve loop can drive.  Implemented by
-/// the group [`Scheduler`] and the continuous-batching
-/// [`Engine`](super::engine::Engine); everything above this trait
-/// (channel serve loop, trace replay, demos, benches) works with either.
+/// the group [`Scheduler`], the continuous-batching
+/// [`Engine`](super::engine::Engine), and the multi-replica
+/// [`Cluster`](super::cluster::Cluster); everything above this trait
+/// (channel serve loop, trace replay, demos, benches) works with any.
 pub trait Stepper {
     fn submit(&mut self, r: Request);
-    /// One scheduling iteration; returns completed responses.
-    fn step(&mut self) -> Result<Vec<Response>>;
+    /// One scheduling iteration; returns the events it produced, in
+    /// order (tokens stream — completions are just the terminal events).
+    fn step(&mut self) -> Result<Vec<TokenEvent>>;
     fn is_idle(&self) -> bool;
-    fn metrics(&self) -> &Metrics;
-    fn metrics_mut(&mut self) -> &mut Metrics;
+    /// Metrics snapshot.  Single steppers clone their own; a cluster
+    /// merges per-replica metrics into one view.
+    fn metrics(&self) -> Metrics;
+    /// Bracket a run's wall clock (throughput denominators).
+    fn start_clock(&mut self);
+    fn stop_clock(&mut self);
 }
 
 #[derive(Debug, Clone)]
@@ -42,7 +59,8 @@ impl Default for ServerConfig {
     }
 }
 
-/// Single-replica server over any [`Stepper`].
+/// Serve any [`Stepper`] behind a channel pair (single replica or a
+/// whole cluster — the loop is the same).
 pub struct Server<S: Stepper> {
     inner: S,
     idle_wait: Duration,
@@ -58,15 +76,18 @@ impl<B: Backend> Server<Scheduler<B>> {
 
 impl<S: Stepper> Server<S> {
     /// Wrap an already-built stepper (e.g. a continuous-batching
-    /// [`Engine`](super::engine::Engine)).
+    /// [`Engine`](super::engine::Engine) or a
+    /// [`Cluster`](super::cluster::Cluster)).
     pub fn from_stepper(inner: S, idle_wait: Duration) -> Self {
         Self { inner, idle_wait }
     }
 
-    /// Run until `rx` disconnects AND all admitted work drained.  Sends
-    /// every completion to `tx`.  Returns the stepper (for metrics).
-    pub fn serve(mut self, rx: Receiver<Request>, tx: Sender<Response>) -> Result<S> {
-        self.inner.metrics_mut().start();
+    /// Run until `rx` disconnects AND all admitted work drained.
+    /// **Streams every event** to `tx` as its step produces it — tokens
+    /// reach the receiver while the request is still decoding.  Returns
+    /// the stepper (for metrics).
+    pub fn serve(mut self, rx: Receiver<Request>, tx: Sender<TokenEvent>) -> Result<S> {
+        self.inner.start_clock();
         let mut open = true;
         loop {
             // drain arrivals; block briefly only when fully idle
@@ -97,11 +118,11 @@ impl<S: Stepper> Server<S> {
                 }
                 continue;
             }
-            for resp in self.inner.step()? {
-                let _ = tx.send(resp); // receiver may have hung up; fine
+            for ev in self.inner.step()? {
+                let _ = tx.send(ev); // receiver may have hung up; fine
             }
         }
-        self.inner.metrics_mut().finish();
+        self.inner.stop_clock();
         Ok(self.inner)
     }
 }
@@ -109,9 +130,10 @@ impl<S: Stepper> Server<S> {
 /// Replay a timed trace against a stepper in wall-clock time (the serving
 /// demos and the steady-state bench share this driver): each request is
 /// submitted at its arrival offset, the stepper steps whenever work is
-/// outstanding, and the loop parks only when fully idle.
-pub fn replay_trace<S: Stepper>(s: &mut S, trace: &[TimedRequest]) -> Result<Vec<Response>> {
-    s.metrics_mut().start();
+/// outstanding, and the loop parks only when fully idle.  Returns the
+/// full event stream; [`responses_of`] extracts the completion view.
+pub fn replay_trace<S: Stepper>(s: &mut S, trace: &[TimedRequest]) -> Result<Vec<TokenEvent>> {
+    s.start_clock();
     let start = Instant::now();
     let mut next = 0;
     let mut out = Vec::new();
@@ -132,7 +154,18 @@ pub fn replay_trace<S: Stepper>(s: &mut S, trace: &[TimedRequest]) -> Result<Vec
         }
         out.extend(s.step()?);
     }
-    s.metrics_mut().finish();
+    s.stop_clock();
+    Ok(out)
+}
+
+/// Drive a stepper to completion outside wall-clock replay — the
+/// step-until-idle loop behind every `run_to_completion*` (callers
+/// bracket their own clocks).
+pub fn drain<S: Stepper>(s: &mut S) -> Result<Vec<TokenEvent>> {
+    let mut out = Vec::new();
+    while !s.is_idle() {
+        out.extend(s.step()?);
+    }
     Ok(out)
 }
 
@@ -141,7 +174,7 @@ mod tests {
     use super::*;
     use crate::coordinator::backend::SimBackend;
     use crate::coordinator::engine::{Engine, EngineConfig};
-    use crate::coordinator::request::GenParams;
+    use crate::coordinator::request::{GenParams, Response};
     use std::sync::mpsc::channel;
 
     #[test]
@@ -149,7 +182,7 @@ mod tests {
         let backend = SimBackend::new(64, 64, vec![1, 2, 4]);
         let server = Server::new(backend, ServerConfig::default());
         let (tx_req, rx_req) = channel();
-        let (tx_resp, rx_resp) = channel();
+        let (tx_ev, rx_ev) = channel();
 
         let producer = std::thread::spawn(move || {
             for i in 0..10u64 {
@@ -164,13 +197,28 @@ mod tests {
             // tx_req drops → server drains and exits
         });
 
-        let sched = server.serve(rx_req, tx_resp).unwrap();
+        let sched = server.serve(rx_req, tx_ev).unwrap();
         producer.join().unwrap();
-        let responses: Vec<Response> = rx_resp.iter().collect();
+        let events: Vec<TokenEvent> = rx_ev.iter().collect();
+        let responses: Vec<Response> = responses_of(&events);
         assert_eq!(responses.len(), 10);
         assert!(responses.iter().all(|r| r.tokens.len() == 4));
         assert_eq!(sched.metrics.requests_done, 10);
         assert!(sched.metrics.throughput_tok_s() > 0.0);
+        // streaming: one Token event per generated token, and per request
+        // the token payloads concatenate to the final response
+        let n_tok = events.iter().filter(|e| matches!(e, TokenEvent::Token { .. })).count();
+        assert_eq!(n_tok, 40);
+        for resp in &responses {
+            let streamed: Vec<i32> = events
+                .iter()
+                .filter_map(|e| match e {
+                    TokenEvent::Token { id, token, .. } if *id == resp.id => Some(*token),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(streamed, resp.tokens, "stream ≠ response for {:?}", resp.id);
+        }
     }
 
     #[test]
@@ -178,7 +226,7 @@ mod tests {
         let eng = Engine::new(SimBackend::new(64, 64, vec![1, 2, 4, 8]), EngineConfig::default());
         let server = Server::from_stepper(eng, Duration::from_millis(1));
         let (tx_req, rx_req) = channel();
-        let (tx_resp, rx_resp) = channel();
+        let (tx_ev, rx_ev) = channel();
         for i in 0..12u64 {
             tx_req
                 .send(Request::new(
@@ -189,11 +237,20 @@ mod tests {
                 .unwrap();
         }
         drop(tx_req);
-        let eng = server.serve(rx_req, tx_resp).unwrap();
-        let responses: Vec<Response> = rx_resp.iter().collect();
+        let eng = server.serve(rx_req, tx_ev).unwrap();
+        let events: Vec<TokenEvent> = rx_ev.iter().collect();
+        let responses = responses_of(&events);
         assert_eq!(responses.len(), 12);
         assert_eq!(eng.metrics.requests_done, 12);
         assert_eq!(eng.pool().free_blocks(), eng.pool().total_blocks());
+        // every request is admitted exactly once before its tokens
+        for resp in &responses {
+            let admits = events
+                .iter()
+                .filter(|e| matches!(e, TokenEvent::Admitted { id } if *id == resp.id))
+                .count();
+            assert_eq!(admits, 1, "{:?}", resp.id);
+        }
     }
 
     #[test]
@@ -202,7 +259,7 @@ mod tests {
             let backend = SimBackend::new(64, 64, vec![1, 2]);
             let server = Server::new(backend, ServerConfig::default());
             let (tx_req, rx_req) = channel();
-            let (tx_resp, rx_resp) = channel();
+            let (tx_ev, rx_ev) = channel();
             tx_req
                 .send(Request::new(
                     0,
@@ -211,8 +268,9 @@ mod tests {
                 ))
                 .unwrap();
             drop(tx_req);
-            server.serve(rx_req, tx_resp).unwrap();
-            rx_resp.iter().next().unwrap().tokens
+            server.serve(rx_req, tx_ev).unwrap();
+            let events: Vec<TokenEvent> = rx_ev.iter().collect();
+            responses_of(&events).remove(0).tokens
         };
         // sampling is fully seeded per request: same seed → same tokens
         assert_eq!(run(1), run(1));

@@ -1,7 +1,9 @@
 //! Synthetic workload traces (the substitute for production request logs
 //! — DESIGN.md §2): Poisson and bursty arrival processes with
 //! configurable prompt/output length distributions, used by the serving
-//! demo, the coordinator bench, and capacity tests.
+//! demo, the coordinator bench, and capacity tests.  Traces can draw
+//! prompts from a small pool of **shared system prefixes** (the workload
+//! shape the KV prefix cache exists for).
 
 use super::request::{GenParams, Request};
 use crate::util::Rng;
@@ -20,12 +22,18 @@ pub enum ArrivalKind {
 pub struct TraceConfig {
     pub kind: ArrivalKind,
     pub requests: usize,
-    /// Prompt length range `[lo, hi)` (uniform).
+    /// Prompt length range `[lo, hi)` (uniform).  With shared prefixes,
+    /// this is the per-request *tail* length after the prefix.
     pub prompt_len: (usize, usize),
     /// max_new_tokens range `[lo, hi)` (uniform).
     pub max_new: (usize, usize),
     pub vocab: usize,
     pub seed: u64,
+    /// Number of distinct shared system prompts to draw from (0 = every
+    /// prompt fully random — no sharing opportunity).
+    pub shared_prefixes: usize,
+    /// Tokens per shared prefix.
+    pub prefix_len: usize,
 }
 
 impl Default for TraceConfig {
@@ -37,6 +45,8 @@ impl Default for TraceConfig {
             max_new: (4, 12),
             vocab: 1024,
             seed: 0,
+            shared_prefixes: 0,
+            prefix_len: 0,
         }
     }
 }
@@ -51,6 +61,16 @@ pub struct TimedRequest {
 /// Generate a deterministic trace.
 pub fn generate(cfg: &TraceConfig) -> Vec<TimedRequest> {
     let mut rng = Rng::with_seed(cfg.seed);
+    // the prefix pool lives on its own stream, so the same seed yields
+    // the same prefixes regardless of the request count
+    let prefixes: Vec<Vec<i32>> = if cfg.shared_prefixes > 0 && cfg.prefix_len > 0 {
+        let mut prng = Rng::with_seed(cfg.seed ^ 0x5EED_F00D_CAFE_D00D);
+        (0..cfg.shared_prefixes)
+            .map(|_| (0..cfg.prefix_len).map(|_| prng.u32(1, cfg.vocab as u32) as i32).collect())
+            .collect()
+    } else {
+        Vec::new()
+    };
     let mut out = Vec::with_capacity(cfg.requests);
     let mut t = 0.0f64;
     for i in 0..cfg.requests {
@@ -62,7 +82,12 @@ pub fn generate(cfg: &TraceConfig) -> Vec<TimedRequest> {
         };
         let plen = rng.usize(cfg.prompt_len.0, cfg.prompt_len.1.max(cfg.prompt_len.0 + 1));
         let mnew = rng.usize(cfg.max_new.0, cfg.max_new.1.max(cfg.max_new.0 + 1));
-        let prompt: Vec<i32> = (0..plen).map(|_| rng.u32(1, cfg.vocab as u32) as i32).collect();
+        let mut prompt: Vec<i32> = if prefixes.is_empty() {
+            Vec::with_capacity(plen)
+        } else {
+            prefixes[rng.usize(0, prefixes.len())].clone()
+        };
+        prompt.extend((0..plen).map(|_| rng.u32(1, cfg.vocab as u32) as i32));
         out.push(TimedRequest {
             at_s: t,
             request: Request::new(
@@ -118,6 +143,31 @@ mod tests {
         assert_eq!(tr[3].at_s, 0.0);
         assert_eq!(tr[4].at_s, 1.0);
         assert_eq!(tr[11].at_s, 2.0);
+    }
+
+    #[test]
+    fn shared_prefixes_actually_share() {
+        let cfg = TraceConfig {
+            requests: 40,
+            shared_prefixes: 3,
+            prefix_len: 12,
+            prompt_len: (2, 6),
+            ..Default::default()
+        };
+        let tr = generate(&cfg);
+        let heads: std::collections::HashSet<Vec<i32>> =
+            tr.iter().map(|t| t.request.prompt[..12].to_vec()).collect();
+        assert!(heads.len() <= 3, "{} distinct heads from 3 prefixes", heads.len());
+        assert!(heads.len() >= 2, "40 draws should hit ≥2 of 3 prefixes");
+        for t in &tr {
+            let plen = t.request.prompt.len();
+            assert!((12 + 2..12 + 6).contains(&plen), "prefix + tail length, got {plen}");
+        }
+        // same seed → same prefix pool even at different request counts
+        let tr2 = generate(&TraceConfig { requests: 5, ..cfg.clone() });
+        let heads2: std::collections::HashSet<Vec<i32>> =
+            tr2.iter().map(|t| t.request.prompt[..12].to_vec()).collect();
+        assert!(heads.union(&heads2).count() <= 3, "both draws use the same 3-prefix pool");
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! scheme, no dependencies.
 
 use super::{arch::Gpu, baselines, kernels::OursOpts, Scheme, SchemeParams};
+use crate::anyhow::{anyhow, Result};
 use crate::model::PrecisionConfig;
 
 /// One anchor: (M, K, N, latency_seconds).
@@ -163,23 +164,32 @@ pub static ANCHORS: &[(&str, &[Anchor])] = &[
 ];
 
 /// The canonical `Scheme` a calibration key refers to (ablation variants
-/// share their base key; their deltas are structural).
-pub fn canonical_scheme(key: &str) -> Scheme {
+/// share their base key; their deltas are structural).  An unknown key is
+/// a recoverable error naming every valid option — the same treatment
+/// `Simulator::scheme_params` gives uncalibrated schemes; a bad key must
+/// never kill a process that embeds the calibrator.
+pub fn canonical_scheme(key: &str) -> Result<Scheme> {
     match key {
-        "FP32" => Scheme::Fp32,
-        "FP16" => Scheme::Fp16,
-        "CUTLASS INT4" => Scheme::CutlassInt4,
-        "CUTLASS INT1" => Scheme::CutlassInt1,
-        "BSTC" => Scheme::Bstc,
-        "BTC" => Scheme::Btc,
-        "QLoRA W4" => Scheme::QloraW4,
+        "FP32" => Ok(Scheme::Fp32),
+        "FP16" => Ok(Scheme::Fp16),
+        "CUTLASS INT4" => Ok(Scheme::CutlassInt4),
+        "CUTLASS INT1" => Ok(Scheme::CutlassInt1),
+        "BSTC" => Ok(Scheme::Bstc),
+        "BTC" => Ok(Scheme::Btc),
+        "QLoRA W4" => Ok(Scheme::QloraW4),
         _ => {
             if let Some(p) = key.strip_prefix("ours-").and_then(PrecisionConfig::parse) {
-                Scheme::Ours(p, OursOpts::paper())
+                Ok(Scheme::Ours(p, OursOpts::paper()))
             } else if let Some(p) = key.strip_prefix("APNN-TC ").and_then(PrecisionConfig::parse) {
-                Scheme::ApnnTc(p)
+                Ok(Scheme::ApnnTc(p))
             } else {
-                panic!("unknown calibration key {key}")
+                let mut keys: Vec<&str> = ANCHORS.iter().map(|(k, _)| *k).collect();
+                keys.sort_unstable();
+                Err(anyhow!(
+                    "unknown calibration key {key:?} (valid keys: {}, plus any ours-wXaY / \
+                     APNN-TC WxAy precision)",
+                    keys.join(", ")
+                ))
             }
         }
     }
@@ -206,9 +216,10 @@ fn fit_error(gpu: &Gpu, scheme: &Scheme, p: &SchemeParams, anchors: &[Anchor]) -
 }
 
 /// Fit `(L, R_max, s_half)` for one scheme: coarse log-space grid followed
-/// by two refinement passes around the best point.
-pub fn fit_scheme(gpu: &Gpu, key: &str, anchors: &[Anchor]) -> SchemeParams {
-    let scheme = canonical_scheme(key);
+/// by two refinement passes around the best point.  Fails (listing the
+/// valid options) when `key` names no known scheme.
+pub fn fit_scheme(gpu: &Gpu, key: &str, anchors: &[Anchor]) -> Result<SchemeParams> {
+    let scheme = canonical_scheme(key)?;
     let mut best = SchemeParams { launch_s: 5e-6, rate_ops: 1e14, s_half: 500.0 };
     let mut best_err = f64::INFINITY;
     // coarse grid (log space)
@@ -249,7 +260,7 @@ pub fn fit_scheme(gpu: &Gpu, key: &str, anchors: &[Anchor]) -> SchemeParams {
             &mut best_err,
         );
     }
-    best
+    Ok(best)
 }
 
 /// Per-anchor fit report (the calibrate CLI + EXPERIMENTS.md table).
@@ -263,9 +274,11 @@ pub struct CalibrationReport {
 }
 
 impl CalibrationReport {
-    pub fn build(gpu: &Gpu, key: &str, anchors: &[Anchor]) -> Self {
-        let params = fit_scheme(gpu, key, anchors);
-        let scheme = canonical_scheme(key);
+    /// Fit and report one scheme; an unknown `key` is a recoverable
+    /// error listing the valid options.
+    pub fn build(gpu: &Gpu, key: &str, anchors: &[Anchor]) -> Result<Self> {
+        let params = fit_scheme(gpu, key, anchors)?;
+        let scheme = canonical_scheme(key)?;
         let rows: Vec<_> = anchors
             .iter()
             .map(|a| {
@@ -274,6 +287,25 @@ impl CalibrationReport {
             })
             .collect();
         let max_rel_err = rows.iter().map(|r| r.2).fold(0.0, f64::max);
-        Self { key: key.to_string(), params, rows, max_rel_err }
+        Ok(Self { key: key.to_string(), params, rows, max_rel_err })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_calibration_key_is_an_error_listing_options() {
+        let e = canonical_scheme("warp9").unwrap_err().to_string();
+        assert!(e.contains("warp9"), "names the bad key: {e}");
+        assert!(e.contains("FP16") && e.contains("BSTC"), "lists valid keys: {e}");
+        let gpu = Gpu::rtx3090();
+        assert!(fit_scheme(&gpu, "warp9", &[(64, 64, 64, 1e-6)]).is_err());
+        assert!(CalibrationReport::build(&gpu, "warp9", &[(64, 64, 64, 1e-6)]).is_err());
+        // every in-repo anchor key stays resolvable
+        for (key, _) in ANCHORS.iter() {
+            canonical_scheme(key).unwrap();
+        }
     }
 }

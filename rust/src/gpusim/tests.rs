@@ -11,7 +11,7 @@ fn calibration_hits_anchors() {
     // every fitted scheme reproduces its own anchors within tolerance
     let gpu = Gpu::rtx3090();
     for (key, anchors) in ANCHORS.iter() {
-        let rep = CalibrationReport::build(&gpu, key, anchors);
+        let rep = CalibrationReport::build(&gpu, key, anchors).unwrap();
         // The paper's own anchors are mutually inconsistent under any
         // smooth 3-parameter rate curve (its 1k→2k→4k scaling factors are
         // 2.1× and 2.6× for 8× work each) — 65% worst-case is the

@@ -28,13 +28,17 @@
 //!   `python/compile/aot.py` (HLO text → compile → execute).  The engine
 //!   itself is gated behind the `pjrt` cargo feature; manifest parsing is
 //!   always available.
-//! * [`coordinator`] — the serving layer: router, dynamic batcher, KV
-//!   manager, group scheduler, metrics, and the **continuous-batching
-//!   decode engine** (`coordinator::engine`): batcher-fed admission,
-//!   incremental KV growth with swap-preemption on the allocator's clean
-//!   failure, per-step join/leave batching.  Its `SimBackend` serves real
-//!   bitmm logits through the pack-once pipeline
-//!   (`SimBackend::with_ap_gemm`).
+//! * [`coordinator`] — the serving layer: a **multi-replica cluster**
+//!   (`coordinator::cluster`) of continuous-batching engine replicas —
+//!   each with its own KV pool, batcher, and pack-once backend, possibly
+//!   at different W/A precisions — behind a routing policy
+//!   (round-robin / least-loaded, with per-request precision pinning).
+//!   The KV allocator uses **refcounted copy-on-write blocks with a
+//!   hash-based prefix cache** (shared prompt prefixes share physical
+//!   blocks), and delivery is **streaming**: every token is a
+//!   `TokenEvent`, so TTFT/ITL land in `metrics` as real per-token
+//!   measurements.  Its `SimBackend` serves real bitmm logits through
+//!   the pack-once pipeline (`SimBackend::with_ap_gemm`).
 //! * [`bench`]    — harness regenerating every table/figure of the paper's
 //!   evaluation section, plus the §3.3 pack-vs-compute split table.
 //! * [`anyhow`]   — in-tree error-handling substrate (offline substitute

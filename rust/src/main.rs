@@ -5,7 +5,8 @@
 //!   simulate M K N SCHEME simulate one GEMM (SCHEME: fp32|fp16|int4|int1|wXaY|apnn-wXaY)
 //!   tables                print every paper table/figure reproduction
 //!   gemm [--prec WxAy]    run a packed AP-GEMM through a PJRT artifact and verify vs bitmm
-//!   serve [--requests N]  run the serving demo over the PJRT model artifacts
+//!   serve [--requests N]  run the serving demo (PJRT artifacts, or the pack-once sim
+//!                         backend with --sim; --replicas N serves a router-driven cluster)
 //!
 //! Argument parsing is hand-rolled (the build is offline; no clap).
 
@@ -39,7 +40,13 @@ fn cmd_calibrate() {
         "scheme", "launch µs", "rate ops/s", "s_half"
     );
     for (key, anchors) in ANCHORS.iter() {
-        let rep = CalibrationReport::build(&gpu, key, anchors);
+        let rep = match CalibrationReport::build(&gpu, key, anchors) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("calibrate: {e}");
+                std::process::exit(2);
+            }
+        };
         print!(
             "{:<16} {:>9.2} {:>12.3e} {:>8.0}  {:>4.0}%  ",
             rep.key,

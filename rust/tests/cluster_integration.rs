@@ -1,0 +1,186 @@
+//! Multi-replica cluster, end to end over the pack-once AP-GEMM backend
+//! (no artifacts needed) — the PR's acceptance contract:
+//!
+//! * a 3-replica cluster behind `Router::LeastLoaded` serves a
+//!   shared-prefix trace with **streamed `TokenEvent`s whose
+//!   concatenation per request is byte-identical to the unbatched
+//!   oracle** (each replica checked against its own independently
+//!   constructed oracle backend);
+//! * with the prefix cache on, the same trace allocates **measurably
+//!   fewer KV blocks** than the no-sharing baseline;
+//! * after drain: zero leaked blocks or refcounts on every replica's
+//!   pool (`check_invariants`), and the router's load accounting is
+//!   conserved and empty.
+
+use apllm::coordinator::trace::{generate, TraceConfig};
+use apllm::coordinator::{
+    drive_unbatched, responses_of, ArrivalKind, Cluster, EngineConfig, Request, RoutePolicy,
+    SimBackend, Stepper, TokenEvent,
+};
+use apllm::model::PrecisionConfig;
+use std::collections::HashMap;
+
+/// Every replica (and every oracle) is built with these parameters —
+/// identical model replicas, as a real deployment would scale out.
+fn replica_backend() -> SimBackend {
+    SimBackend::with_ap_gemm(64, 256, vec![1, 2, 4, 8], 64, 2, 2, 17)
+}
+
+fn engine_cfg(prefix_sharing: bool) -> EngineConfig {
+    EngineConfig {
+        kv_blocks: 24,
+        block_tokens: 4,
+        max_running: 8,
+        prefix_sharing,
+        ..Default::default()
+    }
+}
+
+/// Shared-prefix workload: 3 "system prompts" of 12 tokens, short tails.
+fn shared_prefix_requests(n: usize) -> Vec<Request> {
+    generate(&TraceConfig {
+        kind: ArrivalKind::Poisson { rate: 1000.0 },
+        requests: n,
+        prompt_len: (1, 5), // tail after the prefix
+        max_new: (2, 8),
+        vocab: 64,
+        seed: 23,
+        shared_prefixes: 3,
+        prefix_len: 12,
+    })
+    .into_iter()
+    .map(|t| t.request)
+    .collect()
+}
+
+fn build_cluster(sharing: bool) -> Cluster<SimBackend> {
+    let mut c = Cluster::new(RoutePolicy::LeastLoaded);
+    for i in 0..3 {
+        c.add_replica(
+            format!("r{i}"),
+            PrecisionConfig::W2A2,
+            replica_backend(),
+            engine_cfg(sharing),
+        );
+    }
+    c
+}
+
+#[test]
+fn three_replica_cluster_streams_oracle_identical_tokens_and_saves_blocks() {
+    let reqs = shared_prefix_requests(36);
+
+    // three INDEPENDENT unbatched oracles, one per replica — identically
+    // constructed, so every request has the same ground truth no matter
+    // where the router places it; computing all three and cross-checking
+    // pins that down rather than assuming it
+    let mut oracles: Vec<SimBackend> = (0..3).map(|_| replica_backend()).collect();
+    let want: Vec<Vec<i32>> = reqs
+        .iter()
+        .map(|r| {
+            let per_oracle: Vec<Vec<i32>> = oracles
+                .iter_mut()
+                .map(|o| drive_unbatched(o, &r.prompt, &r.params).unwrap())
+                .collect();
+            assert!(
+                per_oracle.windows(2).all(|w| w[0] == w[1]),
+                "identically-built replicas must agree on request {}",
+                r.id.0
+            );
+            per_oracle.into_iter().next().unwrap()
+        })
+        .collect();
+
+    let mut fresh_allocs = [0u64; 2];
+    for (slot, sharing) in [(0usize, true), (1usize, false)] {
+        let mut cluster = build_cluster(sharing);
+        for r in &reqs {
+            cluster.submit(r.clone());
+        }
+        let events = cluster.run_to_completion_events().unwrap();
+
+        // (a) per-request streamed tokens ≡ unbatched oracle ≡ response
+        let mut streams: HashMap<u64, Vec<i32>> = HashMap::new();
+        for ev in &events {
+            if let TokenEvent::Token { id, token, .. } = ev {
+                streams.entry(id.0).or_default().push(*token);
+            }
+        }
+        let mut out = responses_of(&events);
+        out.sort_by_key(|r| r.id);
+        assert_eq!(out.len(), reqs.len());
+        for (resp, want) in out.iter().zip(&want) {
+            assert!(!resp.tokens.is_empty(), "request {} rejected", resp.id.0);
+            assert_eq!(resp.tokens, *want, "request {} ≠ oracle (sharing={sharing})", resp.id.0);
+            assert_eq!(
+                &streams[&resp.id.0], want,
+                "request {} stream ≠ oracle (sharing={sharing})",
+                resp.id.0
+            );
+        }
+
+        // (c) zero leaks anywhere after drain
+        cluster.check_invariants().unwrap();
+        for eng in cluster.engines() {
+            assert_eq!(eng.pool().free_blocks(), eng.pool().total_blocks(), "leaked blocks");
+            assert_eq!(eng.pool().used_blocks(), 0, "leaked refcounts");
+        }
+        assert_eq!(cluster.router().inflight(), 0, "router accounting drained");
+        assert_eq!(cluster.router().routed, reqs.len() as u64);
+        assert_eq!(cluster.router().completed, reqs.len() as u64);
+
+        // all three replicas actually served (LeastLoaded spreads 36 reqs)
+        let busy = cluster.engines().iter().filter(|e| e.counters().completed > 0).count();
+        assert_eq!(busy, 3, "every replica must serve under least-loaded routing");
+
+        fresh_allocs[slot] =
+            cluster.engines().iter().map(|e| e.pool().sharing().fresh_allocs).sum();
+        if sharing {
+            let hits: u64 =
+                cluster.engines().iter().map(|e| e.pool().sharing().shared_live).sum();
+            let restores: u64 =
+                cluster.engines().iter().map(|e| e.pool().sharing().cache_restores).sum();
+            assert!(hits + restores > 0, "shared-prefix traffic must hit the prefix cache");
+        }
+    }
+
+    // (b) sharing allocates measurably fewer blocks on the same trace
+    assert!(
+        fresh_allocs[0] < fresh_allocs[1],
+        "prefix sharing allocated {} fresh blocks vs baseline {}",
+        fresh_allocs[0],
+        fresh_allocs[1]
+    );
+}
+
+#[test]
+fn mixed_precision_cluster_pins_requests_to_matching_replicas() {
+    // two precisions behind one endpoint (the Any-Precision deployment
+    // story): pinned requests land only on matching replicas
+    let mut c = Cluster::new(RoutePolicy::LeastLoaded);
+    c.add_replica("w2", PrecisionConfig::W2A2, replica_backend(), engine_cfg(true));
+    c.add_replica(
+        "w1",
+        PrecisionConfig::W1A1,
+        SimBackend::with_ap_gemm(64, 256, vec![1, 2, 4, 8], 64, 1, 1, 29),
+        engine_cfg(true),
+    );
+    for i in 0..8u64 {
+        let pin = if i % 2 == 0 { PrecisionConfig::W2A2 } else { PrecisionConfig::W1A1 };
+        let mut r = Request::new(
+            i,
+            (1..=6).collect(),
+            apllm::coordinator::GenParams { max_new_tokens: 4, sample: false, seed: i },
+        );
+        r = r.with_precision(pin);
+        c.submit(r);
+    }
+    let events = c.run_to_completion_events().unwrap();
+    let out = responses_of(&events);
+    assert_eq!(out.len(), 8);
+    assert!(out.iter().all(|r| r.tokens.len() == 4));
+    assert_eq!(c.engine(0).counters().completed, 4, "W2A2 pins went to w2");
+    assert_eq!(c.engine(1).counters().completed, 4, "W1A1 pins went to w1");
+    assert_eq!(c.unroutable(), 0);
+    c.check_invariants().unwrap();
+}

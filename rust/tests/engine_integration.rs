@@ -3,14 +3,21 @@
 //!
 //! * ≥ 64 requests with mixed prompt/decode lengths complete through the
 //!   iteration-level loop with **token streams identical to the unbatched
-//!   path** (same backend driven one request at a time);
+//!   path** (same backend driven one request at a time) — and the
+//!   concatenation of each request's streamed `Token` events is
+//!   byte-identical to its terminal response;
 //! * zero KV blocks leak, with the pool invariants holding under the
-//!   admit/decode/finish/preempt churn the tight pool forces;
+//!   admit/decode/finish/preempt churn the tight pool forces (prefix
+//!   sharing on: the common prompt heads share refcounted blocks);
 //! * weights are decomposed+packed **exactly once** for the whole run,
 //!   every step packing only its activation batch through the recycling
 //!   arena.
 
-use apllm::coordinator::{drive_unbatched, Engine, EngineConfig, GenParams, Request, SimBackend};
+use apllm::coordinator::{
+    drive_unbatched, responses_of, Engine, EngineConfig, GenParams, Request, SimBackend,
+    TokenEvent,
+};
+use std::collections::HashMap;
 
 /// AP-GEMM sim backend: logits from the real prepacked bitmm kernel.
 fn ap_backend(seed: u64) -> SimBackend {
@@ -30,9 +37,22 @@ fn unbatched(backend: &mut SimBackend, r: &Request) -> Vec<i32> {
     drive_unbatched(backend, &r.prompt, &r.params).unwrap()
 }
 
+/// Per-request concatenation of streamed `Token` payloads.
+fn streamed_tokens(events: &[TokenEvent]) -> HashMap<u64, Vec<i32>> {
+    let mut m: HashMap<u64, Vec<i32>> = HashMap::new();
+    for ev in events {
+        if let TokenEvent::Token { id, token, .. } = ev {
+            m.entry(id.0).or_default().push(*token);
+        }
+    }
+    m
+}
+
 #[test]
 fn engine_64_requests_match_unbatched_with_zero_leaks_and_one_weight_pack() {
-    // mixed lengths: prompts 1..=16, budgets 1..=12
+    // mixed lengths: prompts 1..=16, budgets 1..=12 — the (1..=plen)
+    // prompts are prefixes of one another, so the prefix cache shares
+    // their heads while the tight pool still forces preemption churn
     let reqs: Vec<Request> = (0..64u64)
         .map(|i| req(i, 1 + (i as usize * 7) % 16, 1 + (i as usize * 5) % 12))
         .collect();
@@ -49,13 +69,17 @@ fn engine_64_requests_match_unbatched_with_zero_leaks_and_one_weight_pack() {
     for r in &reqs {
         eng.submit(r.clone());
     }
-    let mut out = eng.run_to_completion().unwrap();
+    let events = eng.run_to_completion_events().unwrap();
+    let mut out = responses_of(&events);
     out.sort_by_key(|r| r.id);
 
-    // every request completes with the unbatched token stream
+    // every request completes with the unbatched token stream, and the
+    // streamed events concatenate to exactly that stream
     assert_eq!(out.len(), 64);
+    let streams = streamed_tokens(&events);
     for (resp, want) in out.iter().zip(&want) {
         assert_eq!(resp.tokens, *want, "request {} diverged from unbatched path", resp.id.0);
+        assert_eq!(&streams[&resp.id.0], want, "request {} stream ≠ response", resp.id.0);
     }
 
     // churn actually happened, and conserved every block
@@ -65,6 +89,8 @@ fn engine_64_requests_match_unbatched_with_zero_leaks_and_one_weight_pack() {
     assert_eq!(c.completed, 64);
     assert_eq!(eng.pool().free_blocks(), 16, "zero KV-block leaks");
     eng.pool().check_invariants().unwrap();
+    // the common (1..=N) prompt heads really shared blocks
+    assert!(eng.pool().sharing().shared_live > 0, "prefix cache must hit on shared heads");
 
     // §3.3 under churn: one weight pack for the whole run, one activation
     // pack per backend step, recycled buffers in steady state
@@ -83,8 +109,8 @@ fn engine_64_requests_match_unbatched_with_zero_leaks_and_one_weight_pack() {
 
 #[test]
 fn engine_matches_unbatched_under_sampling_too() {
-    // seeded Gumbel sampling is per-(request, step): batching and
-    // preemption must not perturb sampled streams either
+    // seeded Gumbel sampling is per-(request, step): batching, sharing
+    // and preemption must not perturb sampled streams either
     let reqs: Vec<Request> = (0..12u64)
         .map(|i| {
             Request::new(
@@ -109,4 +135,57 @@ fn engine_matches_unbatched_under_sampling_too() {
         assert_eq!(resp.tokens, *want, "sampled request {} diverged", resp.id.0);
     }
     assert_eq!(eng.pool().free_blocks(), 8);
+}
+
+#[test]
+fn event_stream_lifecycle_is_well_formed_under_preemption_churn() {
+    // per request: exactly one Admitted, Preempted/Resumed strictly
+    // alternating after it, exactly one terminal Finished, and no Token
+    // while swapped out
+    let reqs: Vec<Request> = (0..24u64).map(|i| req(i, 1 + (i as usize * 7) % 16, 6)).collect();
+    let cfg = EngineConfig { kv_blocks: 12, block_tokens: 4, max_running: 8, ..Default::default() };
+    let mut eng = Engine::new(ap_backend(3), cfg);
+    for r in &reqs {
+        eng.submit(r.clone());
+    }
+    let events = eng.run_to_completion_events().unwrap();
+    assert!(eng.counters().preemptions > 0, "churn must preempt");
+
+    #[derive(PartialEq, Debug)]
+    enum St {
+        Unseen,
+        Running,
+        Swapped,
+        Done,
+    }
+    let mut state: HashMap<u64, St> = HashMap::new();
+    for ev in &events {
+        let id = ev.id().0;
+        let st = state.entry(id).or_insert(St::Unseen);
+        match ev {
+            TokenEvent::Admitted { .. } => {
+                assert_eq!(*st, St::Unseen, "req {id} admitted twice");
+                *st = St::Running;
+            }
+            TokenEvent::Token { .. } => {
+                assert_eq!(*st, St::Running, "req {id} token while {st:?}");
+            }
+            TokenEvent::Preempted { .. } => {
+                assert_eq!(*st, St::Running, "req {id} preempted while {st:?}");
+                *st = St::Swapped;
+            }
+            TokenEvent::Resumed { .. } => {
+                assert_eq!(*st, St::Swapped, "req {id} resumed while {st:?}");
+                *st = St::Running;
+            }
+            TokenEvent::Finished { response, .. } => {
+                assert_eq!(*st, St::Running, "req {id} finished while {st:?}");
+                assert!(!response.tokens.is_empty());
+                *st = St::Done;
+            }
+        }
+    }
+    assert_eq!(state.len(), 24);
+    assert!(state.values().all(|s| *s == St::Done), "every request reached Done");
+    assert_eq!(eng.pool().free_blocks(), 12);
 }

@@ -97,3 +97,28 @@ fn engine_serving_demo_reports_pack_once_and_clean_kv() {
     assert!(report.contains("kv: 64/64 blocks free"), "report was:\n{report}");
     assert!(report.contains("engine: steps"));
 }
+
+#[test]
+fn cluster_serving_demo_reports_per_replica_breakdown() {
+    let a = apllm::coordinator::cli::ServeArgs {
+        requests: 10,
+        rate_per_s: 500.0,
+        max_new: 4,
+        prompt_len: 5,
+        seed: 3,
+        sim: true,
+        replicas: 3,
+        ..Default::default()
+    };
+    let report = apllm::coordinator::cli::run_cluster_serving_demo(&a).unwrap();
+    assert!(report.contains("cluster: 3 replicas"), "report was:\n{report}");
+    assert!(report.contains("policy LeastLoaded"), "report was:\n{report}");
+    assert!(report.contains("routed 10, completed 10, unroutable 0"), "report was:\n{report}");
+    assert!(report.contains("r0 (W2A2)") && report.contains("r2 (W2A2)"), "report was:\n{report}");
+    // every replica drained its pool: "kv free N/N" lines with equal sides
+    for line in report.lines().filter(|l| l.contains("kv free")) {
+        let frag = line.split("kv free ").nth(1).unwrap();
+        let nums: Vec<&str> = frag.split(['/', ',']).take(2).collect();
+        assert_eq!(nums[0], nums[1], "leaked blocks in: {line}");
+    }
+}
