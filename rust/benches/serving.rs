@@ -4,39 +4,50 @@
 //!
 //! 1. rate × throughput/latency table (TTFT/ITL percentiles come from the
 //!    streamed per-token events);
-//! 2. **prefix-sharing workload** — Poisson arrivals over a small set of
-//!    shared system prompts, run with the hash-based prefix cache on and
-//!    off, reporting the KV blocks sharing saved;
+//! 2. **prefix-sharing workload** — skewed Poisson arrivals over a small
+//!    set of shared system prompts, run with the hash-based prefix cache
+//!    under **LRU eviction, the LIFO baseline, and sharing off**,
+//!    reporting the KV blocks sharing saved and the cache hit/restore
+//!    rates each eviction policy sustains;
 //! 3. (`--cluster`) a multi-replica cluster behind `Router::LeastLoaded`
-//!    on the shared-prefix trace, with per-replica load/KV breakdown.
+//!    on the shared-prefix trace — one deliberately undersized "hot"
+//!    replica so preemptive rebalancing is visible — with per-replica
+//!    load/KV/migration breakdown.
 //!
 //! `cargo bench --bench serving` for the full table; pass `--smoke` for
 //! the one-row CI job (and `--smoke --cluster` for the cluster smoke)
-//! that keeps these paths building and running.
+//! that keeps these paths building and running.  `--json <path>` emits
+//! the machine-readable `BENCH_serving.json` artifact CI uploads; the
+//! writer sanity-checks every recorded number (finite, and non-zero
+//! where zero would mean "the bench measured nothing") and panics on
+//! violations so a rotten run fails the job instead of shipping NaNs.
 
-use apllm::coordinator::trace::{generate, TraceConfig};
+use apllm::coordinator::trace::{generate, TimedRequest, TraceConfig};
 use apllm::coordinator::{
     replay_trace, responses_of, ArrivalKind, BatcherConfig, Cluster, Engine, EngineConfig,
-    KvSharing, RoutePolicy, SimBackend, Stepper, TokenEvent,
+    EvictionPolicy, KvPool, KvSharing, RoutePolicy, SimBackend, Stepper, TokenEvent,
 };
 use apllm::model::PrecisionConfig;
+use apllm::util::json::Json;
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 fn ap_backend() -> SimBackend {
     SimBackend::with_ap_gemm(256, 512, vec![1, 2, 4, 8], 128, 2, 2, 7)
 }
 
-fn engine_cfg(prefix_sharing: bool) -> EngineConfig {
+fn engine_cfg(prefix_sharing: bool, eviction: EvictionPolicy, kv_blocks: usize) -> EngineConfig {
     EngineConfig {
-        kv_blocks: 96,
+        kv_blocks,
         block_tokens: 8,
         max_running: 8,
         batcher: BatcherConfig { batch_sizes: vec![1, 2, 4, 8], max_wait: Duration::ZERO },
         prefix_sharing,
+        eviction,
     }
 }
 
-fn shared_prefix_trace(rate: f64, requests: usize) -> Vec<apllm::coordinator::trace::TimedRequest> {
+fn shared_prefix_trace(rate: f64, requests: usize) -> Vec<TimedRequest> {
     generate(&TraceConfig {
         kind: ArrivalKind::Poisson { rate },
         requests,
@@ -46,17 +57,92 @@ fn shared_prefix_trace(rate: f64, requests: usize) -> Vec<apllm::coordinator::tr
         seed: 7,
         shared_prefixes: 4, // a small pool of "system prompts"
         prefix_len: 24,
+        prefix_skew: 0.35, // hot-system-prompt popularity
     })
 }
 
 fn kv_line(s: &KvSharing) -> String {
     format!(
-        "fresh {:>5} | shared {:>5} | restored {:>5} | cow {:>3} | peak used {:>4}",
-        s.fresh_allocs, s.shared_live, s.cache_restores, s.cow_copies, s.peak_used
+        "fresh {:>5} | shared {:>5} | restored {:>5} | cow {:>3} | evicted {:>4} | peak used {:>4}",
+        s.fresh_allocs, s.shared_live, s.cache_restores, s.cow_copies, s.evictions, s.peak_used
     )
 }
 
-fn steady_state(rates: &[f64], requests: usize) {
+// ------------------------------------------------------ JSON artifact --
+
+/// Finite-checked number: the artifact must never contain NaN/inf.
+fn num(label: &str, v: f64) -> Json {
+    assert!(v.is_finite(), "bench sanity: {label} is not finite ({v})");
+    Json::Num(v)
+}
+
+/// Finite AND strictly positive — for numbers where zero means the bench
+/// measured nothing (throughput, completions).
+fn pos(label: &str, v: f64) -> Json {
+    assert!(v > 0.0, "bench sanity: {label} must be > 0, got {v}");
+    num(label, v)
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn sharing_json(s: &KvSharing) -> Json {
+    obj(vec![
+        ("fresh_allocs", num("fresh_allocs", s.fresh_allocs as f64)),
+        ("shared_live", num("shared_live", s.shared_live as f64)),
+        ("cache_restores", num("cache_restores", s.cache_restores as f64)),
+        ("cow_copies", num("cow_copies", s.cow_copies as f64)),
+        ("evictions", num("evictions", s.evictions as f64)),
+        ("hit_rate", num("hit_rate", s.hit_rate())),
+        ("restore_rate", num("restore_rate", s.restore_rate())),
+    ])
+}
+
+/// Deterministic eviction-policy probe — no wall clock, no engine: two
+/// 9-token prompts alternating through a tight 6-block pool (the same
+/// workload the kv unit test pins down).  Under LRU every warm re-admit
+/// restores its prefix blocks; under LIFO the tail allocations pop
+/// exactly the blocks the previous request just registered, so its
+/// cache never survives.  The bench asserts LRU out-restores LIFO and
+/// ships both rates in the artifact, so CI gates the LRU property
+/// itself rather than a timing-dependent replay.
+fn policy_probe() -> Json {
+    let run = |policy: EvictionPolicy| {
+        let mut p = KvPool::with_policy(6, 4, policy);
+        let pa: Vec<i32> = (0..9).collect();
+        let pb: Vec<i32> = (100..109).collect();
+        for i in 0..10u64 {
+            let pr = if i % 2 == 0 { &pa } else { &pb };
+            p.admit_shared(i, pr).expect("probe admit");
+            p.release(i).expect("probe release");
+        }
+        p.sharing()
+    };
+    let lru = run(EvictionPolicy::Lru);
+    let lifo = run(EvictionPolicy::Lifo);
+    println!(
+        "  eviction probe (deterministic): LRU restore rate {:.0}% vs LIFO {:.0}%",
+        100.0 * lru.restore_rate(),
+        100.0 * lifo.restore_rate()
+    );
+    assert!(
+        lru.restore_rate() > lifo.restore_rate(),
+        "LRU must out-restore the LIFO baseline (lru {:.2} vs lifo {:.2})",
+        lru.restore_rate(),
+        lifo.restore_rate()
+    );
+    obj(vec![
+        ("lru_restores", num("lru_restores", lru.cache_restores as f64)),
+        ("lifo_restores", num("lifo_restores", lifo.cache_restores as f64)),
+        ("lru_restore_rate", pos("lru_restore_rate", lru.restore_rate())),
+        ("lifo_restore_rate", num("lifo_restore_rate", lifo.restore_rate())),
+    ])
+}
+
+// ----------------------------------------------------------- sections --
+
+fn steady_state(rates: &[f64], requests: usize) -> Json {
     println!("== serving: continuous-batching engine, Poisson arrivals, prepacked W2A2 lm-head ==");
     println!(
         "{:>8} {:>6} {:>9} {:>6} {:>9} {:>14} {:>14} {:>14} {:>14}",
@@ -70,8 +156,9 @@ fn steady_state(rates: &[f64], requests: usize) {
         "itl p50/p95",
         "total p50/p95"
     );
+    let mut rows = Vec::new();
     for &rate in rates {
-        let mut eng = Engine::new(ap_backend(), engine_cfg(true));
+        let mut eng = Engine::new(ap_backend(), engine_cfg(true, EvictionPolicy::Lru, 96));
         let trace = generate(&TraceConfig {
             kind: ArrivalKind::Poisson { rate },
             requests,
@@ -111,15 +198,38 @@ fn steady_state(rates: &[f64], requests: usize) {
         );
         let s = eng.backend().ap_stats().expect("ap backend");
         assert_eq!(s.weight_packs, 1, "weights must be packed once per run");
+        rows.push(obj(vec![
+            ("rate", num("rate", rate)),
+            ("done", pos("done", m.requests_done as f64)),
+            ("tok_s", pos("tok_s", m.throughput_tok_s())),
+            ("occupancy", pos("occupancy", m.mean_occupancy())),
+            ("preemptions", num("preemptions", m.preemptions as f64)),
+            ("ttft_p50_ms", num("ttft_p50_ms", ms(m.ttft.percentile(50.0)))),
+            ("ttft_p95_ms", num("ttft_p95_ms", ms(m.ttft.percentile(95.0)))),
+            ("itl_p50_ms", num("itl_p50_ms", ms(m.itl.percentile(50.0)))),
+            ("itl_p95_ms", num("itl_p95_ms", ms(m.itl.percentile(95.0)))),
+        ]));
     }
     println!("(latencies in ms; occupancy = mean decode batch size; weights packed once per run)");
+    Json::Arr(rows)
 }
 
-fn prefix_sharing(rate: f64, requests: usize) {
-    println!("\n== serving: shared-prefix workload (4 system prompts × 24 tokens), rate {rate}/s ==");
-    let mut saved = [0u64; 2];
-    for (slot, sharing) in [(0usize, true), (1usize, false)] {
-        let mut eng = Engine::new(ap_backend(), engine_cfg(sharing));
+fn prefix_sharing(rate: f64, requests: usize) -> Json {
+    println!(
+        "\n== serving: shared-prefix workload (4 system prompts × 24 tokens, skewed), rate {rate}/s =="
+    );
+    // a pool tight enough that eviction policy matters: the prefix
+    // working set survives under LRU but not under the LIFO baseline
+    let kv_blocks = 28;
+    let variants: [(&str, bool, EvictionPolicy); 3] = [
+        ("lru", true, EvictionPolicy::Lru),
+        ("lifo", true, EvictionPolicy::Lifo),
+        ("off", false, EvictionPolicy::Lru),
+    ];
+    let mut fresh = BTreeMap::new();
+    let mut policies = BTreeMap::new();
+    for (label, sharing, eviction) in variants {
+        let mut eng = Engine::new(ap_backend(), engine_cfg(sharing, eviction, kv_blocks));
         let trace = shared_prefix_trace(rate, requests);
         let events = replay_trace(&mut eng, &trace).expect("replay");
         let out = responses_of(&events);
@@ -127,35 +237,55 @@ fn prefix_sharing(rate: f64, requests: usize) {
         assert_eq!(eng.pool().free_blocks(), eng.pool().total_blocks(), "no leaked blocks");
         eng.pool().check_invariants().expect("pool invariants after drain");
         let s = eng.pool().sharing();
-        saved[slot] = s.fresh_allocs;
+        fresh.insert(label, s.fresh_allocs);
+        policies.insert(label.to_string(), sharing_json(&s));
         let m = &eng.metrics;
         let ms = |v: f64| v * 1e3;
         println!(
-            "  prefix cache {:>3}: {} | ttft p50/p95 {:>6.1}/{:<6.1} ms | itl p50/p95 {:>5.1}/{:<5.1} ms",
-            if sharing { "on" } else { "off" },
+            "  {label:>4}: {} | hit {:>3.0}% restore {:>3.0}% | ttft p50/p95 {:>6.1}/{:<6.1} ms | itl p50/p95 {:>5.1}/{:<5.1} ms",
             kv_line(&s),
+            100.0 * s.hit_rate(),
+            100.0 * s.restore_rate(),
             ms(m.ttft.percentile(50.0)),
             ms(m.ttft.percentile(95.0)),
             ms(m.itl.percentile(50.0)),
             ms(m.itl.percentile(95.0)),
         );
     }
-    let (with, without) = (saved[0], saved[1]);
+    let (with, without) = (fresh["lru"], fresh["off"]);
     println!(
-        "  KV blocks saved by sharing: {} of {} ({:.0}%)",
+        "  KV blocks saved by sharing (LRU vs off): {} of {} ({:.0}%)",
         without.saturating_sub(with),
         without,
         100.0 * without.saturating_sub(with) as f64 / without.max(1) as f64
     );
+    obj(vec![
+        ("rate", num("rate", rate)),
+        ("requests", pos("requests", requests as f64)),
+        ("kv_blocks", num("kv_blocks", kv_blocks as f64)),
+        ("policies", Json::Obj(policies)),
+        ("policy_probe", policy_probe()),
+        ("baseline_fresh", pos("baseline_fresh", without as f64)),
+        ("blocks_saved", num("blocks_saved", without.saturating_sub(with) as f64)),
+    ])
 }
 
-fn cluster(rate: f64, requests: usize, replicas: usize) {
+fn cluster(rate: f64, requests: usize, replicas: usize) -> Json {
     println!(
-        "\n== serving: {replicas}-replica cluster (LeastLoaded router), shared-prefix trace, rate {rate}/s =="
+        "\n== serving: {replicas}-replica cluster (LeastLoaded router, hot replica 0), \
+         shared-prefix trace, rate {rate}/s =="
     );
     let mut c = Cluster::new(RoutePolicy::LeastLoaded);
     for i in 0..replicas {
-        c.add_replica(format!("r{i}"), PrecisionConfig::W2A2, ap_backend(), engine_cfg(true));
+        // replica 0 is deliberately undersized so swap-outs pile up on
+        // it and the rebalancer has something to migrate
+        let kv_blocks = if i == 0 { 24 } else { 96 };
+        c.add_replica(
+            format!("r{i}"),
+            PrecisionConfig::W2A2,
+            ap_backend(),
+            engine_cfg(true, EvictionPolicy::Lru, kv_blocks),
+        );
     }
     let trace = shared_prefix_trace(rate, requests);
     let events = replay_trace(&mut c, &trace).expect("replay");
@@ -163,42 +293,89 @@ fn cluster(rate: f64, requests: usize, replicas: usize) {
     assert_eq!(out.len(), requests);
     assert_eq!(c.router().inflight(), 0, "router load accounting drained");
     c.check_invariants().expect("cluster invariants after drain");
+    let migrated_events =
+        events.iter().filter(|e| matches!(e, TokenEvent::Migrated { .. })).count();
+    assert_eq!(migrated_events as u64, c.migrations(), "every migration streamed");
     let m = c.metrics();
     let ms = |v: f64| v * 1e3;
     println!(
-        "  merged: {} done | {:.0} tok/s | ttft p50/p95 {:.1}/{:.1} ms | itl p50/p95 {:.1}/{:.1} ms",
+        "  merged: {} done | {:.0} tok/s | {} migrations | ttft p50/p95 {:.1}/{:.1} ms | itl p50/p95 {:.1}/{:.1} ms",
         m.requests_done,
         m.throughput_tok_s(),
+        c.migrations(),
         ms(m.ttft.percentile(50.0)),
         ms(m.ttft.percentile(95.0)),
         ms(m.itl.percentile(50.0)),
         ms(m.itl.percentile(95.0)),
     );
+    let mut per_replica = Vec::new();
     for (eng, rep) in c.engines().iter().zip(c.router().replicas()) {
+        let cnt = eng.counters();
         println!(
-            "  {} ({}): completed {:>4} | {}",
+            "  {} ({}): completed {:>4} | exported {:>3} | imported {:>3} | {}",
             rep.name,
             rep.precision.label(),
-            eng.counters().completed,
+            cnt.completed,
+            cnt.exported,
+            cnt.imported,
             kv_line(&eng.pool().sharing()),
         );
         assert_eq!(eng.pool().free_blocks(), eng.pool().total_blocks(), "replica leaked blocks");
+        per_replica.push(obj(vec![
+            ("name", Json::Str(rep.name.clone())),
+            ("completed", num("completed", cnt.completed as f64)),
+            ("exported", num("exported", cnt.exported as f64)),
+            ("imported", num("imported", cnt.imported as f64)),
+            ("sharing", sharing_json(&eng.pool().sharing())),
+        ]));
     }
+    obj(vec![
+        ("rate", num("rate", rate)),
+        ("requests", pos("requests", requests as f64)),
+        ("replicas", pos("replicas", replicas as f64)),
+        ("done", pos("done", m.requests_done as f64)),
+        ("tok_s", pos("tok_s", m.throughput_tok_s())),
+        ("migrations", num("migrations", c.migrations() as f64)),
+        ("itl_p50_ms", num("itl_p50_ms", ms(m.itl.percentile(50.0)))),
+        ("itl_p95_ms", num("itl_p95_ms", ms(m.itl.percentile(95.0)))),
+        ("per_replica", Json::Arr(per_replica)),
+    ])
 }
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let smoke = args.iter().any(|a| a == "--smoke");
     let cluster_mode = args.iter().any(|a| a == "--cluster");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .map(|i| args.get(i + 1).expect("--json needs a path").clone());
+
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
+    report.insert("schema".into(), Json::Num(1.0));
+    report.insert("smoke".into(), Json::Bool(smoke));
+    report.insert(
+        "mode".into(),
+        Json::Str(if cluster_mode { "cluster" } else { "engine" }.into()),
+    );
 
     if cluster_mode {
         let (rate, requests, replicas) = if smoke { (400.0, 12, 2) } else { (200.0, 64, 3) };
-        cluster(rate, requests, replicas);
-        return;
+        report.insert("cluster".into(), cluster(rate, requests, replicas));
+    } else {
+        let (rates, requests): (&[f64], usize) =
+            if smoke { (&[400.0], 8) } else { (&[50.0, 200.0, 800.0], 48) };
+        report.insert("steady".into(), steady_state(rates, requests));
+        let (pr_rate, pr_requests) = if smoke { (400.0, 12) } else { (200.0, 64) };
+        report.insert("prefix_sharing".into(), prefix_sharing(pr_rate, pr_requests));
     }
-    let (rates, requests): (&[f64], usize) =
-        if smoke { (&[400.0], 8) } else { (&[50.0, 200.0, 800.0], 48) };
-    steady_state(rates, requests);
-    let (pr_rate, pr_requests) = if smoke { (400.0, 12) } else { (200.0, 64) };
-    prefix_sharing(pr_rate, pr_requests);
+
+    if let Some(path) = json_path {
+        let doc = Json::Obj(report);
+        // round-trip through the parser: the artifact a CI consumer reads
+        // must be well-formed JSON, not just a string we hoped was
+        Json::parse(&doc.to_string()).expect("bench artifact must be valid JSON");
+        std::fs::write(&path, format!("{doc}\n")).expect("write bench artifact");
+        println!("\nwrote bench artifact: {path}");
+    }
 }

@@ -178,6 +178,7 @@ fn demo_engine_config() -> EngineConfig {
             max_wait: Duration::from_millis(2),
         },
         prefix_sharing: true,
+        eviction: super::kv::EvictionPolicy::Lru,
     }
 }
 
@@ -264,12 +265,13 @@ pub fn run_cluster_serving_demo(a: &ServeArgs) -> Result<String> {
     }
     let (mut report, _) = drive(&mut cluster, a, DEMO_VOCAB)?;
     report.push_str(&format!(
-        "cluster: {} replicas, policy {:?}, routed {}, completed {}, unroutable {}\n",
+        "cluster: {} replicas, policy {:?}, routed {}, completed {}, unroutable {}, migrated {}\n",
         cluster.replicas(),
         cluster.router().policy(),
         cluster.router().routed,
         cluster.router().completed,
         cluster.unroutable(),
+        cluster.migrations(),
     ));
     for (eng, rep) in cluster.engines().iter().zip(cluster.router().replicas()) {
         let c = eng.counters();

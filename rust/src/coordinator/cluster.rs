@@ -18,6 +18,24 @@
 //! serves a single engine — [`Server`](super::server::Server),
 //! [`replay_trace`](super::server::replay_trace), the benches — serves a
 //! cluster unchanged.
+//!
+//! ## Preemptive rebalancing
+//!
+//! Admission no longer pins a sequence to its replica for life: after
+//! every step the cluster **migrates the oldest swapped sequences away
+//! from overloaded replicas** ([`Engine::is_overloaded`] — a swapped
+//! sequence the replica cannot resume itself) onto same-precision peers
+//! with KV headroom ([`Engine::can_import`], ties broken toward the most
+//! free blocks, then the lowest index — deterministic).  The sequence
+//! travels as an [`ExportedSeq`](super::engine::ExportedSeq) (request +
+//! host KV + generated tokens), re-admits through the target's prefix
+//! cache, and its stream continues byte-identically — the client just
+//! sees `Preempted`, [`TokenEvent::Migrated`], `Resumed`.  The router's
+//! load accounting transfers conservatively ([`Router::migrate`]), so
+//! conservation holds mid-flight.  Same-precision replicas are assumed
+//! to be identical model replicas (the standard scale-out deployment);
+//! that is what makes the migrated stream's logits — and therefore its
+//! tokens — identical.
 
 use super::backend::Backend;
 use super::engine::{Engine, EngineConfig};
@@ -39,6 +57,9 @@ pub struct Cluster<B: Backend> {
     unroutable: u64,
     /// Terminal events for unroutable requests, drained next step.
     pending_events: Vec<TokenEvent>,
+    /// Preemptive rebalancing of swapped sequences (on by default;
+    /// `set_migration(false)` restores the PR 3 pinned behavior).
+    migration: bool,
 }
 
 impl<B: Backend> Cluster<B> {
@@ -49,7 +70,20 @@ impl<B: Backend> Cluster<B> {
             clock: Metrics::default(),
             unroutable: 0,
             pending_events: Vec::new(),
+            migration: true,
         }
+    }
+
+    /// Enable/disable cross-replica migration of swapped sequences
+    /// (enabled by default).  Off restores the PR 3 behavior: a request
+    /// stays pinned to its admission replica forever.
+    pub fn set_migration(&mut self, enabled: bool) {
+        self.migration = enabled;
+    }
+
+    /// Swapped sequences moved between replicas so far.
+    pub fn migrations(&self) -> u64 {
+        self.clock.migrations
     }
 
     /// Register a replica: a backend wrapped in its own engine, serving
@@ -89,14 +123,80 @@ impl<B: Backend> Cluster<B> {
         self.unroutable
     }
 
-    /// Whole-cluster consistency: router load accounting conserves and
-    /// every replica's pool holds its block invariants.
+    /// Whole-cluster consistency: router load accounting conserves,
+    /// every replica's pool holds its block invariants, and migration
+    /// bookkeeping balances (exports == imports — a sequence is never
+    /// in transit between steps — and the router counted every move).
     pub fn check_invariants(&self) -> Result<(), String> {
         self.router.check_invariants()?;
         for (i, e) in self.engines.iter().enumerate() {
             e.pool().check_invariants().map_err(|err| format!("replica {i}: {err}"))?;
         }
+        let exported: u64 = self.engines.iter().map(|e| e.counters().exported).sum();
+        let imported: u64 = self.engines.iter().map(|e| e.counters().imported).sum();
+        if exported != imported {
+            return Err(format!("{exported} exported sequences but {imported} imported"));
+        }
+        if exported != self.clock.migrations || self.router.migrated != self.clock.migrations {
+            return Err(format!(
+                "migration accounting drift: {} moved, router saw {}, clock saw {}",
+                exported, self.router.migrated, self.clock.migrations
+            ));
+        }
         Ok(())
+    }
+
+    /// Move the oldest swapped sequences off overloaded replicas onto
+    /// same-precision peers with headroom.  Deterministic: sources in
+    /// replica order, target = the acceptable peer with the most free KV
+    /// blocks (lowest index on ties).  Each move streams
+    /// [`TokenEvent::Migrated`]; the target's own next step streams the
+    /// `Resumed`.
+    fn rebalance(&mut self, events: &mut Vec<TokenEvent>) {
+        if !self.migration || self.engines.len() < 2 {
+            return;
+        }
+        for src in 0..self.engines.len() {
+            while self.engines[src].is_overloaded() {
+                // cheap pre-filter before materializing the sequence's KV
+                // content: a peer must share the precision and have no
+                // swapped backlog of its own (a saturated cluster — or a
+                // lone-precision replica — breaks here allocation-free)
+                let precision = self.router.replicas()[src].precision;
+                let any_peer = self.engines.iter().enumerate().any(|(i, e)| {
+                    i != src
+                        && self.router.replicas()[i].precision == precision
+                        && e.swapped() == 0
+                });
+                if !any_peer {
+                    break;
+                }
+                let Some((id, content, budget)) = self.engines[src].peek_swapped() else { break };
+                let mut best: Option<(usize, usize)> = None; // (free_blocks, idx)
+                for (i, e) in self.engines.iter().enumerate() {
+                    if i == src || self.router.replicas()[i].precision != precision {
+                        continue;
+                    }
+                    if e.can_import(&content, budget) {
+                        let free = e.pool().free_blocks();
+                        let better = match best {
+                            None => true,
+                            Some((bf, bi)) => free > bf || (free == bf && i < bi),
+                        };
+                        if better {
+                            best = Some((free, i));
+                        }
+                    }
+                }
+                let Some((_, dst)) = best else { break };
+                let seq = self.engines[src].export_swapped().expect("peeked above");
+                self.engines[dst].import_swapped(seq);
+                let from = self.router.migrate(id, dst).expect("migrated seq must be in flight");
+                debug_assert_eq!(from, src);
+                self.clock.migrations += 1;
+                events.push(TokenEvent::Migrated { id, from: src, to: dst });
+            }
+        }
     }
 
     /// Step until every submitted request resolved; returns the full
@@ -126,8 +226,9 @@ impl<B: Backend> Stepper for Cluster<B> {
         }
     }
 
-    /// Advance every busy replica one iteration; merge their event
-    /// streams and drain completions out of the router's load accounting.
+    /// Advance every busy replica one iteration, rebalance swapped
+    /// sequences off overloaded replicas, then merge the event streams
+    /// and drain completions out of the router's load accounting.
     fn step(&mut self) -> Result<Vec<TokenEvent>> {
         let mut events = std::mem::take(&mut self.pending_events);
         for e in &mut self.engines {
@@ -135,6 +236,7 @@ impl<B: Backend> Stepper for Cluster<B> {
                 events.extend(e.step()?);
             }
         }
+        self.rebalance(&mut events);
         for ev in &events {
             if let TokenEvent::Finished { id, .. } = ev {
                 // unroutable terminals were never routed; ignore those
@@ -264,6 +366,127 @@ mod tests {
         assert_eq!(out.len(), 1);
         assert!(out[0].tokens.is_empty());
         assert_eq!(c.router().inflight(), 0);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn overloaded_replica_migrates_swapped_sequence_to_peer() {
+        use crate::coordinator::backend::drive_unbatched;
+
+        // r0: 4-block pool (two 16-token-budget residents overflow it);
+        // r1: plenty of headroom.  LeastLoaded lands A and C on r0 (ties
+        // break by index) and B on r1; decoding preempts C, which r0 can
+        // never resume while A runs — the rebalancer must move it to r1.
+        let mk_prompt = |base: i32| (base..base + 8).collect::<Vec<i32>>();
+        let reqs: Vec<Request> = [10, 50, 30]
+            .iter()
+            .enumerate()
+            .map(|(i, &base)| {
+                Request::new(
+                    i as u64,
+                    mk_prompt(base),
+                    GenParams { max_new_tokens: 8, sample: false, seed: i as u64 },
+                )
+            })
+            .collect();
+        let mut oracle = sim();
+        let want: Vec<Vec<i32>> = reqs
+            .iter()
+            .map(|r| drive_unbatched(&mut oracle, &r.prompt, &r.params).unwrap())
+            .collect();
+
+        let run = |migration: bool| {
+            let mut c = Cluster::new(RoutePolicy::LeastLoaded);
+            c.add_replica(
+                "hot",
+                PrecisionConfig::W2A2,
+                sim(),
+                EngineConfig { kv_blocks: 4, block_tokens: 4, ..EngineConfig::default() },
+            );
+            c.add_replica(
+                "cold",
+                PrecisionConfig::W2A2,
+                sim(),
+                EngineConfig { kv_blocks: 32, block_tokens: 4, ..EngineConfig::default() },
+            );
+            c.set_migration(migration);
+            for r in &reqs {
+                c.submit(r.clone());
+            }
+            let events = c.run_to_completion_events().unwrap();
+            c.check_invariants().unwrap();
+            assert_eq!(c.router().inflight(), 0);
+            for (i, e) in c.engines().iter().enumerate() {
+                assert_eq!(
+                    e.pool().free_blocks(),
+                    e.pool().total_blocks(),
+                    "replica {i} leaked blocks"
+                );
+            }
+            let mut out = responses_of(&events);
+            out.sort_by_key(|r| r.id);
+            assert_eq!(out.len(), 3);
+            for (resp, want) in out.iter().zip(&want) {
+                let id = resp.id.0;
+                assert_eq!(resp.tokens, *want, "req {id} ≠ oracle (migration={migration})");
+            }
+            (c, events)
+        };
+
+        // with migration: the swapped sequence finishes on the peer
+        let (c, events) = run(true);
+        let migrated: Vec<_> = events
+            .iter()
+            .filter_map(|ev| match ev {
+                TokenEvent::Migrated { id, from, to } => Some((id.0, *from, *to)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(migrated, vec![(2, 0, 1)], "C moves hot → cold exactly once");
+        assert!(c.migrations() >= 1);
+        assert_eq!(c.engine(0).counters().exported, 1);
+        assert_eq!(c.engine(1).counters().imported, 1);
+        assert_eq!(c.engine(1).counters().resumes, 1, "C resumed on the peer");
+        assert_eq!(c.engine(0).counters().completed, 1, "only A finished on hot");
+        assert_eq!(c.engine(1).counters().completed, 2, "B and the migrated C on cold");
+        assert_eq!(c.router().migrated, 1);
+        assert_eq!(c.metrics().migrations, 1);
+
+        // without migration: same streams, but C waits out A on r0
+        let (c, events) = run(false);
+        assert!(events.iter().all(|ev| !matches!(ev, TokenEvent::Migrated { .. })));
+        assert_eq!(c.migrations(), 0);
+        assert_eq!(c.engine(0).counters().completed, 2, "C stayed pinned to hot");
+    }
+
+    #[test]
+    fn migration_respects_precision_boundaries() {
+        // the only peer serves a different precision: the swapped
+        // sequence must NOT migrate (identical-replica assumption), and
+        // still completes locally
+        let mut c = Cluster::new(RoutePolicy::LeastLoaded);
+        c.add_replica(
+            "hot-w2",
+            PrecisionConfig::W2A2,
+            sim(),
+            EngineConfig { kv_blocks: 4, block_tokens: 4, ..EngineConfig::default() },
+        );
+        c.add_replica("cold-w1", PrecisionConfig::W1A1, sim(), EngineConfig::default());
+        // pin both to the W2A2 replica so it overloads
+        for i in 0..2u64 {
+            let r = Request::new(
+                i,
+                ((i as i32 * 40)..(i as i32 * 40) + 8).collect(),
+                GenParams { max_new_tokens: 8, sample: false, seed: i },
+            )
+            .with_precision(PrecisionConfig::W2A2);
+            c.submit(r);
+        }
+        let events = c.run_to_completion_events().unwrap();
+        assert!(events.iter().all(|ev| !matches!(ev, TokenEvent::Migrated { .. })));
+        assert_eq!(c.migrations(), 0);
+        assert_eq!(c.engine(0).counters().completed, 2);
+        assert_eq!(c.engine(1).counters().completed, 0);
         c.check_invariants().unwrap();
     }
 

@@ -61,12 +61,29 @@
 //! report their retained token footprint
 //! ([`Metrics::kv_swapped_tokens`]), so capacity planning can tell
 //! resident from swapped KV.
+//!
+//! ## Cross-replica migration
+//!
+//! A swapped-out sequence is exactly the state a peer replica needs to
+//! take the work over: [`Engine::export_swapped`] pops the **oldest**
+//! swapped sequence as an [`ExportedSeq`] (request + host-resident KV +
+//! generated tokens; sampling stays seeded per (request, step), so the
+//! stream continues byte-identically wherever it resumes), and
+//! [`Engine::import_swapped`] files it into the target's resume queue,
+//! where the next step re-admits it through the target's prefix cache.
+//! [`Engine::is_overloaded`] is the migration trigger (a swapped
+//! sequence this engine cannot resume right now) and
+//! [`Engine::can_import`] the acceptance gate (a free decode slot, no
+//! swapped backlog, and KV headroom for the content *and* the remaining
+//! budget).  The [`Cluster`](super::cluster::Cluster) drives the actual
+//! rebalancing and streams [`TokenEvent::Migrated`] between the victim's
+//! `Preempted` and the target's `Resumed`.
 
 use super::backend::{gather_kv_refs, Backend, HasSeqKv, SeqKv};
 use super::batcher::{Batcher, BatcherConfig};
-use super::kv::{KvError, KvPool};
+use super::kv::{EvictionPolicy, KvError, KvPool};
 use super::metrics::Metrics;
-use super::request::{responses_of, sample_token, Request, Response, TokenEvent};
+use super::request::{responses_of, sample_token, Request, RequestId, Response, TokenEvent};
 use super::server::Stepper;
 use crate::anyhow::{bail, Result};
 use std::collections::VecDeque;
@@ -87,6 +104,9 @@ pub struct EngineConfig {
     /// blocks).  Off = the PR 2 private-allocation baseline, kept so the
     /// serving bench can report the blocks sharing saves.
     pub prefix_sharing: bool,
+    /// Which free block a fresh allocation evicts (LRU keeps hot prefix
+    /// content cached; LIFO is the PR 3 baseline the bench compares).
+    pub eviction: EvictionPolicy,
 }
 
 impl Default for EngineConfig {
@@ -99,6 +119,7 @@ impl Default for EngineConfig {
             // iteration-level scheduling rarely wants to hold arrivals back
             batcher: BatcherConfig { batch_sizes: vec![1, 2, 4, 8], max_wait: Duration::ZERO },
             prefix_sharing: true,
+            eviction: EvictionPolicy::Lru,
         }
     }
 }
@@ -115,6 +136,10 @@ pub struct EngineCounters {
     pub resumes: u64,
     pub completed: u64,
     pub steps: u64,
+    /// Swapped sequences handed to a peer replica ([`Engine::export_swapped`]).
+    pub exported: u64,
+    /// Sequences taken over from a peer replica ([`Engine::import_swapped`]).
+    pub imported: u64,
 }
 
 /// One resident (or swapped-out) sequence.
@@ -128,7 +153,9 @@ struct RunSeq {
     /// spans swap-out time, so preemption is visible in the percentiles).
     last_token_at: Instant,
     /// KV content tokens, materialized once at preemption so the swap-in
-    /// loop doesn't rebuild prompt+decoded every blocked step.
+    /// loop doesn't rebuild prompt+decoded every blocked step.  Invariant:
+    /// `Some` for every entry on the swapped queue (preemption, failed
+    /// resume re-park, and import all file it), `None` while resident.
     swap_content: Option<Vec<i32>>,
     /// Admission order (monotone, assigned once at first admission and
     /// kept across preemption) — victim selection preempts the largest,
@@ -153,6 +180,41 @@ impl HasSeqKv for RunSeq {
     }
 }
 
+/// A swapped-out sequence packaged for **cross-replica migration**: the
+/// request (prompt, sampling params, seed), every token generated so far,
+/// the host-resident KV state, and the latency clocks — everything a peer
+/// replica of the *same model* needs to continue the stream
+/// byte-identically.  Produced by [`Engine::export_swapped`], consumed by
+/// [`Engine::import_swapped`]; opaque to everything in between.
+pub struct ExportedSeq {
+    pub(crate) req: Request,
+    pub(crate) kv: SeqKv,
+    pub(crate) next_token: i32,
+    pub(crate) generated: Vec<i32>,
+    pub(crate) first_token_at: Instant,
+    pub(crate) last_token_at: Instant,
+    /// KV content tokens (prompt + decoded inputs) — what the target's
+    /// prefix-cache re-admission hashes.
+    pub(crate) swap_content: Vec<i32>,
+}
+
+impl ExportedSeq {
+    pub fn id(&self) -> RequestId {
+        self.req.id
+    }
+
+    /// KV tokens the sequence carries (the target must admit this many).
+    pub fn kv_tokens(&self) -> usize {
+        self.swap_content.len()
+    }
+
+    /// Total token budget (prompt + max_new) — the capacity the target
+    /// must eventually be able to hold.
+    pub fn budget(&self) -> usize {
+        self.req.prompt.len() + self.req.params.max_new_tokens
+    }
+}
+
 /// The continuous-batching engine.  Single-threaded state machine — wrap
 /// it in a [`Server`](super::server::Server) for the channel serve loop,
 /// or several of them in a [`Cluster`](super::cluster::Cluster).
@@ -171,6 +233,10 @@ pub struct Engine<B: Backend> {
     swapped: VecDeque<RunSeq>,
     /// Monotone admission counter feeding `RunSeq::admitted_at`.
     admissions: u64,
+    /// Recorded by the last step: the swap-in phase failed for blocks,
+    /// or a preemption proved the pool dry.  [`Engine::is_overloaded`]
+    /// reads this instead of re-hashing the swapped content per call.
+    resume_blocked: bool,
     /// Events produced outside `step` (submit-time rejections), drained
     /// into the next step's stream.
     pending_events: Vec<TokenEvent>,
@@ -183,7 +249,7 @@ impl<B: Backend> Engine<B> {
         let cap = cfg.max_running.min(*backend.supported_batches().last().unwrap()).max(1);
         let cfg = EngineConfig { max_running: cap, ..cfg };
         Self {
-            pool: KvPool::new(cfg.kv_blocks, cfg.block_tokens),
+            pool: KvPool::with_policy(cfg.kv_blocks, cfg.block_tokens, cfg.eviction),
             batcher: Batcher::new(cfg.batcher.clone()),
             backend,
             cfg,
@@ -191,6 +257,7 @@ impl<B: Backend> Engine<B> {
             running: Vec::new(),
             swapped: VecDeque::new(),
             admissions: 0,
+            resume_blocked: false,
             pending_events: Vec::new(),
             metrics: Metrics::default(),
             counters: EngineCounters::default(),
@@ -224,6 +291,100 @@ impl<B: Backend> Engine<B> {
     /// KV tokens retained host-side by swapped-out sequences.
     pub fn swapped_tokens(&self) -> usize {
         self.swapped.iter().map(|s| s.kv.pos).sum()
+    }
+
+    /// Could the pool admit `content` right now, respecting the
+    /// configured sharing mode?
+    fn pool_can_admit(&self, content: &[i32]) -> bool {
+        if self.cfg.prefix_sharing {
+            self.pool.can_admit_shared(content)
+        } else {
+            self.pool.can_admit(content.len())
+        }
+    }
+
+    /// The oldest swapped sequence's id, KV content, and total token
+    /// budget (prompt + max_new) — what a migration target must be able
+    /// to admit ([`Engine::can_import`]).
+    pub fn peek_swapped(&self) -> Option<(RequestId, Vec<i32>, usize)> {
+        self.swapped.front().map(|s| {
+            (
+                s.req.id,
+                // invariant: every producer of swapped-queue entries
+                // (preemption, failed resume re-park, import) files the
+                // content — see `swap_content`'s field docs
+                s.swap_content.clone().expect("swapped entries retain their KV content"),
+                s.req.prompt.len() + s.req.params.max_new_tokens,
+            )
+        })
+    }
+
+    /// Migration trigger: this engine holds a swapped sequence it could
+    /// not resume — the step's own swap-in attempt failed for blocks, a
+    /// preemption just proved the pool dry, or every decode slot is
+    /// taken.  Reads the step's recorded outcome instead of re-hashing
+    /// the swapped content on every call; conservatively eager (a
+    /// completion later in the same step may have freed blocks), which
+    /// at worst migrates a sequence one step before it could have
+    /// resumed locally — the stream is identical either way.
+    pub fn is_overloaded(&self) -> bool {
+        !self.swapped.is_empty()
+            && (self.running.len() >= self.cfg.max_running || self.resume_blocked)
+    }
+
+    /// Acceptance gate for a migrated sequence: a free decode slot, no
+    /// swapped backlog of this engine's own, KV headroom for `content`
+    /// right now, and room for the full `budget` (prompt + max_new) so
+    /// the no-deadlock guarantee ("every admitted sequence fits the pool
+    /// alone") carries over to imports.
+    pub fn can_import(&self, content: &[i32], budget: usize) -> bool {
+        self.swapped.is_empty()
+            && self.running.len() < self.cfg.max_running
+            && budget <= self.backend.max_seq()
+            && self.pool.blocks_for(budget) <= self.pool.total_blocks()
+            && self.pool_can_admit(content)
+    }
+
+    /// Pop the **oldest** swapped sequence for migration to a peer
+    /// replica.  Its `Preempted` event already streamed; the importer's
+    /// next step streams `Resumed` and the token stream continues
+    /// exactly where it paused ([`sample_token`] is seeded per
+    /// (request, step), and the KV state travels with it).
+    pub fn export_swapped(&mut self) -> Option<ExportedSeq> {
+        let mut s = self.swapped.pop_front()?;
+        self.counters.exported += 1;
+        let swap_content =
+            s.swap_content.take().expect("swapped entries retain their KV content");
+        Some(ExportedSeq {
+            req: s.req,
+            kv: s.kv,
+            next_token: s.next_token,
+            generated: s.generated,
+            first_token_at: s.first_token_at,
+            last_token_at: s.last_token_at,
+            swap_content,
+        })
+    }
+
+    /// File a migrated sequence into this engine's resume queue; the
+    /// next step re-admits it through the prefix cache (so a migrated
+    /// shared prefix hits the target's cache) and streams `Resumed`.
+    /// Counts as a fresh admission for victim selection — an import must
+    /// not displace this replica's own older residents.
+    pub fn import_swapped(&mut self, seq: ExportedSeq) {
+        self.counters.imported += 1;
+        let admitted_at = self.admissions;
+        self.admissions += 1;
+        self.swapped.push_back(RunSeq {
+            req: seq.req,
+            kv: seq.kv,
+            next_token: seq.next_token,
+            generated: seq.generated,
+            first_token_at: seq.first_token_at,
+            last_token_at: seq.last_token_at,
+            swap_content: Some(seq.swap_content),
+            admitted_at,
+        });
     }
 
     pub fn is_idle(&self) -> bool {
@@ -304,6 +465,9 @@ impl<B: Backend> Engine<B> {
         self.pool.release(victim.req.id.0)?;
         self.counters.preemptions += 1;
         self.metrics.preemptions += 1;
+        // the pool just proved dry — flag the victim as locally
+        // unresumable so a cluster can rebalance it this very step
+        self.resume_blocked = true;
         events.push(TokenEvent::Preempted { id: victim.req.id });
         self.swapped.push_back(victim);
         Ok(())
@@ -344,13 +508,17 @@ impl<B: Backend> Engine<B> {
         Ok(())
     }
 
-    /// Refresh the resident/swapped KV footprint gauges.
+    /// Refresh the resident/swapped KV footprint and prefix-cache gauges.
     fn note_kv_footprint(&mut self) {
         self.metrics.kv_resident_tokens =
             self.running.iter().map(|s| s.kv.pos as u64).sum();
         self.metrics.kv_swapped_tokens = self.swapped_tokens() as u64;
         self.metrics.kv_swapped_peak =
             self.metrics.kv_swapped_peak.max(self.metrics.kv_swapped_tokens);
+        let sh = self.pool.sharing();
+        self.metrics.prefix_hits = sh.shared_live + sh.cache_restores;
+        self.metrics.prefix_logical = sh.logical_blocks();
+        self.metrics.prefix_evictions = sh.evictions;
     }
 
     /// One engine iteration (see the module docs for the five phases).
@@ -373,7 +541,9 @@ impl<B: Backend> Engine<B> {
         // 2: swap-in — resume preempted sequences (FIFO) before admitting
         // anything new; they are older by definition.  Resume goes back
         // through the prefix cache: an identical prefix another sequence
-        // kept resident is re-shared instead of re-allocated.
+        // kept resident is re-shared instead of re-allocated.  The
+        // blocked/unblocked outcome is recorded for `is_overloaded`.
+        self.resume_blocked = false;
         while self.running.len() < self.cfg.max_running {
             let Some(mut seq) = self.swapped.pop_front() else { break };
             let content = seq.swap_content.take().unwrap_or_else(|| seq.kv_content());
@@ -390,7 +560,10 @@ impl<B: Backend> Engine<B> {
                     seq.swap_content = Some(content);
                     self.swapped.push_front(seq);
                     match e {
-                        KvError::OutOfBlocks { .. } => break,
+                        KvError::OutOfBlocks { .. } => {
+                            self.resume_blocked = true;
+                            break;
+                        }
                         other => return Err(other.into()),
                     }
                 }
@@ -656,6 +829,75 @@ mod tests {
         // swapped footprint was visible while a sequence was out
         assert!(e.metrics.kv_swapped_peak >= 8, "peak {}", e.metrics.kv_swapped_peak);
         assert_eq!(e.metrics.kv_swapped_tokens, 0, "nothing swapped after drain");
+    }
+
+    #[test]
+    fn exported_swapped_sequence_resumes_identically_on_a_peer_engine() {
+        // the migration building block: force a swap-out on a tight
+        // pool, export the swapped sequence, import it into an idle
+        // identically-built peer, drain both — the migrated stream must
+        // continue byte-identically to the unbatched oracle
+        let mut plain = SimBackend::new(64, 64, vec![1, 2, 4, 8]);
+        let want_a = reference(&mut plain, &req(0, 8, 8).prompt, &req(0, 8, 8).params);
+        let want_b = reference(&mut plain, &req(1, 8, 8).prompt, &req(1, 8, 8).params);
+
+        let mk = || {
+            Engine::new(
+                SimBackend::new(64, 64, vec![1, 2, 4, 8]),
+                EngineConfig { prefix_sharing: false, ..cfg(4, 4, 4) },
+            )
+        };
+        let mut src = mk();
+        let mut dst = mk();
+        src.submit(req(0, 8, 8));
+        src.submit(req(1, 8, 8));
+        let mut events = Vec::new();
+        while src.swapped() == 0 {
+            assert!(!src.is_idle(), "must preempt before draining");
+            events.extend(src.step().unwrap());
+        }
+        assert!(src.is_overloaded(), "swapped seq can't resume on the full pool");
+        let (id, content, budget) = src.peek_swapped().unwrap();
+        assert_eq!(budget, 16);
+        assert!(dst.can_import(&content, budget), "idle peer must accept");
+        let exported = src.export_swapped().unwrap();
+        assert_eq!(exported.id(), id);
+        assert_eq!(exported.kv_tokens(), content.len());
+        assert_eq!(exported.budget(), 16);
+        dst.import_swapped(exported);
+        assert_eq!(src.swapped(), 0);
+        assert_eq!(dst.swapped(), 1);
+
+        events.extend(src.run_to_completion_events().unwrap());
+        events.extend(dst.run_to_completion_events().unwrap());
+        let mut out = responses_of(&events);
+        out.sort_by_key(|r| r.id);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].tokens, want_a, "source-resident stream unchanged");
+        assert_eq!(out[1].tokens, want_b, "migrated stream identical to the oracle");
+        // streamed Token events concatenate to the same streams
+        for resp in &out {
+            let streamed: Vec<i32> = events
+                .iter()
+                .filter_map(|ev| match ev {
+                    TokenEvent::Token { id, token, .. } if *id == resp.id => Some(*token),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(streamed, resp.tokens, "stream ≠ response for {:?}", resp.id);
+        }
+        // accounting: export/import counters, resume on the peer only,
+        // zero leaks on either pool
+        assert_eq!(src.counters().exported, 1);
+        assert_eq!(dst.counters().imported, 1);
+        assert_eq!(src.counters().resumes, 0);
+        assert_eq!(dst.counters().resumes, 1);
+        assert_eq!(src.counters().completed, 1);
+        assert_eq!(dst.counters().completed, 1);
+        assert_eq!(src.pool().free_blocks(), 4, "source leaked blocks");
+        assert_eq!(dst.pool().free_blocks(), 4, "target leaked blocks");
+        src.pool().check_invariants().unwrap();
+        dst.pool().check_invariants().unwrap();
     }
 
     #[test]

@@ -21,19 +21,58 @@
 //!   the first append into a shared *partial* block triggers a true
 //!   **copy-on-write** split (`cow_copies`).
 //!
+//! ## Eviction order: an O(1) intrusive free list
+//!
+//! Free blocks (refcount 0, cached content retained) live on an
+//! **intrusive doubly-linked list** threaded through per-block
+//! `next`/`prev` slots, so every operation the churn path needs is O(1):
+//! freeing a block links it in, a cache restore **unlinks it from the
+//! middle** (the PR 3 `Vec` free list paid an O(free) scan here), and a
+//! fresh allocation pops the eviction end.  The list order *is* the
+//! eviction order, selected by [`EvictionPolicy`]:
+//!
+//! * [`EvictionPolicy::Lru`] (default) — freed blocks join the warm end;
+//!   allocations evict the **least-recently-used** block.  A restore or a
+//!   live share keeps a block off the list while referenced, and its next
+//!   release re-files it at the warm end — touch-on-hit recency, so hot
+//!   prefix blocks survive and cold ones are cannibalized first.
+//! * [`EvictionPolicy::Lifo`] — the PR 3 baseline (freed blocks are
+//!   evicted newest-first), kept so the serving bench can report what LRU
+//!   buys: under cyclic prefix reuse LIFO reallocates exactly the blocks
+//!   that were just registered, destroying the cache it just built.
+//!
 //! The allocator guarantees: a block's refcount always equals the number
 //! of table references to it, a block is freed exactly when its last
 //! reference drops, frees never orphan a live reference, and capacity is
 //! respected (allocation fails cleanly when the pool is exhausted — the
 //! engine's preemption signal).  [`KvPool::check_invariants`] proves
 //! block conservation under sharing after every churn step of the
-//! property tests.
+//! property tests, plus the free-list laws: both link directions agree,
+//! the list holds exactly the refcount-0 blocks, and the free timestamps
+//! are monotone in eviction order (the LRU/LIFO law).
 
 use std::collections::HashMap;
 
 /// Index of a physical cache block.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct BlockId(pub u32);
+
+/// Sentinel for "no link" in the intrusive free list.
+const NIL: u32 = u32::MAX;
+
+/// Which free block a fresh allocation cannibalizes (and therefore which
+/// cached prefix content dies first).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EvictionPolicy {
+    /// Evict the least-recently-freed block: freed blocks join the warm
+    /// end of the list, allocations pop the cold end.  Recency-aware —
+    /// the production default.
+    #[default]
+    Lru,
+    /// Evict the most-recently-freed block (stack order) — the PR 3
+    /// baseline, kept for the bench comparison.
+    Lifo,
+}
 
 /// Per-sequence block table.
 #[derive(Debug, Default, Clone)]
@@ -58,6 +97,10 @@ pub struct KvSharing {
     pub cache_restores: u64,
     /// Copy-on-write splits: appends into a block with refcount > 1.
     pub cow_copies: u64,
+    /// Prefix-cache registrations invalidated: a fresh allocation reused
+    /// the block (the eviction the policy chooses), or a re-registration
+    /// displaced a stale deeper-chain entry.
+    pub evictions: u64,
     /// High-water mark of simultaneously used (refcount > 0) blocks.
     pub peak_used: usize,
 }
@@ -66,6 +109,28 @@ impl KvSharing {
     /// Logical blocks admitted = fresh + shared + restored.
     pub fn logical_blocks(&self) -> u64 {
         self.fresh_allocs + self.shared_live + self.cache_restores
+    }
+
+    /// Fraction of admitted blocks served by the prefix cache (live
+    /// shares + restores over all logical blocks); 0 when nothing was
+    /// admitted yet.
+    pub fn hit_rate(&self) -> f64 {
+        let logical = self.logical_blocks();
+        if logical == 0 {
+            return 0.0;
+        }
+        (self.shared_live + self.cache_restores) as f64 / logical as f64
+    }
+
+    /// Fraction of admitted blocks revived off the free list — the rate
+    /// the eviction policy directly controls (live shares don't touch the
+    /// free list; restores only exist while their content survives it).
+    pub fn restore_rate(&self) -> f64 {
+        let logical = self.logical_blocks();
+        if logical == 0 {
+            return 0.0;
+        }
+        self.cache_restores as f64 / logical as f64
     }
 }
 
@@ -87,12 +152,24 @@ fn chain_hash(prev: u64, tokens: &[i32]) -> u64 {
 pub struct KvPool {
     block_tokens: usize,
     total_blocks: usize,
+    policy: EvictionPolicy,
     /// Per-block reference count; 0 = free (possibly still cached).
     refs: Vec<u32>,
     /// The chained content hash a block is registered under, if any.
     hash_of: Vec<Option<u64>>,
-    /// Blocks with refcount 0 (content retained until reallocated).
-    free: Vec<BlockId>,
+    /// Intrusive free-list links (NIL when the block is referenced).
+    next: Vec<u32>,
+    prev: Vec<u32>,
+    /// Cold end — `alloc_fresh` evicts here.
+    free_head: u32,
+    /// Warm end — LRU frees land here.
+    free_tail: u32,
+    free_len: usize,
+    /// Monotone stamp assigned when a block joins the free list; the
+    /// invariant checker asserts it is monotone along the list (the
+    /// LRU/LIFO ordering law).
+    freed_at: Vec<u64>,
+    free_clock: u64,
     /// Prefix cache: chained hash → the block holding that content.
     cache: HashMap<u64, BlockId>,
     tables: HashMap<u64, BlockTable>,
@@ -115,23 +192,46 @@ struct SharePlan {
 }
 
 impl KvPool {
+    /// Pool with the default [`EvictionPolicy::Lru`].
     pub fn new(total_blocks: usize, block_tokens: usize) -> Self {
+        Self::with_policy(total_blocks, block_tokens, EvictionPolicy::default())
+    }
+
+    pub fn with_policy(total_blocks: usize, block_tokens: usize, policy: EvictionPolicy) -> Self {
         assert!(block_tokens > 0 && total_blocks > 0);
-        Self {
+        let mut pool = Self {
             block_tokens,
             total_blocks,
+            policy,
             refs: vec![0; total_blocks],
             hash_of: vec![None; total_blocks],
-            free: (0..total_blocks as u32).rev().map(BlockId).collect(),
+            next: vec![NIL; total_blocks],
+            prev: vec![NIL; total_blocks],
+            free_head: NIL,
+            free_tail: NIL,
+            free_len: 0,
+            freed_at: vec![0; total_blocks],
+            free_clock: 0,
             cache: HashMap::new(),
             tables: HashMap::new(),
             used: 0,
             stats: KvSharing::default(),
+        };
+        // never-used blocks start coldest, lowest index first — both
+        // policies allocate 0, 1, 2, … from an empty pool
+        match policy {
+            EvictionPolicy::Lru => {
+                (0..total_blocks as u32).for_each(|b| pool.free_push(BlockId(b)))
+            }
+            EvictionPolicy::Lifo => {
+                (0..total_blocks as u32).rev().for_each(|b| pool.free_push(BlockId(b)))
+            }
         }
+        pool
     }
 
     pub fn free_blocks(&self) -> usize {
-        self.free.len()
+        self.free_len
     }
 
     /// Blocks with at least one live reference.
@@ -149,6 +249,10 @@ impl KvPool {
         self.block_tokens
     }
 
+    pub fn eviction_policy(&self) -> EvictionPolicy {
+        self.policy
+    }
+
     /// Sharing/allocation counters.
     pub fn sharing(&self) -> KvSharing {
         self.stats
@@ -159,6 +263,19 @@ impl KvPool {
         self.refs[b.0 as usize]
     }
 
+    /// The free list in eviction order (next victim first).  O(free) —
+    /// tests and introspection only; the churn path never materializes
+    /// this.
+    pub fn free_order(&self) -> Vec<BlockId> {
+        let mut out = Vec::with_capacity(self.free_len);
+        let mut cur = self.free_head;
+        while cur != NIL && out.len() <= self.total_blocks {
+            out.push(BlockId(cur));
+            cur = self.next[cur as usize];
+        }
+        out
+    }
+
     /// Blocks needed to hold `tokens` KV entries.
     pub fn blocks_for(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.block_tokens)
@@ -166,22 +283,89 @@ impl KvPool {
 
     /// Can a sequence of `tokens` be admitted privately right now?
     pub fn can_admit(&self, tokens: usize) -> bool {
-        self.blocks_for(tokens.max(1)) <= self.free.len()
+        self.blocks_for(tokens.max(1)) <= self.free_len
     }
 
     /// Can `prompt` be admitted through the prefix cache right now?
     /// (Live hash hits cost nothing, so this can pass where [`can_admit`]
     /// fails — sharing is what lets more sequences fit the pool.)
     pub fn can_admit_shared(&self, prompt: &[i32]) -> bool {
-        self.plan_shared(prompt).need_from_free <= self.free.len()
+        self.plan_shared(prompt).need_from_free <= self.free_len
+    }
+
+    // ------------------------------------------- intrusive free list --
+
+    /// Link a refcount-0 block into the free list at the position the
+    /// eviction policy dictates (LRU: warm end; LIFO: cold end).  O(1).
+    fn free_push(&mut self, b: BlockId) {
+        let i = b.0 as usize;
+        debug_assert!(self.next[i] == NIL && self.prev[i] == NIL, "block {} double-linked", b.0);
+        self.freed_at[i] = self.free_clock;
+        self.free_clock += 1;
+        match self.policy {
+            EvictionPolicy::Lru => {
+                self.prev[i] = self.free_tail;
+                self.next[i] = NIL;
+                if self.free_tail == NIL {
+                    self.free_head = b.0;
+                } else {
+                    self.next[self.free_tail as usize] = b.0;
+                }
+                self.free_tail = b.0;
+            }
+            EvictionPolicy::Lifo => {
+                self.next[i] = self.free_head;
+                self.prev[i] = NIL;
+                if self.free_head == NIL {
+                    self.free_tail = b.0;
+                } else {
+                    self.prev[self.free_head as usize] = b.0;
+                }
+                self.free_head = b.0;
+            }
+        }
+        self.free_len += 1;
+    }
+
+    /// Unlink a block from anywhere in the free list — the O(1) middle
+    /// removal cache restores ride on (the PR 3 `Vec` scan retired).
+    fn free_unlink(&mut self, b: BlockId) {
+        let i = b.0 as usize;
+        let (p, n) = (self.prev[i], self.next[i]);
+        if p == NIL {
+            debug_assert_eq!(self.free_head, b.0, "unlink of unlisted block {}", b.0);
+            self.free_head = n;
+        } else {
+            self.next[p as usize] = n;
+        }
+        if n == NIL {
+            debug_assert_eq!(self.free_tail, b.0, "unlink of unlisted block {}", b.0);
+            self.free_tail = p;
+        } else {
+            self.prev[n as usize] = p;
+        }
+        self.next[i] = NIL;
+        self.prev[i] = NIL;
+        self.free_len -= 1;
+    }
+
+    /// Pop the eviction end (the policy's next victim).  O(1).
+    fn free_pop_evict(&mut self) -> Option<BlockId> {
+        if self.free_head == NIL {
+            return None;
+        }
+        let b = BlockId(self.free_head);
+        self.free_unlink(b);
+        Some(b)
     }
 
     /// Pop one block off the free list for exclusive use, invalidating
     /// whatever cached content it retained.
     fn alloc_fresh(&mut self) -> Option<BlockId> {
-        let b = self.free.pop()?;
+        let b = self.free_pop_evict()?;
         if let Some(h) = self.hash_of[b.0 as usize].take() {
             self.cache.remove(&h);
+            self.stats.evictions += 1;
         }
         self.refs[b.0 as usize] = 1;
         self.used += 1;
@@ -228,8 +412,8 @@ impl KvPool {
             return Err(KvError::AlreadyAdmitted(seq));
         }
         let need = self.blocks_for(tokens.max(1));
-        if need > self.free.len() {
-            return Err(KvError::OutOfBlocks { need, free: self.free.len() });
+        if need > self.free_len {
+            return Err(KvError::OutOfBlocks { need, free: self.free_len });
         }
         let blocks: Vec<BlockId> = (0..need).map(|_| self.alloc_fresh().unwrap()).collect();
         self.tables.insert(seq, BlockTable { blocks, tokens });
@@ -247,10 +431,10 @@ impl KvPool {
             return Err(KvError::AlreadyAdmitted(seq));
         }
         let plan = self.plan_shared(prompt);
-        if plan.need_from_free > self.free.len() {
+        if plan.need_from_free > self.free_len {
             return Err(KvError::OutOfBlocks {
                 need: plan.need_from_free,
-                free: self.free.len(),
+                free: self.free_len,
             });
         }
         let mut blocks = Vec::with_capacity(plan.need_total);
@@ -259,17 +443,10 @@ impl KvPool {
                 self.refs[b.0 as usize] += 1;
                 self.stats.shared_live += 1;
             } else {
-                // revive the cached block off the free list.  The linear
-                // scan + remove is O(free) per restored block — fine at
-                // demo pool sizes; a production pool wants an O(1)
-                // intrusive free list (ROADMAP known gap; swap_remove
-                // would break the documented LIFO eviction order).
-                let pos = self
-                    .free
-                    .iter()
-                    .position(|&f| f == b)
-                    .expect("refcount-0 block must be on the free list");
-                self.free.remove(pos);
+                // revive the cached block: O(1) unlink from wherever it
+                // sits in the list.  Its content survives untouched; its
+                // recency resets when the new owner releases it.
+                self.free_unlink(b);
                 self.refs[b.0 as usize] = 1;
                 self.used += 1;
                 self.stats.cache_restores += 1;
@@ -287,6 +464,7 @@ impl KvPool {
             let b = self.alloc_fresh().unwrap();
             if let Some(old) = self.cache.insert(h, b) {
                 self.hash_of[old.0 as usize] = None;
+                self.stats.evictions += 1;
             }
             self.hash_of[b.0 as usize] = Some(h);
             blocks.push(b);
@@ -347,16 +525,27 @@ impl KvPool {
     /// Release every reference a sequence holds; blocks whose refcount
     /// drops to zero return to the free list **with their prefix-cache
     /// registration retained**, so a later identical prompt can revive
-    /// them until the slot is reallocated.
+    /// them until the slot is reallocated.  Under LRU the freed blocks
+    /// land at the warm end — releasing IS the recency touch — in
+    /// **reverse table order**, so the unregistered decode tail is the
+    /// coldest of the batch and dies first while the chain-head prefix
+    /// block (the one `plan_shared` must hit for any of the chain to be
+    /// reachable) stays warmest.  LIFO keeps PR 3's forward order
+    /// exactly (head-first stack pushes → the tail still pops first),
+    /// so the bench baseline really is the behavior it claims to be.
     pub fn release(&mut self, seq: u64) -> Result<(), KvError> {
         let t = self.tables.remove(&seq).ok_or(KvError::UnknownSeq(seq))?;
-        for b in t.blocks {
+        let ordered: Vec<BlockId> = match self.policy {
+            EvictionPolicy::Lru => t.blocks.into_iter().rev().collect(),
+            EvictionPolicy::Lifo => t.blocks,
+        };
+        for b in ordered {
             let r = &mut self.refs[b.0 as usize];
             debug_assert!(*r > 0, "release of unreferenced block {}", b.0);
             *r -= 1;
             if *r == 0 {
                 self.used -= 1;
-                self.free.push(b);
+                self.free_push(b);
             }
         }
         Ok(())
@@ -372,7 +561,13 @@ impl KvPool {
 
     /// Internal consistency under sharing:
     /// * every block's refcount equals the number of table references;
-    /// * the free list holds exactly the refcount-0 blocks, once each;
+    /// * the free list holds exactly the refcount-0 blocks, once each,
+    ///   with forward/backward links agreeing, both ends terminating,
+    ///   and no cycle;
+    /// * free stamps are monotone along the list — increasing for LRU
+    ///   (head is the least recently freed), decreasing for LIFO — so
+    ///   the eviction order provably matches the policy;
+    /// * referenced blocks are fully unlinked;
     /// * no table references the same block twice;
     /// * every cache entry is a bijection with `hash_of`;
     /// * `used + free == total` (block conservation);
@@ -396,28 +591,68 @@ impl KvPool {
                 return Err(format!("block {i}: refcount {r} but {c} table references"));
             }
         }
+        // intrusive free-list integrity + the eviction-order law
         let mut free_seen = std::collections::HashSet::new();
-        for b in &self.free {
-            if !free_seen.insert(b.0) {
-                return Err(format!("block {} double-freed", b.0));
+        let mut cur = self.free_head;
+        let mut prev = NIL;
+        let mut last_stamp: Option<u64> = None;
+        let mut walked = 0usize;
+        while cur != NIL {
+            walked += 1;
+            if walked > self.total_blocks {
+                return Err("free list cycle".into());
             }
-            if self.refs[b.0 as usize] != 0 {
+            let i = cur as usize;
+            if !free_seen.insert(cur) {
+                return Err(format!("block {cur} linked twice"));
+            }
+            if self.refs[i] != 0 {
+                return Err(format!("block {cur} on the free list with refcount {}", self.refs[i]));
+            }
+            if self.prev[i] != prev {
                 return Err(format!(
-                    "block {} on the free list with refcount {}",
-                    b.0, self.refs[b.0 as usize]
+                    "block {cur}: prev link {} but walked from {prev}",
+                    self.prev[i]
                 ));
+            }
+            if let Some(last) = last_stamp {
+                let ordered = match self.policy {
+                    EvictionPolicy::Lru => self.freed_at[i] > last,
+                    EvictionPolicy::Lifo => self.freed_at[i] < last,
+                };
+                if !ordered {
+                    return Err(format!(
+                        "eviction order violates {:?}: stamp {} after {last}",
+                        self.policy, self.freed_at[i]
+                    ));
+                }
+            }
+            last_stamp = Some(self.freed_at[i]);
+            prev = cur;
+            cur = self.next[i];
+        }
+        if prev != self.free_tail {
+            return Err(format!("free tail {} but walk ended at {prev}", self.free_tail));
+        }
+        if walked != self.free_len {
+            return Err(format!("free_len {} but {walked} linked blocks", self.free_len));
+        }
+        for (i, &r) in self.refs.iter().enumerate() {
+            if r == 0 && !free_seen.contains(&(i as u32)) {
+                return Err(format!("refcount-0 block {i} missing from the free list"));
+            }
+            if r > 0 && (self.next[i] != NIL || self.prev[i] != NIL) {
+                return Err(format!("referenced block {i} still linked"));
             }
         }
         let used = self.refs.iter().filter(|&&r| r > 0).count();
         if used != self.used {
             return Err(format!("used counter {} but {used} referenced blocks", self.used));
         }
-        if used + self.free.len() != self.total_blocks {
+        if used + self.free_len != self.total_blocks {
             return Err(format!(
                 "{} used + {} free != {} total",
-                used,
-                self.free.len(),
-                self.total_blocks
+                used, self.free_len, self.total_blocks
             ));
         }
         for (&h, &b) in &self.cache {
@@ -461,6 +696,7 @@ impl std::error::Error for KvError {}
 mod tests {
     use super::*;
     use crate::util::proptest::forall;
+    use std::collections::VecDeque;
 
     #[test]
     fn admit_and_release() {
@@ -579,6 +815,7 @@ mod tests {
         // a private admit cycles both blocks through alloc_fresh,
         // invalidating the cached hashes
         p.admit(2, 8).unwrap();
+        assert_eq!(p.sharing().evictions, 2, "both registrations invalidated");
         p.release(2).unwrap();
         p.admit_shared(3, &a).unwrap();
         assert_eq!(p.sharing().cache_restores, 0, "evicted content cannot restore");
@@ -606,8 +843,12 @@ mod tests {
         // eviction is per-block, so the hA entry can die while the hAB
         // entry survives; a later admit of [A,B] misses hA, re-fills both
         // blocks, and must displace the stale hAB registration instead of
-        // leaving two blocks claiming the same hash (bijection break)
-        let mut p = KvPool::new(5, 4);
+        // leaving two blocks claiming the same hash (bijection break).
+        // The choreography below steers eviction through the LIFO order
+        // the scenario was built on; the displacement fix itself is
+        // policy-independent (the LRU variant is covered by the churn
+        // property tests).
+        let mut p = KvPool::with_policy(5, 4, EvictionPolicy::Lifo);
         let ab = prompt(8, 1); // blocks [A|B] → hashes hA, hAB
         p.admit_shared(1, &ab).unwrap();
         p.admit(2, 8).unwrap(); // pins two more blocks
@@ -635,6 +876,168 @@ mod tests {
         assert_eq!(p.free_blocks(), 1);
         assert_eq!(p.sharing().fresh_allocs, 2, "only the first admit allocated");
         p.check_invariants().unwrap();
+    }
+
+    // -------------------------------------------------- LRU eviction --
+
+    fn ids(raw: &[u32]) -> Vec<BlockId> {
+        raw.iter().map(|&b| BlockId(b)).collect()
+    }
+
+    #[test]
+    fn free_list_is_o1_ordered_and_restores_from_the_middle() {
+        let mut p = KvPool::new(6, 4);
+        // empty pool evicts lowest index first under either policy
+        assert_eq!(p.free_order(), ids(&[0, 1, 2, 3, 4, 5]));
+        let a = prompt(8, 1); // 2 full blocks
+        p.admit_shared(1, &a).unwrap(); // takes 0, 1
+        p.admit(2, 4).unwrap(); // takes 2
+        // re-freed at the warm end, deepest chain block first — the
+        // chain head (block 0) is the warmest of the batch
+        p.release(1).unwrap();
+        assert_eq!(p.free_order(), ids(&[3, 4, 5, 1, 0]));
+        // the restore unlinks 0 and 1 from the MIDDLE of the list
+        p.admit_shared(3, &a).unwrap();
+        assert_eq!(p.sharing().cache_restores, 2);
+        assert_eq!(p.free_order(), ids(&[3, 4, 5]));
+        p.check_invariants().unwrap();
+        // releasing again re-files them warm (touch-on-hit recency)
+        p.release(3).unwrap();
+        assert_eq!(p.free_order(), ids(&[3, 4, 5, 1, 0]));
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lru_restores_where_lifo_churns() {
+        // two 9-token prompts (2 full blocks + tail each) alternating
+        // through a 6-block pool, one sequence live at a time.  LRU keeps
+        // both prefixes' registered blocks warm — every re-admit restores
+        // them — while LIFO's tail allocations pop exactly the blocks the
+        // previous request just registered, so its cache never survives.
+        let run = |policy: EvictionPolicy| {
+            let mut p = KvPool::with_policy(6, 4, policy);
+            let pa = prompt(9, 1);
+            let pb = prompt(9, 2);
+            for i in 0..10u64 {
+                let pr = if i % 2 == 0 { &pa } else { &pb };
+                p.admit_shared(i, pr).unwrap();
+                p.release(i).unwrap();
+                p.check_invariants().unwrap_or_else(|e| panic!("{policy:?}: {e}"));
+            }
+            p.sharing()
+        };
+        let lru = run(EvictionPolicy::Lru);
+        let lifo = run(EvictionPolicy::Lifo);
+        assert_eq!(lru.cache_restores, 16, "8 warm re-admits × 2 blocks");
+        assert_eq!(lifo.cache_restores, 0, "LIFO cannibalizes its own cache");
+        assert!(lru.restore_rate() > lifo.restore_rate());
+        assert!(lru.hit_rate() > lifo.hit_rate());
+        assert!(lru.evictions < lifo.evictions);
+    }
+
+    #[test]
+    fn prop_free_list_is_exact_lru_under_churn() {
+        // shadow model: a VecDeque holding the expected eviction order.
+        // Private admits must pop the shadow FRONT block-for-block (the
+        // exact-LRU law); shared admits remove their table's blocks from
+        // wherever the shadow holds them; releases re-file at the policy
+        // end; appends (growth or CoW) pop the front.  After EVERY op the
+        // real list must equal the shadow exactly.
+        forall(48, |rng| {
+            let blocks = rng.usize(2, 24);
+            let btok = rng.usize(1, 6);
+            let policy =
+                if rng.bool() { EvictionPolicy::Lru } else { EvictionPolicy::Lifo };
+            let mut p = KvPool::with_policy(blocks, btok, policy);
+            // both policies start evicting lowest index first
+            let mut shadow: VecDeque<u32> = (0..blocks as u32).collect();
+            let push = |shadow: &mut VecDeque<u32>, b: u32| match policy {
+                EvictionPolicy::Lru => shadow.push_back(b),
+                EvictionPolicy::Lifo => shadow.push_front(b),
+            };
+            let mut live: Vec<u64> = Vec::new();
+            let mut next = 0u64;
+            let prompts: Vec<Vec<i32>> =
+                (0..3).map(|t| prompt(rng.usize(1, 3 * btok + 1), t)).collect();
+            for _ in 0..rng.usize(10, 150) {
+                match rng.u32(0, 5) {
+                    0 => {
+                        let toks = rng.usize(1, 3 * btok + 1);
+                        if p.admit(next, toks).is_ok() {
+                            // exact-LRU: private admits take the shadow
+                            // front in order
+                            for b in &p.table(next).unwrap().blocks {
+                                assert_eq!(shadow.pop_front(), Some(b.0), "fresh alloc order");
+                            }
+                            live.push(next);
+                        }
+                        next += 1;
+                    }
+                    1 => {
+                        let pr = &prompts[rng.usize(0, prompts.len())];
+                        if p.admit_shared(next, pr).is_ok() {
+                            for b in p.table(next).unwrap().blocks.clone() {
+                                if let Some(pos) = shadow.iter().position(|&x| x == b.0) {
+                                    shadow.remove(pos);
+                                }
+                            }
+                            live.push(next);
+                        }
+                        next += 1;
+                    }
+                    2 => {
+                        if !live.is_empty() {
+                            let s = live[rng.usize(0, live.len())];
+                            let before = p.table(s).unwrap().blocks.clone();
+                            if p.append_token(s).is_ok() {
+                                let after = &p.table(s).unwrap().blocks;
+                                // growth or CoW consumed at most one block
+                                // — it must have been the eviction victim
+                                for (i, b) in after.iter().enumerate() {
+                                    if before.get(i) != Some(b) {
+                                        assert_eq!(shadow.pop_front(), Some(b.0), "append alloc");
+                                        break;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    3 => {
+                        if !live.is_empty() {
+                            let s = live[rng.usize(0, live.len())];
+                            if p.fork(s, next).is_ok() {
+                                live.push(next); // no free-list effect
+                            }
+                            next += 1;
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let i = rng.usize(0, live.len());
+                            let s = live.swap_remove(i);
+                            let table = p.table(s).unwrap().blocks.clone();
+                            p.release(s).unwrap();
+                            // LRU frees in reverse table order (chain
+                            // head warmest); LIFO keeps PR 3's forward
+                            // order
+                            let ordered: Vec<BlockId> = match policy {
+                                EvictionPolicy::Lru => table.into_iter().rev().collect(),
+                                EvictionPolicy::Lifo => table,
+                            };
+                            for b in ordered {
+                                if p.refcount(b) == 0 && !shadow.contains(&b.0) {
+                                    push(&mut shadow, b.0);
+                                }
+                            }
+                        }
+                    }
+                }
+                let got: Vec<u32> = p.free_order().iter().map(|b| b.0).collect();
+                let want: Vec<u32> = shadow.iter().copied().collect();
+                assert_eq!(got, want, "eviction order diverged from the {policy:?} model");
+                p.check_invariants().unwrap_or_else(|e| panic!("invariant: {e}"));
+            }
+        });
     }
 
     // ------------------------------------------------- fork + CoW --
@@ -685,7 +1088,9 @@ mod tests {
         forall(48, |rng| {
             let blocks = rng.usize(1, 32);
             let btok = rng.usize(1, 9);
-            let mut p = KvPool::new(blocks, btok);
+            let policy =
+                if rng.bool() { EvictionPolicy::Lru } else { EvictionPolicy::Lifo };
+            let mut p = KvPool::with_policy(blocks, btok, policy);
             let mut live: Vec<u64> = Vec::new();
             let mut next = 0u64;
             // a small set of shared prompts so admit_shared actually hits

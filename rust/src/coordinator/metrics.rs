@@ -1,7 +1,8 @@
 //! Serving metrics: counters + latency percentiles, including the
 //! per-token latencies (TTFT, inter-token) the streaming delivery path
-//! records, and resident-vs-swapped KV footprint gauges.  Replica
-//! metrics merge into one cluster view via [`Metrics::merge`].
+//! records, resident-vs-swapped KV footprint gauges, prefix-cache
+//! hit/eviction gauges, and the cross-replica migration counter.
+//! Replica metrics merge into one cluster view via [`Metrics::merge`].
 
 use std::time::Instant;
 
@@ -70,6 +71,16 @@ pub struct Metrics {
     pub kv_swapped_tokens: u64,
     /// High-water mark of `kv_swapped_tokens`.
     pub kv_swapped_peak: u64,
+    /// Prefix-cache hits (live shares + free-list restores) — cumulative
+    /// gauge mirrored from [`KvSharing`](super::kv::KvSharing) per step.
+    pub prefix_hits: u64,
+    /// Logical blocks admitted (the hit-rate denominator) — gauge.
+    pub prefix_logical: u64,
+    /// Prefix-cache registrations the eviction policy invalidated — gauge.
+    pub prefix_evictions: u64,
+    /// Swapped sequences moved to a peer replica by the cluster's
+    /// rebalancer (counted on the cluster clock, not per replica).
+    pub migrations: u64,
     pub queue: LatencyStats,
     pub ttft: LatencyStats,
     /// Inter-token latency: gap between consecutive streamed tokens of
@@ -107,6 +118,14 @@ impl Metrics {
         }
     }
 
+    /// Fraction of admitted KV blocks served by the prefix cache.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_logical == 0 {
+            return 0.0;
+        }
+        self.prefix_hits as f64 / self.prefix_logical as f64
+    }
+
     /// Mean batch occupancy across executed groups.
     pub fn mean_occupancy(&self) -> f64 {
         if self.groups_executed == 0 {
@@ -134,6 +153,10 @@ impl Metrics {
         self.kv_resident_tokens += other.kv_resident_tokens;
         self.kv_swapped_tokens += other.kv_swapped_tokens;
         self.kv_swapped_peak = self.kv_swapped_peak.max(other.kv_swapped_peak);
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_logical += other.prefix_logical;
+        self.prefix_evictions += other.prefix_evictions;
+        self.migrations += other.migrations;
         self.queue.merge(&other.queue);
         self.ttft.merge(&other.ttft);
         self.itl.merge(&other.itl);
@@ -143,8 +166,9 @@ impl Metrics {
     pub fn report(&self) -> String {
         format!(
             "requests: {}/{} done | tokens: {} | wall: {:.2}s | {:.1} tok/s | occupancy {:.2} | \
-             preempted {} (resumed {})\n\
+             preempted {} (resumed {}, migrated {})\n\
              kv tokens resident/swapped: {}/{} (peak swapped {})\n\
+             prefix cache: {}/{} blocks hit ({:.0}%), {} evicted\n\
              queue  p50/p95/max: {:.1}/{:.1}/{:.1} ms\n\
              ttft   p50/p95/max: {:.1}/{:.1}/{:.1} ms\n\
              itl    p50/p95/max: {:.1}/{:.1}/{:.1} ms\n\
@@ -157,9 +181,14 @@ impl Metrics {
             self.mean_occupancy(),
             self.preemptions,
             self.resumes,
+            self.migrations,
             self.kv_resident_tokens,
             self.kv_swapped_tokens,
             self.kv_swapped_peak,
+            self.prefix_hits,
+            self.prefix_logical,
+            100.0 * self.prefix_hit_rate(),
+            self.prefix_evictions,
             self.queue.percentile(50.0) * 1e3,
             self.queue.percentile(95.0) * 1e3,
             self.queue.max() * 1e3,
@@ -227,6 +256,10 @@ mod tests {
             tokens_generated: 5,
             requests_done: 1,
             kv_swapped_peak: 7,
+            prefix_hits: 6,
+            prefix_logical: 8,
+            prefix_evictions: 2,
+            migrations: 3,
             ..Metrics::default()
         };
         std::thread::sleep(std::time::Duration::from_millis(2));
@@ -239,6 +272,11 @@ mod tests {
         assert_eq!(a.ttft.count(), 2);
         assert_eq!(a.itl.count(), 1);
         assert_eq!(a.kv_swapped_peak, 7);
+        assert_eq!(a.prefix_hits, 6);
+        assert_eq!(a.prefix_logical, 8);
+        assert_eq!(a.prefix_evictions, 2);
+        assert_eq!(a.migrations, 3);
+        assert!((a.prefix_hit_rate() - 0.75).abs() < 1e-12);
         assert_eq!(a.wall_seconds(), wall, "merge keeps the aggregate's clock");
     }
 }

@@ -14,7 +14,12 @@
 //!   sharing a prompt prefix map their block-table heads onto shared
 //!   physical blocks; released full blocks stay content-addressable until
 //!   reallocated; `fork` clones tables refcount-only and the first
-//!   divergent append copy-on-writes.
+//!   divergent append copy-on-writes.  Free blocks live on an **O(1)
+//!   intrusive doubly-linked list whose order is the eviction order**
+//!   (`EvictionPolicy::Lru` by default — releasing is the recency touch,
+//!   so hot prefix content survives; `Lifo` is the PR 3 baseline kept
+//!   for the bench), with cache restores unlinking from the middle in
+//!   O(1) instead of the retired O(free) scan.
 //! * [`backend`]  — execution backend trait: `PjrtBackend` (real model
 //!   artifacts, `pjrt` feature) and `SimBackend` (deterministic stand-in
 //!   for tests and the coordinator bench; `with_ap_gemm` serves real
@@ -26,15 +31,23 @@
 //!   admission, prefix-shared incremental KV with swap-style preemption
 //!   on the allocator's clean failure, per-step join/leave batching over
 //!   the pack-once kernel path, streaming every token as an event.
+//!   Swapped sequences are exportable (`Engine::export_swapped` →
+//!   `ExportedSeq` → `Engine::import_swapped`) so a peer replica can
+//!   take the work over byte-identically.
 //! * [`router`]   — per-request replica selection (round-robin or
 //!   least-loaded, with optional precision pinning) and conserved load
-//!   accounting.
+//!   accounting, transferred by `Router::migrate` when a sequence moves.
 //! * [`cluster`]  — **the multi-replica composition**: N engine replicas
 //!   (each its own `KvPool`/batcher/backend, possibly different W/A
 //!   precisions) behind the router, itself a [`Stepper`] — the serving
-//!   topology the ROADMAP's heavy-traffic north star calls for.
+//!   topology the ROADMAP's heavy-traffic north star calls for.  After
+//!   every step it **rebalances**: the oldest swapped sequences on
+//!   overloaded replicas migrate to same-precision peers with KV
+//!   headroom, streaming `TokenEvent::Migrated` in between `Preempted`
+//!   and the target's `Resumed`.
 //! * [`metrics`]  — counters, latency percentiles (incl. streamed
-//!   TTFT/ITL), resident-vs-swapped KV gauges, and cross-replica merge.
+//!   TTFT/ITL), resident-vs-swapped KV and prefix-cache hit/eviction
+//!   gauges, the migration counter, and cross-replica merge.
 //! * [`server`]   — the [`server::Stepper`] abstraction (scheduler,
 //!   engine, and cluster all implement it), the channel serve loop that
 //!   streams events, and the wall-clock trace replay driver.
@@ -55,8 +68,8 @@ pub mod trace;
 pub use backend::{drive_unbatched, ApStats, Backend, SimBackend};
 pub use batcher::{Batcher, BatcherConfig};
 pub use cluster::Cluster;
-pub use engine::{Engine, EngineConfig, EngineCounters};
-pub use kv::{BlockId, KvPool, KvSharing};
+pub use engine::{Engine, EngineConfig, EngineCounters, ExportedSeq};
+pub use kv::{BlockId, EvictionPolicy, KvPool, KvSharing};
 pub use metrics::{LatencyStats, Metrics};
 pub use request::{
     responses_of, sample_token, GenParams, Request, RequestId, Response, TokenEvent,

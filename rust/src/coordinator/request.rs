@@ -101,10 +101,12 @@ impl Response {
 /// tokens reach clients as they are generated instead of at completion —
 /// per-request lifecycle plus one [`TokenEvent::Token`] per token.  Per
 /// request the stream is: `Admitted`, then `Token*` interleaved with
-/// `Preempted`/`Resumed` pairs, then `Finished`; a rejected request emits
-/// only `Finished` with an empty response.  The concatenation of a
-/// request's `Token` payloads is byte-identical to its final
-/// [`Response::tokens`] — pinned by the integration tests.
+/// `Preempted`/`Resumed` pairs (a cluster may insert `Migrated` between
+/// them when the rebalancer moves a swapped sequence to a peer replica),
+/// then `Finished`; a rejected request emits only `Finished` with an
+/// empty response.  The concatenation of a request's `Token` payloads is
+/// byte-identical to its final [`Response::tokens`] — migration included
+/// — pinned by the integration tests.
 #[derive(Debug, Clone)]
 pub enum TokenEvent {
     /// The request acquired KV blocks and prefilled.
@@ -113,6 +115,10 @@ pub enum TokenEvent {
     Token { id: RequestId, token: i32, step: usize },
     /// Swapped out under KV pressure (stream pauses, nothing is lost).
     Preempted { id: RequestId },
+    /// A swapped-out sequence moved to another replica (`from`/`to` are
+    /// cluster replica indices); the stream stays paused until the
+    /// target's `Resumed`.
+    Migrated { id: RequestId, from: usize, to: usize },
     /// Swapped back in; the stream resumes where it paused.
     Resumed { id: RequestId },
     /// Terminal: the full response (empty tokens = rejected).
@@ -126,6 +132,7 @@ impl TokenEvent {
             TokenEvent::Admitted { id }
             | TokenEvent::Token { id, .. }
             | TokenEvent::Preempted { id }
+            | TokenEvent::Migrated { id, .. }
             | TokenEvent::Resumed { id }
             | TokenEvent::Finished { id, .. } => *id,
         }

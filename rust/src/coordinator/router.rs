@@ -4,7 +4,11 @@
 //! deployment runs several replicas (possibly at different W/A precisions)
 //! behind one endpoint.  The router picks a replica per request by
 //! policy; replicas report queue depth so least-loaded routing can steer
-//! around stragglers.
+//! around stragglers.  When the cluster's rebalancer migrates a swapped
+//! sequence, [`Router::migrate`] transfers its load accounting to the
+//! target **conservatively** — the full original budget moves, so the
+//! conservation law (Σ outstanding == Σ inflight budgets) survives
+//! migration and completions drain the replica actually doing the work.
 
 use super::request::{Request, RequestId};
 use crate::model::PrecisionConfig;
@@ -54,6 +58,8 @@ pub struct Router {
     inflight: HashMap<RequestId, (usize, u64)>,
     pub routed: u64,
     pub completed: u64,
+    /// In-flight requests transferred between replicas by the rebalancer.
+    pub migrated: u64,
 }
 
 impl Router {
@@ -65,6 +71,7 @@ impl Router {
             inflight: HashMap::new(),
             routed: 0,
             completed: 0,
+            migrated: 0,
         }
     }
 
@@ -116,6 +123,26 @@ impl Router {
         self.inflight.insert(req.id, (idx, budget));
         self.routed += 1;
         Some(idx)
+    }
+
+    /// Transfer an in-flight request's load accounting to replica `to`
+    /// (cross-replica migration of a swapped sequence).  The full
+    /// original budget moves — conservative, since the remaining work is
+    /// unknowable mid-stream — so conservation holds and the eventual
+    /// completion drains the target.  Returns the source replica, or
+    /// None if the request isn't in flight (never routed, or already
+    /// completed).  A self-migration is a no-op.
+    pub fn migrate(&mut self, id: RequestId, to: usize) -> Option<usize> {
+        let (from, budget) = *self.inflight.get(&id)?;
+        if from == to {
+            return Some(from);
+        }
+        assert!(to < self.replicas.len(), "migrate to unknown replica {to}");
+        self.replicas[from].outstanding = self.replicas[from].outstanding.saturating_sub(budget);
+        self.replicas[to].outstanding += budget;
+        self.inflight.insert(id, (to, budget));
+        self.migrated += 1;
+        Some(from)
     }
 
     /// Mark a routed request finished; releases its load accounting.
@@ -207,6 +234,31 @@ mod tests {
     }
 
     #[test]
+    fn migrate_transfers_load_conservatively() {
+        let mut r = router3(RoutePolicy::RoundRobin);
+        let rq = req(0, 10, 6); // budget 16
+        let from = r.route(&rq, None).unwrap();
+        assert_eq!(r.replicas()[from].outstanding(), 16);
+        let to = (from + 1) % 3;
+        assert_eq!(r.migrate(rq.id, to), Some(from));
+        assert_eq!(r.replicas()[from].outstanding(), 0, "source drained");
+        assert_eq!(r.replicas()[to].outstanding(), 16, "full budget moved");
+        assert_eq!(r.migrated, 1);
+        r.check_invariants().unwrap();
+        // completion now drains the TARGET, not the source
+        r.complete(rq.id).unwrap();
+        assert_eq!(r.replicas()[to].outstanding(), 0);
+        r.check_invariants().unwrap();
+        // unknown / self migrations are harmless
+        assert!(r.migrate(RequestId(42), 0).is_none());
+        let rq2 = req(1, 4, 4);
+        let at = r.route(&rq2, None).unwrap();
+        assert_eq!(r.migrate(rq2.id, at), Some(at), "self-migration is a no-op");
+        assert_eq!(r.migrated, 1, "no-op not counted");
+        r.check_invariants().unwrap();
+    }
+
+    #[test]
     fn prop_conservation() {
         forall(48, |rng| {
             let policy =
@@ -219,16 +271,24 @@ mod tests {
             let mut live: Vec<RequestId> = Vec::new();
             let mut next = 0u64;
             for _ in 0..rng.usize(5, 80) {
-                if rng.bool() || live.is_empty() {
-                    let rq = req(next, rng.usize(1, 32), rng.usize(1, 32));
-                    if r.route(&rq, None).is_some() {
-                        live.push(rq.id);
+                match rng.u32(0, 3) {
+                    0 if !live.is_empty() => {
+                        // migration must conserve load accounting too
+                        let id = live[rng.usize(0, live.len())];
+                        r.migrate(id, rng.usize(0, n_rep)).unwrap();
                     }
-                    next += 1;
-                } else {
-                    let i = rng.usize(0, live.len());
-                    let id = live.swap_remove(i);
-                    r.complete(id).unwrap();
+                    1 if !live.is_empty() => {
+                        let i = rng.usize(0, live.len());
+                        let id = live.swap_remove(i);
+                        r.complete(id).unwrap();
+                    }
+                    _ => {
+                        let rq = req(next, rng.usize(1, 32), rng.usize(1, 32));
+                        if r.route(&rq, None).is_some() {
+                            live.push(rq.id);
+                        }
+                        next += 1;
+                    }
                 }
                 r.check_invariants().unwrap_or_else(|e| panic!("{e}"));
             }

@@ -1,6 +1,10 @@
 //! Group scheduler (the original iteration-level path) over a
 //! [`Backend`], now a streaming [`Stepper`]: every iteration emits
-//! [`TokenEvent`]s as sequences admit, generate, and finish.
+//! [`TokenEvent`]s as sequences admit, generate, and finish.  It
+//! reserves each sequence's full budget up front, so it never preempts
+//! — and therefore never emits `Preempted`/`Migrated`/`Resumed`; its
+//! KV pool keeps the default LRU eviction order but the order is moot
+//! without a prefix cache on this path (`KvPool::admit` only).
 //!
 //! Every `step()`:
 //!   1. **Admission** — move queued requests into the running set while a

@@ -5,11 +5,14 @@
 //! driver the demos and benches share.
 //!
 //! Delivery is streaming: each `step()` returns the events the iteration
-//! produced (admissions, individual tokens, preempt/resume transitions,
-//! completions), and [`Server::serve`] forwards them to the response
-//! channel as they happen — clients see tokens at generation time, which
-//! is what makes TTFT/ITL real measurements instead of end-to-end
-//! latencies sliced after the fact.
+//! produced (admissions, individual tokens, preempt/migrate/resume
+//! transitions, completions), and [`Server::serve`] forwards them to the
+//! response channel as they happen — clients see tokens at generation
+//! time, which is what makes TTFT/ITL real measurements instead of
+//! end-to-end latencies sliced after the fact.  A cluster's
+//! [`TokenEvent::Migrated`] rides the same channel: the client observes
+//! the replica hand-off as a pause annotation, never as a change in the
+//! token stream itself.
 //!
 //! PJRT handles are not `Send`, so the backend lives on the thread that
 //! calls [`Server::serve`]; request producers feed the `Sender` from any

@@ -34,6 +34,13 @@ pub struct TraceConfig {
     pub shared_prefixes: usize,
     /// Tokens per shared prefix.
     pub prefix_len: usize,
+    /// Popularity skew across the prefix pool, in `[0, 1)`: 0.0 draws
+    /// prefixes uniformly; otherwise each successive prefix is `skew`×
+    /// as likely as the one before it (P(i) ∝ skewⁱ, remaining mass on
+    /// the last), so **smaller** non-zero values concentrate traffic
+    /// harder on the first prefixes — the hot-system-prompt shape where
+    /// recency-aware KV eviction pays.  Values ≥ 1.0 are rejected.
+    pub prefix_skew: f64,
 }
 
 impl Default for TraceConfig {
@@ -47,6 +54,7 @@ impl Default for TraceConfig {
             seed: 0,
             shared_prefixes: 0,
             prefix_len: 0,
+            prefix_skew: 0.0,
         }
     }
 }
@@ -60,6 +68,11 @@ pub struct TimedRequest {
 
 /// Generate a deterministic trace.
 pub fn generate(cfg: &TraceConfig) -> Vec<TimedRequest> {
+    assert!(
+        (0.0..1.0).contains(&cfg.prefix_skew),
+        "prefix_skew must be in [0, 1), got {}",
+        cfg.prefix_skew
+    );
     let mut rng = Rng::with_seed(cfg.seed);
     // the prefix pool lives on its own stream, so the same seed yields
     // the same prefixes regardless of the request count
@@ -84,6 +97,14 @@ pub fn generate(cfg: &TraceConfig) -> Vec<TimedRequest> {
         let mnew = rng.usize(cfg.max_new.0, cfg.max_new.1.max(cfg.max_new.0 + 1));
         let mut prompt: Vec<i32> = if prefixes.is_empty() {
             Vec::with_capacity(plen)
+        } else if cfg.prefix_skew > 0.0 {
+            // geometric popularity: keep advancing past each prefix with
+            // probability `skew`, so low indices dominate
+            let mut idx = 0;
+            while idx + 1 < prefixes.len() && rng.f64() < cfg.prefix_skew {
+                idx += 1;
+            }
+            prefixes[idx].clone()
         } else {
             prefixes[rng.usize(0, prefixes.len())].clone()
         };
@@ -168,6 +189,33 @@ mod tests {
         let heads2: std::collections::HashSet<Vec<i32>> =
             tr2.iter().map(|t| t.request.prompt[..12].to_vec()).collect();
         assert!(heads.union(&heads2).count() <= 3, "both draws use the same 3-prefix pool");
+    }
+
+    #[test]
+    fn prefix_skew_biases_toward_hot_prefixes() {
+        let cfg = TraceConfig {
+            requests: 300,
+            shared_prefixes: 4,
+            prefix_len: 8,
+            prompt_len: (1, 3),
+            prefix_skew: 0.3,
+            ..Default::default()
+        };
+        let tr = generate(&cfg);
+        let mut counts: std::collections::HashMap<Vec<i32>, usize> = Default::default();
+        for t in &tr {
+            *counts.entry(t.request.prompt[..8].to_vec()).or_default() += 1;
+        }
+        assert!((2..=4).contains(&counts.len()));
+        let mut by_pop: Vec<usize> = counts.values().copied().collect();
+        by_pop.sort_unstable();
+        by_pop.reverse();
+        // geometric skew: P(hot) = 0.7 → ~210 of 300; the cold tail is tiny
+        assert!(by_pop[0] > 150, "hot prefix drew {} of 300", by_pop[0]);
+        assert!(*by_pop.last().unwrap() < 60, "cold prefix drew {}", by_pop.last().unwrap());
+        // same seed → same draws
+        let tr2 = generate(&cfg);
+        assert!(tr.iter().zip(&tr2).all(|(a, b)| a.request.prompt == b.request.prompt));
     }
 
     #[test]

@@ -32,10 +32,14 @@
 //!   (`coordinator::cluster`) of continuous-batching engine replicas —
 //!   each with its own KV pool, batcher, and pack-once backend, possibly
 //!   at different W/A precisions — behind a routing policy
-//!   (round-robin / least-loaded, with per-request precision pinning).
-//!   The KV allocator uses **refcounted copy-on-write blocks with a
-//!   hash-based prefix cache** (shared prompt prefixes share physical
-//!   blocks), and delivery is **streaming**: every token is a
+//!   (round-robin / least-loaded, with per-request precision pinning),
+//!   with **preemptive rebalancing**: swapped sequences an overloaded
+//!   replica cannot resume migrate to same-precision peers and continue
+//!   their streams byte-identically.  The KV allocator uses **refcounted
+//!   copy-on-write blocks with a hash-based prefix cache** (shared
+//!   prompt prefixes share physical blocks) over an **O(1) intrusive
+//!   free list in LRU eviction order** (hot prefix content outlives cold
+//!   under pressure), and delivery is **streaming**: every token is a
 //!   `TokenEvent`, so TTFT/ITL land in `metrics` as real per-token
 //!   measurements.  Its `SimBackend` serves real bitmm logits through
 //!   the pack-once pipeline (`SimBackend::with_ap_gemm`).

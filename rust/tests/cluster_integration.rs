@@ -1,5 +1,5 @@
 //! Multi-replica cluster, end to end over the pack-once AP-GEMM backend
-//! (no artifacts needed) — the PR's acceptance contract:
+//! (no artifacts needed) — the acceptance contract across PRs 3 and 4:
 //!
 //! * a 3-replica cluster behind `Router::LeastLoaded` serves a
 //!   shared-prefix trace with **streamed `TokenEvent`s whose
@@ -8,16 +8,21 @@
 //!   constructed oracle backend);
 //! * with the prefix cache on, the same trace allocates **measurably
 //!   fewer KV blocks** than the no-sharing baseline;
+//! * a hot replica's swapped sequence **migrates to a peer and resumes
+//!   there with a byte-identical token stream** (`Preempted` →
+//!   `Migrated` → `Resumed` in order), deterministic and property-tested
+//!   under random churn;
 //! * after drain: zero leaked blocks or refcounts on every replica's
 //!   pool (`check_invariants`), and the router's load accounting is
-//!   conserved and empty.
+//!   conserved and empty — migration accounting included.
 
 use apllm::coordinator::trace::{generate, TraceConfig};
 use apllm::coordinator::{
-    drive_unbatched, responses_of, ArrivalKind, Cluster, EngineConfig, Request, RoutePolicy,
-    SimBackend, Stepper, TokenEvent,
+    drive_unbatched, responses_of, ArrivalKind, Cluster, EngineConfig, GenParams, Request,
+    RoutePolicy, SimBackend, Stepper, TokenEvent,
 };
 use apllm::model::PrecisionConfig;
+use apllm::util::proptest::forall;
 use std::collections::HashMap;
 
 /// Every replica (and every oracle) is built with these parameters —
@@ -47,6 +52,7 @@ fn shared_prefix_requests(n: usize) -> Vec<Request> {
         seed: 23,
         shared_prefixes: 3,
         prefix_len: 12,
+        prefix_skew: 0.0,
     })
     .into_iter()
     .map(|t| t.request)
@@ -150,6 +156,162 @@ fn three_replica_cluster_streams_oracle_identical_tokens_and_saves_blocks() {
         "prefix sharing allocated {} fresh blocks vs baseline {}",
         fresh_allocs[0],
         fresh_allocs[1]
+    );
+}
+
+/// Two-replica cluster with a deliberately undersized "hot" replica 0 —
+/// the migration scenario's fixture.
+fn hot_cold_cluster() -> Cluster<SimBackend> {
+    let mut c = Cluster::new(RoutePolicy::LeastLoaded);
+    c.add_replica(
+        "hot",
+        PrecisionConfig::W2A2,
+        replica_backend(),
+        EngineConfig { kv_blocks: 6, block_tokens: 4, ..engine_cfg(true) },
+    );
+    c.add_replica(
+        "cold",
+        PrecisionConfig::W2A2,
+        replica_backend(),
+        EngineConfig { kv_blocks: 32, block_tokens: 4, ..engine_cfg(true) },
+    );
+    c
+}
+
+#[test]
+fn hot_replica_swapped_sequence_resumes_on_peer_with_identical_stream() {
+    // budgets of 20 tokens each: two of them overflow the hot replica's
+    // 6-block pool mid-decode.  LeastLoaded routes A→hot, B→cold, C→hot
+    // (ties break by index), so decoding preempts C on the hot replica,
+    // which cannot resume it while A runs — the rebalancer must hand it
+    // to the cold replica, where the stream continues byte-identically.
+    let reqs: Vec<Request> = [100, 200, 300]
+        .iter()
+        .enumerate()
+        .map(|(i, &base)| {
+            Request::new(
+                i as u64,
+                (base..base + 12).collect(),
+                GenParams { max_new_tokens: 8, sample: false, seed: i as u64 },
+            )
+        })
+        .collect();
+    let mut oracle = replica_backend();
+    let want: Vec<Vec<i32>> =
+        reqs.iter().map(|r| drive_unbatched(&mut oracle, &r.prompt, &r.params).unwrap()).collect();
+
+    let mut cluster = hot_cold_cluster();
+    for r in &reqs {
+        cluster.submit(r.clone());
+    }
+    let events = cluster.run_to_completion_events().unwrap();
+
+    // the migration is visible and well-ordered in the stream:
+    // Preempted(C) precedes Migrated(C, hot→cold) precedes Resumed(C)
+    let lifecycle: Vec<&TokenEvent> = events
+        .iter()
+        .filter(|ev| {
+            ev.id().0 == 2
+                && matches!(
+                    ev,
+                    TokenEvent::Preempted { .. }
+                        | TokenEvent::Migrated { .. }
+                        | TokenEvent::Resumed { .. }
+                )
+        })
+        .collect();
+    assert!(
+        matches!(lifecycle[0], TokenEvent::Preempted { .. }),
+        "first transition {lifecycle:?}"
+    );
+    assert!(
+        matches!(lifecycle[1], TokenEvent::Migrated { from: 0, to: 1, .. }),
+        "second transition {lifecycle:?}"
+    );
+    assert!(matches!(lifecycle[2], TokenEvent::Resumed { .. }), "third transition {lifecycle:?}");
+    assert_eq!(cluster.migrations(), 1);
+    assert_eq!(cluster.engine(0).counters().exported, 1);
+    assert_eq!(cluster.engine(1).counters().imported, 1);
+    assert_eq!(cluster.engine(1).counters().resumes, 1, "C resumed on the peer");
+    assert_eq!(cluster.engine(0).counters().completed, 1);
+    assert_eq!(cluster.engine(1).counters().completed, 2);
+
+    // byte-identical streams, both as responses and as streamed tokens
+    let mut streams: HashMap<u64, Vec<i32>> = HashMap::new();
+    for ev in &events {
+        if let TokenEvent::Token { id, token, .. } = ev {
+            streams.entry(id.0).or_default().push(*token);
+        }
+    }
+    let mut out = responses_of(&events);
+    out.sort_by_key(|r| r.id);
+    assert_eq!(out.len(), 3);
+    for (resp, want) in out.iter().zip(&want) {
+        assert_eq!(resp.tokens, *want, "request {} ≠ oracle", resp.id.0);
+        assert_eq!(&streams[&resp.id.0], want, "request {} stream ≠ oracle", resp.id.0);
+    }
+
+    // zero leaks on BOTH replicas, conserved router, balanced migration
+    // bookkeeping
+    cluster.check_invariants().unwrap();
+    for (i, eng) in cluster.engines().iter().enumerate() {
+        assert_eq!(eng.pool().free_blocks(), eng.pool().total_blocks(), "replica {i} leaked");
+        assert_eq!(eng.pool().used_blocks(), 0, "replica {i} leaked refcounts");
+    }
+    assert_eq!(cluster.router().inflight(), 0);
+    assert_eq!(cluster.router().migrated, 1);
+}
+
+#[test]
+fn prop_migration_preserves_streams_with_zero_leaks_on_both_replicas() {
+    // random workloads through the hot/cold pair: whatever the
+    // preemption/migration interleaving, every stream matches the
+    // unbatched oracle and both pools drain clean.  The hot pool is 6
+    // blocks × 4 tokens, so budgets are capped at 24 tokens to keep every
+    // request individually admissible (no rejects to special-case).
+    let total_migrations = std::cell::Cell::new(0u64);
+    forall(16, |rng| {
+        let n = rng.usize(3, 14);
+        let reqs: Vec<Request> = (0..n)
+            .map(|i| {
+                let plen = rng.usize(1, 13);
+                let max_new = rng.usize(1, 21 - plen); // budget ≤ 20 tokens (5 of 6 blocks)
+                let base = rng.u32(1, 50) as i32;
+                Request::new(
+                    i as u64,
+                    (base..base + plen as i32).collect(),
+                    GenParams { max_new_tokens: max_new, sample: rng.bool(), seed: i as u64 },
+                )
+            })
+            .collect();
+        let mut oracle = replica_backend();
+        let want: Vec<Vec<i32>> = reqs
+            .iter()
+            .map(|r| drive_unbatched(&mut oracle, &r.prompt, &r.params).unwrap())
+            .collect();
+
+        let mut cluster = hot_cold_cluster();
+        for r in &reqs {
+            cluster.submit(r.clone());
+        }
+        let events = cluster.run_to_completion_events().unwrap();
+        let mut out = responses_of(&events);
+        out.sort_by_key(|r| r.id);
+        assert_eq!(out.len(), n);
+        for (resp, want) in out.iter().zip(&want) {
+            assert_eq!(resp.tokens, *want, "request {} ≠ oracle under migration", resp.id.0);
+        }
+        cluster.check_invariants().unwrap_or_else(|e| panic!("invariant: {e}"));
+        for (i, eng) in cluster.engines().iter().enumerate() {
+            assert_eq!(eng.pool().free_blocks(), eng.pool().total_blocks(), "replica {i} leaked");
+            eng.pool().check_invariants().unwrap_or_else(|e| panic!("replica {i}: {e}"));
+        }
+        assert_eq!(cluster.router().inflight(), 0);
+        total_migrations.set(total_migrations.get() + cluster.migrations());
+    });
+    assert!(
+        total_migrations.get() > 0,
+        "the hot/cold fixture must exercise migration at least once across seeds"
     );
 }
 

@@ -174,6 +174,11 @@ fn event_stream_lifecycle_is_well_formed_under_preemption_churn() {
                 assert_eq!(*st, St::Running, "req {id} preempted while {st:?}");
                 *st = St::Swapped;
             }
+            TokenEvent::Migrated { .. } => {
+                // only a cluster's rebalancer emits these, and only for
+                // swapped sequences; a lone engine must never produce one
+                panic!("req {id} migrated outside a cluster");
+            }
             TokenEvent::Resumed { .. } => {
                 assert_eq!(*st, St::Swapped, "req {id} resumed while {st:?}");
                 *st = St::Running;
