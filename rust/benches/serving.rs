@@ -9,7 +9,12 @@
 //!    under **LRU eviction, the LIFO baseline, and sharing off**,
 //!    reporting the KV blocks sharing saved and the cache hit/restore
 //!    rates each eviction policy sustains;
-//! 3. (`--cluster`) a multi-replica cluster behind `Router::LeastLoaded`
+//! 3. **mixed-precision cluster over ONE superset store** — a W4A4 and a
+//!    W2A2 replica slicing the same 4-bit `PackedWeightStore` (the
+//!    any-precision memory model), reporting the weight bytes saved vs
+//!    dedicated per-precision stores plus the cross-precision
+//!    migration/re-prefill counters;
+//! 4. (`--cluster`) a multi-replica cluster behind `Router::LeastLoaded`
 //!    on the shared-prefix trace — one deliberately undersized "hot"
 //!    replica so preemptive rebalancing is visible — with per-replica
 //!    load/KV/migration breakdown.
@@ -24,8 +29,8 @@
 
 use apllm::coordinator::trace::{generate, TimedRequest, TraceConfig};
 use apllm::coordinator::{
-    replay_trace, responses_of, ArrivalKind, BatcherConfig, Cluster, Engine, EngineConfig,
-    EvictionPolicy, KvPool, KvSharing, RoutePolicy, SimBackend, Stepper, TokenEvent,
+    replay_trace, responses_of, superset_store, ArrivalKind, BatcherConfig, Cluster, Engine,
+    EngineConfig, EvictionPolicy, KvPool, KvSharing, RoutePolicy, SimBackend, Stepper, TokenEvent,
 };
 use apllm::model::PrecisionConfig;
 use apllm::util::json::Json;
@@ -270,6 +275,86 @@ fn prefix_sharing(rate: f64, requests: usize) -> Json {
     ])
 }
 
+/// Mixed-precision cluster over **one** superset weight store: a W4A4
+/// "hot" replica (undersized pool, so sequences swap out and — with no
+/// same-precision peer — requantize) and a W2A2 "cold" replica, both
+/// slicing the same 4-bit pack.  Reports the §4.1-at-deployment-scale
+/// number: weight bytes the one-store design saves over dedicated
+/// per-precision stores (deterministic, so CI gates on it), plus the
+/// cross-precision migration counters from the trace replay.
+fn mixed_precision(rate: f64, requests: usize) -> Json {
+    println!(
+        "\n== serving: mixed-precision cluster (W4A4 hot + W2A2 cold) over ONE 4-bit superset \
+         store, rate {rate}/s =="
+    );
+    let store = superset_store(256, 128, 4, 7);
+    let superset_bytes = store.packed_bytes();
+    // dedicated per-precision stores would hold one pack per precision
+    let per_precision_bytes = store.packed_bytes_at(4) + store.packed_bytes_at(2);
+    let saved = per_precision_bytes - superset_bytes;
+    println!(
+        "  weight bytes: superset {superset_bytes} vs per-precision stores \
+         {per_precision_bytes} → saved {saved} ({:.0}%)",
+        100.0 * saved as f64 / per_precision_bytes as f64
+    );
+
+    let mut c = Cluster::new(RoutePolicy::LeastLoaded);
+    for (i, (p, kv_blocks)) in
+        [(PrecisionConfig::W4A4, 24usize), (PrecisionConfig::W2A2, 96)].iter().enumerate()
+    {
+        c.add_replica(
+            format!("r{i}-{}", p.label()),
+            *p,
+            SimBackend::with_shared_store(512, vec![1, 2, 4, 8], store.clone(), p.nw, p.nx),
+            engine_cfg(true, EvictionPolicy::Lru, *kv_blocks),
+        );
+    }
+    let trace = shared_prefix_trace(rate, requests);
+    let events = replay_trace(&mut c, &trace).expect("replay");
+    let out = responses_of(&events);
+    assert_eq!(out.len(), requests);
+    c.check_invariants().expect("cluster invariants after drain");
+    let mut reprefills = 0u64;
+    for eng in c.engines() {
+        assert_eq!(
+            eng.backend().packed_weight_bytes(),
+            superset_bytes,
+            "every replica must serve the one superset pack"
+        );
+        assert_eq!(
+            eng.backend().ap_stats().expect("ap backend").weight_packs,
+            0,
+            "weights packed once, outside the replicas"
+        );
+        assert_eq!(eng.pool().free_blocks(), eng.pool().total_blocks(), "replica leaked blocks");
+        reprefills += eng.counters().reprefills;
+    }
+    let m = c.metrics();
+    println!(
+        "  {} done | {:.0} tok/s | {} migrations ({} requantized, {} re-prefills)",
+        m.requests_done,
+        m.throughput_tok_s(),
+        c.migrations(),
+        c.requants(),
+        reprefills,
+    );
+    obj(vec![
+        ("rate", num("rate", rate)),
+        ("requests", pos("requests", requests as f64)),
+        ("weight_bytes_superset", pos("weight_bytes_superset", superset_bytes as f64)),
+        (
+            "weight_bytes_per_precision",
+            pos("weight_bytes_per_precision", per_precision_bytes as f64),
+        ),
+        ("weight_bytes_saved", pos("weight_bytes_saved", saved as f64)),
+        ("done", pos("done", m.requests_done as f64)),
+        ("tok_s", pos("tok_s", m.throughput_tok_s())),
+        ("migrations", num("migrations", c.migrations() as f64)),
+        ("requants", num("requants", c.requants() as f64)),
+        ("reprefills", num("reprefills", reprefills as f64)),
+    ])
+}
+
 fn cluster(rate: f64, requests: usize, replicas: usize) -> Json {
     println!(
         "\n== serving: {replicas}-replica cluster (LeastLoaded router, hot replica 0), \
@@ -368,6 +453,7 @@ fn main() {
         report.insert("steady".into(), steady_state(rates, requests));
         let (pr_rate, pr_requests) = if smoke { (400.0, 12) } else { (200.0, 64) };
         report.insert("prefix_sharing".into(), prefix_sharing(pr_rate, pr_requests));
+        report.insert("mixed_precision".into(), mixed_precision(pr_rate, pr_requests));
     }
 
     if let Some(path) = json_path {

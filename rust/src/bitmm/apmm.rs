@@ -8,16 +8,19 @@
 //!
 //! Every kernel has two entry points:
 //!
-//! * `apmm_*_packed` — the **hot-path core**: consumes [`PackedPlanes`]
-//!   operands, performs zero `pack_codes` calls and zero weight
-//!   allocations.  Weights should be packed once (see [`super::prepack`])
-//!   and reused across calls; activations pack through a `PackArena`.
+//! * `apmm_*_packed` — the **hot-path core**: consumes any [`Planes`]
+//!   operand ([`super::planes::PackedPlanes`], or a
+//!   [`super::planes::PlaneView`] slicing a lower precision out of a
+//!   packed superset), performs zero
+//!   `pack_codes` calls and zero weight allocations.  Weights should be
+//!   packed once (see [`super::prepack`]) and reused across calls;
+//!   activations pack through a `PackArena`.
 //! * `apmm_*` on [`CodeMatrix`] — thin pack-then-call convenience wrapper
 //!   (construction-time / test use; it re-packs both operands per call
 //!   and is therefore **not** hot-path-safe).
 
 use super::gemm1b::{and_popcount_dot, xor_popcount_dot};
-use super::planes::{pack_codes, CodeMatrix, PackedPlanes, MAX_BITS};
+use super::planes::{pack_codes, CodeMatrix, Planes, MAX_BITS};
 use crate::bitfmt::{plane_weight, IntFormat};
 use crate::util::par_chunks_mut;
 
@@ -71,29 +74,30 @@ pub fn apmm_bipolar_into(w: &CodeMatrix, xt: &CodeMatrix, opts: ApmmOpts, y: &mu
 }
 
 /// Prepacked fused bipolar AP-GEMM core (allocates only the output).
-pub fn apmm_bipolar_packed(wp: &PackedPlanes, xp: &PackedPlanes, opts: ApmmOpts) -> Vec<i32> {
-    let mut y = vec![0i32; wp.rows * xp.rows];
+pub fn apmm_bipolar_packed<W: Planes, X: Planes>(wp: &W, xp: &X, opts: ApmmOpts) -> Vec<i32> {
+    let mut y = vec![0i32; wp.rows() * xp.rows()];
     apmm_bipolar_packed_into(wp, xp, opts, &mut y);
     y
 }
 
-/// The hot-path core: prepacked operands in, caller-provided output
-/// buffer, **zero** packing and zero heap allocation.
-pub fn apmm_bipolar_packed_into(
-    wp: &PackedPlanes,
-    xp: &PackedPlanes,
+/// The hot-path core: prepacked operands in (full packs or any-precision
+/// [`super::planes::PlaneView`]s), caller-provided output buffer, **zero**
+/// packing and zero heap allocation.
+pub fn apmm_bipolar_packed_into<W: Planes, X: Planes>(
+    wp: &W,
+    xp: &X,
     opts: ApmmOpts,
     y: &mut [i32],
 ) {
-    assert_eq!(wp.cols, xp.cols, "inner dimension mismatch");
-    assert_eq!(wp.kw, xp.kw, "packed word-count mismatch");
-    assert_eq!(y.len(), wp.rows * xp.rows, "output buffer size");
+    assert_eq!(wp.cols(), xp.cols(), "inner dimension mismatch");
+    assert_eq!(wp.kw(), xp.kw(), "packed word-count mismatch");
+    assert_eq!(y.len(), wp.rows() * xp.rows(), "output buffer size");
     assert!(opts.tile_m > 0 && opts.tile_n > 0, "tiles must be non-empty");
-    let (m, n, k) = (wp.rows, xp.rows, wp.cols);
+    let (m, n, k) = (wp.rows(), xp.rows(), wp.cols());
     if m == 0 || n == 0 {
         return; // empty output; avoids the zero-size row-block chunks below
     }
-    let (nw, nx) = (wp.bits, xp.bits);
+    let (nw, nx) = (wp.bits(), xp.bits());
     // bits ≤ MAX_BITS is a PackedPlanes construction invariant, so these
     // widened shifts cannot overflow.  C stays in i64: at 16×16 bits and
     // LLM-scale K it exceeds i32::MAX long before the final result does.
@@ -177,11 +181,11 @@ pub fn apmm_bipolar_unfused(w: &CodeMatrix, xt: &CodeMatrix) -> Vec<i32> {
 
 /// Prepacked unfused core (for the ablation bench to isolate recovery
 /// dataflow cost from packing cost).
-pub fn apmm_bipolar_unfused_packed(wp: &PackedPlanes, xp: &PackedPlanes) -> Vec<i32> {
-    assert_eq!(wp.cols, xp.cols, "inner dimension mismatch");
-    assert_eq!(wp.kw, xp.kw, "packed word-count mismatch");
-    let (m, n, k) = (wp.rows, xp.rows, wp.cols);
-    let (nw, nx) = (wp.bits, xp.bits);
+pub fn apmm_bipolar_unfused_packed<W: Planes, X: Planes>(wp: &W, xp: &X) -> Vec<i32> {
+    assert_eq!(wp.cols(), xp.cols(), "inner dimension mismatch");
+    assert_eq!(wp.kw(), xp.kw(), "packed word-count mismatch");
+    let (m, n, k) = (wp.rows(), xp.rows(), wp.cols());
+    let (nw, nx) = (wp.bits(), xp.bits());
     // 1-bit GEMMs → intermediate tiles in "global memory"
     let mut tiles: Vec<(u32, u32, Vec<i32>)> = Vec::with_capacity((nw * nx) as usize);
     for i in 0..nw {
@@ -207,7 +211,7 @@ pub fn apmm_signed(w: &CodeMatrix, xt: &CodeMatrix) -> Vec<i32> {
 }
 
 /// Prepacked core of [`apmm_signed`].
-pub fn apmm_signed_packed(wp: &PackedPlanes, xp: &PackedPlanes) -> Vec<i32> {
+pub fn apmm_signed_packed<W: Planes, X: Planes>(wp: &W, xp: &X) -> Vec<i32> {
     apmm_weighted_packed(wp, xp, IntFormat::Signed)
 }
 
@@ -219,7 +223,7 @@ pub fn apmm_unsigned(w: &CodeMatrix, xt: &CodeMatrix) -> Vec<i32> {
 }
 
 /// Prepacked core of [`apmm_unsigned`].
-pub fn apmm_unsigned_packed(wp: &PackedPlanes, xp: &PackedPlanes) -> Vec<i32> {
+pub fn apmm_unsigned_packed<W: Planes, X: Planes>(wp: &W, xp: &X) -> Vec<i32> {
     apmm_weighted_packed(wp, xp, IntFormat::Unsigned)
 }
 
@@ -230,11 +234,11 @@ fn apmm_weighted(w: &CodeMatrix, xt: &CodeMatrix, fmt: IntFormat) -> Vec<i32> {
 
 /// Prepacked AND-plane GEMM with per-plane recovery weights under `fmt`
 /// (the signed/unsigned baselines share this core).
-pub fn apmm_weighted_packed(wp: &PackedPlanes, xp: &PackedPlanes, fmt: IntFormat) -> Vec<i32> {
-    assert_eq!(wp.cols, xp.cols, "inner dimension mismatch");
-    assert_eq!(wp.kw, xp.kw, "packed word-count mismatch");
-    let (m, n) = (wp.rows, xp.rows);
-    let (nw, nx) = (wp.bits, xp.bits);
+pub fn apmm_weighted_packed<W: Planes, X: Planes>(wp: &W, xp: &X, fmt: IntFormat) -> Vec<i32> {
+    assert_eq!(wp.cols(), xp.cols(), "inner dimension mismatch");
+    assert_eq!(wp.kw(), xp.kw(), "packed word-count mismatch");
+    let (m, n) = (wp.rows(), xp.rows());
+    let (nw, nx) = (wp.bits(), xp.bits());
     let mut y = vec![0i32; m * n];
     if m == 0 || n == 0 {
         return y;

@@ -35,6 +35,17 @@
 //! wrappers that re-pack both operands per call — convenient for tests and
 //! one-shot use, not for serving loops.
 //!
+//! ## Any-precision views (pack once, serve every precision)
+//!
+//! All `apmm_*_packed` cores are generic over the [`Planes`] operand
+//! trait: a [`PlaneView`] — the zero-copy most-significant-plane prefix of
+//! a packed superset ([`PackedPlanes::view`],
+//! [`prepack::PackedWeightStore::get_at`]) — drops in wherever full
+//! planes do.  An n-bit weight packed once serves every `k ≤ n` as its
+//! top-k planes with scales rescaled by `2^(n−k)`
+//! (`quant::view_scales`), which is what lets a mixed-precision serving
+//! cluster hold **one** weight store instead of one per precision.
+//!
 //! The unfused variant (materializing every `D_ij`, then a second recovery
 //! pass — the paper's *naive* Fig. 4 baseline) is kept for the ablation
 //! bench and as an internal cross-check.
@@ -53,9 +64,10 @@ pub use apmm::{
 };
 pub use gemm1b::{and_popcount_dot, xnor_dot, xor_popcount_dot};
 pub use planes::{
-    pack_codes, pack_codes_into, pack_codes_u32, pack_rows_into, CodeMatrix, PackedPlanes, MAX_BITS,
+    pack_codes, pack_codes_into, pack_codes_u32, pack_rows_into, CodeMatrix, PackedPlanes,
+    PlaneView, Planes, MAX_BITS,
 };
-pub use prepack::{PackArena, PackedWeight, PackedWeightStore, PlaneCache};
+pub use prepack::{PackArena, PackedWeight, PackedWeightStore, PackedWeightView, PlaneCache};
 pub use recover::recover_tiles;
 
 #[cfg(test)]

@@ -14,6 +14,17 @@
 //! decode-step activations via the [`super::prepack::PackArena`]), and the
 //! hot path only ever touches the packed form through the `apmm_*_packed`
 //! kernels.
+//!
+//! ## Any-precision views
+//!
+//! Because recovery weights planes by `2^i`, the **most-significant `k`
+//! planes of an n-bit pack are themselves a complete k-bit operand**: bit
+//! `j` of `code >> (n−k)` is bit `(n−k)+j` of `code`, so a zero-copy
+//! [`PlaneView`] over the top `k` planes decodes exactly like a fresh pack
+//! of the truncated codes.  One packed superset weight therefore serves
+//! *every* precision `k ≤ n` (the Any-Precision deployment model, per
+//! PAPERS.md); the [`Planes`] trait is the operand abstraction that lets
+//! the `apmm_*_packed` cores consume full packs and views alike.
 
 use crate::bitfmt::IntFormat;
 
@@ -142,6 +153,129 @@ impl PackedPlanes {
     /// exactly `bits` bits per element plus word-alignment padding).
     pub fn nbytes(&self) -> usize {
         self.data.len() * 8
+    }
+
+    /// Borrow the most-significant `bits` planes as a zero-copy
+    /// [`PlaneView`] — the any-precision slice: the view is exactly the
+    /// pack of `code >> (self.bits − bits)` at `bits` bits, without
+    /// repacking or copying a single word.  Panics unless
+    /// `1 ≤ bits ≤ self.bits`.
+    pub fn view(&self, bits: u32) -> PlaneView<'_> {
+        assert!(
+            (1..=self.bits).contains(&bits),
+            "cannot view {bits} planes of a {}-bit pack",
+            self.bits
+        );
+        PlaneView { planes: self, bits, skip: self.bits - bits }
+    }
+}
+
+/// Read-only bit-plane operand — what every `apmm_*_packed` core consumes.
+/// Implemented by [`PackedPlanes`] (all planes) and [`PlaneView`] (a
+/// most-significant-plane prefix), so a single packed superset weight can
+/// serve any lower precision without repacking.  Plane `i` carries
+/// recovery weight `2^i` regardless of the implementor.  `Sync` is a
+/// supertrait because the kernels fan row blocks out across scoped
+/// threads, sharing the operands by reference.
+pub trait Planes: Sync {
+    fn rows(&self) -> usize;
+    /// Logical K (unpadded column count).
+    fn cols(&self) -> usize;
+    /// Words per row: `ceil(cols / 64)`; padding bits are zero.
+    fn kw(&self) -> usize;
+    /// Planes exposed by this operand.
+    fn bits(&self) -> u32;
+    /// Plane `i`, row `r` as a word slice.
+    fn row(&self, plane: u32, r: usize) -> &[u64];
+}
+
+impl Planes for PackedPlanes {
+    #[inline(always)]
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline(always)]
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline(always)]
+    fn kw(&self) -> usize {
+        self.kw
+    }
+
+    #[inline(always)]
+    fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    #[inline(always)]
+    fn row(&self, plane: u32, r: usize) -> &[u64] {
+        PackedPlanes::row(self, plane, r)
+    }
+}
+
+/// A borrowed prefix of the **most-significant** `bits` planes of a
+/// [`PackedPlanes`] — the any-precision operand.
+///
+/// View plane `j` is full plane `skip + j` (`skip = full_bits − bits`), so
+/// the view is bit-for-bit the pack of the codes truncated to their top
+/// `bits` bits (`code >> skip`).  Under bipolar decoding the full value
+/// splits as `v = 2^skip · v_view + (2r + 1 − 2^skip)` with `r` the
+/// dropped low bits, so serving a view *is* serving the weight at the
+/// lower precision with its dequant scale multiplied by `2^skip` (see
+/// `quant::view_scales`).  `Copy` and zero-copy: slicing allocates
+/// nothing and never touches plane words.
+#[derive(Debug, Clone, Copy)]
+pub struct PlaneView<'a> {
+    planes: &'a PackedPlanes,
+    /// Planes exposed (`≤ planes.bits`).
+    bits: u32,
+    /// Dropped least-significant planes: `planes.bits − bits`.
+    skip: u32,
+}
+
+impl PlaneView<'_> {
+    /// Least-significant planes this view drops (`full_bits − bits`);
+    /// the dequant scale of the view is the full pack's scale times
+    /// `2^skip`.
+    pub fn skip(&self) -> u32 {
+        self.skip
+    }
+
+    /// Bytes this view's planes would occupy as a standalone pack — what
+    /// a dedicated per-precision weight store would have to hold.
+    pub fn nbytes(&self) -> usize {
+        self.bits as usize * self.planes.rows * self.planes.kw * 8
+    }
+}
+
+impl Planes for PlaneView<'_> {
+    #[inline(always)]
+    fn rows(&self) -> usize {
+        self.planes.rows
+    }
+
+    #[inline(always)]
+    fn cols(&self) -> usize {
+        self.planes.cols
+    }
+
+    #[inline(always)]
+    fn kw(&self) -> usize {
+        self.planes.kw
+    }
+
+    #[inline(always)]
+    fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    #[inline(always)]
+    fn row(&self, plane: u32, r: usize) -> &[u64] {
+        debug_assert!(plane < self.bits, "plane {plane} outside {}-plane view", self.bits);
+        self.planes.row(self.skip + plane, r)
     }
 }
 

@@ -8,23 +8,37 @@
 //!   *same* buffer (no repack, no copy).
 //! * [`PackedWeightStore`] — the model-level registry: named prepacked
 //!   weights with their dequant scales, shared across serving steps and
-//!   replicas.
+//!   replicas.  Packed once at the **widest precision served**, it is an
+//!   any-precision superset: [`PackedWeightStore::get_at`] slices any
+//!   lower precision as a zero-copy plane-prefix view with rescaled
+//!   scales, so a mixed-precision cluster holds one store, not one per
+//!   precision.
 //! * [`PackArena`] — shape-keyed scratch `u64` buffers for decode-step
 //!   **activation** packing (the shared-memory staging analog): after
 //!   warm-up, packing an activation batch performs zero heap allocations.
 
-use super::planes::{pack_codes, pack_codes_into, pack_rows_into, CodeMatrix, PackedPlanes};
+use super::planes::{
+    pack_codes, pack_codes_into, pack_rows_into, CodeMatrix, PackedPlanes, PlaneView,
+};
 use std::collections::HashMap;
 use std::sync::Arc;
 
+/// Composite plane-cache key: caller id plus the codes' (bits, rows,
+/// cols).  The id alone is NOT the identity of a packed weight — the same
+/// id requantized to a different bit-width, or an id collision across
+/// differently-shaped layers, must pack fresh rather than silently return
+/// stale planes of the wrong shape/bit-width.
+type CacheKey = (u64, u32, usize, usize);
+
 /// Pack-once memoizer for weight planes.
 ///
-/// Keys are caller-chosen (layer index, weight id, …).  A hit returns a
-/// clone of the stored `Arc` — the identical packed buffer, never a
-/// repack; the hit/miss counters let tests and benches prove it.
+/// Keys combine a caller-chosen id (layer index, weight id, …) with the
+/// codes' bit-width and shape (see [`CacheKey`]).  A hit returns a clone
+/// of the stored `Arc` — the identical packed buffer, never a repack; the
+/// hit/miss counters let tests and benches prove it.
 #[derive(Default)]
 pub struct PlaneCache {
-    map: HashMap<u64, Arc<PackedPlanes>>,
+    map: HashMap<CacheKey, Arc<PackedPlanes>>,
     hits: u64,
     misses: u64,
 }
@@ -35,21 +49,28 @@ impl PlaneCache {
     }
 
     /// The pack-once entry point: packs `codes` on the first call for
-    /// `key`, returns the cached planes on every later call.
+    /// `(key, bits, rows, cols)`, returns the cached planes on every
+    /// later call with the same id *and* the same shape/bit-width.
     pub fn get_or_pack(&mut self, key: u64, codes: &CodeMatrix) -> Arc<PackedPlanes> {
-        if let Some(p) = self.map.get(&key) {
+        let full = (key, codes.bits, codes.rows, codes.cols);
+        if let Some(p) = self.map.get(&full) {
             self.hits += 1;
+            debug_assert!(
+                p.bits == codes.bits && p.rows == codes.rows && p.cols == codes.cols,
+                "plane cache hit disagrees with the requested shape/bit-width"
+            );
             return p.clone();
         }
         self.misses += 1;
         let p = Arc::new(pack_codes(codes));
-        self.map.insert(key, p.clone());
+        self.map.insert(full, p.clone());
         p
     }
 
-    /// Lookup without packing.
-    pub fn get(&self, key: u64) -> Option<Arc<PackedPlanes>> {
-        self.map.get(&key).cloned()
+    /// Lookup without packing (same composite identity as
+    /// [`PlaneCache::get_or_pack`]).
+    pub fn get(&self, key: u64, bits: u32, rows: usize, cols: usize) -> Option<Arc<PackedPlanes>> {
+        self.map.get(&(key, bits, rows, cols)).cloned()
     }
 
     pub fn hits(&self) -> u64 {
@@ -81,8 +102,20 @@ pub struct PackedWeight {
     pub scales: Vec<f32>,
 }
 
-/// Name → prepacked weight registry — what a model replica loads once at
-/// startup and every serving step reads from.
+/// A named weight served at a (possibly lower) precision out of the
+/// superset pack: a zero-copy most-significant-plane view plus the
+/// per-view rescaled dequant scales (`scale · 2^skip`; see
+/// [`PlaneView`] and `quant::view_scales`).
+pub struct PackedWeightView<'a> {
+    pub view: PlaneView<'a>,
+    pub scales: Vec<f32>,
+}
+
+/// Name → prepacked weight registry — what a model (or, packed at the
+/// widest precision served, a whole **any-precision cluster**) loads once
+/// at startup and every serving step reads from.  One superset entry per
+/// weight serves every lower precision through
+/// [`PackedWeightStore::get_at`] — no per-precision duplication.
 #[derive(Default)]
 pub struct PackedWeightStore {
     map: HashMap<String, PackedWeight>,
@@ -115,6 +148,19 @@ impl PackedWeightStore {
         self.map.get(name)
     }
 
+    /// Serve `name` at `bits` precision from the single superset pack:
+    /// the most-significant `bits` planes as a zero-copy [`PlaneView`],
+    /// with the dequant scales rescaled for the dropped low planes.
+    /// `None` if the name is unknown; panics if `bits` exceeds the stored
+    /// pack (the superset must be packed at the widest precision served).
+    pub fn get_at(&self, name: &str, bits: u32) -> Option<PackedWeightView<'_>> {
+        let w = self.map.get(name)?;
+        Some(PackedWeightView {
+            view: w.planes.view(bits),
+            scales: crate::quant::view_scales(&w.scales, w.planes.bits, bits),
+        })
+    }
+
     pub fn len(&self) -> usize {
         self.map.len()
     }
@@ -124,9 +170,17 @@ impl PackedWeightStore {
     }
 
     /// Total packed footprint across all stored weights (§4.1 claim at
-    /// model scale).
+    /// model scale).  With one superset store per cluster this is the
+    /// entire weight memory, whatever mix of precisions is being served.
     pub fn packed_bytes(&self) -> usize {
         self.map.values().map(|w| w.planes.nbytes()).sum()
+    }
+
+    /// Bytes a dedicated per-precision store would need to serve every
+    /// weight at `bits` — the baseline the one-superset-store design is
+    /// measured against (`bits` is clamped to each weight's own width).
+    pub fn packed_bytes_at(&self, bits: u32) -> usize {
+        self.map.values().map(|w| w.planes.view(bits.min(w.planes.bits)).nbytes()).sum()
     }
 }
 
@@ -252,7 +306,7 @@ mod tests {
             let xp = arena.pack(&xt);
             let wp2 = cache.get_or_pack(0, &w);
             assert!(Arc::ptr_eq(&wp, &wp2), "step {step} repacked the weight");
-            assert_eq!(apmm_bipolar_packed(&wp2, &xp, ApmmOpts::default()), want);
+            assert_eq!(apmm_bipolar_packed(&*wp2, &xp, ApmmOpts::default()), want);
             arena.recycle(xp);
         }
         assert_eq!(cache.misses(), 1, "weights packed exactly once");
@@ -316,5 +370,64 @@ mod tests {
         // 2 bits × 16 rows × 1 word = 32 u64 words
         assert_eq!(store.packed_bytes(), 2 * 16 * 8);
         assert!(store.get("mlp.up").is_none());
+    }
+
+    #[test]
+    fn plane_cache_key_collision_cannot_return_stale_planes() {
+        // regression: the cache used to trust the caller's u64 alone, so
+        // reusing an id after requantizing to a different bit-width (or an
+        // id collision across differently-shaped layers) silently returned
+        // stale planes of the wrong shape/bit-width
+        let w4 = CodeMatrix::random(6, 70, 4, 1);
+        let w2 = CodeMatrix::new(6, 70, 2, w4.data.iter().map(|&c| c >> 2).collect());
+        let other_shape = CodeMatrix::random(5, 64, 4, 2);
+        let mut cache = PlaneCache::new();
+        let p4 = cache.get_or_pack(7, &w4);
+        let p2 = cache.get_or_pack(7, &w2); // same id, requantized width
+        let po = cache.get_or_pack(7, &other_shape); // same id, other layer shape
+        assert_eq!(cache.misses(), 3, "all three must pack fresh");
+        assert_eq!(cache.len(), 3);
+        assert_eq!((p4.bits, p4.rows, p4.cols), (4, 6, 70));
+        assert_eq!((p2.bits, p2.rows, p2.cols), (2, 6, 70));
+        assert_eq!((po.bits, po.rows, po.cols), (4, 5, 64));
+        // hits still resolve to the matching entry, never a colliding one
+        assert!(Arc::ptr_eq(&cache.get_or_pack(7, &w2), &p2));
+        assert!(Arc::ptr_eq(&cache.get(7, 4, 6, 70).unwrap(), &p4));
+        assert!(cache.get(7, 3, 6, 70).is_none());
+        assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn weight_store_serves_lower_precisions_from_the_superset_pack() {
+        use crate::bitmm::{transpose_codes, Planes};
+
+        // a 4-bit superset; the 2-bit view must behave exactly like a
+        // fresh 2-bit quantize-and-pack of the truncated codes, scales
+        // rescaled by 2^(4−2)
+        let w4 = CodeMatrix::random(8, 100, 4, 9);
+        let mut store = PackedWeightStore::new();
+        store.insert_codes("lm_head", &w4, vec![0.25; 8]);
+
+        let v = store.get_at("lm_head", 2).expect("registered");
+        assert_eq!((v.view.bits(), v.view.rows(), v.view.cols()), (2, 8, 100));
+        assert_eq!(v.view.skip(), 2);
+        assert!(v.scales.iter().all(|&s| s == 1.0), "0.25 · 2^2");
+
+        let trunc = CodeMatrix::new(8, 100, 2, w4.data.iter().map(|&c| c >> 2).collect());
+        let x = transpose_codes(&CodeMatrix::random(100, 3, 2, 10));
+        let want = apmm_bipolar(&trunc, &x, ApmmOpts::default());
+        let xp = pack_codes(&x);
+        assert_eq!(apmm_bipolar_packed(&v.view, &xp, ApmmOpts::default()), want);
+
+        // footprints: the superset alone is the whole store; per-precision
+        // stores would add a dedicated low-bit copy on top
+        assert_eq!(store.packed_bytes(), 4 * 8 * 2 * 8); // 4 planes × 8 rows × 2 words
+        assert_eq!(store.packed_bytes_at(2), 2 * 8 * 2 * 8);
+        assert_eq!(v.view.nbytes(), store.packed_bytes_at(2));
+        // the full-width view is the pack itself
+        let full = store.get_at("lm_head", 4).unwrap();
+        assert_eq!(full.view.skip(), 0);
+        assert_eq!(full.scales, vec![0.25; 8]);
+        assert!(store.get_at("mlp.up", 2).is_none());
     }
 }

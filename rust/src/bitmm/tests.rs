@@ -354,3 +354,91 @@ fn unfused_packed_rejects_mismatched_plane_widths() {
     let xp = pack_codes(&CodeMatrix::random(4, 70, 2, 97));
     apmm_bipolar_unfused_packed(&wp, &xp);
 }
+
+#[test]
+fn plane_view_slices_msb_prefix_without_copy() {
+    // deterministic layout check: view plane j must alias full plane
+    // (skip + j) word-for-word, and the full-width view is the pack itself
+    let w = CodeMatrix::random(5, 130, 4, 40);
+    let wp = pack_codes(&w);
+    for bits in 1..=4u32 {
+        let v = wp.view(bits);
+        assert_eq!((v.bits(), v.rows(), v.cols(), v.kw()), (bits, 5, 130, wp.kw));
+        assert_eq!(v.skip(), 4 - bits);
+        for j in 0..bits {
+            for r in 0..5 {
+                assert!(
+                    std::ptr::eq(v.row(j, r).as_ptr(), wp.row(4 - bits + j, r).as_ptr()),
+                    "view must borrow, not copy (bits={bits} plane={j} row={r})"
+                );
+            }
+        }
+        assert_eq!(v.nbytes(), bits as usize * 5 * wp.kw * 8);
+    }
+}
+
+#[test]
+#[should_panic(expected = "cannot view")]
+fn plane_view_rejects_widths_beyond_the_pack() {
+    pack_codes(&CodeMatrix::random(2, 64, 3, 41)).view(4);
+}
+
+#[test]
+fn prop_plane_view_matches_fresh_low_bit_pack() {
+    // the tentpole's view-consistency oracle: for every k ≤ bits, every
+    // packed kernel over the superset's PlaneView(k) must equal the same
+    // kernel over a FRESH quantize-and-pack at k bits (i.e. the codes
+    // truncated to their top k bits) — on the weight side, the activation
+    // side, and both at once
+    forall(32, |rng| {
+        let (m, k, n) = (rng.usize(1, 8), rng.usize(1, 140), rng.usize(1, 8));
+        let (nw, nx) = (rng.u32(2, 9), rng.u32(1, 7));
+        let seed = rng.u64();
+        let w = CodeMatrix::random(m, k, nw, seed);
+        let xt = CodeMatrix::random(n, k, nx, seed ^ 0xfeed);
+        let wp = pack_codes(&w);
+        let xp = pack_codes(&xt);
+        let fresh = |c: &CodeMatrix, bits: u32| {
+            CodeMatrix::new(
+                c.rows,
+                c.cols,
+                bits,
+                c.data.iter().map(|&v| v >> (c.bits - bits)).collect(),
+            )
+        };
+        for kw_bits in 1..=nw {
+            let wv = wp.view(kw_bits);
+            let wt = pack_codes(&fresh(&w, kw_bits));
+            assert_eq!(
+                apmm_bipolar_packed(&wv, &xp, ApmmOpts::default()),
+                apmm_bipolar_packed(&wt, &xp, ApmmOpts::default()),
+                "weight view k={kw_bits} of nw={nw} (m={m} k={k} n={n} nx={nx})"
+            );
+            assert_eq!(
+                apmm_weighted_packed(&wv, &xp, IntFormat::Unsigned),
+                apmm_weighted_packed(&wt, &xp, IntFormat::Unsigned),
+                "unsigned weight view k={kw_bits} of nw={nw}"
+            );
+            assert_eq!(
+                apmm_bipolar_unfused_packed(&wv, &xp),
+                apmm_bipolar_unfused_packed(&wt, &xp),
+                "unfused weight view k={kw_bits} of nw={nw}"
+            );
+        }
+        // activation-side and both-sided views reuse the same identity
+        let kx_bits = rng.u32(1, nx + 1);
+        let xv = xp.view(kx_bits);
+        let xtp = pack_codes(&fresh(&xt, kx_bits));
+        assert_eq!(
+            apmm_bipolar_packed(&wp, &xv, ApmmOpts::default()),
+            apmm_bipolar_packed(&wp, &xtp, ApmmOpts::default()),
+            "activation view k={kx_bits} of nx={nx}"
+        );
+        let kw_bits = rng.u32(1, nw + 1);
+        assert_eq!(
+            apmm_bipolar_packed(&wp.view(kw_bits), &xv, ApmmOpts::default()),
+            apmm_bipolar_packed(&pack_codes(&fresh(&w, kw_bits)), &xtp, ApmmOpts::default()),
+            "both-sided views kw={kw_bits} kx={kx_bits}"
+        );
+    });
+}

@@ -10,6 +10,17 @@
 //! decomposed+packed exactly once at construction and every decode step
 //! only packs its activation batch through a recycling arena — the §3.3
 //! flow, exercised end to end by the serving loop.
+//!
+//! ## One weight store per cluster (any-precision serving)
+//!
+//! Weights live in an `Arc<PackedWeightStore>` packed **once at the
+//! widest precision served** ([`superset_store`]).  Every replica of a
+//! mixed-precision cluster shares that one store
+//! ([`SimBackend::with_shared_store`]) and slices its own precision out
+//! of the superset per step as a zero-copy
+//! [`PlaneView`](crate::bitmm::PlaneView) — W2A2 and W4A4 replicas serve
+//! the *same* packed bytes, so `packed_bytes` is reported once for the
+//! whole cluster instead of once per precision.
 
 use super::request::{sample_token, GenParams};
 use crate::anyhow::{bail, Result};
@@ -20,6 +31,7 @@ use crate::bitmm::prepack::{PackArena, PackedWeightStore};
 use crate::bitmm::{apmm_bipolar_packed_into, ApmmOpts, CodeMatrix};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{lit_f32, ModelRunner};
+use std::sync::Arc;
 
 /// Host-resident KV state of ONE sequence: `(L, max_seq, Hkv, Dh)` f32,
 /// plus the next write position.  The scheduler owns these; backends
@@ -236,44 +248,88 @@ impl<'e> Backend for PjrtBackend<'e> {
 /// [`PackedWeightStore`].
 const LM_HEAD: &str = "lm_head";
 
-/// Pack-once AP-GEMM state for the sim backend: an LM-head-style weight
-/// `(vocab, dim)` decomposed+packed exactly once at construction into a
-/// [`PackedWeightStore`] (the model-level §3.3 registry); decode steps
-/// stage+pack only their activation batch through the recycling arena's
-/// batched entry ([`PackArena::pack_batch`]) and run the prepacked kernel
-/// core.
+/// Build the demo model's **any-precision superset store**: one
+/// LM-head-style `(vocab, dim)` weight, decomposed+packed exactly once at
+/// `bits` — the widest precision the deployment serves.  Share the
+/// returned `Arc` across every replica of a cluster
+/// ([`SimBackend::with_shared_store`]); each replica slices its own
+/// precision prefix per step, so the cluster's whole weight memory is
+/// this one pack (`store.packed_bytes()`), whatever precision mix it
+/// serves.
+pub fn superset_store(vocab: usize, dim: usize, bits: u32, seed: u64) -> Arc<PackedWeightStore> {
+    // construction-time artifact: the codes are dropped right after the
+    // one and only pack, into the store
+    let codes = CodeMatrix::random(vocab, dim, bits, seed);
+    let mut store = PackedWeightStore::new();
+    store.insert_codes(LM_HEAD, &codes, vec![1.0; vocab]);
+    Arc::new(store)
+}
+
+/// Pack-once AP-GEMM state for the sim backend: a shared
+/// [`PackedWeightStore`] holding the superset weight (packed once,
+/// possibly outside this backend), a serving precision `(nw, nx)` that
+/// selects the plane prefix per step, and the recycling activation arena
+/// ([`PackArena::pack_batch`]) feeding the prepacked kernel core.
 struct ApGemm {
     /// Prepacked weight registry — the only weight form the hot path ever
     /// touches (here one entry, `LM_HEAD`; a full model registers one per
-    /// layer weight).
-    store: PackedWeightStore,
+    /// layer weight).  Shared: a mixed-precision cluster clones one `Arc`
+    /// into every replica.
+    store: Arc<PackedWeightStore>,
     arena: PackArena,
     dim: usize,
+    /// Weight bits this backend serves — the plane-prefix width sliced
+    /// out of the superset each step (≤ the stored pack's width).
+    nw: u32,
     nx: u32,
+    /// Per-row dequant scales at THIS serving precision, materialized
+    /// once at construction through [`PackedWeightStore::get_at`] (the
+    /// `×2^skip` rescale for the dropped low planes) — the hot path
+    /// multiplies them per logit row instead of re-deriving per step.
+    scales: Vec<f32>,
     /// Reused output buffer, grown to the largest batch seen.
     y: Vec<i32>,
-    /// Times the weight matrix was decomposed+packed (must stay at 1).
+    /// Times THIS backend decomposed+packed the weight matrix: 1 when it
+    /// built its own store, 0 when it joined a shared superset store
+    /// (packed once, elsewhere, for the whole cluster).
     weight_packs: u64,
     /// Activation batches packed (one per prefill tail + decode step).
     act_packs: u64,
 }
 
 impl ApGemm {
-    fn new(vocab: usize, dim: usize, nw: u32, nx: u32, seed: u64) -> Self {
-        // construction-time artifact: the codes are dropped right after
-        // the one and only pack, into the store
-        let codes = CodeMatrix::random(vocab, dim, nw, seed);
-        let mut store = PackedWeightStore::new();
-        store.insert_codes(LM_HEAD, &codes, vec![1.0; vocab]);
+    fn shared(store: Arc<PackedWeightStore>, nw: u32, nx: u32) -> Self {
+        let w = store.get(LM_HEAD).expect("superset store must register the lm head");
+        assert!(
+            (1..=w.planes.bits).contains(&nw),
+            "serving precision W{nw} exceeds the {}-bit superset pack",
+            w.planes.bits
+        );
+        let dim = w.planes.cols;
+        // the model-level any-precision entry point: slice this serving
+        // precision out of the superset once, keeping the rescaled
+        // dequant scales for the per-step logit normalization
+        let scales = store
+            .get_at(LM_HEAD, nw)
+            .expect("superset store must register the lm head")
+            .scales;
         Self {
             store,
             arena: PackArena::new(),
             dim,
+            nw,
             nx,
+            scales,
             y: Vec::new(),
-            weight_packs: 1,
+            weight_packs: 0,
             act_packs: 0,
         }
+    }
+
+    fn new(vocab: usize, dim: usize, nw: u32, nx: u32, seed: u64) -> Self {
+        let mut ap = Self::shared(superset_store(vocab, dim, nw, seed), nw, nx);
+        ap.weight_packs = 1; // this backend owns the one-and-only pack
+        ap
     }
 
     /// Deterministic activation codes for one (token, pos) slot.
@@ -287,10 +343,13 @@ impl ApGemm {
         }
     }
 
-    /// Logits for a batch of (token, pos) rows via the prepacked kernel.
+    /// Logits for a batch of (token, pos) rows via the prepacked kernel,
+    /// the weight sliced at this backend's precision out of the shared
+    /// superset (zero-copy, zero repack).
     fn logits(&mut self, rows: &[(i32, usize)]) -> Vec<Vec<f32>> {
-        let planes = self.store.get(LM_HEAD).expect("registered at construction").planes.clone();
-        let (vocab, n) = (planes.rows, rows.len());
+        let w = self.store.get(LM_HEAD).expect("registered at construction");
+        let planes = w.planes.view(self.nw);
+        let (vocab, n) = (w.planes.rows, rows.len());
         let (dim, nx) = (self.dim, self.nx);
         let xp = self.arena.pack_batch(n, dim, nx, |i, out| {
             let (tok, pos) = rows[i];
@@ -306,9 +365,15 @@ impl ApGemm {
             &mut self.y,
         );
         self.arena.recycle(xp);
-        let scale = 1.0 / (dim as f32);
+        // dequant per output row (the view-rescaled scales), then the sim
+        // model's 1/dim normalization
+        let inv_dim = 1.0 / (dim as f32);
         (0..n)
-            .map(|ni| (0..vocab).map(|mi| self.y[mi * n + ni] as f32 * scale).collect())
+            .map(|ni| {
+                (0..vocab)
+                    .map(|mi| self.y[mi * n + ni] as f32 * self.scales[mi] * inv_dim)
+                    .collect()
+            })
             .collect()
     }
 }
@@ -370,6 +435,27 @@ impl SimBackend {
         b
     }
 
+    /// A sim backend serving at `W{nw}A{nx}` out of a **shared**
+    /// any-precision superset store ([`superset_store`]) — the weight is
+    /// packed once for the whole cluster, and this replica slices its
+    /// `nw`-plane prefix per step (zero-copy).  Panics if `nw` exceeds
+    /// the stored pack's width.  Vocab and hidden dim come from the
+    /// store's weight shape, so every replica sharing a store serves the
+    /// same model.
+    pub fn with_shared_store(
+        max_seq: usize,
+        batches: Vec<usize>,
+        store: Arc<PackedWeightStore>,
+        nw: u32,
+        nx: u32,
+    ) -> Self {
+        let vocab =
+            store.get(LM_HEAD).expect("superset store must register the lm head").planes.rows;
+        let mut b = Self::new(vocab, max_seq, batches);
+        b.ap = Some(ApGemm::shared(store, nw, nx));
+        b
+    }
+
     /// Pack-once instrumentation (None for the hash-logits backend).
     pub fn ap_stats(&self) -> Option<ApStats> {
         self.ap.as_ref().map(|ap| ApStats {
@@ -381,8 +467,22 @@ impl SimBackend {
     }
 
     /// Resident packed-weight footprint of the AP path, if enabled.
+    /// Replicas built over one shared store all report the same superset
+    /// pack — count it **once** per cluster, not per replica.
     pub fn packed_weight_bytes(&self) -> usize {
         self.ap.as_ref().map(|ap| ap.store.packed_bytes()).unwrap_or(0)
+    }
+
+    /// The weight store this backend serves from (None for the
+    /// hash-logits backend).  Replicas sharing a superset return clones
+    /// of the same `Arc`.
+    pub fn weight_store(&self) -> Option<Arc<PackedWeightStore>> {
+        self.ap.as_ref().map(|ap| ap.store.clone())
+    }
+
+    /// Serving precision `(nw, nx)` of the AP path, if enabled.
+    pub fn serving_bits(&self) -> Option<(u32, u32)> {
+        self.ap.as_ref().map(|ap| (ap.nw, ap.nx))
     }
 
     fn logits_for(&mut self, rows: &[(i32, usize)]) -> Vec<Vec<f32>> {
@@ -506,6 +606,41 @@ mod tests {
         // two distinct arena buffers, everything else recycled
         assert_eq!(s.arena_allocs, 2);
         assert_eq!(s.arena_reuses, 5);
+    }
+
+    #[test]
+    fn shared_store_replicas_serve_one_superset_pack() {
+        // the any-precision memory model: a W4A4 and a W2A2 replica share
+        // ONE 4-bit superset pack; neither packs anything itself, and the
+        // full-width replica is bit-identical to a privately-built backend
+        let store = superset_store(48, 96, 4, 11);
+        let mut w4 = SimBackend::with_shared_store(64, vec![1, 2, 4], store.clone(), 4, 4);
+        let mut w2 = SimBackend::with_shared_store(64, vec![1, 2, 4], store.clone(), 2, 2);
+        assert_eq!(w4.vocab, 48, "vocab comes from the store's weight shape");
+        assert_eq!(w4.packed_weight_bytes(), store.packed_bytes());
+        assert_eq!(w2.packed_weight_bytes(), store.packed_bytes());
+        assert!(Arc::ptr_eq(&w4.weight_store().unwrap(), &store), "same physical store");
+        assert!(Arc::ptr_eq(&w2.weight_store().unwrap(), &store));
+        assert_eq!(w4.serving_bits(), Some((4, 4)));
+        assert_eq!(w2.serving_bits(), Some((2, 2)));
+
+        let (l4, _) = w4.prefill_one(&[3, 1, 4]).unwrap();
+        let (l2, _) = w2.prefill_one(&[3, 1, 4]).unwrap();
+        assert_ne!(l4, l2, "precisions really select different plane prefixes");
+        assert_eq!(w4.ap_stats().unwrap().weight_packs, 0, "shared store: packed elsewhere");
+        assert_eq!(w2.ap_stats().unwrap().weight_packs, 0);
+
+        let mut own = SimBackend::with_ap_gemm(48, 64, vec![1, 2, 4], 96, 4, 4, 11);
+        let (lo, _) = own.prefill_one(&[3, 1, 4]).unwrap();
+        assert_eq!(lo, l4, "full-width view ≡ privately packed weight");
+        assert_eq!(own.ap_stats().unwrap().weight_packs, 1, "private store packs once, here");
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the")]
+    fn shared_store_rejects_precisions_beyond_the_superset() {
+        let store = superset_store(16, 32, 2, 3);
+        SimBackend::with_shared_store(64, vec![1], store, 4, 4);
     }
 
     #[test]

@@ -248,30 +248,49 @@ pub fn run_engine_serving_demo(a: &ServeArgs) -> Result<String> {
     Ok(report)
 }
 
-/// Multi-replica cluster demo: `a.replicas` identically-built pack-once
-/// engine replicas (all W2A2 here; the cluster API itself takes mixed
-/// precisions) behind the router, with merged metrics plus a per-replica
-/// load/KV breakdown.
+/// Multi-replica cluster demo: `a.replicas` pack-once engine replicas at
+/// **alternating precisions (W4A4 / W2A2), all slicing one shared 4-bit
+/// superset weight store** — the any-precision memory model: the weight
+/// is packed once for the whole cluster and each replica serves its own
+/// plane prefix.  Merged metrics plus a per-replica load/KV breakdown;
+/// swapped sequences requantize across the precision boundary when no
+/// same-precision peer has headroom.
 pub fn run_cluster_serving_demo(a: &ServeArgs) -> Result<String> {
+    let store = super::backend::superset_store(DEMO_VOCAB, 128, 4, a.seed ^ 0xAB);
     let mut cluster = Cluster::new(a.route_policy);
     for i in 0..a.replicas {
-        let (backend, _) = ap_sim_backend(a.seed);
-        cluster.add_replica(
-            format!("r{i}"),
-            PrecisionConfig::W2A2,
-            backend,
-            demo_engine_config(),
-        );
+        let p = if i % 2 == 0 { PrecisionConfig::W4A4 } else { PrecisionConfig::W2A2 };
+        let backend =
+            SimBackend::with_shared_store(256, vec![1, 2, 4, 8], store.clone(), p.nw, p.nx);
+        cluster.add_replica(format!("r{i}"), p, backend, demo_engine_config());
     }
     let (mut report, _) = drive(&mut cluster, a, DEMO_VOCAB)?;
     report.push_str(&format!(
-        "cluster: {} replicas, policy {:?}, routed {}, completed {}, unroutable {}, migrated {}\n",
+        "cluster: {} replicas, policy {:?}, routed {}, completed {}, unroutable {}, \
+         migrated {} (requantized {})\n",
         cluster.replicas(),
         cluster.router().policy(),
         cluster.router().routed,
         cluster.router().completed,
         cluster.unroutable(),
         cluster.migrations(),
+        cluster.requants(),
+    ));
+    // one superset pack serves every precision — report its bytes ONCE
+    // for the whole cluster, against what per-precision stores would cost
+    let served: std::collections::BTreeSet<u32> = cluster
+        .engines()
+        .iter()
+        .filter_map(|e| e.backend().serving_bits())
+        .map(|(nw, _)| nw)
+        .collect();
+    let per_precision: usize = served.iter().map(|&nw| store.packed_bytes_at(nw)).sum();
+    report.push_str(&format!(
+        "weights: one superset store, {} bytes packed once for {} precisions \
+         (per-precision stores would hold {} bytes)\n",
+        store.packed_bytes(),
+        served.len(),
+        per_precision,
     ));
     for (eng, rep) in cluster.engines().iter().zip(cluster.router().replicas()) {
         let c = eng.counters();

@@ -36,6 +36,28 @@
 //! to be identical model replicas (the standard scale-out deployment);
 //! that is what makes the migrated stream's logits — and therefore its
 //! tokens — identical.
+//!
+//! ## Cross-precision migration (re-prefill)
+//!
+//! With the **one-superset-store** memory model (every replica slices
+//! its precision out of one shared `PackedWeightStore`), precision is a
+//! runtime choice — so when no same-precision peer has headroom, the
+//! rebalancer falls back to ANY peer with headroom: the export drops the
+//! carried `SeqKv` ([`ExportedSeq::strip_kv_for_requant`]) and the
+//! importing engine **re-prefills** the prompt + generated tokens at its
+//! own precision.  Streamed bytes never change (they are teacher-forced
+//! as context); only subsequent tokens are generated at the new
+//! precision, and the client sees [`TokenEvent::Requantized`] between
+//! `Migrated` and `Resumed`.  Requests that pinned a precision
+//! ([`Request::with_precision`]) never cross — the pin is a contract.
+//! The trade-off is compute for memory/latency: a re-prefill costs one
+//! prefill over the carried tokens, against the alternative of the
+//! sequence waiting out an overloaded replica.
+//!
+//! Per-replica prefix caches stay sound under requantization because a
+//! replica serves exactly one precision: every KV block a replica caches
+//! was produced at that precision, and a re-prefilled arrival rebuilds
+//! (and may then share) content at the target's own precision.
 
 use super::backend::Backend;
 use super::engine::{Engine, EngineConfig};
@@ -84,6 +106,13 @@ impl<B: Backend> Cluster<B> {
     /// Swapped sequences moved between replicas so far.
     pub fn migrations(&self) -> u64 {
         self.clock.migrations
+    }
+
+    /// Migrations that crossed a precision boundary (KV dropped, target
+    /// re-prefills at its own precision).  Subset of
+    /// [`Cluster::migrations`].
+    pub fn requants(&self) -> u64 {
+        self.clock.requants
     }
 
     /// Register a replica: a backend wrapped in its own engine, serving
@@ -143,58 +172,127 @@ impl<B: Backend> Cluster<B> {
                 exported, self.router.migrated, self.clock.migrations
             ));
         }
+        // requantization bookkeeping: every cross-precision move is a
+        // migration, and every one eventually re-prefills exactly once
+        // (≤ mid-flight: an import may not have reached its swap-in yet)
+        let reprefills: u64 = self.engines.iter().map(|e| e.counters().reprefills).sum();
+        if self.clock.requants > self.clock.migrations {
+            return Err(format!(
+                "{} requants exceed {} migrations",
+                self.clock.requants, self.clock.migrations
+            ));
+        }
+        if reprefills > self.clock.requants {
+            return Err(format!(
+                "{reprefills} re-prefills but only {} cross-precision moves",
+                self.clock.requants
+            ));
+        }
         Ok(())
     }
 
-    /// Move the oldest swapped sequences off overloaded replicas onto
-    /// same-precision peers with headroom.  Deterministic: sources in
-    /// replica order, target = the acceptable peer with the most free KV
-    /// blocks (lowest index on ties).  Each move streams
-    /// [`TokenEvent::Migrated`]; the target's own next step streams the
-    /// `Resumed`.
+    /// Best import target among `src`'s peers for a swapped sequence:
+    /// when `same_precision`, only peers serving `src`'s precision and
+    /// passing [`Engine::can_import`] qualify (the KV travels verbatim);
+    /// otherwise only peers at a *different* precision passing
+    /// [`Engine::can_import_requant`] (the KV is dropped and re-prefilled
+    /// there).  The acceptable peer with the most free KV blocks wins,
+    /// lowest index on ties — deterministic.
+    fn best_target(
+        &self,
+        src: usize,
+        peek: &super::engine::SwappedPeek<'_>,
+        same_precision: bool,
+    ) -> Option<usize> {
+        let precision = self.router.replicas()[src].precision;
+        let mut best: Option<(usize, usize)> = None; // (free_blocks, idx)
+        for (i, e) in self.engines.iter().enumerate() {
+            if i == src || (self.router.replicas()[i].precision == precision) != same_precision {
+                continue;
+            }
+            // a same-precision move carries the KV verbatim — unless an
+            // earlier cross-precision hop already stripped it, in which
+            // case the final host re-prefills whatever its precision is
+            let ok = if same_precision && !peek.reprefill_pending {
+                e.can_import(peek.content, peek.budget)
+            } else {
+                e.can_import_requant(peek.content, peek.budget)
+            };
+            if ok {
+                let free = e.pool().free_blocks();
+                let better = match best {
+                    None => true,
+                    Some((bf, bi)) => free > bf || (free == bf && i < bi),
+                };
+                if better {
+                    best = Some((free, i));
+                }
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
+    /// Move the oldest swapped sequences off overloaded replicas —
+    /// preferably onto same-precision peers with headroom (KV travels
+    /// verbatim), otherwise, for unpinned requests, onto **any** peer
+    /// with headroom via the cross-precision re-prefill path.
+    /// Deterministic: sources in replica order, target = the acceptable
+    /// peer with the most free KV blocks (lowest index on ties).  Each
+    /// move streams [`TokenEvent::Migrated`] (plus
+    /// [`TokenEvent::Requantized`] when crossing the boundary); the
+    /// target's own next step streams the `Resumed`.
     fn rebalance(&mut self, events: &mut Vec<TokenEvent>) {
         if !self.migration || self.engines.len() < 2 {
             return;
         }
         for src in 0..self.engines.len() {
             while self.engines[src].is_overloaded() {
-                // cheap pre-filter before materializing the sequence's KV
-                // content: a peer must share the precision and have no
-                // swapped backlog of its own (a saturated cluster — or a
-                // lone-precision replica — breaks here allocation-free)
+                let Some(peek) = self.engines[src].peek_swapped() else { break };
+                // cheap pre-filter (the peek borrows, it doesn't clone):
+                // some peer must have no swapped backlog of its own AND
+                // be reachable — same precision, or any precision when
+                // the request is unpinned.  A saturated cluster, or a
+                // pinned head with only foreign-precision peers, breaks
+                // here without scanning targets every step.
                 let precision = self.router.replicas()[src].precision;
                 let any_peer = self.engines.iter().enumerate().any(|(i, e)| {
                     i != src
-                        && self.router.replicas()[i].precision == precision
                         && e.swapped() == 0
+                        && (self.router.replicas()[i].precision == precision
+                            || peek.pinned.is_none())
                 });
                 if !any_peer {
                     break;
                 }
-                let Some((id, content, budget)) = self.engines[src].peek_swapped() else { break };
-                let mut best: Option<(usize, usize)> = None; // (free_blocks, idx)
-                for (i, e) in self.engines.iter().enumerate() {
-                    if i == src || self.router.replicas()[i].precision != precision {
-                        continue;
+                // same-precision first — carrying KV beats recomputing it
+                let target = match self.best_target(src, &peek, true) {
+                    Some(dst) => Some((dst, false)),
+                    // a precision pin is a contract: pinned requests
+                    // never requantize, they wait for their own replica
+                    None if peek.pinned.is_none() => {
+                        self.best_target(src, &peek, false).map(|dst| (dst, true))
                     }
-                    if e.can_import(&content, budget) {
-                        let free = e.pool().free_blocks();
-                        let better = match best {
-                            None => true,
-                            Some((bf, bi)) => free > bf || (free == bf && i < bi),
-                        };
-                        if better {
-                            best = Some((free, i));
-                        }
-                    }
+                    None => None,
+                };
+                let Some((dst, cross)) = target else { break };
+                let id = peek.id;
+                let mut seq = self.engines[src].export_swapped().expect("peeked above");
+                if cross {
+                    seq.strip_kv_for_requant();
                 }
-                let Some((_, dst)) = best else { break };
-                let seq = self.engines[src].export_swapped().expect("peeked above");
                 self.engines[dst].import_swapped(seq);
                 let from = self.router.migrate(id, dst).expect("migrated seq must be in flight");
                 debug_assert_eq!(from, src);
                 self.clock.migrations += 1;
                 events.push(TokenEvent::Migrated { id, from: src, to: dst });
+                if cross {
+                    self.clock.requants += 1;
+                    events.push(TokenEvent::Requantized {
+                        id,
+                        from_bits: self.router.replicas()[src].precision,
+                        to_bits: self.router.replicas()[dst].precision,
+                    });
+                }
             }
         }
     }
@@ -460,10 +558,11 @@ mod tests {
     }
 
     #[test]
-    fn migration_respects_precision_boundaries() {
-        // the only peer serves a different precision: the swapped
-        // sequence must NOT migrate (identical-replica assumption), and
-        // still completes locally
+    fn pinned_requests_never_requantize_across_precision_boundaries() {
+        // the only peer serves a different precision, and both requests
+        // PINNED theirs: the pin is a contract, so the swapped sequence
+        // must NOT migrate (not even via the re-prefill path) and still
+        // completes locally
         let mut c = Cluster::new(RoutePolicy::LeastLoaded);
         c.add_replica(
             "hot-w2",
@@ -483,11 +582,103 @@ mod tests {
             c.submit(r);
         }
         let events = c.run_to_completion_events().unwrap();
-        assert!(events.iter().all(|ev| !matches!(ev, TokenEvent::Migrated { .. })));
+        assert!(events.iter().all(|ev| !matches!(
+            ev,
+            TokenEvent::Migrated { .. } | TokenEvent::Requantized { .. }
+        )));
         assert_eq!(c.migrations(), 0);
+        assert_eq!(c.requants(), 0);
         assert_eq!(c.engine(0).counters().completed, 2);
         assert_eq!(c.engine(1).counters().completed, 0);
         c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn unpinned_swapped_sequence_requantizes_to_a_different_precision_peer() {
+        // same topology, but UNPINNED requests: with no same-precision
+        // peer, the rebalancer takes the cross-precision path — the KV is
+        // dropped, the W1A1 replica re-prefills, and the client sees
+        // Preempted → Migrated → Requantized → Resumed in order
+        let mut c = Cluster::new(RoutePolicy::LeastLoaded);
+        c.add_replica(
+            "hot-w2",
+            PrecisionConfig::W2A2,
+            sim(),
+            EngineConfig { kv_blocks: 4, block_tokens: 4, ..EngineConfig::default() },
+        );
+        c.add_replica("cold-w1", PrecisionConfig::W1A1, sim(), EngineConfig::default());
+        // LeastLoaded with ties broken by index: A→hot, B→cold, C→hot.
+        // A + C (budget 16 tokens each) overflow hot's 4-block pool
+        // mid-decode, so C is preempted with no same-precision peer —
+        // the cross-precision fallback is the only way off the replica.
+        for (i, &base) in [10i32, 50, 30].iter().enumerate() {
+            c.submit(Request::new(
+                i as u64,
+                (base..base + 8).collect(),
+                GenParams { max_new_tokens: 8, sample: false, seed: i as u64 },
+            ));
+        }
+        let events = c.run_to_completion_events().unwrap();
+        let requants: Vec<_> = events
+            .iter()
+            .filter_map(|ev| match ev {
+                TokenEvent::Requantized { id, from_bits, to_bits } => {
+                    Some((id.0, *from_bits, *to_bits))
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(
+            requants,
+            vec![(2, PrecisionConfig::W2A2, PrecisionConfig::W1A1)],
+            "C requantizes hot-w2 → cold-w1 exactly once"
+        );
+        assert_eq!(c.migrations(), 1);
+        assert_eq!(c.requants(), 1);
+        assert_eq!(c.engine(1).counters().imported, 1);
+        assert_eq!(c.engine(1).counters().reprefills, 1, "the W1A1 peer rebuilt the KV");
+        assert_eq!(c.engine(1).counters().resumes, 1);
+        // stream grammar: Preempted → Migrated → Requantized → Resumed
+        let lifecycle: Vec<&TokenEvent> = events
+            .iter()
+            .filter(|ev| {
+                ev.id().0 == 2
+                    && !matches!(ev, TokenEvent::Token { .. } | TokenEvent::Admitted { .. })
+            })
+            .collect();
+        assert!(matches!(lifecycle[0], TokenEvent::Preempted { .. }), "{lifecycle:?}");
+        assert!(
+            matches!(lifecycle[1], TokenEvent::Migrated { from: 0, to: 1, .. }),
+            "{lifecycle:?}"
+        );
+        assert!(matches!(lifecycle[2], TokenEvent::Requantized { .. }), "{lifecycle:?}");
+        assert!(matches!(lifecycle[3], TokenEvent::Resumed { .. }), "{lifecycle:?}");
+        for (i, e) in c.engines().iter().enumerate() {
+            assert_eq!(e.pool().free_blocks(), e.pool().total_blocks(), "replica {i} leaked");
+        }
+        c.check_invariants().unwrap();
+        assert_eq!(c.router().inflight(), 0);
+        // migration off restores strict pinning-to-admission-replica
+        let mut c2 = Cluster::new(RoutePolicy::LeastLoaded);
+        c2.add_replica(
+            "hot-w2",
+            PrecisionConfig::W2A2,
+            sim(),
+            EngineConfig { kv_blocks: 4, block_tokens: 4, ..EngineConfig::default() },
+        );
+        c2.add_replica("cold-w1", PrecisionConfig::W1A1, sim(), EngineConfig::default());
+        c2.set_migration(false);
+        for (i, &base) in [10i32, 50, 30].iter().enumerate() {
+            c2.submit(Request::new(
+                i as u64,
+                (base..base + 8).collect(),
+                GenParams { max_new_tokens: 8, sample: false, seed: i as u64 },
+            ));
+        }
+        let events = c2.run_to_completion_events().unwrap();
+        assert!(events.iter().all(|ev| !matches!(ev, TokenEvent::Requantized { .. })));
+        assert_eq!(c2.requants(), 0);
+        c2.check_invariants().unwrap();
     }
 
     #[test]

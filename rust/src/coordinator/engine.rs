@@ -78,6 +78,18 @@
 //! budget).  The [`Cluster`](super::cluster::Cluster) drives the actual
 //! rebalancing and streams [`TokenEvent::Migrated`] between the victim's
 //! `Preempted` and the target's `Resumed`.
+//!
+//! Migration is no longer confined to same-precision peers: for a
+//! **cross-precision** move the exporter calls
+//! [`ExportedSeq::strip_kv_for_requant`] (the carried KV encodes the
+//! source precision's activations and is useless elsewhere) and the
+//! importing engine **re-prefills** the prompt + generated tokens at its
+//! own precision during swap-in ([`Engine::can_import_requant`] gates on
+//! the content fitting the prompt window).  Streamed bytes never change —
+//! they are teacher-forced as context — and only subsequent tokens are
+//! generated at the new precision; the cluster streams
+//! [`TokenEvent::Requantized`] between `Migrated` and `Resumed` so the
+//! client sees the switch.
 
 use super::backend::{gather_kv_refs, Backend, HasSeqKv, SeqKv};
 use super::batcher::{Batcher, BatcherConfig};
@@ -86,6 +98,7 @@ use super::metrics::Metrics;
 use super::request::{responses_of, sample_token, Request, RequestId, Response, TokenEvent};
 use super::server::Stepper;
 use crate::anyhow::{bail, Result};
+use crate::model::PrecisionConfig;
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
@@ -140,6 +153,10 @@ pub struct EngineCounters {
     pub exported: u64,
     /// Sequences taken over from a peer replica ([`Engine::import_swapped`]).
     pub imported: u64,
+    /// Imported sequences whose KV was rebuilt here by re-prefilling the
+    /// prompt + generated tokens at this replica's precision
+    /// (cross-precision migration).
+    pub reprefills: u64,
 }
 
 /// One resident (or swapped-out) sequence.
@@ -161,6 +178,10 @@ struct RunSeq {
     /// kept across preemption) — victim selection preempts the largest,
     /// so a just-resumed old sequence is never mistaken for the youngest.
     admitted_at: u64,
+    /// This sequence arrived by cross-precision migration with its KV
+    /// dropped: the next swap-in must re-prefill `swap_content` at this
+    /// replica's precision instead of trusting `kv`.
+    needs_reprefill: bool,
 }
 
 impl RunSeq {
@@ -186,6 +207,13 @@ impl HasSeqKv for RunSeq {
 /// replica of the *same model* needs to continue the stream
 /// byte-identically.  Produced by [`Engine::export_swapped`], consumed by
 /// [`Engine::import_swapped`]; opaque to everything in between.
+///
+/// For a **cross-precision** move the carried KV is useless — it was
+/// computed at the source's precision.  [`ExportedSeq::strip_kv_for_requant`]
+/// drops it and marks the sequence for **re-prefill**: the importing
+/// engine rebuilds the KV at its own precision by teacher-forcing the
+/// prompt plus every already-streamed token, so streamed bytes never
+/// change; only subsequent tokens are generated at the new precision.
 pub struct ExportedSeq {
     pub(crate) req: Request,
     pub(crate) kv: SeqKv,
@@ -194,8 +222,12 @@ pub struct ExportedSeq {
     pub(crate) first_token_at: Instant,
     pub(crate) last_token_at: Instant,
     /// KV content tokens (prompt + decoded inputs) — what the target's
-    /// prefix-cache re-admission hashes.
+    /// prefix-cache re-admission hashes, and what a re-prefill
+    /// teacher-forces.
     pub(crate) swap_content: Vec<i32>,
+    /// The carried KV was dropped; the importer must re-prefill
+    /// `swap_content` at its own precision before resuming.
+    pub(crate) reprefill: bool,
 }
 
 impl ExportedSeq {
@@ -213,6 +245,43 @@ impl ExportedSeq {
     pub fn budget(&self) -> usize {
         self.req.prompt.len() + self.req.params.max_new_tokens
     }
+
+    /// Prepare for a cross-precision migration: drop the carried
+    /// [`SeqKv`] (it encodes the source precision's activations) and mark
+    /// the sequence for re-prefill on the importing engine.  The token
+    /// stream so far is untouched — it travels in `swap_content` and is
+    /// teacher-forced verbatim.
+    pub fn strip_kv_for_requant(&mut self) {
+        self.kv = SeqKv { k: Vec::new(), v: Vec::new(), pos: 0 };
+        self.reprefill = true;
+    }
+
+    /// Will the importer re-prefill instead of reusing carried KV?
+    pub fn needs_reprefill(&self) -> bool {
+        self.reprefill
+    }
+}
+
+/// What [`Engine::peek_swapped`] exposes about the oldest swapped
+/// sequence: everything a cluster's rebalancer needs to pick a target
+/// without exporting anything yet.  Borrows the engine — peeking a
+/// sequence every step must not clone its token content.
+pub struct SwappedPeek<'a> {
+    pub id: RequestId,
+    /// KV content tokens (prompt + decoded inputs) the target must admit
+    /// — and re-prefill, if the move crosses a precision boundary.
+    pub content: &'a [i32],
+    /// Total token budget (prompt + max_new) the target must eventually
+    /// be able to hold.
+    pub budget: usize,
+    /// The request's precision pin, if any — pinned requests never take
+    /// the cross-precision path.
+    pub pinned: Option<PrecisionConfig>,
+    /// The sequence's KV was already stripped by an earlier
+    /// cross-precision hop and it has not re-prefilled yet: ANY further
+    /// target (same precision included) must pass the re-prefill gate
+    /// ([`Engine::can_import_requant`]).
+    pub reprefill_pending: bool,
 }
 
 /// The continuous-batching engine.  Single-threaded state machine — wrap
@@ -303,19 +372,20 @@ impl<B: Backend> Engine<B> {
         }
     }
 
-    /// The oldest swapped sequence's id, KV content, and total token
-    /// budget (prompt + max_new) — what a migration target must be able
-    /// to admit ([`Engine::can_import`]).
-    pub fn peek_swapped(&self) -> Option<(RequestId, Vec<i32>, usize)> {
-        self.swapped.front().map(|s| {
-            (
-                s.req.id,
-                // invariant: every producer of swapped-queue entries
-                // (preemption, failed resume re-park, import) files the
-                // content — see `swap_content`'s field docs
-                s.swap_content.clone().expect("swapped entries retain their KV content"),
-                s.req.prompt.len() + s.req.params.max_new_tokens,
-            )
+    /// The oldest swapped sequence's migration-relevant state — what a
+    /// target must be able to admit ([`Engine::can_import`]) and what
+    /// decides whether a cross-precision fallback is even allowed (a
+    /// pinned request is a contract: it never requantizes).
+    pub fn peek_swapped(&self) -> Option<SwappedPeek<'_>> {
+        self.swapped.front().map(|s| SwappedPeek {
+            id: s.req.id,
+            // invariant: every producer of swapped-queue entries
+            // (preemption, failed resume re-park, import) files the
+            // content — see `swap_content`'s field docs
+            content: s.swap_content.as_deref().expect("swapped entries retain their KV content"),
+            budget: s.req.prompt.len() + s.req.params.max_new_tokens,
+            pinned: s.req.precision,
+            reprefill_pending: s.needs_reprefill,
         })
     }
 
@@ -345,6 +415,13 @@ impl<B: Backend> Engine<B> {
             && self.pool_can_admit(content)
     }
 
+    /// [`Engine::can_import`] for a **cross-precision** arrival: the
+    /// sequence additionally needs a re-prefill of `content` through this
+    /// backend, so the content must fit its prompt window.
+    pub fn can_import_requant(&self, content: &[i32], budget: usize) -> bool {
+        self.can_import(content, budget) && content.len() <= self.backend.max_prompt()
+    }
+
     /// Pop the **oldest** swapped sequence for migration to a peer
     /// replica.  Its `Preempted` event already streamed; the importer's
     /// next step streams `Resumed` and the token stream continues
@@ -352,6 +429,13 @@ impl<B: Backend> Engine<B> {
     /// (request, step), and the KV state travels with it).
     pub fn export_swapped(&mut self) -> Option<ExportedSeq> {
         let mut s = self.swapped.pop_front()?;
+        if self.swapped.is_empty() {
+            // hygiene: keep the flag describing the live backlog.  Not
+            // observable through `is_overloaded` (it ANDs with a
+            // non-empty queue) — the load-bearing clear for the
+            // rebalancer ping-pong is the one in `import_swapped`.
+            self.resume_blocked = false;
+        }
         self.counters.exported += 1;
         let swap_content =
             s.swap_content.take().expect("swapped entries retain their KV content");
@@ -363,15 +447,28 @@ impl<B: Backend> Engine<B> {
             first_token_at: s.first_token_at,
             last_token_at: s.last_token_at,
             swap_content,
+            // a pending re-prefill travels with the sequence: its KV is
+            // already stripped, and whoever finally resumes it must
+            // rebuild the state whatever path it took to get there
+            reprefill: s.needs_reprefill,
         })
     }
 
     /// File a migrated sequence into this engine's resume queue; the
     /// next step re-admits it through the prefix cache (so a migrated
-    /// shared prefix hits the target's cache) and streams `Resumed`.
+    /// shared prefix hits the target's cache) and streams `Resumed` —
+    /// after re-prefilling the content at this replica's precision if the
+    /// exporter stripped the KV ([`ExportedSeq::strip_kv_for_requant`]).
     /// Counts as a fresh admission for victim selection — an import must
     /// not displace this replica's own older residents.
     pub fn import_swapped(&mut self, seq: ExportedSeq) {
+        // [`Engine::can_import`] required an empty swapped queue, so any
+        // recorded resume-blocked outcome described a backlog that has
+        // since drained; the newcomer has not attempted a resume yet.
+        // Without this clear, an idle engine that last blocked long ago
+        // would advertise overload the moment it imports — and the
+        // rebalancer would bounce the sequence straight back out.
+        self.resume_blocked = false;
         self.counters.imported += 1;
         let admitted_at = self.admissions;
         self.admissions += 1;
@@ -384,6 +481,7 @@ impl<B: Backend> Engine<B> {
             last_token_at: seq.last_token_at,
             swap_content: Some(seq.swap_content),
             admitted_at,
+            needs_reprefill: seq.reprefill,
         });
     }
 
@@ -549,6 +647,30 @@ impl<B: Backend> Engine<B> {
             let content = seq.swap_content.take().unwrap_or_else(|| seq.kv_content());
             match self.pool_admit(seq.req.id.0, &content) {
                 Ok(()) => {
+                    if seq.needs_reprefill {
+                        // cross-precision arrival: the carried KV was
+                        // dropped at export, so rebuild it at THIS
+                        // replica's precision by teacher-forcing the
+                        // prompt + already-streamed tokens.  The prefill
+                        // logits are discarded — the token at this
+                        // position already streamed from the source and
+                        // must keep its bytes; decode continues from it.
+                        match self.backend.prefill_one(&content) {
+                            Ok((_logits, kv)) => {
+                                debug_assert_eq!(kv.pos, content.len());
+                                seq.kv = kv;
+                                seq.needs_reprefill = false;
+                                self.counters.reprefills += 1;
+                                self.metrics.reprefills += 1;
+                            }
+                            Err(e) => {
+                                // don't strand the admission's blocks on
+                                // a failed re-prefill
+                                self.pool.release(seq.req.id.0)?;
+                                return Err(e);
+                            }
+                        }
+                    }
                     self.counters.resumes += 1;
                     self.metrics.resumes += 1;
                     events.push(TokenEvent::Resumed { id: seq.req.id });
@@ -611,6 +733,7 @@ impl<B: Backend> Engine<B> {
                 last_token_at: first_token_at,
                 swap_content: None,
                 admitted_at,
+                needs_reprefill: false,
             });
         }
 
@@ -857,12 +980,14 @@ mod tests {
             events.extend(src.step().unwrap());
         }
         assert!(src.is_overloaded(), "swapped seq can't resume on the full pool");
-        let (id, content, budget) = src.peek_swapped().unwrap();
-        assert_eq!(budget, 16);
-        assert!(dst.can_import(&content, budget), "idle peer must accept");
+        let peek = src.peek_swapped().unwrap();
+        assert_eq!(peek.budget, 16);
+        assert_eq!(peek.pinned, None, "unpinned request");
+        assert!(dst.can_import(peek.content, peek.budget), "idle peer must accept");
+        let (id, content_len) = (peek.id, peek.content.len());
         let exported = src.export_swapped().unwrap();
         assert_eq!(exported.id(), id);
-        assert_eq!(exported.kv_tokens(), content.len());
+        assert_eq!(exported.kv_tokens(), content_len);
         assert_eq!(exported.budget(), 16);
         dst.import_swapped(exported);
         assert_eq!(src.swapped(), 0);
@@ -898,6 +1023,95 @@ mod tests {
         assert_eq!(dst.pool().free_blocks(), 4, "target leaked blocks");
         src.pool().check_invariants().unwrap();
         dst.pool().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn overload_flag_drains_with_the_swapped_queue_and_never_bounces_imports() {
+        // regression (rebalancer ping-pong): the per-step resume-blocked
+        // flag must die with the backlog it described.  The stale-flag
+        // window: an engine preempts (flag set), its swapped sequence is
+        // exported the same step, and — with no step in between to clear
+        // the flag — something is imported.  Without the clears in
+        // export_swapped/import_swapped the engine advertises overload
+        // for a sequence that never attempted a resume, and the cluster's
+        // rebalance loop immediately re-exports it (the ping-pong).
+        let mut hot = Engine::new(
+            SimBackend::new(64, 64, vec![1, 2, 4, 8]),
+            EngineConfig { prefix_sharing: false, ..cfg(4, 4, 4) },
+        );
+        hot.submit(req(0, 8, 8));
+        hot.submit(req(1, 8, 8));
+        while hot.swapped() == 0 {
+            hot.step().unwrap();
+        }
+        assert!(hot.is_overloaded(), "blocked backlog must advertise overload");
+        let exported = hot.export_swapped().unwrap();
+        assert!(
+            !hot.is_overloaded(),
+            "drained engine must stop advertising overload without another step"
+        );
+
+        // hand the very same sequence back (as the rebalancer would when
+        // a peer bounces it): no step has run on `hot` since its flag was
+        // set, which is exactly the stale window
+        hot.import_swapped(exported);
+        assert_eq!(hot.swapped(), 1);
+        assert!(
+            !hot.is_overloaded(),
+            "freshly imported sequence hasn't attempted a resume; stale flag must not count"
+        );
+        // and the engine still finishes everything cleanly
+        let mut out = hot.run_to_completion().unwrap();
+        out.sort_by_key(|r| r.id);
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|r| r.tokens.len() == 8));
+        assert_eq!(hot.counters().exported, 1);
+        assert_eq!(hot.counters().imported, 1);
+        assert_eq!(hot.pool().free_blocks(), 4);
+        hot.pool().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn stripped_export_reprefills_on_import_and_continues_the_stream() {
+        // the cross-precision building block at engine level: strip the
+        // KV at export (as the cluster does when crossing a precision
+        // boundary) and verify the importer re-prefills and continues
+        // with exactly the tokens a teacher-forced oracle produces — here
+        // both engines share one precision, so the composite equals the
+        // plain unbatched stream and byte-identity is checkable directly
+        let mut plain = SimBackend::new(64, 64, vec![1, 2, 4, 8]);
+        let want = reference(&mut plain, &req(1, 8, 8).prompt, &req(1, 8, 8).params);
+
+        let mk = || {
+            Engine::new(
+                SimBackend::new(64, 64, vec![1, 2, 4, 8]),
+                EngineConfig { prefix_sharing: false, ..cfg(4, 4, 4) },
+            )
+        };
+        let mut src = mk();
+        let mut dst = mk();
+        src.submit(req(0, 8, 8));
+        src.submit(req(1, 8, 8));
+        while src.swapped() == 0 {
+            src.step().unwrap();
+        }
+        let peek = src.peek_swapped().unwrap();
+        assert!(dst.can_import_requant(peek.content, peek.budget));
+        let mut exported = src.export_swapped().unwrap();
+        assert!(!exported.needs_reprefill());
+        exported.strip_kv_for_requant();
+        assert!(exported.needs_reprefill());
+        assert_eq!(exported.kv.pos, 0, "carried KV dropped");
+        dst.import_swapped(exported);
+        let out = dst.run_to_completion().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].tokens, want, "re-prefilled stream ≡ oracle");
+        assert_eq!(dst.counters().reprefills, 1, "exactly one re-prefill");
+        assert_eq!(dst.counters().resumes, 1);
+        assert_eq!(dst.pool().free_blocks(), 4, "no leaked blocks after re-prefill");
+        dst.pool().check_invariants().unwrap();
+        src.run_to_completion().unwrap();
+        assert_eq!(src.pool().free_blocks(), 4);
     }
 
     #[test]

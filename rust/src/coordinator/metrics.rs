@@ -1,13 +1,18 @@
 //! Serving metrics: counters + latency percentiles, including the
 //! per-token latencies (TTFT, inter-token) the streaming delivery path
 //! records, resident-vs-swapped KV footprint gauges, prefix-cache
-//! hit/eviction gauges, and the cross-replica migration counter.
-//! Replica metrics merge into one cluster view via [`Metrics::merge`].
+//! hit/eviction gauges, and the cross-replica migration /
+//! cross-precision requantization counters.  Replica metrics merge into
+//! one cluster view via [`Metrics::merge`].  Percentiles are ceil-based
+//! nearest-rank over a sort-once [`LatencySnapshot`].
 
 use std::time::Instant;
 
-/// Latency sample store with percentile queries (exact, sort-on-read —
-/// fine for the demo scale; a production build would use t-digest).
+/// Latency sample store with percentile queries (exact — fine for the
+/// demo scale; a production build would use t-digest).  For several
+/// queries over the same state, take a [`LatencyStats::snapshot`] and
+/// query that: it sorts **once**, where the convenience
+/// [`LatencyStats::percentile`] sorts per call.
 #[derive(Debug, Default, Clone)]
 pub struct LatencyStats {
     samples: Vec<f64>,
@@ -29,15 +34,18 @@ impl LatencyStats {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
-    /// Exact percentile (nearest-rank); `p` in [0, 100].
+    /// Sort the samples once into a queryable [`LatencySnapshot`].
+    pub fn snapshot(&self) -> LatencySnapshot {
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        LatencySnapshot { sorted }
+    }
+
+    /// Exact percentile (ceil-based nearest-rank); `p` in [0, 100].
+    /// One-off convenience — sorts per call; use [`LatencyStats::snapshot`]
+    /// when querying several percentiles of the same state.
     pub fn percentile(&self, p: f64) -> f64 {
-        if self.samples.is_empty() {
-            return 0.0;
-        }
-        let mut v = self.samples.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
-        v[rank.min(v.len() - 1)]
+        self.snapshot().percentile(p)
     }
 
     pub fn max(&self) -> f64 {
@@ -47,6 +55,38 @@ impl LatencyStats {
     /// Fold another store's samples into this one (cluster aggregation).
     pub fn merge(&mut self, other: &LatencyStats) {
         self.samples.extend_from_slice(&other.samples);
+    }
+}
+
+/// Sorted-once view of a [`LatencyStats`]: percentile queries are an
+/// index, not a sort.
+#[derive(Debug, Clone)]
+pub struct LatencySnapshot {
+    sorted: Vec<f64>,
+}
+
+impl LatencySnapshot {
+    /// **Ceil-based nearest-rank** percentile: the smallest sample with
+    /// at least `p`% of the set at or below it — rank `⌈p/100 · n⌉`
+    /// (1-indexed), clamped to `[1, n]`.  The previous round-based rank
+    /// (`round(p/100 · (n−1))`) underreported tails on small samples:
+    /// p99 of 50 samples picked the 49th sample (the true p98) instead
+    /// of the 50th.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let n = self.sorted.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * n as f64).ceil() as usize;
+        self.sorted[rank.clamp(1, n) - 1]
+    }
+
+    pub fn max(&self) -> f64 {
+        self.sorted.last().copied().unwrap_or(0.0)
+    }
+
+    pub fn count(&self) -> usize {
+        self.sorted.len()
     }
 }
 
@@ -81,6 +121,12 @@ pub struct Metrics {
     /// Swapped sequences moved to a peer replica by the cluster's
     /// rebalancer (counted on the cluster clock, not per replica).
     pub migrations: u64,
+    /// Migrations that crossed a precision boundary — the carried KV was
+    /// dropped and the target re-prefills (counted on the cluster clock).
+    pub requants: u64,
+    /// KV rebuilds performed by THIS replica for cross-precision
+    /// arrivals: one prefill over prompt + generated tokens each.
+    pub reprefills: u64,
     pub queue: LatencyStats,
     pub ttft: LatencyStats,
     /// Inter-token latency: gap between consecutive streamed tokens of
@@ -157,6 +203,8 @@ impl Metrics {
         self.prefix_logical += other.prefix_logical;
         self.prefix_evictions += other.prefix_evictions;
         self.migrations += other.migrations;
+        self.requants += other.requants;
+        self.reprefills += other.reprefills;
         self.queue.merge(&other.queue);
         self.ttft.merge(&other.ttft);
         self.itl.merge(&other.itl);
@@ -164,9 +212,14 @@ impl Metrics {
     }
 
     pub fn report(&self) -> String {
+        // one sort per stat for the whole report (p50/p95/max each)
+        let queue = self.queue.snapshot();
+        let ttft = self.ttft.snapshot();
+        let itl = self.itl.snapshot();
+        let total = self.total.snapshot();
         format!(
             "requests: {}/{} done | tokens: {} | wall: {:.2}s | {:.1} tok/s | occupancy {:.2} | \
-             preempted {} (resumed {}, migrated {})\n\
+             preempted {} (resumed {}, migrated {}, requantized {})\n\
              kv tokens resident/swapped: {}/{} (peak swapped {})\n\
              prefix cache: {}/{} blocks hit ({:.0}%), {} evicted\n\
              queue  p50/p95/max: {:.1}/{:.1}/{:.1} ms\n\
@@ -182,6 +235,7 @@ impl Metrics {
             self.preemptions,
             self.resumes,
             self.migrations,
+            self.requants,
             self.kv_resident_tokens,
             self.kv_swapped_tokens,
             self.kv_swapped_peak,
@@ -189,18 +243,18 @@ impl Metrics {
             self.prefix_logical,
             100.0 * self.prefix_hit_rate(),
             self.prefix_evictions,
-            self.queue.percentile(50.0) * 1e3,
-            self.queue.percentile(95.0) * 1e3,
-            self.queue.max() * 1e3,
-            self.ttft.percentile(50.0) * 1e3,
-            self.ttft.percentile(95.0) * 1e3,
-            self.ttft.max() * 1e3,
-            self.itl.percentile(50.0) * 1e3,
-            self.itl.percentile(95.0) * 1e3,
-            self.itl.max() * 1e3,
-            self.total.percentile(50.0) * 1e3,
-            self.total.percentile(95.0) * 1e3,
-            self.total.max() * 1e3,
+            queue.percentile(50.0) * 1e3,
+            queue.percentile(95.0) * 1e3,
+            queue.max() * 1e3,
+            ttft.percentile(50.0) * 1e3,
+            ttft.percentile(95.0) * 1e3,
+            ttft.max() * 1e3,
+            itl.percentile(50.0) * 1e3,
+            itl.percentile(95.0) * 1e3,
+            itl.max() * 1e3,
+            total.percentile(50.0) * 1e3,
+            total.percentile(95.0) * 1e3,
+            total.max() * 1e3,
         )
     }
 }
@@ -217,9 +271,36 @@ mod tests {
         }
         assert_eq!(s.percentile(0.0), 1.0);
         assert_eq!(s.percentile(100.0), 10.0);
-        assert_eq!(s.percentile(50.0), 6.0); // nearest-rank on 10 samples
+        assert_eq!(s.percentile(50.0), 5.0); // ceil nearest-rank: ⌈0.5·10⌉ = 5th
         assert_eq!(s.max(), 10.0);
         assert!((s.mean() - 5.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_is_ceil_nearest_rank_on_the_tail() {
+        // the regression fixture: 50 samples 1..=50, recorded shuffled so
+        // the snapshot really sorts.  The old round-based rank
+        // (round(p/100·49)) underreported tails — p95 picked the 48th
+        // sample (the true p96 boundary sat at 47.5 and rounded down in
+        // half-even engines); ceil-based nearest-rank is the textbook
+        // definition: smallest sample with ≥ p% at or below it.
+        let mut s = LatencyStats::default();
+        for i in 0..50u64 {
+            s.record(((i * 37) % 50 + 1) as f64); // 1..=50, permuted
+        }
+        let snap = s.snapshot();
+        assert_eq!(snap.count(), 50);
+        assert_eq!(snap.percentile(99.0), 50.0, "p99 of 50 = ⌈49.5⌉ = 50th sample");
+        assert_eq!(snap.percentile(95.0), 48.0, "p95 of 50 = ⌈47.5⌉ = 48th sample");
+        assert_eq!(snap.percentile(50.0), 25.0);
+        assert_eq!(snap.percentile(2.0), 1.0);
+        assert_eq!(snap.percentile(0.0), 1.0, "p0 clamps to the minimum");
+        assert_eq!(snap.percentile(100.0), 50.0);
+        assert_eq!(snap.max(), 50.0);
+        // the one-off convenience agrees with the snapshot
+        assert_eq!(s.percentile(99.0), snap.percentile(99.0));
+        // empty stays zero
+        assert_eq!(LatencyStats::default().snapshot().percentile(50.0), 0.0);
     }
 
     #[test]
@@ -260,6 +341,8 @@ mod tests {
             prefix_logical: 8,
             prefix_evictions: 2,
             migrations: 3,
+            requants: 2,
+            reprefills: 1,
             ..Metrics::default()
         };
         std::thread::sleep(std::time::Duration::from_millis(2));
@@ -276,6 +359,8 @@ mod tests {
         assert_eq!(a.prefix_logical, 8);
         assert_eq!(a.prefix_evictions, 2);
         assert_eq!(a.migrations, 3);
+        assert_eq!(a.requants, 2);
+        assert_eq!(a.reprefills, 1);
         assert!((a.prefix_hit_rate() - 0.75).abs() < 1e-12);
         assert_eq!(a.wall_seconds(), wall, "merge keeps the aggregate's clock");
     }

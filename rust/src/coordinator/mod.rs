@@ -23,7 +23,12 @@
 //! * [`backend`]  — execution backend trait: `PjrtBackend` (real model
 //!   artifacts, `pjrt` feature) and `SimBackend` (deterministic stand-in
 //!   for tests and the coordinator bench; `with_ap_gemm` serves real
-//!   bitmm logits through the §3.3 pack-once pipeline).
+//!   bitmm logits through the §3.3 pack-once pipeline).  Weights live in
+//!   **one shared any-precision superset store per cluster**
+//!   (`superset_store` + `SimBackend::with_shared_store`): the pack
+//!   happens once at the widest precision served and every replica
+//!   slices its own plane prefix per step — no per-precision weight
+//!   duplication.
 //! * [`scheduler`]— group scheduler over the backend trait: admission,
 //!   prefill/decode interleaving, slot recycling (reserves each
 //!   sequence's full budget up front).
@@ -38,13 +43,17 @@
 //!   least-loaded, with optional precision pinning) and conserved load
 //!   accounting, transferred by `Router::migrate` when a sequence moves.
 //! * [`cluster`]  — **the multi-replica composition**: N engine replicas
-//!   (each its own `KvPool`/batcher/backend, possibly different W/A
-//!   precisions) behind the router, itself a [`Stepper`] — the serving
-//!   topology the ROADMAP's heavy-traffic north star calls for.  After
-//!   every step it **rebalances**: the oldest swapped sequences on
-//!   overloaded replicas migrate to same-precision peers with KV
-//!   headroom, streaming `TokenEvent::Migrated` in between `Preempted`
-//!   and the target's `Resumed`.
+//!   (each its own `KvPool`/batcher, all slicing one shared superset
+//!   weight store at their own W/A precision) behind the router, itself
+//!   a [`Stepper`] — the serving topology the ROADMAP's heavy-traffic
+//!   north star calls for.  After every step it **rebalances**: the
+//!   oldest swapped sequences on overloaded replicas migrate to
+//!   same-precision peers with KV headroom (`TokenEvent::Migrated`
+//!   between `Preempted` and the target's `Resumed`), and — for unpinned
+//!   requests with no same-precision escape — **across the precision
+//!   boundary**: the KV is dropped and the target re-prefills the prompt
+//!   + generated tokens at its own precision (`TokenEvent::Requantized`
+//!   after `Migrated`), streamed bytes unchanged.
 //! * [`metrics`]  — counters, latency percentiles (incl. streamed
 //!   TTFT/ITL), resident-vs-swapped KV and prefix-cache hit/eviction
 //!   gauges, the migration counter, and cross-replica merge.
@@ -65,12 +74,12 @@ pub mod scheduler;
 pub mod server;
 pub mod trace;
 
-pub use backend::{drive_unbatched, ApStats, Backend, SimBackend};
+pub use backend::{drive_unbatched, superset_store, ApStats, Backend, SimBackend};
 pub use batcher::{Batcher, BatcherConfig};
 pub use cluster::Cluster;
-pub use engine::{Engine, EngineConfig, EngineCounters, ExportedSeq};
+pub use engine::{Engine, EngineConfig, EngineCounters, ExportedSeq, SwappedPeek};
 pub use kv::{BlockId, EvictionPolicy, KvPool, KvSharing};
-pub use metrics::{LatencyStats, Metrics};
+pub use metrics::{LatencySnapshot, LatencyStats, Metrics};
 pub use request::{
     responses_of, sample_token, GenParams, Request, RequestId, Response, TokenEvent,
 };

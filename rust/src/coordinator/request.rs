@@ -101,12 +101,15 @@ impl Response {
 /// tokens reach clients as they are generated instead of at completion —
 /// per-request lifecycle plus one [`TokenEvent::Token`] per token.  Per
 /// request the stream is: `Admitted`, then `Token*` interleaved with
-/// `Preempted`/`Resumed` pairs (a cluster may insert `Migrated` between
+/// `Preempted`/`Resumed` pairs (a cluster may insert `Migrated` — and,
+/// when the move crosses a precision boundary, `Requantized` — between
 /// them when the rebalancer moves a swapped sequence to a peer replica),
 /// then `Finished`; a rejected request emits only `Finished` with an
 /// empty response.  The concatenation of a request's `Token` payloads is
 /// byte-identical to its final [`Response::tokens`] — migration included
-/// — pinned by the integration tests.
+/// — pinned by the integration tests.  Tokens streamed before a
+/// `Requantized` keep their bytes (the new replica re-prefills them as
+/// context); only *subsequent* tokens are generated at the new precision.
 #[derive(Debug, Clone)]
 pub enum TokenEvent {
     /// The request acquired KV blocks and prefilled.
@@ -119,6 +122,11 @@ pub enum TokenEvent {
     /// cluster replica indices); the stream stays paused until the
     /// target's `Resumed`.
     Migrated { id: RequestId, from: usize, to: usize },
+    /// The migration above crossed a precision boundary: the carried KV
+    /// was dropped and the target replica will re-prefill the prompt plus
+    /// every generated token at its own precision (`to_bits`) before
+    /// resuming.  Streams between `Migrated` and the target's `Resumed`.
+    Requantized { id: RequestId, from_bits: PrecisionConfig, to_bits: PrecisionConfig },
     /// Swapped back in; the stream resumes where it paused.
     Resumed { id: RequestId },
     /// Terminal: the full response (empty tokens = rejected).
@@ -133,6 +141,7 @@ impl TokenEvent {
             | TokenEvent::Token { id, .. }
             | TokenEvent::Preempted { id }
             | TokenEvent::Migrated { id, .. }
+            | TokenEvent::Requantized { id, .. }
             | TokenEvent::Resumed { id }
             | TokenEvent::Finished { id, .. } => *id,
         }

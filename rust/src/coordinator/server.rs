@@ -10,9 +10,10 @@
 //! response channel as they happen — clients see tokens at generation
 //! time, which is what makes TTFT/ITL real measurements instead of
 //! end-to-end latencies sliced after the fact.  A cluster's
-//! [`TokenEvent::Migrated`] rides the same channel: the client observes
-//! the replica hand-off as a pause annotation, never as a change in the
-//! token stream itself.
+//! [`TokenEvent::Migrated`] (and, across precision boundaries,
+//! [`TokenEvent::Requantized`]) rides the same channel: the client
+//! observes the replica hand-off as a pause annotation, never as a
+//! change in the already-streamed token bytes.
 //!
 //! PJRT handles are not `Send`, so the backend lives on the thread that
 //! calls [`Server::serve`]; request producers feed the `Sender` from any

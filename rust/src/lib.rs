@@ -9,12 +9,16 @@
 //! * [`bitfmt`]   — the bipolar-INT data format (§3.1) plus the signed /
 //!   unsigned baselines it is compared against.
 //! * [`bitmm`]    — bit-wise MatMul reconstitution (§3.2) around a
-//!   **prepacked kernel ABI**: [`bitmm::PackedPlanes`] is the canonical
-//!   operand every `apmm_*_packed` core consumes; `CodeMatrix` is a
+//!   **prepacked kernel ABI**: every `apmm_*_packed` core consumes the
+//!   [`bitmm::Planes`] operand — a full [`bitmm::PackedPlanes`] or a
+//!   zero-copy [`bitmm::PlaneView`] slicing the most-significant `k`
+//!   planes out of a packed superset (one n-bit weight serves every
+//!   `k ≤ n`, the Any-Precision trick); `CodeMatrix` is a
 //!   construction-time artifact packed **once** via [`bitmm::prepack`]
-//!   (weight `PlaneCache` / `PackedWeightStore`, activation `PackArena` —
-//!   the paper's §3.3 preprocessing + §3.4 recovery-oriented memory
-//!   management, realized on the CPU substrate).
+//!   (weight `PlaneCache` / `PackedWeightStore` with `get_at`
+//!   precision slicing, activation `PackArena` — the paper's §3.3
+//!   preprocessing + §3.4 recovery-oriented memory management, realized
+//!   on the CPU substrate).
 //! * [`quant`]    — symmetric bipolar quantizers (per-tensor / per-channel)
 //!   and baseline quantizers; weight quantizers can emit prepacked planes
 //!   directly (`quantize_*_packed`, `Quantized::prepack`).
@@ -30,12 +34,17 @@
 //!   always available.
 //! * [`coordinator`] — the serving layer: a **multi-replica cluster**
 //!   (`coordinator::cluster`) of continuous-batching engine replicas —
-//!   each with its own KV pool, batcher, and pack-once backend, possibly
-//!   at different W/A precisions — behind a routing policy
-//!   (round-robin / least-loaded, with per-request precision pinning),
-//!   with **preemptive rebalancing**: swapped sequences an overloaded
-//!   replica cannot resume migrate to same-precision peers and continue
-//!   their streams byte-identically.  The KV allocator uses **refcounted
+//!   each with its own KV pool and batcher, all serving their own W/A
+//!   precision out of **one shared superset weight store** (packed once
+//!   at the widest precision; no per-precision duplication) — behind a
+//!   routing policy (round-robin / least-loaded, with per-request
+//!   precision pinning), with **preemptive rebalancing**: swapped
+//!   sequences an overloaded replica cannot resume migrate to
+//!   same-precision peers and continue byte-identically, or — unpinned,
+//!   with no same-precision escape — **across the precision boundary**:
+//!   the KV is dropped and the target re-prefills prompt + generated
+//!   tokens at its own precision (`TokenEvent::Requantized`), streamed
+//!   bytes unchanged.  The KV allocator uses **refcounted
 //!   copy-on-write blocks with a hash-based prefix cache** (shared
 //!   prompt prefixes share physical blocks) over an **O(1) intrusive
 //!   free list in LRU eviction order** (hot prefix content outlives cold

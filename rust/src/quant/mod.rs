@@ -9,13 +9,18 @@
 //! Weight quantizers can emit prepacked planes directly
 //! (`quantize_*_packed` / [`Quantized::prepack`]) so serving never holds
 //! unpacked weight codes — see `bitmm::prepack` for the pack-once stores.
+//!
+//! An n-bit pack quantized here is an **any-precision superset**: its
+//! most-significant `k` planes are the k-bit quantization of the same
+//! weights with scales rescaled by [`view_scales`] (see
+//! `bitmm::PlaneView`), so one stored weight serves every `k ≤ n`.
 
 mod quantize;
 
 pub use quantize::{
     dequantize, quant_error, quantize_bipolar_per_channel, quantize_bipolar_per_channel_packed,
     quantize_bipolar_per_tensor, quantize_bipolar_per_tensor_packed, quantize_signed_per_channel,
-    QuantError, Quantized, QuantizedPacked,
+    view_scales, QuantError, Quantized, QuantizedPacked,
 };
 
 #[cfg(test)]

@@ -125,6 +125,23 @@ pub fn quantize_bipolar_per_tensor_packed(
     quantize_rows(x, rows, cols, bits, false).into_packed()
 }
 
+/// Rescale dequant scales for a `view_bits`-plane prefix view of a
+/// `full_bits` superset pack (the Any-Precision serving trick, per
+/// PAPERS.md): dropping the `full_bits − view_bits` least-significant
+/// planes divides every decoded bipolar magnitude by `2^(full−view)`, so
+/// the scale grows by the same factor —
+/// `x ≈ decode(c, full)·s ≈ decode(c >> (full−view), view) · s·2^(full−view)`.
+/// The residual of the dropped planes is bounded by `s·(2^(full−view)−1)`,
+/// i.e. exactly the coarser precision's quantization step.
+pub fn view_scales(scales: &[f32], full_bits: u32, view_bits: u32) -> Vec<f32> {
+    assert!(
+        (1..=full_bits).contains(&view_bits),
+        "view bits {view_bits} outside 1..={full_bits}"
+    );
+    let f = (1u64 << (full_bits - view_bits)) as f32;
+    scales.iter().map(|&s| s * f).collect()
+}
+
 /// Baseline: per-row signed (two's-complement) RTN quantization.  Returns
 /// codes in `bits`-wide two's complement; used by the format ablation.
 pub fn quantize_signed_per_channel(x: &[f32], rows: usize, cols: usize, bits: u32) -> Quantized {

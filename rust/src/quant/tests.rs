@@ -136,3 +136,38 @@ fn prop_negation_symmetry() {
         }
     });
 }
+
+#[test]
+fn view_scales_make_the_superset_serve_lower_precisions() {
+    use crate::bitmm::CodeMatrix;
+    // an n-bit quantization viewed at k bits (codes >> (n−k), scales ×
+    // 2^(n−k)) must reconstruct within the K-BIT quantization step: the
+    // dropped planes contribute at most s·(2^(n−k)−1) < rescaled scale
+    let (full, view) = (5u32, 2u32);
+    let x = randn(6 * 40, 7);
+    let q = quantize_bipolar_per_channel(&x, 6, 40, full);
+    let vs = view_scales(&q.scales, full, view);
+    for (r, (&s, &v)) in q.scales.iter().zip(&vs).enumerate() {
+        assert!((v - s * 8.0).abs() < 1e-12, "row {r}: 2^(5−2) rescale");
+    }
+    let shifted: Vec<u32> = q.codes.data.iter().map(|&c| c >> (full - view)).collect();
+    let trunc = Quantized { codes: CodeMatrix::new(6, 40, view, shifted), scales: vs };
+    let xh = dequantize(&trunc, IntFormat::Bipolar);
+    let xf = dequantize(&q, IntFormat::Bipolar);
+    for r in 0..6 {
+        let step = trunc.scales[r];
+        for c in 0..40 {
+            let d = (xf[r * 40 + c] - xh[r * 40 + c]).abs();
+            assert!(d < step, "r={r} c={c}: residual {d} ≥ view step {step}");
+        }
+    }
+    // degenerate and boundary cases
+    assert_eq!(view_scales(&[0.5], 4, 4), vec![0.5]);
+    assert_eq!(view_scales(&[0.5], 4, 1), vec![4.0]);
+}
+
+#[test]
+#[should_panic(expected = "view bits")]
+fn view_scales_reject_widening() {
+    view_scales(&[1.0], 2, 3);
+}

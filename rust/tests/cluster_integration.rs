@@ -14,12 +14,18 @@
 //!   under random churn;
 //! * after drain: zero leaked blocks or refcounts on every replica's
 //!   pool (`check_invariants`), and the router's load accounting is
-//!   conserved and empty — migration accounting included.
+//!   conserved and empty — migration accounting included;
+//! * (PR 5) a **mixed-precision cluster serves from one superset weight
+//!   store** — `packed_bytes` equals the superset pack alone — and a
+//!   swapped sequence **migrates across the precision boundary via
+//!   re-prefill** with a byte-identical greedy token stream (already
+//!   streamed bytes teacher-forced, continuation pinned by a composite
+//!   two-precision oracle) and zero leaked KV blocks on both replicas.
 
 use apllm::coordinator::trace::{generate, TraceConfig};
 use apllm::coordinator::{
-    drive_unbatched, responses_of, ArrivalKind, Cluster, EngineConfig, GenParams, Request,
-    RoutePolicy, SimBackend, Stepper, TokenEvent,
+    drive_unbatched, responses_of, sample_token, superset_store, ArrivalKind, Backend, Cluster,
+    EngineConfig, GenParams, Request, RoutePolicy, SimBackend, Stepper, TokenEvent,
 };
 use apllm::model::PrecisionConfig;
 use apllm::util::proptest::forall;
@@ -313,6 +319,159 @@ fn prop_migration_preserves_streams_with_zero_leaks_on_both_replicas() {
         total_migrations.get() > 0,
         "the hot/cold fixture must exercise migration at least once across seeds"
     );
+}
+
+#[test]
+fn mixed_precision_cluster_serves_one_store_and_requantizes_via_reprefill() {
+    // THE any-precision acceptance scenario: a W4A4 "hot" replica (tiny
+    // pool) and a W2A2 "cold" replica serve from ONE shared 4-bit
+    // superset store.  LeastLoaded lands A→hot, B→cold, C→hot; decoding
+    // preempts C on the hot replica with no same-precision peer, so the
+    // rebalancer crosses the precision boundary: C's KV is dropped, the
+    // cold replica re-prefills prompt + generated tokens at W2A2, and the
+    // stream continues — already-streamed bytes untouched, continuation
+    // generated at the new precision and pinned by a composite oracle.
+    let store = superset_store(64, 64, 4, 17);
+    let superset_bytes = store.packed_bytes();
+    assert!(superset_bytes > 0);
+    assert_eq!(store.packed_bytes_at(4), superset_bytes, "the superset IS the 4-bit pack");
+    assert_eq!(
+        store.packed_bytes_at(2) * 2,
+        superset_bytes,
+        "a dedicated 2-bit store would cost half the superset again"
+    );
+    let backend_at = |nw: u32, nx: u32| {
+        SimBackend::with_shared_store(256, vec![1, 2, 4, 8], store.clone(), nw, nx)
+    };
+
+    let mut cluster = Cluster::new(RoutePolicy::LeastLoaded);
+    cluster.add_replica(
+        "hot-w4",
+        PrecisionConfig::W4A4,
+        backend_at(4, 4),
+        EngineConfig { kv_blocks: 6, block_tokens: 4, ..engine_cfg(true) },
+    );
+    cluster.add_replica(
+        "cold-w2",
+        PrecisionConfig::W2A2,
+        backend_at(2, 2),
+        EngineConfig { kv_blocks: 32, block_tokens: 4, ..engine_cfg(true) },
+    );
+    // ONE store for the whole cluster: every replica reports the same
+    // superset bytes (count it once) and nobody packed anything itself
+    for eng in cluster.engines() {
+        assert_eq!(eng.backend().packed_weight_bytes(), superset_bytes);
+        assert_eq!(eng.backend().ap_stats().unwrap().weight_packs, 0, "packed once, outside");
+    }
+
+    let reqs: Vec<Request> = [100, 200, 300]
+        .iter()
+        .enumerate()
+        .map(|(i, &base)| {
+            Request::new(
+                i as u64,
+                (base..base + 12).collect(),
+                GenParams { max_new_tokens: 8, sample: false, seed: i as u64 },
+            )
+        })
+        .collect();
+    for r in &reqs {
+        cluster.submit(r.clone());
+    }
+    let events = cluster.run_to_completion_events().unwrap();
+
+    // exactly one cross-precision migration, with the full stream grammar
+    let requants: Vec<_> = events
+        .iter()
+        .filter_map(|ev| match ev {
+            TokenEvent::Requantized { id, from_bits, to_bits } => {
+                Some((id.0, *from_bits, *to_bits))
+            }
+            _ => None,
+        })
+        .collect();
+    assert_eq!(requants, vec![(2, PrecisionConfig::W4A4, PrecisionConfig::W2A2)]);
+    assert_eq!(cluster.migrations(), 1);
+    assert_eq!(cluster.requants(), 1);
+    assert_eq!(cluster.engine(0).counters().exported, 1);
+    assert_eq!(cluster.engine(1).counters().imported, 1);
+    assert_eq!(cluster.engine(1).counters().reprefills, 1, "cold rebuilt C's KV at W2A2");
+    assert_eq!(cluster.engine(1).counters().resumes, 1);
+    let lifecycle: Vec<&TokenEvent> = events
+        .iter()
+        .filter(|ev| {
+            ev.id().0 == 2
+                && !matches!(ev, TokenEvent::Token { .. } | TokenEvent::Admitted { .. })
+        })
+        .collect();
+    assert!(matches!(lifecycle[0], TokenEvent::Preempted { .. }), "{lifecycle:?}");
+    assert!(matches!(lifecycle[1], TokenEvent::Migrated { from: 0, to: 1, .. }), "{lifecycle:?}");
+    assert!(matches!(lifecycle[2], TokenEvent::Requantized { .. }), "{lifecycle:?}");
+    assert!(matches!(lifecycle[3], TokenEvent::Resumed { .. }), "{lifecycle:?}");
+
+    // per-request streams
+    let mut streams: HashMap<u64, Vec<i32>> = HashMap::new();
+    let mut c_tokens_before_requant = 0usize;
+    let mut seen_requant = false;
+    for ev in &events {
+        match ev {
+            TokenEvent::Requantized { .. } => seen_requant = true,
+            TokenEvent::Token { id, token, .. } => {
+                if id.0 == 2 && !seen_requant {
+                    c_tokens_before_requant += 1;
+                }
+                streams.entry(id.0).or_default().push(*token);
+            }
+            _ => {}
+        }
+    }
+    let mut out = responses_of(&events);
+    out.sort_by_key(|r| r.id);
+    assert_eq!(out.len(), 3);
+    for resp in &out {
+        assert_eq!(streams[&resp.id.0], resp.tokens, "stream ≠ response for {:?}", resp.id);
+        assert_eq!(resp.tokens.len(), 8);
+    }
+
+    // A ran wholly at W4A4, B wholly at W2A2: plain unbatched oracles
+    // over fresh backends sharing the SAME store
+    let mut oracle4 = backend_at(4, 4);
+    let mut oracle2 = backend_at(2, 2);
+    let want_a = drive_unbatched(&mut oracle4, &reqs[0].prompt, &reqs[0].params).unwrap();
+    let want_b = drive_unbatched(&mut oracle2, &reqs[1].prompt, &reqs[1].params).unwrap();
+    assert_eq!(out[0].tokens, want_a, "A ≠ W4A4 oracle");
+    assert_eq!(out[1].tokens, want_b, "B ≠ W2A2 oracle");
+
+    // C is the composite: its first g tokens are the W4A4 stream's
+    // prefix (BYTE-IDENTICAL — requantization must not rewrite history),
+    // and the continuation is exactly what a W2A2 re-prefill of
+    // prompt + those tokens generates (greedy, seeded per step)
+    let g = c_tokens_before_requant;
+    assert!(g >= 1 && g < 8, "C must be mid-stream when it requantizes, got {g}");
+    let want_c4 = drive_unbatched(&mut oracle4, &reqs[2].prompt, &reqs[2].params).unwrap();
+    assert_eq!(out[2].tokens[..g], want_c4[..g], "pre-requant bytes rewritten");
+    let mut want_c = out[2].tokens[..g].to_vec();
+    let mut content = reqs[2].prompt.clone();
+    content.extend_from_slice(&want_c[..g - 1]); // the gth token hasn't been fed yet
+    let (_discarded, mut kv) = oracle2.prefill_one(&content).unwrap();
+    while want_c.len() < reqs[2].params.max_new_tokens {
+        let step = want_c.len();
+        let logits = oracle2.decode_batch(&[want_c[step - 1]], &mut [&mut kv]).unwrap();
+        want_c.push(sample_token(&logits[0], &reqs[2].params, step));
+    }
+    assert_eq!(out[2].tokens, want_c, "C ≠ composite W4A4→re-prefill→W2A2 oracle");
+    // (whether the W2A2 tail *happens* to coincide with the W4A4 one is
+    // model-dependent; the backend unit tests pin that the two precisions
+    // really read different plane prefixes)
+
+    // zero leaks on BOTH replicas, conserved router, balanced accounting
+    cluster.check_invariants().unwrap();
+    for (i, eng) in cluster.engines().iter().enumerate() {
+        assert_eq!(eng.pool().free_blocks(), eng.pool().total_blocks(), "replica {i} leaked");
+        assert_eq!(eng.pool().used_blocks(), 0, "replica {i} leaked refcounts");
+    }
+    assert_eq!(cluster.router().inflight(), 0);
+    assert_eq!(cluster.router().migrated, 1);
 }
 
 #[test]

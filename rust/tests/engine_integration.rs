@@ -174,10 +174,10 @@ fn event_stream_lifecycle_is_well_formed_under_preemption_churn() {
                 assert_eq!(*st, St::Running, "req {id} preempted while {st:?}");
                 *st = St::Swapped;
             }
-            TokenEvent::Migrated { .. } => {
+            TokenEvent::Migrated { .. } | TokenEvent::Requantized { .. } => {
                 // only a cluster's rebalancer emits these, and only for
                 // swapped sequences; a lone engine must never produce one
-                panic!("req {id} migrated outside a cluster");
+                panic!("req {id} migrated/requantized outside a cluster");
             }
             TokenEvent::Resumed { .. } => {
                 assert_eq!(*st, St::Swapped, "req {id} resumed while {st:?}");
