@@ -3,7 +3,7 @@
 
 use apllm::bench::bench_fn;
 use apllm::coordinator::{
-    Batcher, BatcherConfig, GenParams, Request, Scheduler, SchedulerConfig, SimBackend,
+    Backend, Batcher, BatcherConfig, GenParams, Request, Scheduler, SchedulerConfig, SimBackend,
 };
 use std::time::{Duration, Instant};
 
@@ -43,9 +43,11 @@ fn main() {
 
     println!("\n== coordinator: pack-once AP-GEMM backend (real bitmm logits) ==");
     {
-        let run = || {
+        let run = |workers: usize| {
+            let mut backend = SimBackend::with_ap_gemm(256, 128, vec![1, 2, 4, 8], 256, 2, 2, 7);
+            backend.set_workers(workers);
             let mut s = Scheduler::new(
-                SimBackend::with_ap_gemm(256, 128, vec![1, 2, 4, 8], 256, 2, 2, 7),
+                backend,
                 SchedulerConfig { kv_blocks: 256, block_tokens: 16, max_running: 8 },
             );
             for i in 0..32usize {
@@ -59,10 +61,13 @@ fn main() {
             assert_eq!(out.len(), 32);
             s
         };
-        bench_fn("scheduler 32 reqs over prepacked W2A2 lm-head", 1, 5, || {
-            std::hint::black_box(run());
-        });
-        let s = run();
+        for workers in [1usize, 2] {
+            let label = format!("scheduler 32 reqs over prepacked W2A2 lm-head, {workers}w");
+            bench_fn(&label, 1, 5, || {
+                std::hint::black_box(run(workers));
+            });
+        }
+        let s = run(1);
         let stats = s.backend().ap_stats().unwrap();
         println!(
             "  tok/s {:.0}; weight packs {} (packed once, {} bytes resident), act packs {}, arena allocs {}, reuses {}",

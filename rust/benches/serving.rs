@@ -1,6 +1,6 @@
 //! Steady-state serving bench: Poisson arrivals replayed in wall-clock
 //! time through the continuous-batching engine over the pack-once AP-GEMM
-//! backend (real prepacked bitmm logits).  Three sections:
+//! backend (real prepacked bitmm logits).  Sections:
 //!
 //! 1. rate × throughput/latency table (TTFT/ITL percentiles come from the
 //!    streamed per-token events);
@@ -19,6 +19,13 @@
 //!    replica so preemptive rebalancing is visible — with per-replica
 //!    load/KV/migration breakdown.
 //!
+//! 5. **thread scaling** — the intra-replica GEMM sharding tentpole: a
+//!    prepacked W4A4 GEMM microbench across every shard policy
+//!    (rows/cols/planes) × worker count (1/2/4), each run asserted
+//!    bit-identical to the serial kernel, plus end-to-end engine
+//!    tokens/s at 1/2/4 workers over one trace with the token streams
+//!    asserted byte-identical across worker counts.
+//!
 //! `cargo bench --bench serving` for the full table; pass `--smoke` for
 //! the one-row CI job (and `--smoke --cluster` for the cluster smoke)
 //! that keeps these paths building and running.  `--json <path>` emits
@@ -27,6 +34,7 @@
 //! where zero would mean "the bench measured nothing") and panics on
 //! violations so a rotten run fails the job instead of shipping NaNs.
 
+use apllm::bitmm::{apmm_bipolar_packed_into, pack_codes, ApmmOpts, CodeMatrix, ShardPolicy};
 use apllm::coordinator::trace::{generate, TimedRequest, TraceConfig};
 use apllm::coordinator::{
     replay_trace, responses_of, superset_store, ArrivalKind, BatcherConfig, Cluster, Engine,
@@ -35,7 +43,7 @@ use apllm::coordinator::{
 use apllm::model::PrecisionConfig;
 use apllm::util::json::Json;
 use std::collections::BTreeMap;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn ap_backend() -> SimBackend {
     SimBackend::with_ap_gemm(256, 512, vec![1, 2, 4, 8], 128, 2, 2, 7)
@@ -49,6 +57,7 @@ fn engine_cfg(prefix_sharing: bool, eviction: EvictionPolicy, kv_blocks: usize) 
         batcher: BatcherConfig { batch_sizes: vec![1, 2, 4, 8], max_wait: Duration::ZERO },
         prefix_sharing,
         eviction,
+        workers: 0,
     }
 }
 
@@ -355,6 +364,95 @@ fn mixed_precision(rate: f64, requests: usize) -> Json {
     ])
 }
 
+/// Intra-replica GEMM sharding scaling: microbench every shard policy ×
+/// worker count on one prepacked W4A4 GEMM (decode-shaped: large M = the
+/// vocab, small N = the batch), asserting each run bit-identical to the
+/// serial kernel, then the same worker sweep end-to-end through the
+/// engine with the token streams asserted byte-identical.  The first
+/// table pass warms every pool, so the timed `speedup_2w` ratio CI gates
+/// on measures steady-state dispatch, not thread spawn.
+fn thread_scaling(smoke: bool) -> Json {
+    let (m, k, n, iters) = if smoke { (512, 512, 32, 3) } else { (1024, 1024, 64, 5) };
+    println!("\n== serving: thread scaling (worker pool, {m}x{k}x{n} W4A4 GEMM shards) ==");
+    let wp = pack_codes(&CodeMatrix::random(m, k, 4, 11));
+    let xp = pack_codes(&CodeMatrix::random(n, k, 4, 13));
+    let serial_opts = ApmmOpts { shard: ShardPolicy::Serial, ..ApmmOpts::default() };
+    let mut serial = vec![0i32; m * n];
+    apmm_bipolar_packed_into(&wp, &xp, serial_opts, &mut serial);
+
+    let policies =
+        [("rows", ShardPolicy::Rows), ("cols", ShardPolicy::Cols), ("planes", ShardPolicy::Planes)];
+    println!("  {:>8} {:>8} {:>10}", "policy", "workers", "best ms");
+    let mut gemm_rows = Vec::new();
+    let mut rows_best = BTreeMap::new();
+    let mut y = vec![0i32; m * n];
+    for (label, shard) in policies {
+        for workers in [1usize, 2, 4] {
+            let opts = ApmmOpts { shard, workers, ..ApmmOpts::default() };
+            let mut best = f64::INFINITY;
+            for _ in 0..iters {
+                let t0 = Instant::now();
+                apmm_bipolar_packed_into(&wp, &xp, opts, &mut y);
+                best = best.min(t0.elapsed().as_secs_f64());
+            }
+            assert_eq!(y, serial, "{label} @ {workers}w must be bit-identical to serial");
+            if shard == ShardPolicy::Rows {
+                rows_best.insert(workers, best);
+            }
+            println!("  {label:>8} {workers:>8} {:>10.3}", best * 1e3);
+            gemm_rows.push(obj(vec![
+                ("policy", Json::Str(label.into())),
+                ("workers", pos("workers", workers as f64)),
+                ("best_ms", pos("best_ms", best * 1e3)),
+            ]));
+        }
+    }
+    let speedup_2w = rows_best[&1] / rows_best[&2];
+    println!("  rows-policy speedup at 2 workers: {speedup_2w:.2}x");
+
+    // end-to-end: same trace at 1/2/4 engine workers; throughput may move,
+    // the streamed bytes must not
+    let (rate, requests) = if smoke { (400.0, 8) } else { (200.0, 48) };
+    let trace = shared_prefix_trace(rate, requests);
+    let mut engine_rows = Vec::new();
+    let mut reference: Option<Vec<(u64, usize, i32)>> = None;
+    for workers in [1usize, 2, 4] {
+        let cfg = EngineConfig { workers, ..engine_cfg(true, EvictionPolicy::Lru, 96) };
+        let mut eng = Engine::new(ap_backend(), cfg);
+        let events = replay_trace(&mut eng, &trace).expect("replay");
+        // wall-clock replay interleaves requests differently run to run;
+        // per-request streams are the deterministic contract, so compare
+        // (id, step, token) triples order-insensitively
+        let mut stream: Vec<(u64, usize, i32)> = events
+            .iter()
+            .filter_map(|e| match e {
+                TokenEvent::Token { id, token, step } => Some((id.0, *step, *token)),
+                _ => None,
+            })
+            .collect();
+        stream.sort_unstable();
+        match &reference {
+            None => reference = Some(stream),
+            Some(r) => {
+                assert_eq!(&stream, r, "token stream must be byte-identical at {workers} workers")
+            }
+        }
+        let tok_s = eng.metrics.throughput_tok_s();
+        let done = eng.metrics.requests_done;
+        println!("  engine @ {workers}w: {done:>4} done | {tok_s:>7.0} tok/s");
+        engine_rows.push(obj(vec![
+            ("workers", pos("workers", workers as f64)),
+            ("done", pos("done", done as f64)),
+            ("tok_s", pos("tok_s", tok_s)),
+        ]));
+    }
+    obj(vec![
+        ("gemm", Json::Arr(gemm_rows)),
+        ("gemm_speedup_2w", pos("gemm_speedup_2w", speedup_2w)),
+        ("engine", Json::Arr(engine_rows)),
+    ])
+}
+
 fn cluster(rate: f64, requests: usize, replicas: usize) -> Json {
     println!(
         "\n== serving: {replicas}-replica cluster (LeastLoaded router, hot replica 0), \
@@ -454,6 +552,7 @@ fn main() {
         let (pr_rate, pr_requests) = if smoke { (400.0, 12) } else { (200.0, 64) };
         report.insert("prefix_sharing".into(), prefix_sharing(pr_rate, pr_requests));
         report.insert("mixed_precision".into(), mixed_precision(pr_rate, pr_requests));
+        report.insert("thread_scaling".into(), thread_scaling(smoke));
     }
 
     if let Some(path) = json_path {

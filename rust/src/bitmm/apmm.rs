@@ -18,25 +18,129 @@
 //! * `apmm_*` on [`CodeMatrix`] — thin pack-then-call convenience wrapper
 //!   (construction-time / test use; it re-packs both operands per call
 //!   and is therefore **not** hot-path-safe).
+//!
+//! ## Sharding (paper §3.2 on a worker pool)
+//!
+//! The cores fan out over a persistent [`WorkerPool`] along one of three
+//! axes, selected by [`ApmmOpts::shard`]:
+//!
+//! * [`ShardPolicy::Rows`] — output row blocks of `tile_m` rows, the
+//!   classic axis (best when `m` is large: the serving logits GEMM has
+//!   `m = vocab`);
+//! * [`ShardPolicy::Cols`] — output column blocks of `tile_n` columns,
+//!   for wide-N shapes where `m` alone can't feed every worker;
+//! * [`ShardPolicy::Planes`] — bit-plane pairs: each `(i, j)` plane
+//!   product is an **independent partial sum** recombined by a
+//!   `<< (i+j)`-weighted add (§3.2's decomposition), so shards accumulate
+//!   disjoint pair subsets into per-shard `i64` buffers and a serial pass
+//!   recombines them.  This parallelizes even the `m == 1`, small-`n`
+//!   decode shape, where neither output axis has enough grains.
+//!
+//! All arithmetic is exact in `i64`, so every policy × worker count is
+//! **bit-identical** to the serial kernel (property-tested in
+//! `super::tests`).  [`ShardPolicy::Auto`] picks an axis from
+//! `(m, n, nw·nx)` and the pool size.
+
+use std::sync::Arc;
 
 use super::gemm1b::{and_popcount_dot, xor_popcount_dot};
 use super::planes::{pack_codes, CodeMatrix, Planes, MAX_BITS};
 use crate::bitfmt::{plane_weight, IntFormat};
-use crate::util::par_chunks_mut;
+use crate::util::par::{chunks_on, par_chunks_mut, pool_of, SendPtr, WorkerPool};
+
+/// Which axis of the output (or of the bit-plane decomposition) to shard
+/// across pool workers.  Every policy is bit-identical to [`Serial`][Self::Serial].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// Single-threaded reference path.
+    Serial,
+    /// Output row blocks of `tile_m` rows (today's axis; large-`m` shapes).
+    Rows,
+    /// Output column blocks of `tile_n` columns (small-`m`, wider-`n`).
+    Cols,
+    /// Bit-plane `(i, j)` pairs, recombined by shifted add (§3.2) — the
+    /// only axis with grains left at the `m == 1` decode shape.
+    Planes,
+    /// Heuristic choice from `(m, n, nw·nx)` and the pool size.
+    Auto,
+}
+
+impl ShardPolicy {
+    /// Every policy, for exhaustive equivalence tests.
+    pub const ALL: [ShardPolicy; 5] = [
+        ShardPolicy::Serial,
+        ShardPolicy::Rows,
+        ShardPolicy::Cols,
+        ShardPolicy::Planes,
+        ShardPolicy::Auto,
+    ];
+
+    /// Resolve `Auto` (and degenerate worker counts) to a concrete axis.
+    /// Preference order at saturation: rows (zero recombine cost, best
+    /// locality), then columns (also recombine-free but finer-grained),
+    /// then plane pairs (pays an `m·n·shards` recombine buffer, but is
+    /// the only axis that scales the decode shape).
+    fn resolve(
+        self,
+        m: usize,
+        n: usize,
+        pairs: usize,
+        tile_m: usize,
+        tile_n: usize,
+        workers: usize,
+    ) -> ShardPolicy {
+        if workers <= 1 {
+            return ShardPolicy::Serial;
+        }
+        match self {
+            ShardPolicy::Auto => {
+                let row_blocks = m.div_ceil(tile_m);
+                let col_blocks = n.div_ceil(tile_n);
+                if row_blocks >= workers {
+                    ShardPolicy::Rows
+                } else if col_blocks >= workers {
+                    ShardPolicy::Cols
+                } else if pairs >= workers {
+                    ShardPolicy::Planes
+                } else if row_blocks >= col_blocks && row_blocks >= pairs && row_blocks > 1 {
+                    ShardPolicy::Rows
+                } else if col_blocks >= pairs && col_blocks > 1 {
+                    ShardPolicy::Cols
+                } else if pairs > 1 {
+                    ShardPolicy::Planes
+                } else {
+                    ShardPolicy::Serial
+                }
+            }
+            p => p,
+        }
+    }
+}
 
 /// Kernel options (the §4.2 knobs that exist on a CPU).
 #[derive(Debug, Clone, Copy)]
 pub struct ApmmOpts {
-    /// Parallelize over output row blocks (util::par thread pool).
-    pub parallel: bool,
+    /// Sharding axis across pool workers (see [`ShardPolicy`]).
+    pub shard: ShardPolicy,
     /// Output row/col tile (cache blocking — the shared-memory analog).
     pub tile_m: usize,
     pub tile_n: usize,
+    /// Worker-pool size for this GEMM; `0` means the global
+    /// [`crate::util::num_threads`] default.  Pools are shared per size
+    /// process-wide, so replicas with equal budgets reuse one pool.
+    pub workers: usize,
 }
 
 impl Default for ApmmOpts {
     fn default() -> Self {
-        Self { parallel: true, tile_m: 32, tile_n: 32 }
+        Self { shard: ShardPolicy::Auto, tile_m: 32, tile_n: 32, workers: 0 }
+    }
+}
+
+impl ApmmOpts {
+    /// The (cached, persistent) pool this GEMM dispatches on.
+    fn pool(&self) -> Arc<WorkerPool> {
+        pool_of(self.workers)
     }
 }
 
@@ -82,7 +186,8 @@ pub fn apmm_bipolar_packed<W: Planes, X: Planes>(wp: &W, xp: &X, opts: ApmmOpts)
 
 /// The hot-path core: prepacked operands in (full packs or any-precision
 /// [`super::planes::PlaneView`]s), caller-provided output buffer, **zero**
-/// packing and zero heap allocation.
+/// packing and zero heap allocation on the row/col shard paths (the
+/// plane-pair path allocates its per-shard recombine buffer).
 pub fn apmm_bipolar_packed_into<W: Planes, X: Planes>(
     wp: &W,
     xp: &X,
@@ -91,18 +196,57 @@ pub fn apmm_bipolar_packed_into<W: Planes, X: Planes>(
 ) {
     assert_eq!(wp.cols(), xp.cols(), "inner dimension mismatch");
     assert_eq!(wp.kw(), xp.kw(), "packed word-count mismatch");
-    assert_eq!(y.len(), wp.rows() * xp.rows(), "output buffer size");
-    assert!(opts.tile_m > 0 && opts.tile_n > 0, "tiles must be non-empty");
-    let (m, n, k) = (wp.rows(), xp.rows(), wp.cols());
-    if m == 0 || n == 0 {
-        return; // empty output; avoids the zero-size row-block chunks below
-    }
+    let k = wp.cols();
     let (nw, nx) = (wp.bits(), xp.bits());
     // bits ≤ MAX_BITS is a PackedPlanes construction invariant, so these
     // widened shifts cannot overflow.  C stays in i64: at 16×16 bits and
     // LLM-scale K it exceeds i32::MAX long before the final result does.
     let c_const = k as i64 * ((1i64 << nw) - 1) * ((1i64 << nx) - 1);
+    apmm_pairs_sharded(
+        wp,
+        xp,
+        opts,
+        // the bipolar recovery weight: −2 · 2^{i+j} (i+j ≤ 30, exact)
+        |i, j| -(1i64 << (i + j + 1)),
+        xor_popcount_dot,
+        |acc| checked_i32(c_const + acc),
+        y,
+    );
+}
 
+/// The shared sharded core of every prepacked plane-pair GEMM:
+/// `Y[m,n] = finish(Σ_{i,j} pair_weight(i,j) · dot(W_i[m], X_j[n]))`.
+///
+/// All accumulation is exact `i64`, so any grouping of the `(i, j)` pair
+/// sum — by row block, column block, or plane-pair shard — produces
+/// bit-identical output; the shard axis is purely a scheduling choice.
+fn apmm_pairs_sharded<W, X, PW, D, FIN>(
+    wp: &W,
+    xp: &X,
+    opts: ApmmOpts,
+    pair_weight: PW,
+    dot: D,
+    finish: FIN,
+    y: &mut [i32],
+) where
+    W: Planes,
+    X: Planes,
+    PW: Fn(u32, u32) -> i64 + Sync,
+    D: Fn(&[u64], &[u64]) -> u32 + Sync,
+    FIN: Fn(i64) -> i32 + Sync,
+{
+    assert_eq!(y.len(), wp.rows() * xp.rows(), "output buffer size");
+    assert!(opts.tile_m > 0 && opts.tile_n > 0, "tiles must be non-empty");
+    let (m, n) = (wp.rows(), xp.rows());
+    if m == 0 || n == 0 {
+        return; // empty output; avoids zero-size chunks below
+    }
+    let (nw, nx) = (wp.bits() as usize, xp.bits() as usize);
+    let pairs = nw * nx;
+    let pool = opts.pool();
+    let axis = opts.shard.resolve(m, n, pairs, opts.tile_m, opts.tile_n, pool.size());
+
+    // Row-block body; Serial runs it over the whole output in one call.
     let body = |mb: usize, rows_out: &mut [i32]| {
         // rows_out holds whole output rows, so this division is exact even
         // for the ragged last chunk (m % tile_m != 0).
@@ -115,45 +259,106 @@ pub fn apmm_bipolar_packed_into<W: Planes, X: Planes>(
         for nb in (0..n).step_by(opts.tile_n) {
             let n_hi = (nb + opts.tile_n).min(n);
             for mi in mb..m_hi {
-                for (i, slot) in wr.iter_mut().enumerate().take(nw as usize) {
+                for (i, slot) in wr.iter_mut().enumerate().take(nw) {
                     *slot = wp.row(i as u32, mi);
                 }
                 let out_row = &mut rows_out[(mi - mb) * n..(mi - mb + 1) * n];
                 for ni in nb..n_hi {
-                    for (j, slot) in xr.iter_mut().enumerate().take(nx as usize) {
+                    for (j, slot) in xr.iter_mut().enumerate().take(nx) {
                         *slot = xp.row(j as u32, ni);
                     }
-                    out_row[ni] = checked_i32(
-                        c_const - 2 * plane_pair_sum(&wr[..nw as usize], &xr[..nx as usize]),
-                    );
+                    out_row[ni] = finish(pair_sum(&wr[..nw], &xr[..nx], &pair_weight, &dot));
                 }
             }
         }
     };
 
-    if opts.parallel && m >= 2 * opts.tile_m {
-        par_chunks_mut(y, opts.tile_m * n, |bi, chunk| body(bi * opts.tile_m, chunk));
-    } else {
-        body(0, y);
+    match axis {
+        ShardPolicy::Serial | ShardPolicy::Auto => body(0, y),
+        ShardPolicy::Rows => {
+            chunks_on(&pool, y, opts.tile_m * n, |bi, chunk| body(bi * opts.tile_m, chunk));
+        }
+        ShardPolicy::Cols => {
+            let col_blocks = n.div_ceil(opts.tile_n);
+            let out = SendPtr::new(y.as_mut_ptr());
+            pool.run(col_blocks, |cb| {
+                let nb = cb * opts.tile_n;
+                let n_hi = (nb + opts.tile_n).min(n);
+                let mut wr: [&[u64]; MAX_BITS as usize] = [&[]; MAX_BITS as usize];
+                let mut xr: [&[u64]; MAX_BITS as usize] = [&[]; MAX_BITS as usize];
+                for mi in 0..m {
+                    for (i, slot) in wr.iter_mut().enumerate().take(nw) {
+                        *slot = wp.row(i as u32, mi);
+                    }
+                    for ni in nb..n_hi {
+                        for (j, slot) in xr.iter_mut().enumerate().take(nx) {
+                            *slot = xp.row(j as u32, ni);
+                        }
+                        let v = finish(pair_sum(&wr[..nw], &xr[..nx], &pair_weight, &dot));
+                        // SAFETY: column block `cb` exclusively owns every
+                        // `ni ∈ [nb, n_hi)`, so writes never alias.
+                        unsafe { *out.get().add(mi * n + ni) = v };
+                    }
+                }
+            });
+        }
+        ShardPolicy::Planes => {
+            // §3.2: each (i, j) plane product is an independent partial
+            // sum.  Shard the pair list round-robin; every shard owns a
+            // private m·n i64 accumulator, recombined serially below —
+            // exact integer adds, so grouping cannot change the result.
+            let shards = pool.size().min(pairs);
+            let mn = m * n;
+            let mut partial = vec![0i64; shards * mn];
+            let pp = SendPtr::new(partial.as_mut_ptr());
+            pool.run(shards, |s| {
+                // SAFETY: shard `s` exclusively owns its m·n slice.
+                let acc = unsafe { std::slice::from_raw_parts_mut(pp.get().add(s * mn), mn) };
+                let mut p = s;
+                while p < pairs {
+                    let (i, j) = ((p / nx) as u32, (p % nx) as u32);
+                    let wgt = pair_weight(i, j);
+                    for mi in 0..m {
+                        let wr = wp.row(i, mi);
+                        let row = &mut acc[mi * n..(mi + 1) * n];
+                        for (ni, a) in row.iter_mut().enumerate() {
+                            *a += wgt * dot(wr, xp.row(j, ni)) as i64;
+                        }
+                    }
+                    p += shards;
+                }
+            });
+            for (e, out) in y.iter_mut().enumerate() {
+                let mut acc = 0i64;
+                for s in 0..shards {
+                    acc += partial[s * mn + e];
+                }
+                *out = finish(acc);
+            }
+        }
     }
 }
 
-/// Σ_{i,j} popc(W_i ^ X_j) << (i+j) for one output element.  Row slices
-/// are hoisted by the caller (§4.2 ④'s reuse analog); each pair runs a
-/// tight 4-way-unrolled XOR/popcount loop with independent accumulators
-/// to break the popcnt dependency chain.
+/// Σ_{i,j} pair_weight(i,j) · dot(W_i, X_j) for one output element.  Row
+/// slices are hoisted by the caller (§4.2 ④'s reuse analog); each pair
+/// runs a tight 4-way-unrolled popcount loop with independent
+/// accumulators to break the popcnt dependency chain.
 ///
-/// Accumulates in `i64`: popc ≤ K and the shift reaches 2·(bits−1), so at
-/// LLM-scale K (≈4k–100k) with 8-bit operands the partial sum overflows
-/// both the `u32` shift and an `i32` accumulator — the result would wrap
+/// Accumulates in `i64`: popc ≤ K and the pair weight reaches
+/// `2^{2·(bits−1)+1}`, so at LLM-scale K (≈4k–100k) with 8-bit operands
+/// the partial sum overflows an `i32` accumulator — the result would wrap
 /// silently and the kernel would return wrong logits at exactly the
 /// shapes that matter.
 #[inline(always)]
-fn plane_pair_sum(wr: &[&[u64]], xr: &[&[u64]]) -> i64 {
+fn pair_sum<PW, D>(wr: &[&[u64]], xr: &[&[u64]], pair_weight: &PW, dot: &D) -> i64
+where
+    PW: Fn(u32, u32) -> i64,
+    D: Fn(&[u64], &[u64]) -> u32,
+{
     let mut acc = 0i64;
     for (i, w) in wr.iter().enumerate() {
         for (j, x) in xr.iter().enumerate() {
-            acc += (xor_popcount_dot(w, x) as i64) << (i + j);
+            acc += pair_weight(i as u32, j as u32) * dot(w, x) as i64;
         }
     }
     acc
@@ -233,30 +438,32 @@ fn apmm_weighted(w: &CodeMatrix, xt: &CodeMatrix, fmt: IntFormat) -> Vec<i32> {
 }
 
 /// Prepacked AND-plane GEMM with per-plane recovery weights under `fmt`
-/// (the signed/unsigned baselines share this core).
+/// (the signed/unsigned baselines share this core), default options.
 pub fn apmm_weighted_packed<W: Planes, X: Planes>(wp: &W, xp: &X, fmt: IntFormat) -> Vec<i32> {
+    apmm_weighted_packed_opts(wp, xp, fmt, ApmmOpts::default())
+}
+
+/// As [`apmm_weighted_packed`] with explicit shard/tile/worker options —
+/// the weighted kernels shard along the same three axes as bipolar.
+pub fn apmm_weighted_packed_opts<W: Planes, X: Planes>(
+    wp: &W,
+    xp: &X,
+    fmt: IntFormat,
+    opts: ApmmOpts,
+) -> Vec<i32> {
     assert_eq!(wp.cols(), xp.cols(), "inner dimension mismatch");
     assert_eq!(wp.kw(), xp.kw(), "packed word-count mismatch");
-    let (m, n) = (wp.rows(), xp.rows());
     let (nw, nx) = (wp.bits(), xp.bits());
-    let mut y = vec![0i32; m * n];
-    if m == 0 || n == 0 {
-        return y;
-    }
-    par_chunks_mut(&mut y, n, |mi, row| {
-        for (ni, out) in row.iter_mut().enumerate() {
-            let mut acc = 0i64;
-            for i in 0..nw {
-                let wi = plane_weight(fmt, i, nw);
-                let wr = wp.row(i, mi);
-                for j in 0..nx {
-                    let xj = plane_weight(fmt, j, nx);
-                    acc += wi * xj * and_popcount_dot(wr, xp.row(j, ni)) as i64;
-                }
-            }
-            *out = checked_i32(acc);
-        }
-    });
+    let mut y = vec![0i32; wp.rows() * xp.rows()];
+    apmm_pairs_sharded(
+        wp,
+        xp,
+        opts,
+        |i, j| plane_weight(fmt, i, nw) * plane_weight(fmt, j, nx),
+        and_popcount_dot,
+        checked_i32,
+        &mut y,
+    );
     y
 }
 

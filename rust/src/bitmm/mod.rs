@@ -49,6 +49,14 @@
 //! The unfused variant (materializing every `D_ij`, then a second recovery
 //! pass — the paper's *naive* Fig. 4 baseline) is kept for the ablation
 //! bench and as an internal cross-check.
+//!
+//! ## Intra-GEMM sharding
+//!
+//! The packed cores fan out over a persistent worker pool
+//! ([`crate::util::par::WorkerPool`]) along a [`ShardPolicy`]-selected
+//! axis: output row blocks, output column blocks, or independent
+//! bit-plane pairs recombined by shifted add (§3.2).  All policies and
+//! worker counts are bit-identical to the serial kernel.
 
 mod apmm;
 mod gemm1b;
@@ -59,8 +67,8 @@ mod recover;
 pub use apmm::{
     apmm_bipolar, apmm_bipolar_into, apmm_bipolar_packed, apmm_bipolar_packed_into,
     apmm_bipolar_unfused, apmm_bipolar_unfused_packed, apmm_signed, apmm_signed_packed,
-    apmm_unsigned, apmm_unsigned_packed, apmm_weighted_packed, gemm_f32, naive_gemm_decoded,
-    transpose_codes, ApmmOpts,
+    apmm_unsigned, apmm_unsigned_packed, apmm_weighted_packed, apmm_weighted_packed_opts,
+    gemm_f32, naive_gemm_decoded, transpose_codes, ApmmOpts, ShardPolicy,
 };
 pub use gemm1b::{and_popcount_dot, xnor_dot, xor_popcount_dot};
 pub use planes::{

@@ -338,13 +338,10 @@ pub fn pack_rows_into(rows: usize, cols: usize, bits: u32, codes: &[u32], data: 
 
     // Disjoint-write parallelism over rows: every (plane, row) slot is
     // touched by exactly one row index, so the raw-pointer writes below
-    // never alias across par_for workers.
-    struct Ptr(*mut u64);
-    unsafe impl Sync for Ptr {}
-    let ptr = Ptr(data.as_mut_ptr());
+    // never alias across pool workers.
+    let ptr = crate::util::SendPtr::new(data.as_mut_ptr());
     let src_all = codes;
     crate::util::par_for(rows, |r| {
-        let p = &ptr;
         let src = &src_all[r * cols..(r + 1) * cols];
         for w in 0..kw {
             let c0 = w * 64;
@@ -359,7 +356,7 @@ pub fn pack_rows_into(rows: usize, cols: usize, bits: u32, codes: &[u32], data: 
             }
             for (plane, &a) in acc.iter().enumerate().take(bits) {
                 // SAFETY: index (plane, r, w) is unique to this `r`
-                unsafe { *p.0.add(plane * plane_stride + r * kw + w) = a };
+                unsafe { *ptr.get().add(plane * plane_stride + r * kw + w) = a };
             }
         }
     });

@@ -21,7 +21,7 @@ fn fused_matches_naive_small() {
 
 #[test]
 fn fused_matches_naive_parallel_threshold() {
-    // large enough to hit the rayon path
+    // large enough that Auto fans row blocks out across the worker pool
     check_bipolar(128, 256, 96, 2, 2, 5);
 }
 
@@ -165,7 +165,7 @@ fn ragged_last_row_block() {
     let (m, k, n) = (70usize, 96usize, 5usize);
     let w = CodeMatrix::random(m, k, 2, 64);
     let xt = CodeMatrix::random(n, k, 3, 65);
-    let opts = ApmmOpts { parallel: true, tile_m: 32, tile_n: 4 };
+    let opts = ApmmOpts { shard: ShardPolicy::Rows, tile_m: 32, tile_n: 4, workers: 2 };
     assert_eq!(
         apmm_bipolar(&w, &xt, opts),
         naive_gemm_decoded(&w, &xt, IntFormat::Bipolar)
@@ -285,8 +285,10 @@ fn prop_tile_invariance() {
         let seed = rng.u64();
         let w = CodeMatrix::random(m, 64, 2, seed);
         let xt = CodeMatrix::random(n, 64, 2, seed ^ 1);
-        let base = apmm_bipolar(&w, &xt, ApmmOpts { parallel: false, tile_m: 32, tile_n: 32 });
-        let tiled = apmm_bipolar(&w, &xt, ApmmOpts { parallel: true, tile_m: tm, tile_n: tn });
+        let base =
+            apmm_bipolar(&w, &xt, ApmmOpts { shard: ShardPolicy::Serial, ..Default::default() });
+        let tiled =
+            apmm_bipolar(&w, &xt, ApmmOpts { tile_m: tm, tile_n: tn, ..Default::default() });
         assert_eq!(base, tiled, "tm={tm} tn={tn}");
     });
 }
@@ -301,6 +303,50 @@ fn prop_signed_unsigned_match_naive() {
         let xt = CodeMatrix::random(n, k, nx, seed ^ 2);
         assert_eq!(apmm_signed(&w, &xt), naive_gemm_decoded(&w, &xt, IntFormat::Signed));
         assert_eq!(apmm_unsigned(&w, &xt), naive_gemm_decoded(&w, &xt, IntFormat::Unsigned));
+    });
+}
+
+#[test]
+fn prop_shard_policies_and_worker_counts_bit_identical_to_serial() {
+    // the tentpole contract (§3.2): row-block, column-block and
+    // bit-plane-pair sharding are pure scheduling choices — every policy ×
+    // worker count must be **bit-identical** to the serial kernel, across
+    // random shapes (forced m == 1 decode shapes included), ragged tiles,
+    // the weighted AND-plane kernel, and any-precision PlaneView operands
+    forall(16, |rng| {
+        let m = if rng.u32(0, 4) == 0 { 1 } else { rng.usize(1, 70) };
+        let (k, n) = (rng.usize(1, 150), rng.usize(1, 24));
+        let (nw, nx) = (rng.u32(1, 6), rng.u32(1, 6));
+        let (tm, tn) = (rng.usize(1, 9), rng.usize(1, 9));
+        let seed = rng.u64();
+        let w = CodeMatrix::random(m, k, nw, seed);
+        let xt = CodeMatrix::random(n, k, nx, seed ^ 0xc0de);
+        let wp = pack_codes(&w);
+        let xp = pack_codes(&xt);
+        let (kw_bits, kx_bits) = (rng.u32(1, nw + 1), rng.u32(1, nx + 1));
+        let serial = ApmmOpts { shard: ShardPolicy::Serial, tile_m: tm, tile_n: tn, workers: 1 };
+        let want = apmm_bipolar_packed(&wp, &xp, serial);
+        let want_weighted = apmm_weighted_packed_opts(&wp, &xp, IntFormat::Signed, serial);
+        let want_view = apmm_bipolar_packed(&wp.view(kw_bits), &xp.view(kx_bits), serial);
+        for shard in ShardPolicy::ALL {
+            for workers in [1usize, 2, 4] {
+                let opts = ApmmOpts { shard, tile_m: tm, tile_n: tn, workers };
+                let ctx = format!(
+                    "{shard:?}@{workers}w m={m} k={k} n={n} nw={nw} nx={nx} tm={tm} tn={tn}"
+                );
+                assert_eq!(apmm_bipolar_packed(&wp, &xp, opts), want, "bipolar {ctx}");
+                assert_eq!(
+                    apmm_weighted_packed_opts(&wp, &xp, IntFormat::Signed, opts),
+                    want_weighted,
+                    "weighted {ctx}"
+                );
+                assert_eq!(
+                    apmm_bipolar_packed(&wp.view(kw_bits), &xp.view(kx_bits), opts),
+                    want_view,
+                    "views kw={kw_bits} kx={kx_bits} {ctx}"
+                );
+            }
+        }
     });
 }
 

@@ -106,6 +106,12 @@ pub trait Backend {
     /// One decode step over `kvs.len()` sequences (`tokens[i]` is row i's
     /// input).  Returns per-row logits; advances every `SeqKv` in place.
     fn decode_batch(&mut self, tokens: &[i32], kvs: &mut [&mut SeqKv]) -> Result<Vec<Vec<f32>>>;
+    /// Set this replica's GEMM worker budget (`0` = the global
+    /// [`crate::util::num_threads`] default).  Replicas with equal budgets
+    /// share one pool process-wide, so N replicas × T workers never
+    /// oversubscribe the host.  Default: ignored (backends without an
+    /// intra-step parallel substrate).
+    fn set_workers(&mut self, _workers: usize) {}
 }
 
 // ------------------------------------------------------------------ PJRT --
@@ -289,6 +295,11 @@ struct ApGemm {
     scales: Vec<f32>,
     /// Reused output buffer, grown to the largest batch seen.
     y: Vec<i32>,
+    /// Reused flat dequant buffer (`n × vocab`, batch-major) — the old
+    /// path allocated a `Vec<Vec<f32>>` per step.
+    yf: Vec<f32>,
+    /// GEMM worker-pool budget for this replica (`0` = global default).
+    workers: usize,
     /// Times THIS backend decomposed+packed the weight matrix: 1 when it
     /// built its own store, 0 when it joined a shared superset store
     /// (packed once, elsewhere, for the whole cluster).
@@ -321,6 +332,8 @@ impl ApGemm {
             nx,
             scales,
             y: Vec::new(),
+            yf: Vec::new(),
+            workers: 0,
             weight_packs: 0,
             act_packs: 0,
         }
@@ -357,24 +370,29 @@ impl ApGemm {
         });
         self.act_packs += 1;
         self.y.resize(vocab * n, 0);
-        // zero pack_codes calls, zero weight allocations from here on
+        // zero pack_codes calls, zero weight allocations from here on;
+        // Auto sharding fans the GEMM out over this replica's worker pool
+        // (the old scoped-thread spawn cost forced `parallel: false` here)
         apmm_bipolar_packed_into(
             &planes,
             &xp,
-            ApmmOpts { parallel: false, ..ApmmOpts::default() },
+            ApmmOpts { workers: self.workers, ..ApmmOpts::default() },
             &mut self.y,
         );
         self.arena.recycle(xp);
-        // dequant per output row (the view-rescaled scales), then the sim
-        // model's 1/dim normalization
+        // dequant into the reused flat buffer, walking `y` m-major (its
+        // own layout) with the row scale hoisted — the old nested collect
+        // strided `y` by `n` per element and allocated per step
         let inv_dim = 1.0 / (dim as f32);
-        (0..n)
-            .map(|ni| {
-                (0..vocab)
-                    .map(|mi| self.y[mi * n + ni] as f32 * self.scales[mi] * inv_dim)
-                    .collect()
-            })
-            .collect()
+        self.yf.resize(n * vocab, 0.0);
+        for mi in 0..vocab {
+            let s = self.scales[mi] * inv_dim;
+            let row = &self.y[mi * n..(mi + 1) * n];
+            for (ni, &v) in row.iter().enumerate() {
+                self.yf[ni * vocab + mi] = v as f32 * s;
+            }
+        }
+        self.yf.chunks(vocab).map(|c| c.to_vec()).collect()
     }
 }
 
@@ -485,6 +503,12 @@ impl SimBackend {
         self.ap.as_ref().map(|ap| (ap.nw, ap.nx))
     }
 
+    /// GEMM worker budget of the AP path (`0` = global default), if
+    /// enabled — set through [`Backend::set_workers`].
+    pub fn gemm_workers(&self) -> Option<usize> {
+        self.ap.as_ref().map(|ap| ap.workers)
+    }
+
     fn logits_for(&mut self, rows: &[(i32, usize)]) -> Vec<Vec<f32>> {
         if let Some(ap) = self.ap.as_mut() {
             return ap.logits(rows);
@@ -549,6 +573,12 @@ impl Backend for SimBackend {
             kv.pos += 1;
         }
         Ok(out)
+    }
+
+    fn set_workers(&mut self, workers: usize) {
+        if let Some(ap) = self.ap.as_mut() {
+            ap.workers = workers;
+        }
     }
 }
 
@@ -641,6 +671,24 @@ mod tests {
     fn shared_store_rejects_precisions_beyond_the_superset() {
         let store = superset_store(16, 32, 2, 3);
         SimBackend::with_shared_store(64, vec![1], store, 4, 4);
+    }
+
+    #[test]
+    fn ap_logits_identical_across_worker_counts() {
+        // the parallel hot path must be invisible in the outputs: the
+        // GEMM is exact-i64 under every shard policy, and the dequant
+        // multiplies in the same order regardless of worker count
+        let run = |workers: usize| {
+            let mut b = SimBackend::with_ap_gemm(48, 64, vec![1, 2, 4], 96, 3, 2, 21);
+            b.set_workers(workers);
+            assert_eq!(b.gemm_workers(), Some(workers));
+            let (l, mut kv) = b.prefill_one(&[3, 1, 4]).unwrap();
+            let d = b.decode_batch(&[5], &mut [&mut kv]).unwrap();
+            (l, d)
+        };
+        let base = run(1);
+        assert_eq!(run(2), base);
+        assert_eq!(run(4), base);
     }
 
     #[test]

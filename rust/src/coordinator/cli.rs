@@ -39,6 +39,10 @@ pub struct ServeArgs {
     pub replicas: usize,
     /// How the router picks a replica.
     pub route_policy: RoutePolicy,
+    /// Host-wide GEMM worker budget (`0` = the `APLLM_THREADS` /
+    /// available-parallelism default): a lone engine gets it all, a
+    /// cluster splits it across replicas ([`Cluster::set_worker_budget`]).
+    pub workers: usize,
 }
 
 impl Default for ServeArgs {
@@ -53,6 +57,7 @@ impl Default for ServeArgs {
             engine: true,
             replicas: 1,
             route_policy: RoutePolicy::LeastLoaded,
+            workers: 0,
         }
     }
 }
@@ -60,7 +65,8 @@ impl Default for ServeArgs {
 /// The flag list every parse error repeats — a bad flag must produce a
 /// recoverable error naming the alternatives, never kill the process.
 const VALID_FLAGS: &str = "--requests N, --rate R, --max-new N, --prompt-len N, --seed N, \
-     --replicas N, --route-policy round-robin|least-loaded, --sim, --group-scheduler";
+     --replicas N, --route-policy round-robin|least-loaded, --workers N, --sim, \
+     --group-scheduler";
 
 fn take_value<'a>(it: &mut std::slice::Iter<'a, String>, name: &str) -> Result<&'a str> {
     it.next()
@@ -99,6 +105,7 @@ pub fn parse_args(args: &[String]) -> Result<ServeArgs> {
                     format!("--route-policy expects round-robin|least-loaded, got {raw:?}")
                 })?;
             }
+            "--workers" => a.workers = parse_value(&mut it, "--workers", "a worker count")?,
             "--sim" => a.sim = true,
             "--group-scheduler" => a.engine = false,
             other => bail!("unknown flag {other} (valid flags: {VALID_FLAGS})"),
@@ -179,6 +186,7 @@ fn demo_engine_config() -> EngineConfig {
         },
         prefix_sharing: true,
         eviction: super::kv::EvictionPolicy::Lru,
+        workers: 0,
     }
 }
 
@@ -226,7 +234,8 @@ pub fn run_sim_serving_demo(a: &ServeArgs) -> Result<String> {
 pub fn run_engine_serving_demo(a: &ServeArgs) -> Result<String> {
     let (backend, vocab) = ap_sim_backend(a.seed);
     let packed_bytes = backend.packed_weight_bytes();
-    let mut eng = Engine::new(backend, demo_engine_config());
+    let cfg = EngineConfig { workers: a.workers, ..demo_engine_config() };
+    let mut eng = Engine::new(backend, cfg);
     let (mut report, _) = drive(&mut eng, a, vocab)?;
     let c = eng.counters();
     report.push_str(&format!(
@@ -263,6 +272,9 @@ pub fn run_cluster_serving_demo(a: &ServeArgs) -> Result<String> {
         let backend =
             SimBackend::with_shared_store(256, vec![1, 2, 4, 8], store.clone(), p.nw, p.nx);
         cluster.add_replica(format!("r{i}"), p, backend, demo_engine_config());
+    }
+    if a.workers > 0 {
+        cluster.set_worker_budget(a.workers);
     }
     let (mut report, _) = drive(&mut cluster, a, DEMO_VOCAB)?;
     report.push_str(&format!(
@@ -321,6 +333,11 @@ pub fn run_cluster_serving_demo(a: &ServeArgs) -> Result<String> {
 /// `--group-scheduler`.  Shared by `apllm serve` and the llm_serving
 /// example.
 pub fn run_demo(a: &ServeArgs) -> Result<String> {
+    if a.workers > 0 {
+        // cap the global default pool too (activation packing etc.), not
+        // just the per-replica GEMM pools
+        crate::util::set_threads(a.workers);
+    }
     #[cfg(feature = "pjrt")]
     if !a.sim {
         if a.replicas <= 1 {
@@ -385,6 +402,9 @@ mod tests {
         assert_eq!(a.route_policy, RoutePolicy::RoundRobin);
         let a = parse_args(&s(&["--route-policy", "least-loaded"])).unwrap();
         assert_eq!(a.route_policy, RoutePolicy::LeastLoaded);
+        let a = parse_args(&s(&["--workers", "4"])).unwrap();
+        assert_eq!(a.workers, 4);
+        assert_eq!(parse_args(&s(&[])).unwrap().workers, 0, "default inherits APLLM_THREADS");
     }
 
     #[test]

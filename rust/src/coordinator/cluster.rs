@@ -134,6 +134,17 @@ impl<B: Backend> Cluster<B> {
         self.engines.len()
     }
 
+    /// Split a host-wide GEMM worker budget evenly across replicas (each
+    /// gets at least 1).  Replicas stepping sequentially share pools by
+    /// size ([`crate::util::pool_of`]), so N replicas × T workers resolve
+    /// to one T-sized pool rather than N·T threads.
+    pub fn set_worker_budget(&mut self, total_workers: usize) {
+        let per = (total_workers / self.engines.len().max(1)).max(1);
+        for e in &mut self.engines {
+            e.set_workers(per);
+        }
+    }
+
     pub fn router(&self) -> &Router {
         &self.router
     }
@@ -402,6 +413,27 @@ mod tests {
             );
         }
         c
+    }
+
+    #[test]
+    fn worker_budget_splits_evenly_across_replicas() {
+        let mut c = Cluster::new(RoutePolicy::RoundRobin);
+        for i in 0..3u64 {
+            c.add_replica(
+                format!("r{i}"),
+                PrecisionConfig::W2A2,
+                SimBackend::with_ap_gemm(32, 64, vec![1, 2, 4], 64, 2, 2, i),
+                EngineConfig::default(),
+            );
+        }
+        c.set_worker_budget(8);
+        for e in c.engines() {
+            assert_eq!(e.backend().gemm_workers(), Some(2), "8 workers / 3 replicas → 2 each");
+        }
+        c.set_worker_budget(1);
+        for e in c.engines() {
+            assert_eq!(e.backend().gemm_workers(), Some(1), "budget floor is 1 per replica");
+        }
     }
 
     #[test]

@@ -120,6 +120,12 @@ pub struct EngineConfig {
     /// Which free block a fresh allocation evicts (LRU keeps hot prefix
     /// content cached; LIFO is the PR 3 baseline the bench compares).
     pub eviction: EvictionPolicy,
+    /// Intra-replica GEMM worker budget, threaded to the backend at
+    /// construction ([`Backend::set_workers`]).  `0` = the global
+    /// [`crate::util::num_threads`] default.  Replicas with equal budgets
+    /// share one worker pool process-wide (they step sequentially), so a
+    /// cluster of N replicas × T workers never oversubscribes the host.
+    pub workers: usize,
 }
 
 impl Default for EngineConfig {
@@ -133,6 +139,7 @@ impl Default for EngineConfig {
             batcher: BatcherConfig { batch_sizes: vec![1, 2, 4, 8], max_wait: Duration::ZERO },
             prefix_sharing: true,
             eviction: EvictionPolicy::Lru,
+            workers: 0,
         }
     }
 }
@@ -314,9 +321,10 @@ pub struct Engine<B: Backend> {
 }
 
 impl<B: Backend> Engine<B> {
-    pub fn new(backend: B, cfg: EngineConfig) -> Self {
+    pub fn new(mut backend: B, cfg: EngineConfig) -> Self {
         let cap = cfg.max_running.min(*backend.supported_batches().last().unwrap()).max(1);
         let cfg = EngineConfig { max_running: cap, ..cfg };
+        backend.set_workers(cfg.workers);
         Self {
             pool: KvPool::with_policy(cfg.kv_blocks, cfg.block_tokens, cfg.eviction),
             batcher: Batcher::new(cfg.batcher.clone()),
@@ -335,6 +343,13 @@ impl<B: Backend> Engine<B> {
 
     pub fn backend(&self) -> &B {
         &self.backend
+    }
+
+    /// Re-budget this replica's GEMM worker pool (`0` = global default) —
+    /// the cluster splits a host-wide budget across replicas with this.
+    pub fn set_workers(&mut self, workers: usize) {
+        self.cfg.workers = workers;
+        self.backend.set_workers(workers);
     }
 
     pub fn pool(&self) -> &KvPool {

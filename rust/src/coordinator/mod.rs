@@ -28,7 +28,10 @@
 //!   (`superset_store` + `SimBackend::with_shared_store`): the pack
 //!   happens once at the widest precision served and every replica
 //!   slices its own plane prefix per step — no per-precision weight
-//!   duplication.
+//!   duplication.  The AP-GEMM logits shard across the persistent
+//!   worker pool (`Backend::set_workers`, sized per replica by
+//!   `EngineConfig::workers` / `Cluster::set_worker_budget` so N
+//!   replicas split the host instead of oversubscribing it).
 //! * [`scheduler`]— group scheduler over the backend trait: admission,
 //!   prefill/decode interleaving, slot recycling (reserves each
 //!   sequence's full budget up front).

@@ -18,7 +18,11 @@
 //!   (weight `PlaneCache` / `PackedWeightStore` with `get_at`
 //!   precision slicing, activation `PackArena` — the paper's §3.3
 //!   preprocessing + §3.4 recovery-oriented memory management, realized
-//!   on the CPU substrate).
+//!   on the CPU substrate).  The packed cores shard across a persistent
+//!   worker pool ([`util::par::WorkerPool`]) along a
+//!   [`bitmm::ShardPolicy`]-selected axis — output row blocks, output
+//!   columns, or independent bit-plane pairs recombined by shifted add —
+//!   every policy bit-identical to the serial kernel.
 //! * [`quant`]    — symmetric bipolar quantizers (per-tensor / per-channel)
 //!   and baseline quantizers; weight quantizers can emit prepacked planes
 //!   directly (`quantize_*_packed`, `Quantized::prepack`).
@@ -51,7 +55,10 @@
 //!   under pressure), and delivery is **streaming**: every token is a
 //!   `TokenEvent`, so TTFT/ITL land in `metrics` as real per-token
 //!   measurements.  Its `SimBackend` serves real bitmm logits through
-//!   the pack-once pipeline (`SimBackend::with_ap_gemm`).
+//!   the pack-once pipeline (`SimBackend::with_ap_gemm`), sharded
+//!   across the worker pool on the hot path; `EngineConfig::workers`
+//!   and `Cluster::set_worker_budget` size the per-replica GEMM
+//!   parallelism so N replicas never oversubscribe the host.
 //! * [`bench`]    — harness regenerating every table/figure of the paper's
 //!   evaluation section, plus the §3.3 pack-vs-compute split table.
 //! * [`anyhow`]   — in-tree error-handling substrate (offline substitute

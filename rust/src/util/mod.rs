@@ -1,7 +1,9 @@
 //! In-tree substrates replacing ecosystem crates (the build is fully
-//! offline — see Cargo.toml): a seeded PRNG (`rng`), scoped-thread data
-//! parallelism (`par`), a JSON parser/writer (`json`), and a lightweight
-//! property-testing harness (`proptest`).
+//! offline — see Cargo.toml): a seeded PRNG (`rng`), persistent
+//! worker-pool data parallelism (`par` — long-lived threads with condvar
+//! dispatch, sized pools shared through a process-wide registry), a JSON
+//! parser/writer (`json`), and a lightweight property-testing harness
+//! (`proptest`).
 
 pub mod json;
 pub mod par;
@@ -9,5 +11,8 @@ pub mod proptest;
 pub mod rng;
 
 pub use json::Json;
-pub use par::{num_threads, par_chunks_mut, par_for};
+pub use par::{
+    global_pool, num_threads, par_chunks_mut, par_for, par_shards, pool_of, set_threads, SendPtr,
+    WorkerPool,
+};
 pub use rng::Rng;

@@ -1,18 +1,43 @@
-//! Scoped-thread data parallelism (the rayon substitute).
+//! Persistent worker-pool data parallelism (the rayon substitute).
 //!
-//! `par_chunks_mut` splits a mutable slice into contiguous chunks and
-//! processes them on `num_threads()` OS threads via `std::thread::scope`;
-//! `par_for` runs an index range the same way.  Closures receive the chunk
-//! (or index) plus its global offset.
+//! The old implementation spawned and joined OS threads through
+//! `std::thread::scope` on **every** call — unaffordable per decode step,
+//! which is why the serving backend used to pin its GEMMs to
+//! `parallel: false`.  [`WorkerPool`] replaces that with long-lived
+//! threads and condvar dispatch: submitting a job is a mutex store plus a
+//! `notify_all`, so the per-call cost is amortized to (near) zero and the
+//! serving hot path can fan every GEMM out.
+//!
+//! Entry points:
+//!
+//! * [`par_shards`] / [`par_for`] — run `f(i)` for `i in 0..n` on the
+//!   global pool (dynamic scheduling through an atomic counter);
+//! * [`par_chunks_mut`] — split a mutable slice into contiguous chunks and
+//!   process them on the global pool, handing out disjoint `&mut` chunks
+//!   **lock-free** (the atomic index already guarantees disjointness);
+//! * [`WorkerPool::run`] / [`chunks_on`] — same, on an explicitly sized
+//!   pool ([`pool_of`]) so N replicas × T workers share one T-sized pool
+//!   instead of oversubscribing the host.
+//!
+//! Sizing: the global pool has [`num_threads`] workers (`APLLM_THREADS`,
+//! overridable in-process via [`set_threads`]).  Pools are cached by size
+//! in a process-wide registry and never torn down; a pool of size 1 runs
+//! inline and owns no threads.  Nested submissions from inside a worker
+//! run inline too, so kernels may freely compose with parallel callers.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
-/// Worker count: respects `APLLM_THREADS`, defaults to available
-/// parallelism (capped at 16 — the kernels saturate memory bandwidth well
-/// before that).
+/// Default worker count: an in-process [`set_threads`] override wins,
+/// then `APLLM_THREADS`, then available parallelism (capped at 16 — the
+/// kernels saturate memory bandwidth well before that).
 pub fn num_threads() -> usize {
-    static CACHED: AtomicUsize = AtomicUsize::new(0);
-    let c = CACHED.load(Ordering::Relaxed);
+    let o = OVERRIDE.load(Ordering::Relaxed);
+    if o != 0 {
+        return o;
+    }
+    let c = ENV_CACHE.load(Ordering::Relaxed);
     if c != 0 {
         return c;
     }
@@ -23,72 +48,309 @@ pub fn num_threads() -> usize {
         .unwrap_or_else(|| {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
         });
-    CACHED.store(n, Ordering::Relaxed);
+    ENV_CACHE.store(n, Ordering::Relaxed);
     n
 }
 
-/// Process `data` in contiguous chunks of `chunk_len` elements, in
-/// parallel.  `f(chunk_index, chunk)` — chunks are disjoint so no locking
-/// is needed.  Falls back to sequential for small inputs.
-pub fn par_chunks_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+/// In-process worker-count override (`0` clears back to the
+/// `APLLM_THREADS` / available-parallelism default).  The env cache used
+/// to latch the first read forever; benches, the CLI and tests use this
+/// to vary worker count without re-execing.
+pub fn set_threads(n: usize) {
+    OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+static OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+static ENV_CACHE: AtomicUsize = AtomicUsize::new(0);
+
+/// The shared registry of pools, keyed by size.  Replicas asking for the
+/// same worker budget get the *same* pool (they step sequentially, so N
+/// replicas × T workers never oversubscribe the host), and repeated
+/// benches at a given size reuse warm threads.
+static REGISTRY: Mutex<Vec<Arc<WorkerPool>>> = Mutex::new(Vec::new());
+
+/// The pool of exactly `size` workers, created on first use and cached
+/// for the process lifetime.  `size == 0` is treated as [`num_threads`].
+pub fn pool_of(size: usize) -> Arc<WorkerPool> {
+    let size = if size == 0 { num_threads() } else { size };
+    let mut reg = REGISTRY.lock().unwrap();
+    if let Some(p) = reg.iter().find(|p| p.size() == size) {
+        return Arc::clone(p);
+    }
+    let p = Arc::new(WorkerPool::new(size));
+    reg.push(Arc::clone(&p));
+    p
+}
+
+/// The [`num_threads`]-sized pool (re-resolved per call, so
+/// [`set_threads`] takes effect immediately).
+pub fn global_pool() -> Arc<WorkerPool> {
+    pool_of(num_threads())
+}
+
+thread_local! {
+    /// Set while this thread is executing a pool job (worker threads and
+    /// the submitter during its own participation).  A nested `run` from
+    /// such a thread executes inline: re-submitting to the same pool
+    /// would deadlock on the submit lock while the outer job waits on us.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// One dispatched job: a type-erased `Fn(usize) + Sync` plus the shared
+/// index counter.  Raw pointers into the submitting `run` call's stack —
+/// sound because `run` blocks until every worker has finished the epoch.
+#[derive(Clone, Copy)]
+struct Job {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+    next: *const AtomicUsize,
+    n: usize,
+}
+
+// SAFETY: the pointers are only dereferenced by workers between job
+// publication and the `active == 0` handshake, during which the borrowed
+// closure and counter are kept alive (and shareable: F: Sync) by `run`.
+unsafe impl Send for Job {}
+
+struct State {
+    /// Bumped once per dispatched job; workers run each epoch exactly once.
+    epoch: u64,
+    job: Option<Job>,
+    /// Workers still in (or not yet through) the current epoch.
+    active: usize,
+    /// A worker's closure panicked during the current epoch.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for a new epoch (or shutdown).
+    work: Condvar,
+    /// The submitter waits here for `active == 0`.
+    done: Condvar,
+}
+
+/// A persistent pool of `size − 1` worker threads (the submitting thread
+/// participates as the `size`-th worker, so `size == 1` owns no threads
+/// and runs inline).  Dispatch is a single mutex store + condvar
+/// broadcast; threads live until the pool is dropped — for registry pools
+/// ([`pool_of`]) that is never, which is the point.
+pub struct WorkerPool {
+    size: usize,
+    shared: Arc<Shared>,
+    /// Serializes concurrent `run` calls from different threads.
+    submit: Mutex<()>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `size.max(1)` workers (inline submitter included).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                active: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (1..size)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("apllm-par-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { size, shared, submit: Mutex::new(()), handles }
+    }
+
+    /// Worker count (including the submitting thread).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Run `f(i)` for `i in 0..n` across the pool (dynamic scheduling).
+    /// Returns once every index has been processed; panics from `f`
+    /// propagate to the caller.  Runs inline when the pool has one
+    /// worker, when `n <= 1`, or when called from inside a pool job.
+    pub fn run<F: Fn(usize) + Sync>(&self, n: usize, f: F) {
+        if n == 0 {
+            return;
+        }
+        if self.size <= 1 || n == 1 || IN_POOL.with(|c| c.get()) {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+
+        /// Monomorphized un-eraser for [`Job::call`].
+        unsafe fn call_thunk<F: Fn(usize) + Sync>(data: *const (), i: usize) {
+            (*(data as *const F))(i);
+        }
+
+        let _turn = self.submit.lock().unwrap();
+        let next = AtomicUsize::new(0);
+        let job = Job { data: &f as *const F as *const (), call: call_thunk::<F>, next: &next, n };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.epoch += 1;
+            st.job = Some(job);
+            st.active = self.handles.len();
+            st.panicked = false;
+            self.shared.work.notify_all();
+        }
+
+        // Participate as worker 0.  Catch our own panic so the epoch
+        // handshake below still runs — workers hold pointers into this
+        // stack frame and must be drained before we unwind out of it.
+        IN_POOL.with(|c| c.set(true));
+        let mine = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_job(&job)));
+        IN_POOL.with(|c| c.set(false));
+
+        let mut st = self.shared.state.lock().unwrap();
+        while st.active > 0 {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.job = None;
+        let worker_panicked = st.panicked;
+        drop(st);
+        if let Err(e) = mine {
+            std::panic::resume_unwind(e);
+        }
+        if worker_panicked {
+            panic!("worker-pool job panicked (see worker thread output above)");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Pull indices off the job's shared counter until it runs dry.
+fn run_job(job: &Job) {
+    // SAFETY: the submitter keeps `next` and `data` alive until the
+    // `active == 0` handshake; see `Job`.
+    let next = unsafe { &*job.next };
+    loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.n {
+            return;
+        }
+        unsafe { (job.call)(job.data, i) };
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    IN_POOL.with(|c| c.set(true));
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    break st.job.expect("epoch bumped without a job");
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_job(&job)));
+        let mut st = shared.state.lock().unwrap();
+        if r.is_err() {
+            st.panicked = true;
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// A raw mutable pointer that pool workers may share.
+///
+/// # Safety contract
+/// The *caller* must guarantee every worker writes a disjoint region (the
+/// pool hands each index out exactly once, so indexing by job index is the
+/// canonical pattern).  Reads of the written data after `run` returns are
+/// synchronized by the pool's epoch handshake.
+pub struct SendPtr<T>(*mut T);
+
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(p: *mut T) -> Self {
+        Self(p)
+    }
+
+    #[inline(always)]
+    pub fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+/// Process `data` in contiguous chunks of `chunk_len` elements on `pool`.
+/// `f(chunk_index, chunk)` — the pool hands each chunk index out exactly
+/// once, so the `&mut` chunks are disjoint by construction and no lock or
+/// `Option::take` handoff is needed.
+pub fn chunks_on<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+    pool: &WorkerPool,
     data: &mut [T],
     chunk_len: usize,
     f: F,
 ) {
     assert!(chunk_len > 0);
-    let n_chunks = data.len().div_ceil(chunk_len);
-    let threads = num_threads().min(n_chunks);
-    if threads <= 1 {
-        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
-            f(i, chunk);
-        }
-        return;
-    }
-    let next = AtomicUsize::new(0);
-    // hand out chunks through a work-stealing counter so uneven chunk
-    // costs balance across threads
-    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk_len).enumerate().collect();
-    let chunks = std::sync::Mutex::new(chunks.into_iter().map(Some).collect::<Vec<_>>());
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let idx = next.fetch_add(1, Ordering::Relaxed);
-                let item = {
-                    let mut guard = chunks.lock().unwrap();
-                    if idx >= guard.len() {
-                        return;
-                    }
-                    guard[idx].take()
-                };
-                if let Some((i, chunk)) = item {
-                    f(i, chunk);
-                }
-            });
-        }
+    let len = data.len();
+    let n_chunks = len.div_ceil(chunk_len);
+    let base = SendPtr::new(data.as_mut_ptr());
+    pool.run(n_chunks, |ci| {
+        let lo = ci * chunk_len;
+        let hi = len.min(lo + chunk_len);
+        // SAFETY: chunk `ci` is handed out exactly once and [lo, hi)
+        // ranges are pairwise disjoint across chunk indices.
+        let chunk = unsafe { std::slice::from_raw_parts_mut(base.get().add(lo), hi - lo) };
+        f(ci, chunk);
     });
 }
 
-/// Run `f(i)` for `i in 0..n` across threads (dynamic scheduling).
+/// [`chunks_on`] over the global [`num_threads`]-sized pool.
+pub fn par_chunks_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+    data: &mut [T],
+    chunk_len: usize,
+    f: F,
+) {
+    chunks_on(&global_pool(), data, chunk_len, f);
+}
+
+/// Run `f(i)` for `i in 0..n` on the global pool (dynamic scheduling).
+pub fn par_shards<F: Fn(usize) + Sync>(n: usize, f: F) {
+    global_pool().run(n, f);
+}
+
+/// Alias of [`par_shards`], kept for the original scoped-thread API name.
 pub fn par_for<F: Fn(usize) + Sync>(n: usize, f: F) {
-    let threads = num_threads().min(n.max(1));
-    if threads <= 1 {
-        for i in 0..n {
-            f(i);
-        }
-        return;
-    }
-    let next = AtomicUsize::new(0);
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    return;
-                }
-                f(i);
-            });
-        }
-    });
+    par_shards(n, f);
 }
 
 #[cfg(test)]
@@ -137,5 +399,75 @@ mod tests {
         let mut one = vec![5u8];
         par_chunks_mut(&mut one, 4, |_, c| c[0] = 6);
         assert_eq!(one[0], 6);
+    }
+
+    #[test]
+    fn pool_is_reused_across_jobs_and_registry_lookups() {
+        let a = pool_of(3);
+        let b = pool_of(3);
+        assert!(Arc::ptr_eq(&a, &b), "registry must hand back the same pool");
+        // many dispatches over the same long-lived threads
+        let sum = AtomicU64::new(0);
+        for _ in 0..50 {
+            a.run(37, |i| {
+                sum.fetch_add(i as u64 + 1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(sum.load(Ordering::Relaxed), 50 * (37 * 38 / 2));
+    }
+
+    #[test]
+    fn set_threads_override_wins_and_clears() {
+        // serialize with other tests touching the override
+        let _guard = OVERRIDE_TEST_LOCK.lock().unwrap();
+        set_threads(3);
+        assert_eq!(num_threads(), 3);
+        set_threads(1);
+        assert_eq!(num_threads(), 1);
+        set_threads(0);
+        assert!(num_threads() >= 1, "cleared override falls back to default");
+    }
+
+    static OVERRIDE_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn nested_run_from_inside_a_job_runs_inline() {
+        let pool = pool_of(2);
+        let sum = AtomicU64::new(0);
+        pool.run(8, |_| {
+            // would deadlock on the submit lock if not inlined
+            pool.run(4, |j| {
+                sum.fetch_add(j as u64, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 8 * 6);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_submitter() {
+        let pool = pool_of(4);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(64, |i| {
+                if i == 13 {
+                    panic!("planted worker failure");
+                }
+            });
+        }));
+        assert!(r.is_err(), "worker panic must surface on the submitter");
+        // the pool must still be usable after a panicked epoch
+        let sum = AtomicU64::new(0);
+        pool.run(16, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 120);
+    }
+
+    #[test]
+    fn size_one_pool_runs_inline_without_threads() {
+        let pool = WorkerPool::new(1);
+        let mut hit = vec![false; 9];
+        let ptr = SendPtr::new(hit.as_mut_ptr());
+        pool.run(9, |i| unsafe { *ptr.get().add(i) = true });
+        assert!(hit.iter().all(|&h| h));
     }
 }

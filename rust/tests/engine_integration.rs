@@ -138,6 +138,42 @@ fn engine_matches_unbatched_under_sampling_too() {
 }
 
 #[test]
+fn streams_byte_identical_across_worker_counts() {
+    // the intra-GEMM sharding tentpole end to end: per-shard i64 partial
+    // sums are exact, so fanning the logits GEMM across 1, 2 or 4 pool
+    // workers must not move a single streamed byte — preemption churn,
+    // prefix sharing and all
+    let reqs: Vec<Request> =
+        (0..24u64).map(|i| req(i, 1 + (i as usize * 7) % 16, 1 + (i as usize * 5) % 10)).collect();
+    let run = |workers: usize| {
+        let cfg = EngineConfig {
+            kv_blocks: 16,
+            block_tokens: 4,
+            max_running: 8,
+            workers,
+            ..Default::default()
+        };
+        let mut eng = Engine::new(ap_backend(29), cfg);
+        for r in &reqs {
+            eng.submit(r.clone());
+        }
+        let events = eng.run_to_completion_events().unwrap();
+        let mut out = responses_of(&events);
+        out.sort_by_key(|r| r.id);
+        assert_eq!(out.len(), 24);
+        assert_eq!(eng.pool().free_blocks(), 16, "zero KV-block leaks at {workers} workers");
+        let tokens: Vec<Vec<i32>> = out.into_iter().map(|r| r.tokens).collect();
+        (streamed_tokens(&events), tokens)
+    };
+    let (ref_streams, ref_tokens) = run(1);
+    for workers in [2usize, 4] {
+        let (streams, tokens) = run(workers);
+        assert_eq!(tokens, ref_tokens, "responses diverged at {workers} workers");
+        assert_eq!(streams, ref_streams, "streamed events diverged at {workers} workers");
+    }
+}
+
+#[test]
 fn event_stream_lifecycle_is_well_formed_under_preemption_churn() {
     // per request: exactly one Admitted, Preempted/Resumed strictly
     // alternating after it, exactly one terminal Finished, and no Token
