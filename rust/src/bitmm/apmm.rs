@@ -260,11 +260,13 @@ fn apmm_pairs_sharded<W, X, PW, D, FIN>(
             let n_hi = (nb + opts.tile_n).min(n);
             for mi in mb..m_hi {
                 for (i, slot) in wr.iter_mut().enumerate().take(nw) {
+                    // lint: allow(narrowing-cast) — plane index < MAX_BITS = 16
                     *slot = wp.row(i as u32, mi);
                 }
                 let out_row = &mut rows_out[(mi - mb) * n..(mi - mb + 1) * n];
                 for ni in nb..n_hi {
                     for (j, slot) in xr.iter_mut().enumerate().take(nx) {
+                        // lint: allow(narrowing-cast) — plane index < MAX_BITS = 16
                         *slot = xp.row(j as u32, ni);
                     }
                     out_row[ni] = finish(pair_sum(&wr[..nw], &xr[..nx], &pair_weight, &dot));
@@ -288,10 +290,12 @@ fn apmm_pairs_sharded<W, X, PW, D, FIN>(
                 let mut xr: [&[u64]; MAX_BITS as usize] = [&[]; MAX_BITS as usize];
                 for mi in 0..m {
                     for (i, slot) in wr.iter_mut().enumerate().take(nw) {
+                        // lint: allow(narrowing-cast) — plane index < MAX_BITS = 16
                         *slot = wp.row(i as u32, mi);
                     }
                     for ni in nb..n_hi {
                         for (j, slot) in xr.iter_mut().enumerate().take(nx) {
+                            // lint: allow(narrowing-cast) — plane index < MAX_BITS = 16
                             *slot = xp.row(j as u32, ni);
                         }
                         let v = finish(pair_sum(&wr[..nw], &xr[..nx], &pair_weight, &dot));
@@ -316,6 +320,7 @@ fn apmm_pairs_sharded<W, X, PW, D, FIN>(
                 let acc = unsafe { std::slice::from_raw_parts_mut(pp.get().add(s * mn), mn) };
                 let mut p = s;
                 while p < pairs {
+                    // lint: allow(narrowing-cast) — pair split: both < MAX_BITS = 16
                     let (i, j) = ((p / nx) as u32, (p % nx) as u32);
                     let wgt = pair_weight(i, j);
                     for mi in 0..m {
@@ -358,6 +363,7 @@ where
     let mut acc = 0i64;
     for (i, w) in wr.iter().enumerate() {
         for (j, x) in xr.iter().enumerate() {
+            // lint: allow(narrowing-cast) — plane indices < MAX_BITS = 16
             acc += pair_weight(i as u32, j as u32) * dot(w, x) as i64;
         }
     }
@@ -399,6 +405,7 @@ pub fn apmm_bipolar_unfused_packed<W: Planes, X: Planes>(wp: &W, xp: &X) -> Vec<
             for mi in 0..m {
                 let wr = wp.row(i, mi);
                 for ni in 0..n {
+                    // lint: allow(narrowing-cast) — D_ij ∈ [−k, k], exact in i32
                     d[mi * n + ni] = k as i32 - 2 * xor_popcount_dot(wr, xp.row(j, ni)) as i32;
                 }
             }

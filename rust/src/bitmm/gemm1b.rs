@@ -31,5 +31,6 @@ pub fn and_popcount_dot(a: &[u64], b: &[u64]) -> u32 {
 /// `D = k − 2·popcount(a XOR b)` (zero-padding in both operands cancels).
 #[inline(always)]
 pub fn xnor_dot(a: &[u64], b: &[u64], k: usize) -> i32 {
+    // lint: allow(narrowing-cast) — D ∈ [−k, k] and k < 2^31, exact in i32
     k as i32 - 2 * xor_popcount_dot(a, b) as i32
 }

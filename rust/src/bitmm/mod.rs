@@ -58,8 +58,15 @@
 //! bit-plane pairs recombined by shifted add (§3.2).  All policies and
 //! worker counts are bit-identical to the serial kernel.
 
+// `apmm` and `planes` are two of the three audited unsafe islands in the
+// crate (with `util::par`): disjoint `SendPtr` writes on the column-shard
+// and plane-pair paths, and the parallel plane-packing scatter.  Every
+// site carries a SAFETY comment; `cargo run -p xtask -- lint` enforces
+// the allowlist against the workspace `unsafe_code = "deny"` lint.
+#[allow(unsafe_code)]
 mod apmm;
 mod gemm1b;
+#[allow(unsafe_code)]
 mod planes;
 pub mod prepack;
 mod recover;

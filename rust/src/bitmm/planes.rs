@@ -74,6 +74,7 @@ impl CodeMatrix {
     pub fn random(rows: usize, cols: usize, bits: u32, seed: u64) -> Self {
         assert_bits(bits);
         let mut rng = crate::util::Rng::with_seed(seed);
+        // lint: allow(narrowing-cast) — bits ≤ 16, so 2^bits fits u32
         let hi = (1u64 << bits) as u32;
         let data = (0..rows * cols).map(|_| rng.u32(0, hi)).collect();
         Self::new(rows, cols, bits, data)

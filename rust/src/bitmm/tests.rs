@@ -488,3 +488,87 @@ fn prop_plane_view_matches_fresh_low_bit_pack() {
         );
     });
 }
+
+/// Builds an `rows.len() × k` matrix whose rows are splatted with the given
+/// codes — the adversarial shape: every inner product hits the same
+/// max-magnitude operand `k` times in a row.
+fn splat_rows(codes: &[u32], k: usize, bits: u32) -> CodeMatrix {
+    let mut data = Vec::with_capacity(codes.len() * k);
+    for &c in codes {
+        data.extend(vec![c; k]);
+    }
+    CodeMatrix::new(codes.len(), k, bits, data)
+}
+
+#[test]
+fn adversarial_max_magnitude_all_shards_bipolar() {
+    // PR 2's overflow regression, extended to every sharded path.  7-bit
+    // bipolar max-magnitude codes (127 → +127, 0 → −127) at K = 100k push
+    // the fused Σ 2^(i+j+1)·popc intermediate to ≈ ±3.2e9 — past i32 — while
+    // the true product peaks at ±127²·K ≈ ±1.61e9, representable but right
+    // at the i32 edge.  A single shard accumulating in i32 anywhere (row,
+    // column, or plane-pair recombination) wraps and diverges from the
+    // pure-i64 reference.
+    let (k, bits) = (100_000usize, 7u32);
+    let hi = (1u32 << bits) - 1;
+    let w = splat_rows(&[hi, 0, hi], k, bits);
+    let xt = splat_rows(&[0, hi, hi], k, bits);
+    let want = naive_gemm_decoded(&w, &xt, IntFormat::Bipolar);
+    // prove the fixture really reaches the adversarial magnitude
+    assert!(want.iter().any(|&v| v.unsigned_abs() > 1_500_000_000));
+    let wp = pack_codes(&w);
+    let xp = pack_codes(&xt);
+    for shard in ShardPolicy::ALL {
+        for workers in [2usize, 4] {
+            let opts = ApmmOpts { shard, tile_m: 2, tile_n: 2, workers };
+            assert_eq!(
+                apmm_bipolar_packed(&wp, &xp, opts),
+                want,
+                "bipolar shard={shard:?} workers={workers}"
+            );
+        }
+    }
+}
+
+#[test]
+fn adversarial_max_magnitude_all_shards_weighted() {
+    // The weighted (AND-plane) core under the same regime: 7-bit signed
+    // max-magnitude codes (64 → −64, 63 → +63) at K = 100k, so pair terms
+    // w_i·w_j·popc reach 64·64·100k ≈ 4.1e8 with mixed signs, and unsigned
+    // all-ones codes whose true product 127²·100k ≈ 1.61e9 sits at the i32
+    // edge.  Every ShardPolicy × worker count must match the i64 reference
+    // bit for bit.
+    let (k, bits) = (100_000usize, 7u32);
+    let ws = splat_rows(&[64, 63, 64], k, bits);
+    let xs = splat_rows(&[63, 64, 63], k, bits);
+    let want_signed = naive_gemm_decoded(&ws, &xs, IntFormat::Signed);
+    let wsp = pack_codes(&ws);
+    let xsp = pack_codes(&xs);
+
+    let hi = (1u32 << bits) - 1;
+    let wu = splat_rows(&[hi, 0, hi], k, bits);
+    let xu = splat_rows(&[0, hi, hi], k, bits);
+    let want_unsigned = naive_gemm_decoded(&wu, &xu, IntFormat::Unsigned);
+    assert!(want_unsigned.iter().any(|&v| v.unsigned_abs() > 1_500_000_000));
+    let wup = pack_codes(&wu);
+    let xup = pack_codes(&xu);
+
+    // default-opts entry point first (the PR 2 surface), then all shards
+    assert_eq!(apmm_weighted_packed(&wsp, &xsp, IntFormat::Signed), want_signed);
+    assert_eq!(apmm_weighted_packed(&wup, &xup, IntFormat::Unsigned), want_unsigned);
+    for shard in ShardPolicy::ALL {
+        for workers in [2usize, 4] {
+            let opts = ApmmOpts { shard, tile_m: 2, tile_n: 2, workers };
+            assert_eq!(
+                apmm_weighted_packed_opts(&wsp, &xsp, IntFormat::Signed, opts),
+                want_signed,
+                "signed shard={shard:?} workers={workers}"
+            );
+            assert_eq!(
+                apmm_weighted_packed_opts(&wup, &xup, IntFormat::Unsigned, opts),
+                want_unsigned,
+                "unsigned shard={shard:?} workers={workers}"
+            );
+        }
+    }
+}

@@ -63,6 +63,33 @@
 //!   evaluation section, plus the §3.3 pack-vs-compute split table.
 //! * [`anyhow`]   — in-tree error-handling substrate (offline substitute
 //!   for the `anyhow` crate; see `util` for the other substrates).
+//!
+//! ## Concurrency & unsafety
+//!
+//! All threading in the crate funnels through [`util::par`]: a persistent
+//! [`util::par::WorkerPool`] per size, driven by an epoch-counted
+//! submit/drain protocol (epochs are monotonic; a worker runs each epoch's
+//! job exactly once; the submitter participates as worker 0, so a pool can
+//! never deadlock on its own submitter).  Raw-pointer sharing is confined
+//! to [`util::par::SendPtr`], whose contract — every job writes a disjoint
+//! region, reads happen only after the epoch handshake — is documented at
+//! each site with a `// SAFETY:` comment.
+//!
+//! `unsafe` is **deny-by-default** across the workspace and re-allowed
+//! only in three audited modules: `util::par`, `bitmm::apmm`,
+//! `bitmm::planes`.  The boundary is machine-checked from three sides:
+//!
+//! * `cargo run -p xtask -- lint` — repo-local static analysis enforcing
+//!   the allowlist, `// SAFETY:` adjacency, kernel narrowing-cast hygiene
+//!   and the no-raw-`thread::spawn` rule;
+//! * a **loom-style model checker** ([`util::loom`], in-tree, zero deps)
+//!   that exhaustively explores WorkerPool schedules when built with
+//!   `RUSTFLAGS="--cfg loom"`;
+//! * **Miri** and **ThreadSanitizer** CI lanes replaying the pool and
+//!   kernel suites under provenance and data-race instrumentation
+//!   (`tests/miri_suite.rs`).
+//!
+//! See the `util::par` module docs for the full protocol invariants.
 
 pub mod anyhow;
 pub mod bench;

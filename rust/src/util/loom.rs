@@ -1,0 +1,936 @@
+//! In-tree model checker for the concurrency substrate (the `loom`
+//! substitute — the build is fully offline, see Cargo.toml).
+//!
+//! [`model`] / [`Builder::check`] run a closure many times, exploring the
+//! distinct thread interleavings of every [`sync`] primitive it touches.
+//! Execution is *serialized*: model threads are real OS threads, but a
+//! cooperative scheduler grants exactly one of them the token at a time,
+//! and every visible operation (mutex acquire, condvar wait/notify,
+//! atomic access, spawn) is a *decision point* where the scheduler picks
+//! which runnable thread continues.  A depth-first search over those
+//! decisions replays the closure once per distinct schedule, so the test
+//! body re-runs deterministically under each interleaving.
+//!
+//! What it checks:
+//!
+//! * **assertion failures** in the model body, under every explored
+//!   schedule (reported with the schedule trace that triggered them);
+//! * **deadlocks** — a state where no thread is runnable (all blocked on
+//!   mutexes / condvars / joins) is reported, not hung;
+//! * **panics** on spawned model threads (reported with the trace).
+//!
+//! Known limitations, by design (this is a bounded checker, not a proof):
+//!
+//! * **SC memory model only.** Atomics execute with `SeqCst` semantics
+//!   regardless of the `Ordering` requested; weak-memory reorderings are
+//!   *not* explored.  The Miri and ThreadSanitizer CI lanes complement
+//!   this (they run the real orderings).
+//! * **Preemption bounding.** Unforced context switches are limited to
+//!   [`Builder::preemption_bound`] per schedule (CHESS-style); voluntary
+//!   blocking switches are always free.  Most concurrency bugs manifest
+//!   within two preemptions.
+//! * `notify_one` deterministically wakes the lowest-tid waiter.
+//!
+//! Outside a model (no [`Builder::check`] on the call stack) every
+//! [`sync`] primitive delegates straight to `std`, so a `--cfg loom`
+//! build still runs the regular test suite unchanged; only tests that
+//! enter [`model`] pay for exploration.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool as StdAtomicBool, AtomicU64 as StdAtomicU64};
+use std::sync::atomic::{AtomicUsize as StdAtomicUsize, Ordering};
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex, MutexGuard as StdMutexGuard};
+
+// ---------------------------------------------------------------------------
+// Scheduler runtime
+// ---------------------------------------------------------------------------
+
+/// Why a thread is not currently eligible to run.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Run {
+    /// Eligible; waiting only for the scheduler to grant the token.
+    Runnable,
+    /// Blocked acquiring the model mutex at this address.
+    Mutex(usize),
+    /// Waiting on the model condvar at this address.
+    Cond(usize),
+    /// Waiting for this tid to finish.
+    Join(usize),
+    Finished,
+}
+
+struct Th {
+    run: Run,
+}
+
+/// One recorded scheduling decision: which of `options` (thread ids,
+/// ascending) was granted.  Replayed verbatim up to the DFS frontier.
+struct Decision {
+    chosen: usize,
+    options: Vec<usize>,
+}
+
+struct Cfg {
+    preemption_bound: Option<usize>,
+    max_depth: usize,
+    max_threads: usize,
+}
+
+struct St {
+    threads: Vec<Th>,
+    /// The thread holding the execution token, if any.
+    current: Option<usize>,
+    /// The previously scheduled thread (for preemption accounting).
+    last: Option<usize>,
+    /// Spawned threads that have not yet parked at their initial yield;
+    /// scheduling is deferred until they register (keeps replay
+    /// deterministic regardless of OS spawn latency).
+    pending_start: usize,
+    depth: usize,
+    preemptions: usize,
+    decisions: Vec<Decision>,
+    trace: Vec<usize>,
+    failure: Option<String>,
+    cfg: Cfg,
+}
+
+struct Rt {
+    mx: StdMutex<St>,
+    cv: StdCondvar,
+}
+
+#[derive(Clone)]
+struct Ctx {
+    rt: Arc<Rt>,
+    tid: usize,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<Ctx>> = const { RefCell::new(None) };
+}
+
+fn ctx() -> Option<Ctx> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+fn lock_rt(rt: &Rt) -> StdMutexGuard<'_, St> {
+    // Poison-tolerant: a failing schedule panics on the test thread and
+    // may poison `mx`; leaked threads must still be able to observe the
+    // failure flag instead of double-panicking.
+    rt.mx.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn describe_threads(st: &St) -> String {
+    st.threads
+        .iter()
+        .enumerate()
+        .map(|(i, t)| format!("t{i}:{:?}", t.run))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+fn fail(st: &mut St, msg: String) {
+    if st.failure.is_none() {
+        st.failure = Some(format!(
+            "{msg}\n  threads: [{}]\n  schedule: {:?}",
+            describe_threads(st),
+            st.trace
+        ));
+    }
+}
+
+/// Pick the next thread to run.  No-op unless the token is free and all
+/// spawned threads have registered.  Every call that grants is a recorded
+/// decision (even forced, single-option ones — keeps replay depths
+/// aligned across schedules).
+fn maybe_schedule(st: &mut St) {
+    if st.failure.is_some() || st.current.is_some() || st.pending_start > 0 {
+        return;
+    }
+    if st.threads.iter().all(|t| t.run == Run::Finished) {
+        return;
+    }
+    let mut cands: Vec<usize> = st
+        .threads
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| t.run == Run::Runnable)
+        .map(|(i, _)| i)
+        .collect();
+    if cands.is_empty() {
+        fail(st, "deadlock: no runnable thread".to_string());
+        return;
+    }
+    if let (Some(bound), Some(last)) = (st.cfg.preemption_bound, st.last) {
+        if st.preemptions >= bound && cands.contains(&last) {
+            // Budget spent: the previously running thread must continue.
+            cands = vec![last];
+        }
+    }
+    let d = st.depth;
+    st.depth += 1;
+    if st.depth > st.cfg.max_depth {
+        fail(st, format!("schedule depth exceeded max_depth ({})", st.cfg.max_depth));
+        return;
+    }
+    let idx = if d < st.decisions.len() {
+        if st.decisions[d].options != cands {
+            fail(
+                st,
+                format!(
+                    "nondeterministic execution: replay expected options {:?}, got {:?}",
+                    st.decisions[d].options, cands
+                ),
+            );
+            return;
+        }
+        st.decisions[d].chosen
+    } else {
+        st.decisions.push(Decision { chosen: 0, options: cands.clone() });
+        0
+    };
+    let tid = cands[idx];
+    if let Some(last) = st.last {
+        if tid != last && st.threads[last].run == Run::Runnable {
+            st.preemptions += 1;
+        }
+    }
+    st.last = Some(tid);
+    st.current = Some(tid);
+    st.trace.push(tid);
+}
+
+/// Park until the scheduler grants `me` the token.  On a model failure:
+/// the checker thread (tid 0) panics with the report; any other thread
+/// parks forever (it is leaked — waking it to unwind through whatever
+/// model state it holds could only cascade).
+fn wait_for_token<'a>(
+    rt: &'a Rt,
+    mut st: StdMutexGuard<'a, St>,
+    me: usize,
+) -> StdMutexGuard<'a, St> {
+    loop {
+        if let Some(f) = st.failure.clone() {
+            if me == 0 {
+                drop(st);
+                panic!("loom model failed: {f}");
+            }
+            loop {
+                st = rt.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+        if st.current == Some(me) {
+            return st;
+        }
+        st = rt.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+    }
+}
+
+/// A decision point: release the token (staying runnable) and wait to be
+/// rescheduled.  Called before every visible operation.
+fn yield_point(c: &Ctx) {
+    let mut st = lock_rt(&c.rt);
+    if st.failure.is_some() {
+        drop(st);
+        // Re-enter the park path so failure handling stays in one place.
+        let st2 = lock_rt(&c.rt);
+        let _ = wait_for_token(&c.rt, st2, c.tid);
+        return;
+    }
+    debug_assert_eq!(st.current, Some(c.tid), "yield from a thread without the token");
+    st.current = None;
+    maybe_schedule(&mut st);
+    c.rt.cv.notify_all();
+    let st = wait_for_token(&c.rt, st, c.tid);
+    drop(st);
+}
+
+/// Block `me` in state `why` and wait until some event flips it back to
+/// `Runnable` *and* the scheduler grants the token.
+fn block_on(c: &Ctx, why: Run) {
+    let mut st = lock_rt(&c.rt);
+    st.threads[c.tid].run = why;
+    st.current = None;
+    maybe_schedule(&mut st);
+    c.rt.cv.notify_all();
+    let st = wait_for_token(&c.rt, st, c.tid);
+    drop(st);
+}
+
+/// Flip every thread blocked in state `from` back to runnable.  Does not
+/// reschedule — the caller still holds the token.
+fn wake_matching(st: &mut St, from: Run) {
+    for t in st.threads.iter_mut() {
+        if t.run == from {
+            t.run = Run::Runnable;
+        }
+    }
+}
+
+fn finish_thread(c: &Ctx, panic_msg: Option<String>) {
+    let mut st = lock_rt(&c.rt);
+    if let Some(msg) = panic_msg {
+        fail(&mut st, format!("model thread t{} panicked: {msg}", c.tid));
+    }
+    st.threads[c.tid].run = Run::Finished;
+    wake_matching(&mut st, Run::Join(c.tid));
+    if st.current == Some(c.tid) {
+        st.current = None;
+    }
+    maybe_schedule(&mut st);
+    c.rt.cv.notify_all();
+}
+
+fn panic_payload_to_string(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Builder / exploration driver
+// ---------------------------------------------------------------------------
+
+/// Exploration knobs.  `Default` is sized for protocol-scale models
+/// (a pool of two, a couple of jobs): bound 2 preemptions, cap the
+/// search at 50k schedules.
+pub struct Builder {
+    /// Max unforced context switches per schedule (`None` = unbounded —
+    /// expect exponential blowup on anything non-trivial).
+    pub preemption_bound: Option<usize>,
+    /// Stop exploring (with a stderr warning) after this many schedules.
+    pub max_schedules: usize,
+    /// Fail any schedule exceeding this many decision points.
+    pub max_depth: usize,
+    /// Fail a schedule that spawns more than this many threads.
+    pub max_threads: usize,
+}
+
+impl Default for Builder {
+    fn default() -> Self {
+        Self { preemption_bound: Some(2), max_schedules: 50_000, max_depth: 20_000, max_threads: 8 }
+    }
+}
+
+impl Builder {
+    /// Explore `f` under every schedule within the bounds; panics (with
+    /// the offending schedule trace) on the first failing one.  Returns
+    /// the number of schedules explored.
+    pub fn check<F: Fn() + Send + Sync + 'static>(&self, f: F) -> usize {
+        assert!(ctx().is_none(), "nested loom models are not supported");
+        let mut prefix: Vec<Decision> = Vec::new();
+        let mut schedules = 0usize;
+        loop {
+            schedules += 1;
+            let decisions = self.explore_one(&f, prefix);
+            // DFS advance: increment the deepest decision with an
+            // untried option, drop everything after it.
+            let mut next = None;
+            for (i, d) in decisions.iter().enumerate().rev() {
+                if d.chosen + 1 < d.options.len() {
+                    next = Some(i);
+                    break;
+                }
+            }
+            match next {
+                None => return schedules,
+                Some(i) => {
+                    let mut pre: Vec<Decision> = decisions.into_iter().take(i + 1).collect();
+                    pre[i].chosen += 1;
+                    prefix = pre;
+                }
+            }
+            if schedules >= self.max_schedules {
+                eprintln!(
+                    "loom: warning: stopping after {schedules} schedules \
+                     (max_schedules); exploration is incomplete"
+                );
+                return schedules;
+            }
+        }
+    }
+
+    /// Run one schedule, replaying `prefix`; returns the decision log.
+    fn explore_one<F: Fn() + Send + Sync>(&self, f: &F, prefix: Vec<Decision>) -> Vec<Decision> {
+        let rt = Arc::new(Rt {
+            mx: StdMutex::new(St {
+                threads: vec![Th { run: Run::Runnable }],
+                current: Some(0),
+                last: Some(0),
+                pending_start: 0,
+                depth: 0,
+                preemptions: 0,
+                decisions: prefix,
+                trace: vec![0],
+                failure: None,
+                cfg: Cfg {
+                    preemption_bound: self.preemption_bound,
+                    max_depth: self.max_depth,
+                    max_threads: self.max_threads,
+                },
+            }),
+            cv: StdCondvar::new(),
+        });
+        let c = Ctx { rt: Arc::clone(&rt), tid: 0 };
+        CTX.with(|x| *x.borrow_mut() = Some(c.clone()));
+        let body = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+        // Hand the token off and wait for every spawned thread to finish
+        // (model bodies normally join their threads, so this is instant).
+        if body.is_ok() {
+            let mut st = lock_rt(&rt);
+            if st.failure.is_none() {
+                st.threads[0].run = Run::Finished;
+                if st.current == Some(0) {
+                    st.current = None;
+                }
+                maybe_schedule(&mut st);
+                rt.cv.notify_all();
+                while st.failure.is_none() && st.threads.iter().any(|t| t.run != Run::Finished) {
+                    st = rt.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+                }
+            }
+        }
+        CTX.with(|x| *x.borrow_mut() = None);
+        let mut st = lock_rt(&rt);
+        let failure = st.failure.take();
+        let decisions = std::mem::take(&mut st.decisions);
+        drop(st);
+        match (body, failure) {
+            (Ok(()), None) => decisions,
+            (_, Some(f)) => panic!("loom model failed: {f}"),
+            (Err(e), None) => {
+                panic!("loom model failed: body panicked: {}", panic_payload_to_string(&*e))
+            }
+        }
+    }
+}
+
+/// [`Builder::check`] with default bounds.
+pub fn model<F: Fn() + Send + Sync + 'static>(f: F) {
+    Builder::default().check(f);
+}
+
+// ---------------------------------------------------------------------------
+// Model sync primitives (delegate to std outside a model)
+// ---------------------------------------------------------------------------
+
+/// Drop-in `std::sync` / `std::thread` replacements that hit scheduler
+/// decision points inside a [`model`] and delegate to `std` outside one.
+pub mod sync {
+    use super::*;
+
+    pub struct Mutex<T> {
+        inner: StdMutex<T>,
+    }
+
+    pub struct MutexGuard<'a, T> {
+        lock: &'a Mutex<T>,
+        inner: Option<StdMutexGuard<'a, T>>,
+        /// `Some(ctx)` when acquired under a model (release must wake
+        /// model waiters).
+        model: Option<Ctx>,
+    }
+
+    impl<T> Mutex<T> {
+        pub const fn new(t: T) -> Self {
+            Self { inner: StdMutex::new(t) }
+        }
+
+        fn addr(&self) -> usize {
+            &self.inner as *const _ as usize
+        }
+
+        /// Acquire without an entry yield — used on re-lock after a
+        /// condvar wait (the wait itself was the decision point).
+        fn lock_model(&self, c: &Ctx) -> MutexGuard<'_, T> {
+            loop {
+                match self.inner.try_lock() {
+                    Ok(g) => {
+                        return MutexGuard { lock: self, inner: Some(g), model: Some(c.clone()) };
+                    }
+                    Err(_) => block_on(c, Run::Mutex(self.addr())),
+                }
+            }
+        }
+
+        #[allow(clippy::result_unit_err)]
+        pub fn lock(&self) -> Result<MutexGuard<'_, T>, ()> {
+            match ctx() {
+                Some(c) => {
+                    yield_point(&c);
+                    Ok(self.lock_model(&c))
+                }
+                None => match self.inner.lock() {
+                    Ok(g) => Ok(MutexGuard { lock: self, inner: Some(g), model: None }),
+                    // Map poisoning through (the repo treats lock
+                    // poisoning as fatal and unwraps everywhere).
+                    Err(_) => Err(()),
+                },
+            }
+        }
+    }
+
+    impl<T> std::ops::Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.inner.as_ref().expect("guard accessed after release")
+        }
+    }
+
+    impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.inner.as_mut().expect("guard accessed after release")
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            let addr = self.lock.addr();
+            drop(self.inner.take());
+            if let Some(c) = self.model.take() {
+                let mut st = lock_rt(&c.rt);
+                wake_matching(&mut st, Run::Mutex(addr));
+                // No reschedule: the releasing thread keeps the token
+                // until its next decision point.
+            }
+        }
+    }
+
+    pub struct Condvar {
+        inner: StdCondvar,
+    }
+
+    impl Default for Condvar {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    impl Condvar {
+        pub const fn new() -> Self {
+            Self { inner: StdCondvar::new() }
+        }
+
+        fn addr(&self) -> usize {
+            &self.inner as *const _ as usize
+        }
+
+        #[allow(clippy::result_unit_err)]
+        pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> Result<MutexGuard<'a, T>, ()> {
+            match guard.model.clone() {
+                Some(c) => {
+                    let lock = guard.lock;
+                    // Atomically (no other thread runs until we park):
+                    // mark ourselves waiting, release the mutex, park.
+                    {
+                        let mut st = lock_rt(&c.rt);
+                        st.threads[c.tid].run = Run::Cond(self.addr());
+                    }
+                    drop(guard); // releases the mutex, wakes its waiters
+                    let mut st = lock_rt(&c.rt);
+                    st.current = None;
+                    maybe_schedule(&mut st);
+                    c.rt.cv.notify_all();
+                    let st = wait_for_token(&c.rt, st, c.tid);
+                    drop(st);
+                    Ok(lock.lock_model(&c))
+                }
+                None => {
+                    let lock = guard.lock;
+                    let inner = guard.inner.take().expect("guard accessed after release");
+                    // `guard` now has no model ctx and no inner guard;
+                    // its Drop is a no-op.
+                    drop(guard);
+                    match self.inner.wait(inner) {
+                        Ok(g) => Ok(MutexGuard { lock, inner: Some(g), model: None }),
+                        Err(_) => Err(()),
+                    }
+                }
+            }
+        }
+
+        pub fn notify_all(&self) {
+            match ctx() {
+                Some(c) => {
+                    yield_point(&c);
+                    let mut st = lock_rt(&c.rt);
+                    wake_matching(&mut st, Run::Cond(self.addr()));
+                }
+                None => self.inner.notify_all(),
+            }
+        }
+
+        /// Model limitation: wakes the lowest-tid waiter (deterministic).
+        pub fn notify_one(&self) {
+            match ctx() {
+                Some(c) => {
+                    yield_point(&c);
+                    let mut st = lock_rt(&c.rt);
+                    let addr = self.addr();
+                    if let Some(t) = st.threads.iter_mut().find(|t| t.run == Run::Cond(addr)) {
+                        t.run = Run::Runnable;
+                    }
+                }
+                None => self.inner.notify_one(),
+            }
+        }
+    }
+
+    macro_rules! model_atomic {
+        ($name:ident, $std:ident, $ty:ty) => {
+            pub struct $name {
+                inner: $std,
+            }
+
+            impl $name {
+                pub const fn new(v: $ty) -> Self {
+                    Self { inner: $std::new(v) }
+                }
+
+                fn pre(&self) {
+                    if let Some(c) = ctx() {
+                        yield_point(&c);
+                    }
+                }
+
+                /// Model limitation: every access is `SeqCst` under a
+                /// model regardless of the requested ordering.
+                pub fn load(&self, o: Ordering) -> $ty {
+                    match ctx() {
+                        Some(c) => {
+                            yield_point(&c);
+                            self.inner.load(Ordering::SeqCst)
+                        }
+                        None => self.inner.load(o),
+                    }
+                }
+
+                pub fn store(&self, v: $ty, o: Ordering) {
+                    match ctx() {
+                        Some(c) => {
+                            yield_point(&c);
+                            self.inner.store(v, Ordering::SeqCst)
+                        }
+                        None => self.inner.store(v, o),
+                    }
+                }
+
+                pub fn fetch_add(&self, v: $ty, o: Ordering) -> $ty {
+                    match ctx() {
+                        Some(c) => {
+                            yield_point(&c);
+                            self.inner.fetch_add(v, Ordering::SeqCst)
+                        }
+                        None => self.inner.fetch_add(v, o),
+                    }
+                }
+
+                pub fn swap(&self, v: $ty, o: Ordering) -> $ty {
+                    self.pre();
+                    match ctx() {
+                        Some(_) => self.inner.swap(v, Ordering::SeqCst),
+                        None => self.inner.swap(v, o),
+                    }
+                }
+            }
+        };
+    }
+
+    model_atomic!(AtomicUsize, StdAtomicUsize, usize);
+    model_atomic!(AtomicU64, StdAtomicU64, u64);
+
+    pub struct AtomicBool {
+        inner: StdAtomicBool,
+    }
+
+    impl AtomicBool {
+        pub const fn new(v: bool) -> Self {
+            Self { inner: StdAtomicBool::new(v) }
+        }
+
+        pub fn load(&self, o: Ordering) -> bool {
+            match ctx() {
+                Some(c) => {
+                    yield_point(&c);
+                    self.inner.load(Ordering::SeqCst)
+                }
+                None => self.inner.load(o),
+            }
+        }
+
+        pub fn store(&self, v: bool, o: Ordering) {
+            match ctx() {
+                Some(c) => {
+                    yield_point(&c);
+                    self.inner.store(v, Ordering::SeqCst)
+                }
+                None => self.inner.store(v, o),
+            }
+        }
+
+        pub fn swap(&self, v: bool, o: Ordering) -> bool {
+            match ctx() {
+                Some(c) => {
+                    yield_point(&c);
+                    self.inner.swap(v, Ordering::SeqCst)
+                }
+                None => self.inner.swap(v, o),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model threads
+// ---------------------------------------------------------------------------
+
+/// Model-aware thread spawn/join.
+pub mod thread {
+    use super::*;
+
+    pub struct JoinHandle<T>(Inner<T>);
+
+    enum Inner<T> {
+        Std(std::thread::JoinHandle<T>),
+        Model { tid: usize, rt: Arc<Rt>, os: std::thread::JoinHandle<T> },
+    }
+
+    impl<T> JoinHandle<T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            match self.0 {
+                Inner::Std(h) => h.join(),
+                Inner::Model { tid, rt, os } => {
+                    let c = ctx().expect("joining a model thread from outside its model");
+                    loop {
+                        let finished = {
+                            let st = lock_rt(&rt);
+                            if let Some(f) = st.failure.clone() {
+                                if c.tid == 0 {
+                                    drop(st);
+                                    panic!("loom model failed: {f}");
+                                }
+                            }
+                            st.threads[tid].run == Run::Finished
+                        };
+                        if finished {
+                            return os.join();
+                        }
+                        block_on(&c, Run::Join(tid));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Spawn a named thread.  Inside a model this registers a model
+    /// thread (spawn is a decision point); outside it is
+    /// `std::thread::Builder` with the name applied.
+    pub fn spawn_named<T, F>(name: &str, f: F) -> JoinHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        match ctx() {
+            None => JoinHandle(Inner::Std(
+                std::thread::Builder::new()
+                    .name(name.to_string())
+                    .spawn(f)
+                    .expect("spawn thread"),
+            )),
+            Some(c) => {
+                let tid = {
+                    let mut st = lock_rt(&c.rt);
+                    if st.threads.len() >= st.cfg.max_threads {
+                        let cap = st.cfg.max_threads;
+                        fail(&mut st, format!("model spawned more than {cap} threads"));
+                        drop(st);
+                        let st2 = lock_rt(&c.rt);
+                        let _ = wait_for_token(&c.rt, st2, c.tid);
+                        unreachable!("wait_for_token returns only on grant");
+                    }
+                    st.threads.push(Th { run: Run::Runnable });
+                    st.pending_start += 1;
+                    st.threads.len() - 1
+                };
+                let child = Ctx { rt: Arc::clone(&c.rt), tid };
+                let os = std::thread::Builder::new()
+                    .name(name.to_string())
+                    .spawn(move || child_main(child, f))
+                    .expect("spawn model thread");
+                // The spawn itself is a decision point: the child may run
+                // immediately or the spawner may continue.
+                yield_point(&c);
+                JoinHandle(Inner::Model { tid, rt: Arc::clone(&c.rt), os })
+            }
+        }
+    }
+
+    fn child_main<T, F>(c: Ctx, f: F) -> T
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        CTX.with(|x| *x.borrow_mut() = Some(c.clone()));
+        // Initial park: register as started, then wait for the token.
+        {
+            let mut st = lock_rt(&c.rt);
+            st.pending_start -= 1;
+            maybe_schedule(&mut st);
+            c.rt.cv.notify_all();
+            let st = wait_for_token(&c.rt, st, c.tid);
+            drop(st);
+        }
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+        match r {
+            Ok(v) => {
+                finish_thread(&c, None);
+                v
+            }
+            Err(e) => {
+                finish_thread(&c, Some(panic_payload_to_string(&*e)));
+                // The model has failed; this OS thread's return value is
+                // never observed (the checker panics).  Park forever.
+                let st = lock_rt(&c.rt);
+                let _ = wait_for_token(&c.rt, st, c.tid);
+                unreachable!("failed model thread must not be rescheduled");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Self-tests (run in tier-1: they only use the checker, not cfg(loom))
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::sync::{AtomicUsize, Condvar, Mutex};
+    use super::thread::spawn_named;
+    use super::*;
+    use std::collections::BTreeMap;
+
+    /// Count how many distinct final values a racy read-modify-write
+    /// produces across schedules: the model must find both the correct
+    /// (2) and the lost-update (1) outcome.
+    #[test]
+    fn explores_both_outcomes_of_a_race() {
+        let outcomes: Arc<StdMutex<BTreeMap<usize, usize>>> =
+            Arc::new(StdMutex::new(BTreeMap::new()));
+        let oc = Arc::clone(&outcomes);
+        Builder::default().check(move || {
+            let a = Arc::new(AtomicUsize::new(0));
+            let b = Arc::clone(&a);
+            let t = spawn_named("racer", move || {
+                let v = b.load(Ordering::SeqCst);
+                b.store(v + 1, Ordering::SeqCst);
+            });
+            let v = a.load(Ordering::SeqCst);
+            a.store(v + 1, Ordering::SeqCst);
+            t.join().unwrap();
+            let v = a.load(Ordering::SeqCst);
+            *oc.lock().unwrap().entry(v).or_insert(0) += 1;
+        });
+        let seen = outcomes.lock().unwrap();
+        assert!(seen.contains_key(&2), "must find the serialized outcome: {seen:?}");
+        assert!(seen.contains_key(&1), "must find the lost-update interleaving: {seen:?}");
+    }
+
+    /// With a mutex around the read-modify-write the lost update is
+    /// impossible under every schedule.
+    #[test]
+    fn mutex_prevents_lost_update() {
+        model(|| {
+            let a = Arc::new(Mutex::new(0usize));
+            let b = Arc::clone(&a);
+            let t = spawn_named("locked", move || {
+                let mut g = b.lock().unwrap();
+                *g += 1;
+            });
+            {
+                let mut g = a.lock().unwrap();
+                *g += 1;
+            }
+            t.join().unwrap();
+            assert_eq!(*a.lock().unwrap(), 2);
+        });
+    }
+
+    /// ABBA lock ordering must be reported as a deadlock, not hang.
+    #[test]
+    fn detects_abba_deadlock() {
+        let r = std::panic::catch_unwind(|| {
+            model(|| {
+                let a = Arc::new(Mutex::new(()));
+                let b = Arc::new(Mutex::new(()));
+                let (a2, b2) = (Arc::clone(&a), Arc::clone(&b));
+                let t = spawn_named("ba", move || {
+                    let _gb = b2.lock().unwrap();
+                    let _ga = a2.lock().unwrap();
+                });
+                {
+                    let _ga = a.lock().unwrap();
+                    let _gb = b.lock().unwrap();
+                }
+                t.join().unwrap();
+            });
+        });
+        let e = r.expect_err("ABBA must fail the model");
+        let msg = panic_payload_to_string(&*e);
+        assert!(msg.contains("deadlock"), "unexpected failure: {msg}");
+    }
+
+    /// Classic condvar handoff: consumer waits for the flag under every
+    /// interleaving (including notify-before-wait, which the
+    /// waiter-marks-before-release protocol must not lose).
+    #[test]
+    fn condvar_handoff_completes() {
+        model(|| {
+            let pair = Arc::new((Mutex::new(false), Condvar::new()));
+            let p2 = Arc::clone(&pair);
+            let t = spawn_named("producer", move || {
+                let (mx, cv) = &*p2;
+                let mut g = mx.lock().unwrap();
+                *g = true;
+                cv.notify_all();
+            });
+            let (mx, cv) = &*pair;
+            let mut g = mx.lock().unwrap();
+            while !*g {
+                g = cv.wait(g).unwrap();
+            }
+            drop(g);
+            t.join().unwrap();
+        });
+    }
+
+    /// A panic on a spawned model thread is reported with a trace.
+    #[test]
+    fn reports_spawned_thread_panic() {
+        let r = std::panic::catch_unwind(|| {
+            model(|| {
+                let t = spawn_named("bomb", || panic!("boom"));
+                let _ = t.join();
+            });
+        });
+        let e = r.expect_err("spawned panic must fail the model");
+        let msg = panic_payload_to_string(&*e);
+        assert!(msg.contains("panicked") && msg.contains("boom"), "unexpected: {msg}");
+    }
+
+    /// Outside a model every primitive is plain std behaviour.
+    #[test]
+    fn delegates_to_std_outside_models() {
+        let m = Mutex::new(7usize);
+        *m.lock().unwrap() += 1;
+        assert_eq!(*m.lock().unwrap(), 8);
+        let a = AtomicUsize::new(1);
+        assert_eq!(a.fetch_add(2, Ordering::Relaxed), 1);
+        assert_eq!(a.load(Ordering::Relaxed), 3);
+        let t = spawn_named("std", || 41 + 1);
+        assert_eq!(t.join().unwrap(), 42);
+    }
+}

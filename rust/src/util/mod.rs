@@ -2,17 +2,27 @@
 //! offline — see Cargo.toml): a seeded PRNG (`rng`), persistent
 //! worker-pool data parallelism (`par` — long-lived threads with condvar
 //! dispatch, sized pools shared through a process-wide registry), a JSON
-//! parser/writer (`json`), and a lightweight property-testing harness
-//! (`proptest`).
+//! parser/writer (`json`), a lightweight property-testing harness
+//! (`proptest`), and the concurrency-correctness tooling around `par`: a
+//! bounded model checker (`loom` — the loom-crate substitute) and the
+//! `sync` shim that swaps `par`'s primitives for their model-checked
+//! twins under `--cfg loom`.
 
 pub mod json;
+pub mod loom;
+// `par` owns the audited unsafe core of the data-parallel substrate
+// (type-erased job pointers, SendPtr, raw chunk handout); every site
+// carries a SAFETY comment and `cargo run -p xtask -- lint` enforces the
+// allowlist (see the workspace `unsafe_code = "deny"` lint).
+#[allow(unsafe_code)]
 pub mod par;
 pub mod proptest;
 pub mod rng;
+pub mod sync;
 
 pub use json::Json;
 pub use par::{
-    global_pool, num_threads, par_chunks_mut, par_for, par_shards, pool_of, set_threads, SendPtr,
-    WorkerPool,
+    global_pool, num_threads, par_chunks_mut, par_for, par_shards, pool_of, set_threads,
+    shutdown_pools, PoolRegistry, SendPtr, ThreadConfig, WorkerPool,
 };
 pub use rng::Rng;

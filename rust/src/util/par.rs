@@ -20,36 +20,126 @@
 //!   instead of oversubscribing the host.
 //!
 //! Sizing: the global pool has [`num_threads`] workers (`APLLM_THREADS`,
-//! overridable in-process via [`set_threads`]).  Pools are cached by size
-//! in a process-wide registry and never torn down; a pool of size 1 runs
-//! inline and owns no threads.  Nested submissions from inside a worker
-//! run inline too, so kernels may freely compose with parallel callers.
+//! overridable in-process via [`set_threads`]; both live in a
+//! [`ThreadConfig`]).  Pools are cached by size in a process-wide
+//! [`PoolRegistry`] and torn down only by [`shutdown_pools`] (a test /
+//! Miri affordance); a pool of size 1 runs inline and owns no threads.
+//! Nested submissions from inside a worker run inline too, so kernels may
+//! freely compose with parallel callers.
+//!
+//! # Concurrency & unsafety
+//!
+//! This module is one of the three audited `unsafe` islands in the crate
+//! (with `bitmm::apmm` and `bitmm::planes`); everything else is built
+//! with `unsafe_code = "deny"`, and `cargo run -p xtask -- lint` enforces
+//! the allowlist, the `// SAFETY:` comments, and the no-raw-`thread::spawn`
+//! rule in CI.  The dispatch protocol invariants:
+//!
+//! * **Epoch monotonicity.**  `State::epoch` strictly increases, by
+//!   exactly one per submitted job, always under the state mutex.  Each
+//!   worker tracks the last epoch it executed (`seen`) and runs every
+//!   epoch **at most once** — a worker that misses the condvar window
+//!   still observes `epoch != seen` on its next wakeup, and a worker that
+//!   already ran the epoch blocks until the next bump.  The `submit`
+//!   mutex serializes submitters, so there is never more than one live
+//!   epoch.
+//! * **Job-data lifetime.**  A [`Job`] carries raw pointers into the
+//!   submitting `run` call's stack frame (the closure and the shared
+//!   index counter).  That is sound because `run` does not return — and
+//!   does not even begin unwinding — until the `active == 0` handshake
+//!   confirms every worker has left the epoch: the submitter's own share
+//!   of the work runs under `catch_unwind`, so a panicking closure still
+//!   drains the epoch before the panic resumes.
+//! * **Submitter-as-worker-0 can't deadlock.**  The submitter
+//!   participates in its own epoch instead of waiting for a free worker,
+//!   so a pool is never needed to make progress on its own submission;
+//!   workers themselves never submit (a nested [`WorkerPool::run`] from
+//!   inside a job detects `IN_POOL` and runs inline), so the `submit`
+//!   mutex can only be held by a thread that is not a pool worker, and
+//!   the `done` wait terminates because each of the `handles.len()`
+//!   workers decrements `active` exactly once per epoch (their jobs run
+//!   under `catch_unwind`, so a panic cannot skip the decrement).
+//! * **`SendPtr` disjointness.**  [`SendPtr`] lets workers write through
+//!   a shared raw pointer; the *caller* owes the proof that concurrent
+//!   writes land in disjoint regions.  The canonical pattern — indexing
+//!   by the job index the pool hands out exactly once — is what
+//!   [`chunks_on`] packages, and its debug assertions turn a violated
+//!   hand-out (a chunk dispatched twice, a range out of bounds, a slice
+//!   not exactly covered) into a loud failure on ordinary test runs, not
+//!   just under Miri.
+//!
+//! These invariants are machine-checked three ways in CI: the
+//! `loom_model` tests below exhaustively model the protocol under
+//! `--cfg loom` (see [`crate::util::loom`]), Miri runs the
+//! `tests/miri_suite.rs` walk of every unsafe path, and ThreadSanitizer
+//! runs the native suite.  The primitives themselves are imported from
+//! [`crate::util::sync`] so the loom build swaps them for model-checked
+//! twins without touching this file's logic.
 
 use std::cell::Cell;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
+
+use crate::util::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::sync::{thread, Condvar, Mutex};
+
+/// Worker-count resolution state: an in-process override (highest
+/// priority) plus a latched environment-derived default.  The process
+/// global lives behind [`num_threads`] / [`set_threads`]; loom tests
+/// instantiate their own to model the override/cache race.
+pub struct ThreadConfig {
+    overridden: AtomicUsize,
+    env_cache: AtomicUsize,
+}
+
+impl ThreadConfig {
+    pub const fn new() -> Self {
+        Self { overridden: AtomicUsize::new(0), env_cache: AtomicUsize::new(0) }
+    }
+
+    /// Resolution order: the [`Self::set_override`] value if nonzero,
+    /// then the cached default, then `env_default()` (invoked at most
+    /// once per cache fill and latched).
+    pub fn resolve<F: FnOnce() -> usize>(&self, env_default: F) -> usize {
+        let o = self.overridden.load(Ordering::Relaxed);
+        if o != 0 {
+            return o;
+        }
+        let c = self.env_cache.load(Ordering::Relaxed);
+        if c != 0 {
+            return c;
+        }
+        let n = env_default().max(1);
+        self.env_cache.store(n, Ordering::Relaxed);
+        n
+    }
+
+    /// `0` clears the override back to the environment default.
+    pub fn set_override(&self, n: usize) {
+        self.overridden.store(n, Ordering::Relaxed);
+    }
+}
+
+impl Default for ThreadConfig {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+static CONFIG: ThreadConfig = ThreadConfig::new();
 
 /// Default worker count: an in-process [`set_threads`] override wins,
 /// then `APLLM_THREADS`, then available parallelism (capped at 16 — the
 /// kernels saturate memory bandwidth well before that).
 pub fn num_threads() -> usize {
-    let o = OVERRIDE.load(Ordering::Relaxed);
-    if o != 0 {
-        return o;
-    }
-    let c = ENV_CACHE.load(Ordering::Relaxed);
-    if c != 0 {
-        return c;
-    }
-    let n = std::env::var("APLLM_THREADS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .filter(|&v| v > 0)
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
-        });
-    ENV_CACHE.store(n, Ordering::Relaxed);
-    n
+    CONFIG.resolve(|| {
+        std::env::var("APLLM_THREADS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .filter(|&v| v > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+            })
+    })
 }
 
 /// In-process worker-count override (`0` clears back to the
@@ -57,35 +147,71 @@ pub fn num_threads() -> usize {
 /// to latch the first read forever; benches, the CLI and tests use this
 /// to vary worker count without re-execing.
 pub fn set_threads(n: usize) {
-    OVERRIDE.store(n, Ordering::Relaxed);
+    CONFIG.set_override(n);
 }
 
-static OVERRIDE: AtomicUsize = AtomicUsize::new(0);
-static ENV_CACHE: AtomicUsize = AtomicUsize::new(0);
+/// A registry of pools keyed by size.  Threads asking for the same
+/// worker budget get the *same* pool (N replicas × T workers never
+/// oversubscribe the host — they step sequentially), and repeated
+/// benches at a given size reuse warm threads.  The process global lives
+/// behind [`pool_of`]; loom tests instantiate their own to model the
+/// concurrent first-use race.
+pub struct PoolRegistry {
+    pools: Mutex<Vec<Arc<WorkerPool>>>,
+}
 
-/// The shared registry of pools, keyed by size.  Replicas asking for the
-/// same worker budget get the *same* pool (they step sequentially, so N
-/// replicas × T workers never oversubscribe the host), and repeated
-/// benches at a given size reuse warm threads.
-static REGISTRY: Mutex<Vec<Arc<WorkerPool>>> = Mutex::new(Vec::new());
+impl PoolRegistry {
+    pub const fn new() -> Self {
+        Self { pools: Mutex::new(Vec::new()) }
+    }
+
+    /// The pool of exactly `size` workers, created on first use and
+    /// cached until [`Self::shutdown`].
+    pub fn get(&self, size: usize) -> Arc<WorkerPool> {
+        let mut reg = self.pools.lock().unwrap();
+        if let Some(p) = reg.iter().find(|p| p.size() == size) {
+            return Arc::clone(p);
+        }
+        let p = Arc::new(WorkerPool::new(size));
+        reg.push(Arc::clone(&p));
+        p
+    }
+
+    /// Drop every cached pool.  A pool whose last `Arc` dies here joins
+    /// its worker threads before returning.
+    pub fn shutdown(&self) {
+        self.pools.lock().unwrap().clear();
+    }
+}
+
+impl Default for PoolRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+static REGISTRY: PoolRegistry = PoolRegistry::new();
 
 /// The pool of exactly `size` workers, created on first use and cached
 /// for the process lifetime.  `size == 0` is treated as [`num_threads`].
 pub fn pool_of(size: usize) -> Arc<WorkerPool> {
     let size = if size == 0 { num_threads() } else { size };
-    let mut reg = REGISTRY.lock().unwrap();
-    if let Some(p) = reg.iter().find(|p| p.size() == size) {
-        return Arc::clone(p);
-    }
-    let p = Arc::new(WorkerPool::new(size));
-    reg.push(Arc::clone(&p));
-    p
+    REGISTRY.get(size)
 }
 
 /// The [`num_threads`]-sized pool (re-resolved per call, so
 /// [`set_threads`] takes effect immediately).
 pub fn global_pool() -> Arc<WorkerPool> {
     pool_of(num_threads())
+}
+
+/// Tear down every registry pool, joining worker threads whose last
+/// reference lived in the registry.  Subsequent [`pool_of`] calls
+/// recreate pools on demand.  Ordinary runs never need this (warm pools
+/// for the process lifetime are the point); the Miri suite calls it so
+/// the interpreter sees every thread joined at exit.
+pub fn shutdown_pools() {
+    REGISTRY.shutdown();
 }
 
 thread_local! {
@@ -135,13 +261,13 @@ struct Shared {
 /// participates as the `size`-th worker, so `size == 1` owns no threads
 /// and runs inline).  Dispatch is a single mutex store + condvar
 /// broadcast; threads live until the pool is dropped — for registry pools
-/// ([`pool_of`]) that is never, which is the point.
+/// ([`pool_of`]) that is normally never, which is the point.
 pub struct WorkerPool {
     size: usize,
     shared: Arc<Shared>,
     /// Serializes concurrent `run` calls from different threads.
     submit: Mutex<()>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    handles: Vec<thread::JoinHandle<()>>,
 }
 
 impl WorkerPool {
@@ -162,10 +288,7 @@ impl WorkerPool {
         let handles = (1..size)
             .map(|i| {
                 let shared = Arc::clone(&shared);
-                std::thread::Builder::new()
-                    .name(format!("apllm-par-{i}"))
-                    .spawn(move || worker_loop(&shared))
-                    .expect("spawn pool worker")
+                thread::spawn_named(&format!("apllm-par-{i}"), move || worker_loop(&shared))
             })
             .collect();
         Self { size, shared, submit: Mutex::new(()), handles }
@@ -192,8 +315,15 @@ impl WorkerPool {
         }
 
         /// Monomorphized un-eraser for [`Job::call`].
+        // SAFETY (to call): `data` must be `&F` erased for this exact `F`
+        // and outlive the call; the only caller is the `run` that
+        // published the job, which upholds both.
         unsafe fn call_thunk<F: Fn(usize) + Sync>(data: *const (), i: usize) {
-            (*(data as *const F))(i);
+            // SAFETY: `data` was erased from `&F` by the `run` call that
+            // published this job, and stays borrowed until the epoch
+            // handshake completes (see `Job`); `F: Sync` makes the shared
+            // call sound.
+            unsafe { (*(data as *const F))(i) };
         }
 
         let _turn = self.submit.lock().unwrap();
@@ -254,6 +384,8 @@ fn run_job(job: &Job) {
         if i >= job.n {
             return;
         }
+        // SAFETY: same lifetime argument as above; `call` is the
+        // monomorphized thunk for the published closure's exact type.
         unsafe { (job.call)(job.data, i) };
     }
 }
@@ -293,10 +425,17 @@ fn worker_loop(shared: &Shared) {
 /// The *caller* must guarantee every worker writes a disjoint region (the
 /// pool hands each index out exactly once, so indexing by job index is the
 /// canonical pattern).  Reads of the written data after `run` returns are
-/// synchronized by the pool's epoch handshake.
+/// synchronized by the pool's epoch handshake.  The `xtask lint` pass
+/// keeps every use of this escape hatch inside the audited modules.
 pub struct SendPtr<T>(*mut T);
 
+// SAFETY: SendPtr is a plain pointer wrapper; sending or sharing it moves
+// no data.  All dereferences happen inside pool jobs whose callers uphold
+// the disjoint-writes contract above, and the epoch handshake sequences
+// those writes before any post-`run` read.
 unsafe impl<T: Send> Send for SendPtr<T> {}
+// SAFETY: as above — `&SendPtr` only exposes the raw pointer value;
+// dereferencing it is the caller's audited responsibility.
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 impl<T> SendPtr<T> {
@@ -314,6 +453,12 @@ impl<T> SendPtr<T> {
 /// `f(chunk_index, chunk)` — the pool hands each chunk index out exactly
 /// once, so the `&mut` chunks are disjoint by construction and no lock or
 /// `Option::take` handoff is needed.
+///
+/// Debug builds verify the construction: every handed-out range must be
+/// in-bounds, every chunk index must be dispatched exactly once, and the
+/// dispatched chunks must cover the slice exactly — so a future scheduling
+/// bug surfaces as a loud assertion on the ordinary test path, not only
+/// under Miri.
 pub fn chunks_on<T: Send, F: Fn(usize, &mut [T]) + Sync>(
     pool: &WorkerPool,
     data: &mut [T],
@@ -324,14 +469,44 @@ pub fn chunks_on<T: Send, F: Fn(usize, &mut [T]) + Sync>(
     let len = data.len();
     let n_chunks = len.div_ceil(chunk_len);
     let base = SendPtr::new(data.as_mut_ptr());
+    #[cfg(debug_assertions)]
+    let handed_out: Vec<std::sync::atomic::AtomicBool> =
+        (0..n_chunks).map(|_| std::sync::atomic::AtomicBool::new(false)).collect();
+    #[cfg(debug_assertions)]
+    let covered = std::sync::atomic::AtomicUsize::new(0);
     pool.run(n_chunks, |ci| {
         let lo = ci * chunk_len;
         let hi = len.min(lo + chunk_len);
+        #[cfg(debug_assertions)]
+        {
+            assert!(ci < n_chunks, "chunk index {ci} out of range ({n_chunks} chunks)");
+            assert!(
+                lo < hi && hi <= len,
+                "chunk {ci} range [{lo}, {hi}) out of bounds for slice of {len}"
+            );
+            assert!(
+                !handed_out[ci].swap(true, std::sync::atomic::Ordering::Relaxed),
+                "chunk {ci} handed out twice (would alias &mut)"
+            );
+            covered.fetch_add(hi - lo, std::sync::atomic::Ordering::Relaxed);
+        }
         // SAFETY: chunk `ci` is handed out exactly once and [lo, hi)
         // ranges are pairwise disjoint across chunk indices.
         let chunk = unsafe { std::slice::from_raw_parts_mut(base.get().add(lo), hi - lo) };
         f(ci, chunk);
     });
+    #[cfg(debug_assertions)]
+    {
+        assert!(
+            handed_out.iter().all(|b| b.load(std::sync::atomic::Ordering::Relaxed)),
+            "some chunk was never dispatched"
+        );
+        assert_eq!(
+            covered.load(std::sync::atomic::Ordering::Relaxed),
+            len,
+            "dispatched chunks do not cover the slice exactly"
+        );
+    }
 }
 
 /// [`chunks_on`] over the global [`num_threads`]-sized pool.
@@ -386,9 +561,9 @@ mod tests {
     fn par_for_runs_each_index_once() {
         let sum = AtomicU64::new(0);
         par_for(1000, |i| {
-            sum.fetch_add(i as u64, Ordering::Relaxed);
+            sum.fetch_add(i as u64, std::sync::atomic::Ordering::Relaxed);
         });
-        assert_eq!(sum.load(Ordering::Relaxed), 999 * 1000 / 2);
+        assert_eq!(sum.load(std::sync::atomic::Ordering::Relaxed), 999 * 1000 / 2);
     }
 
     #[test]
@@ -410,10 +585,10 @@ mod tests {
         let sum = AtomicU64::new(0);
         for _ in 0..50 {
             a.run(37, |i| {
-                sum.fetch_add(i as u64 + 1, Ordering::Relaxed);
+                sum.fetch_add(i as u64 + 1, std::sync::atomic::Ordering::Relaxed);
             });
         }
-        assert_eq!(sum.load(Ordering::Relaxed), 50 * (37 * 38 / 2));
+        assert_eq!(sum.load(std::sync::atomic::Ordering::Relaxed), 50 * (37 * 38 / 2));
     }
 
     #[test]
@@ -428,7 +603,37 @@ mod tests {
         assert!(num_threads() >= 1, "cleared override falls back to default");
     }
 
-    static OVERRIDE_TEST_LOCK: Mutex<()> = Mutex::new(());
+    static OVERRIDE_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[test]
+    fn fresh_thread_config_resolves_and_latches() {
+        let cfg = ThreadConfig::new();
+        assert_eq!(cfg.resolve(|| 7), 7);
+        // latched: a different default no longer matters
+        assert_eq!(cfg.resolve(|| 9), 7);
+        cfg.set_override(2);
+        assert_eq!(cfg.resolve(|| 9), 2);
+        cfg.set_override(0);
+        assert_eq!(cfg.resolve(|| 9), 7);
+    }
+
+    #[test]
+    fn private_registry_caches_by_size_and_shuts_down() {
+        let reg = PoolRegistry::new();
+        let a = reg.get(2);
+        let b = reg.get(2);
+        assert!(Arc::ptr_eq(&a, &b));
+        let c = reg.get(3);
+        assert!(!Arc::ptr_eq(&a, &c));
+        drop((b, c));
+        reg.shutdown();
+        // registry refs gone; ours still works, then joins on drop
+        let sum = AtomicU64::new(0);
+        a.run(8, |i| {
+            sum.fetch_add(i as u64, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(std::sync::atomic::Ordering::Relaxed), 28);
+    }
 
     #[test]
     fn nested_run_from_inside_a_job_runs_inline() {
@@ -437,10 +642,10 @@ mod tests {
         pool.run(8, |_| {
             // would deadlock on the submit lock if not inlined
             pool.run(4, |j| {
-                sum.fetch_add(j as u64, Ordering::Relaxed);
+                sum.fetch_add(j as u64, std::sync::atomic::Ordering::Relaxed);
             });
         });
-        assert_eq!(sum.load(Ordering::Relaxed), 8 * 6);
+        assert_eq!(sum.load(std::sync::atomic::Ordering::Relaxed), 8 * 6);
     }
 
     #[test]
@@ -457,9 +662,9 @@ mod tests {
         // the pool must still be usable after a panicked epoch
         let sum = AtomicU64::new(0);
         pool.run(16, |i| {
-            sum.fetch_add(i as u64, Ordering::Relaxed);
+            sum.fetch_add(i as u64, std::sync::atomic::Ordering::Relaxed);
         });
-        assert_eq!(sum.load(Ordering::Relaxed), 120);
+        assert_eq!(sum.load(std::sync::atomic::Ordering::Relaxed), 120);
     }
 
     #[test]
@@ -467,7 +672,150 @@ mod tests {
         let pool = WorkerPool::new(1);
         let mut hit = vec![false; 9];
         let ptr = SendPtr::new(hit.as_mut_ptr());
+        // SAFETY: each index `i` is handed out exactly once, so the
+        // writes target disjoint elements of `hit`, which outlives `run`.
         pool.run(9, |i| unsafe { *ptr.get().add(i) = true });
         assert!(hit.iter().all(|&h| h));
+    }
+}
+
+/// Exhaustive protocol models, run by the loom CI lane:
+/// `RUSTFLAGS="--cfg loom" cargo test --lib loom_model`.
+/// Each test re-executes its body under every bounded interleaving of the
+/// pool's mutexes, condvars and atomics (see [`crate::util::loom`]).
+#[cfg(all(test, loom))]
+mod loom_model {
+    use super::*;
+    use crate::util::loom;
+    use crate::util::sync::thread::spawn_named;
+    use std::sync::atomic::{AtomicUsize as StdAtomicUsize, Ordering as O};
+
+    fn bounded(preemptions: usize) -> loom::Builder {
+        loom::Builder { preemption_bound: Some(preemptions), ..Default::default() }
+    }
+
+    /// Submit one epoch to a two-thread pool and drain it: the epoch
+    /// bump, condvar wakeup, shared index counter and `active == 0`
+    /// handshake all run under every bounded schedule, and shutdown/join
+    /// (pool drop) completes from any of them.
+    #[test]
+    fn submit_and_drain_two_workers() {
+        bounded(2).check(|| {
+            let pool = WorkerPool::new(2);
+            let sum = StdAtomicUsize::new(0);
+            pool.run(2, |i| {
+                sum.fetch_add(i + 1, O::Relaxed);
+            });
+            assert_eq!(sum.load(O::Relaxed), 3);
+        });
+    }
+
+    /// Epoch monotonicity across consecutive submissions: a worker that
+    /// raced ahead (or lagged behind) on epoch N must still run epoch
+    /// N+1 exactly once.
+    #[test]
+    fn epoch_advance_runs_each_epoch_once() {
+        bounded(1).check(|| {
+            let pool = WorkerPool::new(2);
+            let sum = StdAtomicUsize::new(0);
+            pool.run(2, |i| {
+                sum.fetch_add(i + 1, O::Relaxed);
+            });
+            pool.run(2, |i| {
+                sum.fetch_add(10 * (i + 1), O::Relaxed);
+            });
+            assert_eq!(sum.load(O::Relaxed), 33);
+        });
+    }
+
+    /// Nested submission from inside a job must inline (`IN_POOL`), not
+    /// re-enter the submit lock.
+    #[test]
+    fn nested_submit_runs_inline() {
+        bounded(2).check(|| {
+            let pool = WorkerPool::new(2);
+            let sum = StdAtomicUsize::new(0);
+            pool.run(2, |_| {
+                pool.run(2, |j| {
+                    sum.fetch_add(j + 1, O::Relaxed);
+                });
+            });
+            assert_eq!(sum.load(O::Relaxed), 6);
+        });
+    }
+
+    /// A panicking job must drain the epoch *before* the panic resumes
+    /// (workers hold pointers into the submitter's frame), and the pool
+    /// must accept the next epoch afterwards.
+    #[test]
+    fn panic_drains_epoch_before_unwinding() {
+        // Silence the planted payload (every explored schedule panics
+        // once); everything else still reaches the previous hook.
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let msg = info
+                .payload()
+                .downcast_ref::<&str>()
+                .map(|s| (*s).to_string())
+                .or_else(|| info.payload().downcast_ref::<String>().cloned())
+                .unwrap_or_default();
+            if !(msg.contains("planted") || msg.contains("worker-pool job panicked")) {
+                prev(info);
+            }
+        }));
+        bounded(1).check(|| {
+            let pool = WorkerPool::new(2);
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                pool.run(2, |i| {
+                    if i == 0 {
+                        panic!("planted");
+                    }
+                });
+            }));
+            assert!(r.is_err(), "planted panic must surface on the submitter");
+            let sum = StdAtomicUsize::new(0);
+            pool.run(2, |i| {
+                sum.fetch_add(i + 1, O::Relaxed);
+            });
+            assert_eq!(sum.load(O::Relaxed), 3);
+        });
+    }
+
+    /// Two threads race `PoolRegistry::get` on first use: both must end
+    /// up holding the *same* pool (no duplicate pools of one size).
+    #[test]
+    fn concurrent_registry_first_use_yields_one_pool() {
+        bounded(2).check(|| {
+            let reg = Arc::new(PoolRegistry::new());
+            let out = Arc::new(Mutex::new(Vec::new()));
+            let (r2, o2) = (Arc::clone(&reg), Arc::clone(&out));
+            let t = spawn_named("reg-race", move || {
+                let p = r2.get(1);
+                o2.lock().unwrap().push(p);
+            });
+            let p0 = reg.get(1);
+            t.join().unwrap();
+            let got = out.lock().unwrap();
+            assert_eq!(got.len(), 1);
+            assert!(Arc::ptr_eq(&got[0], &p0), "racing first use must cache exactly one pool");
+        });
+    }
+
+    /// `set_override` racing `resolve`: the racing read may see either
+    /// value, but once the override write settles every later resolve
+    /// must return it (the env cache latch cannot shadow the override).
+    #[test]
+    fn override_beats_env_cache_once_set() {
+        bounded(2).check(|| {
+            let cfg = Arc::new(ThreadConfig::new());
+            let c2 = Arc::clone(&cfg);
+            let t = spawn_named("override", move || {
+                c2.set_override(3);
+            });
+            let first = cfg.resolve(|| 8);
+            assert!(first == 3 || first == 8, "racing resolve returned {first}");
+            t.join().unwrap();
+            assert_eq!(cfg.resolve(|| 8), 3, "override must win after the race settles");
+        });
     }
 }

@@ -1,0 +1,58 @@
+//! Sync-primitive shim: `std::sync` by default, the [`crate::util::loom`]
+//! model types under `--cfg loom`.
+//!
+//! `util::par` (and any future concurrent module) imports its mutexes,
+//! condvars, atomics and thread spawns from here instead of `std`, so a
+//! loom build (`RUSTFLAGS="--cfg loom" cargo test --lib loom_model`)
+//! swaps every primitive for its model-checked twin without touching the
+//! protocol code.  The model types delegate to `std` whenever no model is
+//! active, so a loom build still runs the regular suite unchanged.
+
+#[cfg(not(loom))]
+pub use std::sync::{Condvar, Mutex, MutexGuard};
+
+#[cfg(loom)]
+pub use crate::util::loom::sync::{Condvar, Mutex, MutexGuard};
+
+pub mod atomic {
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize};
+
+    #[cfg(loom)]
+    pub use crate::util::loom::sync::{AtomicBool, AtomicU64, AtomicUsize};
+
+    // Orderings are plain values in both worlds (the model upgrades every
+    // access to SeqCst internally; see `util::loom` for the limitation).
+    pub use std::sync::atomic::Ordering;
+}
+
+pub mod thread {
+    #[cfg(not(loom))]
+    pub struct JoinHandle<T>(std::thread::JoinHandle<T>);
+
+    #[cfg(not(loom))]
+    impl<T> JoinHandle<T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            self.0.join()
+        }
+    }
+
+    /// Spawn a named thread (`std::thread::Builder` under the hood; a
+    /// model thread under `--cfg loom` inside a model).
+    #[cfg(not(loom))]
+    pub fn spawn_named<T, F>(name: &str, f: F) -> JoinHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        JoinHandle(
+            std::thread::Builder::new()
+                .name(name.to_string())
+                .spawn(f)
+                .expect("spawn thread"),
+        )
+    }
+
+    #[cfg(loom)]
+    pub use crate::util::loom::thread::{spawn_named, JoinHandle};
+}

@@ -1,0 +1,141 @@
+//! Curated suite for the Miri / ThreadSanitizer CI lanes
+//! (`cargo miri test --test miri_suite`), sized for an interpreter that
+//! runs ~1000× slower than native.  `harness = false` so the whole run
+//! is one deterministic `main` with explicit teardown: Miri reports any
+//! thread still alive at process exit as a leak, so the suite ends with
+//! [`apllm::util::shutdown_pools`].
+//!
+//! Coverage targets the crate's unsafe surface:
+//! * the `util::par` epoch protocol (`par_for`, nested submit,
+//!   `par_chunks_mut` exact-coverage slicing);
+//! * `SendPtr` disjoint-write aliasing/provenance (the pattern the
+//!   column-shard and plane-pair kernels rely on);
+//! * the `bitmm` packed kernels across every `ShardPolicy`, so the
+//!   `unsafe` scatter in `pack_rows_into` and the raw-pointer writes in
+//!   `apmm` run under the borrow tracker;
+//! * worker panic propagation (pool stays usable afterwards).
+//!
+//! The suite also runs under the plain test harness (it is a normal
+//! integration test), where it takes milliseconds.
+
+use apllm::bitfmt::IntFormat;
+use apllm::bitmm::{
+    apmm_bipolar_packed, apmm_weighted_packed_opts, naive_gemm_decoded, pack_codes, ApmmOpts,
+    CodeMatrix, ShardPolicy,
+};
+use apllm::util::{global_pool, par_chunks_mut, par_for, set_threads, shutdown_pools, SendPtr};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Small-but-multithreaded problem sizes: Miri's scheduler interleaves
+/// real threads, so 2 workers already exercise the handshake; SIZE keeps
+/// the interpreter budget in seconds.
+const SIZE: usize = 64;
+
+fn par_for_covers_every_index() {
+    let hits = AtomicUsize::new(0);
+    par_for(SIZE, |_| {
+        hits.fetch_add(1, Ordering::Relaxed);
+    });
+    assert_eq!(hits.load(Ordering::Relaxed), SIZE);
+}
+
+fn nested_submit_runs_inline() {
+    let total = AtomicUsize::new(0);
+    par_for(4, |_| {
+        // A job that submits again must be inlined, not deadlock.
+        par_for(3, |j| {
+            total.fetch_add(j + 1, Ordering::Relaxed);
+        });
+    });
+    assert_eq!(total.load(Ordering::Relaxed), 4 * (1 + 2 + 3));
+}
+
+fn par_chunks_mut_partitions_exactly() {
+    let mut data = vec![0u32; SIZE + 7]; // non-multiple of chunk size
+    par_chunks_mut(&mut data, 16, |ci, chunk| {
+        for v in chunk.iter_mut() {
+            *v = ci as u32 + 1;
+        }
+    });
+    assert!(data.iter().all(|&v| v != 0), "every element written exactly once");
+}
+
+// The one deliberate `unsafe` outside the audited modules: it *is* the
+// aliasing pattern under test, in a test target the xtask lint does not
+// scan (it lints `src/` only).
+#[allow(unsafe_code)]
+fn sendptr_disjoint_writes() {
+    // The kernels' aliasing pattern, distilled: one allocation, every
+    // job writes its own element through a shared raw pointer.
+    let mut out = vec![0usize; SIZE];
+    let ptr = SendPtr::new(out.as_mut_ptr());
+    global_pool().run(SIZE, |i| {
+        // SAFETY: index `i` is handed to exactly one job, so writes are
+        // disjoint; `out` outlives the epoch handshake in `run`.
+        unsafe { *ptr.get().add(i) = i + 1 };
+    });
+    for (i, &v) in out.iter().enumerate() {
+        assert_eq!(v, i + 1);
+    }
+}
+
+fn worker_panic_propagates_and_pool_survives() {
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        par_for(8, |i| {
+            if i == 3 {
+                panic!("planted panic");
+            }
+        });
+    }));
+    assert!(caught.is_err(), "worker panic must reach the submitter");
+    // The pool must have drained the failed epoch and still be usable.
+    let hits = AtomicUsize::new(0);
+    par_for(SIZE, |_| {
+        hits.fetch_add(1, Ordering::Relaxed);
+    });
+    assert_eq!(hits.load(Ordering::Relaxed), SIZE);
+}
+
+fn bitmm_kernels_under_all_policies() {
+    // Exercises pack_rows_into's parallel scatter and both raw-pointer
+    // kernel paths (Cols, Planes) with k spanning >1 packed word.
+    let w = CodeMatrix::random(3, 70, 3, 1);
+    let xt = CodeMatrix::random(4, 70, 2, 2);
+    let wp = pack_codes(&w);
+    let xp = pack_codes(&xt);
+    let want_b = naive_gemm_decoded(&w, &xt, IntFormat::Bipolar);
+    let want_s = naive_gemm_decoded(&w, &xt, IntFormat::Signed);
+    for shard in ShardPolicy::ALL {
+        let opts = ApmmOpts { shard, tile_m: 2, tile_n: 2, workers: 2 };
+        assert_eq!(apmm_bipolar_packed(&wp, &xp, opts), want_b, "bipolar {shard:?}");
+        assert_eq!(
+            apmm_weighted_packed_opts(&wp, &xp, IntFormat::Signed, opts),
+            want_s,
+            "signed {shard:?}"
+        );
+    }
+}
+
+fn main() {
+    // Pin the worker count up front: deterministic across lanes, and it
+    // keeps Miri from needing host env/parallelism queries mid-suite.
+    set_threads(2);
+
+    let tests: &[(&str, fn())] = &[
+        ("par_for_covers_every_index", par_for_covers_every_index),
+        ("nested_submit_runs_inline", nested_submit_runs_inline),
+        ("par_chunks_mut_partitions_exactly", par_chunks_mut_partitions_exactly),
+        ("sendptr_disjoint_writes", sendptr_disjoint_writes),
+        ("worker_panic_propagates_and_pool_survives", worker_panic_propagates_and_pool_survives),
+        ("bitmm_kernels_under_all_policies", bitmm_kernels_under_all_policies),
+    ];
+    for (name, f) in tests {
+        println!("miri_suite::{name} ...");
+        f();
+        println!("miri_suite::{name} ok");
+    }
+
+    // Join every pooled worker so Miri's leak check sees a clean exit.
+    shutdown_pools();
+    println!("miri_suite: {} tests ok", tests.len());
+}

@@ -1,0 +1,544 @@
+//! `cargo run -p xtask -- lint` — repo-local static analysis for `apllm`.
+//!
+//! Four safety rules over `rust/src`, enforced in CI beside fmt/clippy:
+//!
+//! 1. **unsafe-allowlist** — the `unsafe` keyword may appear only in the
+//!    three audited modules (`util/par.rs`, `bitmm/apmm.rs`,
+//!    `bitmm/planes.rs`).  Everything else relies on the workspace-level
+//!    `unsafe_code = "deny"` lint *and* this check, so a stray
+//!    `#[allow(unsafe_code)]` can't silently widen the audited surface.
+//! 2. **safety-comment** — every `unsafe` site inside the allowlist must
+//!    carry a `// SAFETY:` comment on the same line or in the contiguous
+//!    comment block directly above it.
+//! 3. **narrowing-cast** — `as i32` / `as u32` casts are banned in
+//!    `bitmm` kernel bodies (the accumulator-overflow class fixed in
+//!    PR 2) unless annotated with `// lint: allow(narrowing-cast)` on the
+//!    same line or the line above, stating why the cast is exact.
+//! 4. **raw-spawn** — `std::thread::spawn` / `thread::Builder` may appear
+//!    only in `util/par.rs`, `util/sync.rs` and `util/loom.rs`: all other
+//!    code must go through the worker pool so the loom/Miri/tsan lanes
+//!    actually cover the crate's threading.
+//!
+//! Scanning is textual but comment/string-aware: sources are stripped
+//! (comments, string/char literals blanked, newlines kept) before rules
+//! run, `#[cfg(test)]` regions and files named `tests.rs` are skipped,
+//! and `unsafe fn(..)` *function-pointer types* are exempt from rules
+//! 1–2 (they declare no unsafe operation).
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Modules audited for `unsafe` (must match the `#[allow(unsafe_code)]`
+/// grants in `util/mod.rs` and `bitmm/mod.rs`).
+const UNSAFE_ALLOWLIST: &[&str] = &["util/par.rs", "bitmm/apmm.rs", "bitmm/planes.rs"];
+
+/// Modules allowed to start OS threads directly.
+const SPAWN_ALLOWLIST: &[&str] = &["util/par.rs", "util/sync.rs", "util/loom.rs"];
+
+/// Escape-hatch marker for rule 3.
+const CAST_ESCAPE: &str = "lint: allow(narrowing-cast)";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Rule {
+    UnsafeOutsideAllowlist,
+    UnsafeWithoutSafetyComment,
+    NarrowingCastInKernel,
+    RawThreadSpawn,
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Rule::UnsafeOutsideAllowlist => "unsafe-allowlist",
+            Rule::UnsafeWithoutSafetyComment => "safety-comment",
+            Rule::NarrowingCastInKernel => "narrowing-cast",
+            Rule::RawThreadSpawn => "raw-spawn",
+        })
+    }
+}
+
+#[derive(Debug)]
+struct Violation {
+    file: String,
+    line: usize, // 1-based
+    rule: Rule,
+    msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Length of the UTF-8 sequence starting with `lead` (1 for ASCII/invalid).
+fn utf8_len(lead: u8) -> usize {
+    match lead {
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        0xF0..=0xF7 => 4,
+        _ => 1,
+    }
+}
+
+/// Blank comments, string literals and char literals out of `src`,
+/// preserving byte positions of everything else and every newline (so
+/// line numbers in the stripped text match the original).
+fn strip_code(src: &str) -> String {
+    let b = src.as_bytes();
+    let mut out: Vec<u8> = Vec::with_capacity(b.len());
+    let mut i = 0;
+    // Push `n` bytes from position `i` as blanks, newlines kept.
+    let blank = |out: &mut Vec<u8>, b: &[u8], from: usize, to: usize| {
+        for &c in &b[from..to] {
+            out.push(if c == b'\n' { b'\n' } else { b' ' });
+        }
+    };
+    while i < b.len() {
+        let c = b[i];
+        // line comment
+        if c == b'/' && b.get(i + 1) == Some(&b'/') {
+            let mut j = i;
+            while j < b.len() && b[j] != b'\n' {
+                j += 1;
+            }
+            blank(&mut out, b, i, j);
+            i = j;
+            continue;
+        }
+        // block comment (Rust block comments nest)
+        if c == b'/' && b.get(i + 1) == Some(&b'*') {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < b.len() && depth > 0 {
+                if b[j] == b'/' && b.get(j + 1) == Some(&b'*') {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && b.get(j + 1) == Some(&b'/') {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, b, i, j);
+            i = j;
+            continue;
+        }
+        // raw string literal r"..." / r#"..."# (the `b` of `br"..."` is
+        // already emitted as code, which is harmless)
+        if c == b'r' && !(i > 0 && is_ident_byte(b[i - 1])) {
+            let mut h = i + 1;
+            while b.get(h) == Some(&b'#') {
+                h += 1;
+            }
+            if b.get(h) == Some(&b'"') {
+                let hashes = h - (i + 1);
+                let mut j = h + 1;
+                while j < b.len() {
+                    let closes = b[j] == b'"'
+                        && b[j + 1..].iter().take_while(|&&x| x == b'#').count() >= hashes;
+                    if closes {
+                        j += 1 + hashes;
+                        break;
+                    }
+                    j += 1;
+                }
+                blank(&mut out, b, i, j);
+                i = j;
+                continue;
+            }
+        }
+        // string literal
+        if c == b'"' {
+            let mut j = i + 1;
+            while j < b.len() {
+                if b[j] == b'\\' {
+                    j = (j + 2).min(b.len());
+                } else if b[j] == b'"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, b, i, j);
+            i = j;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == b'\'' {
+            let mut char_end = None; // byte index just past the closing quote
+            if b.get(i + 1) == Some(&b'\\') {
+                let mut j = i + 3; // skip backslash + escaped byte
+                while j < b.len() && b[j] != b'\'' && b[j] != b'\n' {
+                    j += 1;
+                }
+                if b.get(j) == Some(&b'\'') {
+                    char_end = Some(j + 1);
+                }
+            } else if let Some(&first) = b.get(i + 1) {
+                let l = utf8_len(first);
+                if first != b'\'' && b.get(i + 1 + l) == Some(&b'\'') {
+                    char_end = Some(i + 2 + l);
+                }
+            }
+            if let Some(end) = char_end {
+                blank(&mut out, b, i, end);
+                i = end;
+                continue;
+            }
+            // lifetime tick: keep as code
+            out.push(b'\'');
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    // Blanking is byte-for-byte ASCII, so the output stays valid UTF-8.
+    String::from_utf8(out).expect("stripping preserves UTF-8")
+}
+
+/// Per-line mask of `#[cfg(test)]`-gated regions (attribute line + the
+/// brace-delimited item it introduces).
+fn test_region_mask(stripped_lines: &[&str]) -> Vec<bool> {
+    let mut mask = vec![false; stripped_lines.len()];
+    let mut depth: i64 = 0;
+    let mut armed = false;
+    let mut region_depth: Option<i64> = None;
+    for (ln, line) in stripped_lines.iter().enumerate() {
+        if region_depth.is_some() {
+            mask[ln] = true;
+        }
+        if line.contains("#[cfg(test)]") || line.contains("#[cfg(all(test") {
+            armed = true;
+            mask[ln] = true;
+        }
+        for ch in line.bytes() {
+            match ch {
+                b'{' => {
+                    if armed && region_depth.is_none() {
+                        region_depth = Some(depth);
+                        armed = false;
+                        mask[ln] = true;
+                    }
+                    depth += 1;
+                }
+                b'}' => {
+                    depth -= 1;
+                    if region_depth == Some(depth) {
+                        region_depth = None;
+                    }
+                }
+                // `#[cfg(test)] use foo;` — gates a braceless item
+                b';' => {
+                    if armed && region_depth.is_none() {
+                        armed = false;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    mask
+}
+
+/// First occurrence of `word` in `line` delimited by non-identifier bytes.
+fn find_word(line: &str, word: &str) -> Option<usize> {
+    let bytes = line.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = line[start..].find(word) {
+        let p = start + pos;
+        let before_ok = p == 0 || !is_ident_byte(bytes[p - 1]);
+        let after = p + word.len();
+        let after_ok = after >= bytes.len() || !is_ident_byte(bytes[after]);
+        if before_ok && after_ok {
+            return Some(p);
+        }
+        start = p + 1;
+    }
+    None
+}
+
+/// Rule 2 adjacency: `SAFETY:` on the same raw line, or anywhere in the
+/// contiguous run of comment/attribute lines directly above it.
+fn has_adjacent_safety(raw_lines: &[&str], ln: usize) -> bool {
+    if raw_lines[ln].contains("SAFETY") {
+        return true;
+    }
+    let mut i = ln;
+    while i > 0 {
+        i -= 1;
+        let t = raw_lines[i].trim_start();
+        if t.starts_with("//") || t.starts_with("#[") || t.starts_with("#!") {
+            if t.contains("SAFETY") {
+                return true;
+            }
+        } else {
+            break;
+        }
+    }
+    false
+}
+
+/// Lint one file. `rel` is the path relative to the `src` root, with `/`
+/// separators (e.g. `bitmm/apmm.rs`).
+fn lint_source(rel: &str, src: &str) -> Vec<Violation> {
+    let mut out = Vec::new();
+    if Path::new(rel).file_name().is_some_and(|f| f == "tests.rs") {
+        return out;
+    }
+    let stripped = strip_code(src);
+    let code_lines: Vec<&str> = stripped.lines().collect();
+    let raw_lines: Vec<&str> = src.lines().collect();
+    let in_test = test_region_mask(&code_lines);
+
+    let unsafe_ok = UNSAFE_ALLOWLIST.iter().any(|a| rel == *a);
+    let spawn_ok = SPAWN_ALLOWLIST.iter().any(|a| rel == *a);
+    let kernel = rel.starts_with("bitmm/");
+
+    for (ln, code) in code_lines.iter().enumerate() {
+        if in_test[ln] {
+            continue;
+        }
+        let line_no = ln + 1;
+
+        // rules 1–2: unsafe keyword
+        if let Some(p) = find_word(code, "unsafe") {
+            // `unsafe fn(` is a fn-pointer *type*, not an unsafe op
+            let rest = code[p + "unsafe".len()..].trim_start();
+            let fn_ptr_type = rest
+                .strip_prefix("fn")
+                .is_some_and(|r| r.trim_start().starts_with('('));
+            if !fn_ptr_type {
+                if !unsafe_ok {
+                    out.push(Violation {
+                        file: rel.to_string(),
+                        line: line_no,
+                        rule: Rule::UnsafeOutsideAllowlist,
+                        msg: format!(
+                            "`unsafe` outside the audited modules ({})",
+                            UNSAFE_ALLOWLIST.join(", ")
+                        ),
+                    });
+                } else if !has_adjacent_safety(&raw_lines, ln) {
+                    out.push(Violation {
+                        file: rel.to_string(),
+                        line: line_no,
+                        rule: Rule::UnsafeWithoutSafetyComment,
+                        msg: "`unsafe` without an adjacent `// SAFETY:` comment".to_string(),
+                    });
+                }
+            }
+        }
+
+        // rule 3: narrowing casts in kernel bodies
+        if kernel {
+            for pat in ["as i32", "as u32"] {
+                if find_word(code, pat).is_some() {
+                    let escaped = raw_lines[ln].contains(CAST_ESCAPE)
+                        || (ln > 0 && raw_lines[ln - 1].contains(CAST_ESCAPE));
+                    if !escaped {
+                        out.push(Violation {
+                            file: rel.to_string(),
+                            line: line_no,
+                            rule: Rule::NarrowingCastInKernel,
+                            msg: format!(
+                                "`{pat}` in a bitmm kernel body (PR 2 overflow class); widen \
+                                 to i64 or annotate `// {CAST_ESCAPE} — <why exact>`"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+
+        // rule 4: raw thread spawns
+        if !spawn_ok && (code.contains("thread::spawn(") || code.contains("thread::Builder")) {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: line_no,
+                rule: Rule::RawThreadSpawn,
+                msg: "direct OS-thread spawn; route through `util::par` \
+                      (`WorkerPool` / `spawn_named`) so the concurrency CI lanes cover it"
+                    .to_string(),
+            });
+        }
+    }
+    out
+}
+
+/// Recursively collect `.rs` files under `root`, sorted for determinism.
+fn rs_files(root: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in fs::read_dir(&dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Lint every `.rs` file under `root`; returns (files scanned, violations).
+fn lint_tree(root: &Path) -> std::io::Result<(usize, Vec<Violation>)> {
+    let files = rs_files(root)?;
+    let mut violations = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = fs::read_to_string(path)?;
+        violations.extend(lint_source(&rel, &src));
+    }
+    Ok((files.len(), violations))
+}
+
+fn default_src_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../src")
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => {
+            let root = args.get(1).map(PathBuf::from).unwrap_or_else(default_src_root);
+            match lint_tree(&root) {
+                Ok((n, violations)) => {
+                    if violations.is_empty() {
+                        println!("xtask lint: OK ({n} files, 0 violations)");
+                        ExitCode::SUCCESS
+                    } else {
+                        for v in &violations {
+                            eprintln!("{v}");
+                        }
+                        eprintln!("xtask lint: {} violation(s) in {n} files", violations.len());
+                        ExitCode::FAILURE
+                    }
+                }
+                Err(e) => {
+                    eprintln!("xtask lint: cannot scan {}: {e}", root.display());
+                    ExitCode::FAILURE
+                }
+            }
+        }
+        _ => {
+            eprintln!("usage: cargo run -p xtask -- lint [src-root]");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(rel: &str, src: &str) -> Vec<Rule> {
+        lint_source(rel, src).into_iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn strip_blanks_comments_and_strings_but_keeps_lines() {
+        let src = "let a = \"unsafe\"; // unsafe in comment\n/* unsafe\nblock */ let b = 'x';\n";
+        let got = strip_code(src);
+        assert_eq!(got.lines().count(), src.lines().count());
+        assert!(!got.contains("unsafe"));
+        assert!(got.contains("let a ="));
+        assert!(got.contains("let b ="));
+    }
+
+    #[test]
+    fn strip_handles_raw_strings_and_lifetimes() {
+        let src = "let r = r#\"unsafe \" quote\"#;\nfn f<'a>(x: &'a str) {}\n";
+        let got = strip_code(src);
+        assert!(!got.contains("unsafe"));
+        assert!(got.contains("fn f<'a>(x: &'a str) {}"));
+    }
+
+    // The ISSUE's meta-test: the lint must FAIL on a seeded violation.
+    #[test]
+    fn seeded_unsafe_outside_allowlist_fails() {
+        let src = "pub fn f(p: *mut u8) { unsafe { *p = 0; } }\n";
+        assert_eq!(rules("coordinator/server.rs", src), vec![Rule::UnsafeOutsideAllowlist]);
+    }
+
+    #[test]
+    fn unsafe_in_allowlisted_module_needs_safety_comment() {
+        let bad = "pub fn f(p: *mut u8) {\n    unsafe { *p = 0; }\n}\n";
+        assert_eq!(rules("util/par.rs", bad), vec![Rule::UnsafeWithoutSafetyComment]);
+        let good = "pub fn f(p: *mut u8) {\n    // SAFETY: p is valid\n    unsafe { *p = 0; }\n}\n";
+        assert_eq!(rules("util/par.rs", good), vec![]);
+        let multi = "pub fn f(p: *mut u8) {\n    // SAFETY: p is valid and\n    \
+                     // exclusively owned here\n    unsafe { *p = 0; }\n}\n";
+        assert_eq!(rules("util/par.rs", multi), vec![]);
+    }
+
+    #[test]
+    fn fn_pointer_type_is_not_an_unsafe_op() {
+        let src = "struct J { call: unsafe fn(*const (), usize) }\n";
+        assert_eq!(rules("util/par.rs", src), vec![]);
+        // ...but an unsafe fn *declaration* still needs a SAFETY comment
+        let decl = "unsafe fn call_thunk(p: *const ()) {}\n";
+        assert_eq!(rules("util/par.rs", decl), vec![Rule::UnsafeWithoutSafetyComment]);
+    }
+
+    #[test]
+    fn narrowing_casts_flagged_only_in_kernels_and_escapable() {
+        let src = "fn f(k: usize) -> i32 { k as i32 }\n";
+        assert_eq!(rules("bitmm/recover.rs", src), vec![Rule::NarrowingCastInKernel]);
+        assert_eq!(rules("coordinator/server.rs", src), vec![]);
+        let escaped =
+            "// lint: allow(narrowing-cast) — k < 2^31\nfn f(k: usize) -> i32 { k as i32 }\n";
+        assert_eq!(rules("bitmm/recover.rs", escaped), vec![]);
+        // `as u32` and identifiers containing the pattern
+        let cast = "let x = y as u32;\n";
+        assert_eq!(rules("bitmm/apmm.rs", cast), vec![Rule::NarrowingCastInKernel]);
+        assert_eq!(rules("bitmm/apmm.rs", "let has_i32 = true;\n"), vec![]);
+    }
+
+    #[test]
+    fn raw_spawn_flagged_outside_par() {
+        let src = "let h = std::thread::spawn(|| {});\n";
+        assert_eq!(rules("coordinator/server.rs", src), vec![Rule::RawThreadSpawn]);
+        assert_eq!(rules("util/par.rs", src), vec![]);
+        // the pool's own named-spawn helper is fine everywhere
+        assert_eq!(rules("coordinator/server.rs", "thread::spawn_named(\"x\", || {});\n"), vec![]);
+    }
+
+    #[test]
+    fn cfg_test_regions_and_tests_rs_are_skipped() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f() { unsafe { bad() } }\n}\n";
+        assert_eq!(rules("coordinator/server.rs", src), vec![]);
+        let src2 = "fn f() { unsafe { bad() } }\n";
+        assert_eq!(rules("bitmm/tests.rs", src2), vec![]);
+        // code after the region closes is linted again
+        let src3 = "#[cfg(test)]\nmod tests {\n}\nfn f() { unsafe { bad() } }\n";
+        assert_eq!(rules("coordinator/server.rs", src3), vec![Rule::UnsafeOutsideAllowlist]);
+    }
+
+    // The other half of the acceptance criterion: the audited tree passes.
+    #[test]
+    fn real_tree_is_clean() {
+        let (n, violations) = lint_tree(&default_src_root()).expect("scan rust/src");
+        assert!(n > 20, "expected to scan the real tree, got {n} files");
+        let msgs: Vec<String> = violations.iter().map(|v| v.to_string()).collect();
+        assert!(violations.is_empty(), "violations:\n{}", msgs.join("\n"));
+    }
+}
