@@ -26,6 +26,13 @@
 //!    tokens/s at 1/2/4 workers over one trace with the token streams
 //!    asserted byte-identical across worker counts.
 //!
+//! 6. **self-speculative decoding** — a decode-heavy trace through a W4
+//!    engine drafting `--spec-k` tokens per step from the `--draft-bits`
+//!    MSB plane prefix of the same pack and verifying them in one batched
+//!    wide decode; streams asserted byte-identical to the spec_k=0 run,
+//!    reporting accept rate, accepted-length histogram, mean tokens per
+//!    decode step, and wall-clock tok/s against the plain baseline.
+//!
 //! `cargo bench --bench serving` for the full table; pass `--smoke` for
 //! the one-row CI job (and `--smoke --cluster` for the cluster smoke)
 //! that keeps these paths building and running.  `--json <path>` emits
@@ -58,6 +65,8 @@ fn engine_cfg(prefix_sharing: bool, eviction: EvictionPolicy, kv_blocks: usize) 
         prefix_sharing,
         eviction,
         workers: 0,
+        spec_k: 0,
+        draft_bits: 0,
     }
 }
 
@@ -453,6 +462,97 @@ fn thread_scaling(smoke: bool) -> Json {
     ])
 }
 
+/// Self-speculative decoding from the plane-prefix store: draft `spec_k`
+/// tokens per sequence per step from the `draft_bits`-bit MSB plane
+/// prefix of the SAME W4 superset pack (zero extra weight bytes), verify
+/// all positions in ONE wide batched decode, accept the longest agreeing
+/// prefix.  Greedy acceptance makes the streams byte-identical to plain
+/// decode — asserted here over the full decode-heavy trace — so the
+/// section reports pure throughput: accept rate, accepted-length
+/// histogram, mean tokens per decode step (the CI-gated number), and
+/// wall-clock tok/s against the spec_k=0 baseline.
+fn speculative(smoke: bool, spec_k: usize, draft_bits: u32) -> Json {
+    println!(
+        "\n== serving: self-speculative decoding (W{draft_bits}-of-W4 draft, spec_k {spec_k}, \
+         batched verify) =="
+    );
+    assert!(spec_k > 0, "--spec-k 0 would bench nothing");
+    let (rate, requests) = if smoke { (400.0, 10) } else { (150.0, 48) };
+    // decode-heavy shape: short prompts, 16–32 new tokens — the workload
+    // where accepted drafts translate into saved decode steps
+    let trace =
+        generate(&TraceConfig { vocab: 256, ..TraceConfig::decode_heavy(requests, rate, 7) });
+    // W4 serving over a sim with batch sizes wide enough that the spec
+    // clone rows ride in the same decode group as the real rows
+    let backend = || SimBackend::with_ap_gemm(256, 512, vec![1, 2, 4, 8, 16, 32], 128, 4, 2, 7);
+    let run = |k: usize| {
+        let cfg = EngineConfig { spec_k: k, draft_bits, ..engine_cfg(true, EvictionPolicy::Lru, 96) };
+        let mut eng = Engine::new(backend(), cfg);
+        assert_eq!(eng.spec_k(), k, "W4 sim backend must accept the draft config");
+        let events = replay_trace(&mut eng, &trace).expect("replay");
+        // wall-clock replay interleaves admissions differently run to
+        // run; the per-request (id, step, token) triples are the
+        // deterministic contract, so compare them order-insensitively
+        let mut stream: Vec<(u64, usize, i32)> = events
+            .iter()
+            .filter_map(|e| match e {
+                TokenEvent::Token { id, token, step } => Some((id.0, *step, *token)),
+                _ => None,
+            })
+            .collect();
+        stream.sort_unstable();
+        assert_eq!(
+            eng.pool().free_blocks(),
+            eng.pool().total_blocks(),
+            "spec run must not leak KV blocks"
+        );
+        (stream, eng)
+    };
+    let (base_stream, base) = run(0);
+    let (spec_stream, spec) = run(spec_k);
+    assert_eq!(
+        spec_stream, base_stream,
+        "speculative streams must be byte-identical to plain decode"
+    );
+    let c = spec.counters();
+    assert!(c.drafted > 0, "the spec run must actually draft");
+    let m = &spec.metrics;
+    let steps = m.spec_tokens_per_step.count() as f64;
+    let mean_tok_step = 1.0 + c.accepted as f64 / steps.max(1.0);
+    assert!(
+        mean_tok_step >= 1.2,
+        "speculation must beat plain decode on tokens/step, got {mean_tok_step:.2}"
+    );
+    let (base_tok_s, spec_tok_s) = (base.metrics.throughput_tok_s(), m.throughput_tok_s());
+    println!(
+        "  drafted {} accepted {} ({:.0}%) | {mean_tok_step:.2} tok/step | accept-len hist {:?}",
+        c.drafted,
+        c.accepted,
+        100.0 * m.spec_accept_rate(),
+        m.spec_accept_hist
+    );
+    println!(
+        "  tok/s: {base_tok_s:.0} plain vs {spec_tok_s:.0} speculative ({:.2}x, wall-clock)",
+        spec_tok_s / base_tok_s
+    );
+    obj(vec![
+        ("spec_k", pos("spec_k", spec_k as f64)),
+        ("draft_bits", pos("draft_bits", draft_bits as f64)),
+        ("drafted", pos("drafted", c.drafted as f64)),
+        ("accepted", num("accepted", c.accepted as f64)),
+        ("accept_rate", num("accept_rate", m.spec_accept_rate())),
+        ("mean_tokens_per_step", pos("mean_tokens_per_step", mean_tok_step)),
+        (
+            "accept_hist",
+            Json::Arr(m.spec_accept_hist.iter().map(|&v| Json::Num(v as f64)).collect()),
+        ),
+        ("tok_s_plain", pos("tok_s_plain", base_tok_s)),
+        ("tok_s_spec", pos("tok_s_spec", spec_tok_s)),
+        ("speedup", pos("speedup", spec_tok_s / base_tok_s)),
+        ("streams_identical", Json::Bool(true)),
+    ])
+}
+
 fn cluster(rate: f64, requests: usize, replicas: usize) -> Json {
     println!(
         "\n== serving: {replicas}-replica cluster (LeastLoaded router, hot replica 0), \
@@ -533,6 +633,18 @@ fn main() {
         .iter()
         .position(|a| a == "--json")
         .map(|i| args.get(i + 1).expect("--json needs a path").clone());
+    let flag_num = |name: &str, default: u64| -> u64 {
+        args.iter()
+            .position(|a| a == name)
+            .map(|i| {
+                args.get(i + 1)
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or_else(|| panic!("{name} needs a number"))
+            })
+            .unwrap_or(default)
+    };
+    let spec_k = flag_num("--spec-k", 4) as usize;
+    let draft_bits = flag_num("--draft-bits", 3) as u32;
 
     let mut report: BTreeMap<String, Json> = BTreeMap::new();
     report.insert("schema".into(), Json::Num(1.0));
@@ -553,6 +665,7 @@ fn main() {
         report.insert("prefix_sharing".into(), prefix_sharing(pr_rate, pr_requests));
         report.insert("mixed_precision".into(), mixed_precision(pr_rate, pr_requests));
         report.insert("thread_scaling".into(), thread_scaling(smoke));
+        report.insert("speculative".into(), speculative(smoke, spec_k, draft_bits));
     }
 
     if let Some(path) = json_path {

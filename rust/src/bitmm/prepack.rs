@@ -21,7 +21,8 @@ use super::planes::{
     pack_codes, pack_codes_into, pack_rows_into, CodeMatrix, PackedPlanes, PlaneView,
 };
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Composite plane-cache key: caller id plus the codes' (bits, rows,
 /// cols).  The id alone is NOT the identity of a packed weight — the same
@@ -105,10 +106,13 @@ pub struct PackedWeight {
 /// A named weight served at a (possibly lower) precision out of the
 /// superset pack: a zero-copy most-significant-plane view plus the
 /// per-view rescaled dequant scales (`scale · 2^skip`; see
-/// [`PlaneView`] and `quant::view_scales`).
+/// [`PlaneView`] and `quant::view_scales`).  The scales are an `Arc`
+/// handle into the store's per-(name, bits) cache, so repeated `get_at`
+/// calls — the speculative drafter hits this every decode step — share
+/// one rescaled vector instead of recomputing it.
 pub struct PackedWeightView<'a> {
     pub view: PlaneView<'a>,
-    pub scales: Vec<f32>,
+    pub scales: Arc<Vec<f32>>,
 }
 
 /// Name → prepacked weight registry — what a model (or, packed at the
@@ -119,6 +123,15 @@ pub struct PackedWeightView<'a> {
 #[derive(Default)]
 pub struct PackedWeightStore {
     map: HashMap<String, PackedWeight>,
+    /// Memoized `view_scales` rescales per (name → bits): [`get_at`]
+    /// takes `&self` (the store is shared behind an `Arc` across
+    /// replicas), so the cache sits behind a `Mutex` — the critical
+    /// section is a map lookup/clone, never the rescale itself on a hit.
+    ///
+    /// [`get_at`]: PackedWeightStore::get_at
+    scale_cache: Mutex<HashMap<String, HashMap<u32, Arc<Vec<f32>>>>>,
+    scale_hits: AtomicU64,
+    scale_misses: AtomicU64,
 }
 
 impl PackedWeightStore {
@@ -136,12 +149,21 @@ impl PackedWeightStore {
     ) -> Arc<PackedPlanes> {
         let planes = Arc::new(pack_codes(codes));
         self.map.insert(name.to_string(), PackedWeight { planes: planes.clone(), scales });
+        self.invalidate_scales(name);
         planes
     }
 
     /// Register an already-packed weight (e.g. from `Quantized::prepack`).
     pub fn insert_packed(&mut self, name: &str, planes: Arc<PackedPlanes>, scales: Vec<f32>) {
         self.map.insert(name.to_string(), PackedWeight { planes, scales });
+        self.invalidate_scales(name);
+    }
+
+    /// Replacing a weight must drop its memoized view scales — a stale
+    /// rescale of the *old* scales at the *old* width is silent logit
+    /// corruption for every later `get_at`.
+    fn invalidate_scales(&self, name: &str) {
+        self.scale_cache.lock().expect("scale cache poisoned").remove(name);
     }
 
     pub fn get(&self, name: &str) -> Option<&PackedWeight> {
@@ -153,12 +175,33 @@ impl PackedWeightStore {
     /// with the dequant scales rescaled for the dropped low planes.
     /// `None` if the name is unknown; panics if `bits` exceeds the stored
     /// pack (the superset must be packed at the widest precision served).
+    ///
+    /// The `×2^skip` rescale is memoized per (name, bits): the first call
+    /// computes it, every later call — e.g. the speculative drafter
+    /// slicing its low-bit prefix each decode step — clones a shared
+    /// `Arc` handle.  [`insert_codes`]/[`insert_packed`] invalidate the
+    /// entry for a replaced name.
+    ///
+    /// [`insert_codes`]: PackedWeightStore::insert_codes
+    /// [`insert_packed`]: PackedWeightStore::insert_packed
     pub fn get_at(&self, name: &str, bits: u32) -> Option<PackedWeightView<'_>> {
         let w = self.map.get(name)?;
-        Some(PackedWeightView {
-            view: w.planes.view(bits),
-            scales: crate::quant::view_scales(&w.scales, w.planes.bits, bits),
-        })
+        let mut cache = self.scale_cache.lock().expect("scale cache poisoned");
+        if let Some(s) = cache.get(name).and_then(|per_bits| per_bits.get(&bits)) {
+            self.scale_hits.fetch_add(1, Ordering::Relaxed);
+            return Some(PackedWeightView { view: w.planes.view(bits), scales: s.clone() });
+        }
+        self.scale_misses.fetch_add(1, Ordering::Relaxed);
+        let scales = Arc::new(crate::quant::view_scales(&w.scales, w.planes.bits, bits));
+        cache.entry(name.to_string()).or_default().insert(bits, scales.clone());
+        Some(PackedWeightView { view: w.planes.view(bits), scales })
+    }
+
+    /// `(hits, misses)` of the per-(name, bits) view-scale cache — lets
+    /// tests and benches prove the drafter's per-step `get_at` stopped
+    /// recomputing the rescale.
+    pub fn scale_cache_stats(&self) -> (u64, u64) {
+        (self.scale_hits.load(Ordering::Relaxed), self.scale_misses.load(Ordering::Relaxed))
     }
 
     pub fn len(&self) -> usize {
@@ -427,7 +470,34 @@ mod tests {
         // the full-width view is the pack itself
         let full = store.get_at("lm_head", 4).unwrap();
         assert_eq!(full.view.skip(), 0);
-        assert_eq!(full.scales, vec![0.25; 8]);
+        assert_eq!(*full.scales, vec![0.25; 8]);
         assert!(store.get_at("mlp.up", 2).is_none());
+    }
+
+    #[test]
+    fn get_at_memoizes_view_scales_per_name_and_bits() {
+        let w4 = CodeMatrix::random(8, 100, 4, 9);
+        let mut store = PackedWeightStore::new();
+        store.insert_codes("lm_head", &w4, vec![0.25; 8]);
+
+        // first slice at each width computes the rescale; every repeat —
+        // the drafter's per-step pattern — is a shared-Arc hit
+        let a = store.get_at("lm_head", 2).unwrap().scales;
+        let b = store.get_at("lm_head", 2).unwrap().scales;
+        assert!(Arc::ptr_eq(&a, &b), "repeat get_at must share one rescaled vector");
+        assert_eq!(store.scale_cache_stats(), (1, 1));
+        let full = store.get_at("lm_head", 4).unwrap().scales;
+        assert!(!Arc::ptr_eq(&a, &full), "distinct widths cache independently");
+        assert_eq!(store.scale_cache_stats(), (1, 2));
+        // a missing name is not a cache event at all
+        assert!(store.get_at("mlp.up", 2).is_none());
+        assert_eq!(store.scale_cache_stats(), (1, 2));
+
+        // replacing the weight invalidates its memoized scales — the next
+        // get_at must rescale the NEW scales, not serve the stale vector
+        store.insert_codes("lm_head", &w4, vec![0.5; 8]);
+        let fresh = store.get_at("lm_head", 2).unwrap().scales;
+        assert!(fresh.iter().all(|&s| s == 2.0), "0.5 · 2^2 from the new scales");
+        assert_eq!(store.scale_cache_stats(), (1, 3));
     }
 }

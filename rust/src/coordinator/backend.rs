@@ -112,6 +112,28 @@ pub trait Backend {
     /// oversubscribe the host.  Default: ignored (backends without an
     /// intra-step parallel substrate).
     fn set_workers(&mut self, _workers: usize) {}
+
+    /// Enable the self-speculative **draft path**: logits computed from
+    /// the most-significant-`bits` plane prefix of the SAME weight pack
+    /// the serving width uses (zero extra weight bytes).  Returns `true`
+    /// if this backend can draft at `bits`; `false` declines and the
+    /// engine falls back to plain decode.  A backend may only accept if
+    /// (a) `bits` is a strict subset of its serving width and (b) its
+    /// host KV state is position-only, so speculated-then-rejected
+    /// positions roll back by resetting `SeqKv::pos` (`PjrtBackend`
+    /// carries real device KV tensors and must keep the default).
+    fn set_draft_bits(&mut self, _bits: u32) -> bool {
+        false
+    }
+
+    /// One **draft** forward row: logits for the next position given
+    /// `token` at position `pos`, computed at the draft precision
+    /// ([`Backend::set_draft_bits`]).  Never touches or advances any
+    /// `SeqKv` — drafted positions are provisional until the wide-width
+    /// verify step accepts them.  Default: unsupported.
+    fn draft_one(&mut self, _token: i32, _pos: usize) -> Result<Vec<f32>> {
+        bail!("this backend has no draft path (set_draft_bits declined or was never called)")
+    }
 }
 
 // ------------------------------------------------------------------ PJRT --
@@ -292,7 +314,14 @@ struct ApGemm {
     /// once at construction through [`PackedWeightStore::get_at`] (the
     /// `×2^skip` rescale for the dropped low planes) — the hot path
     /// multiplies them per logit row instead of re-deriving per step.
-    scales: Vec<f32>,
+    /// An `Arc` handle into the store's per-(name, bits) scale cache.
+    scales: Arc<Vec<f32>>,
+    /// Self-speculative draft precision: `(bits, scales)` for the
+    /// most-significant-`bits` plane prefix of the SAME pack, enabled by
+    /// [`Backend::set_draft_bits`].  `bits < nw` always — the draft is a
+    /// strictly cheaper model of the same weights, the serving width is
+    /// its verifier.
+    draft: Option<(u32, Arc<Vec<f32>>)>,
     /// Reused output buffer, grown to the largest batch seen.
     y: Vec<i32>,
     /// Reused flat dequant buffer (`n × vocab`, batch-major) — the old
@@ -331,6 +360,7 @@ impl ApGemm {
             nw,
             nx,
             scales,
+            draft: None,
             y: Vec::new(),
             yf: Vec::new(),
             workers: 0,
@@ -357,11 +387,30 @@ impl ApGemm {
     }
 
     /// Logits for a batch of (token, pos) rows via the prepacked kernel,
-    /// the weight sliced at this backend's precision out of the shared
-    /// superset (zero-copy, zero repack).
+    /// the weight sliced at this backend's **serving** precision out of
+    /// the shared superset (zero-copy, zero repack).
     fn logits(&mut self, rows: &[(i32, usize)]) -> Vec<Vec<f32>> {
+        let scales = self.scales.clone();
+        self.logits_at(rows, self.nw, &scales)
+    }
+
+    /// Draft-precision logits (the `bits < nw` plane prefix of the same
+    /// pack), for the speculative drafter.  Errors until
+    /// [`Backend::set_draft_bits`] armed the path.
+    fn draft_logits(&mut self, rows: &[(i32, usize)]) -> Result<Vec<Vec<f32>>> {
+        let Some((bits, scales)) = self.draft.clone() else {
+            bail!("draft path not armed (call set_draft_bits first)");
+        };
+        Ok(self.logits_at(rows, bits, &scales))
+    }
+
+    /// Shared GEMM+dequant core: the weight sliced at `nw` planes with
+    /// the matching rescaled `scales` — the serving path and the draft
+    /// path differ ONLY in this pair; the activation pack, the kernel,
+    /// and the dequant walk are one code path.
+    fn logits_at(&mut self, rows: &[(i32, usize)], nw: u32, scales: &[f32]) -> Vec<Vec<f32>> {
         let w = self.store.get(LM_HEAD).expect("registered at construction");
-        let planes = w.planes.view(self.nw);
+        let planes = w.planes.view(nw);
         let (vocab, n) = (w.planes.rows, rows.len());
         let (dim, nx) = (self.dim, self.nx);
         let xp = self.arena.pack_batch(n, dim, nx, |i, out| {
@@ -386,7 +435,7 @@ impl ApGemm {
         let inv_dim = 1.0 / (dim as f32);
         self.yf.resize(n * vocab, 0.0);
         for mi in 0..vocab {
-            let s = self.scales[mi] * inv_dim;
+            let s = scales[mi] * inv_dim;
             let row = &self.y[mi * n..(mi + 1) * n];
             for (ni, &v) in row.iter().enumerate() {
                 self.yf[ni * vocab + mi] = v as f32 * s;
@@ -420,6 +469,8 @@ pub struct SimBackend {
     pub step_latency: std::time::Duration,
     pub prefills: u64,
     pub decode_steps: u64,
+    /// Single-row draft forwards served ([`Backend::draft_one`]).
+    pub draft_steps: u64,
     ap: Option<ApGemm>,
 }
 
@@ -432,6 +483,7 @@ impl SimBackend {
             step_latency: std::time::Duration::ZERO,
             prefills: 0,
             decode_steps: 0,
+            draft_steps: 0,
             ap: None,
         }
     }
@@ -501,6 +553,11 @@ impl SimBackend {
     /// Serving precision `(nw, nx)` of the AP path, if enabled.
     pub fn serving_bits(&self) -> Option<(u32, u32)> {
         self.ap.as_ref().map(|ap| (ap.nw, ap.nx))
+    }
+
+    /// Armed draft precision, if [`Backend::set_draft_bits`] accepted one.
+    pub fn draft_bits(&self) -> Option<u32> {
+        self.ap.as_ref().and_then(|ap| ap.draft.as_ref()).map(|(bits, _)| *bits)
     }
 
     /// GEMM worker budget of the AP path (`0` = global default), if
@@ -579,6 +636,37 @@ impl Backend for SimBackend {
         if let Some(ap) = self.ap.as_mut() {
             ap.workers = workers;
         }
+    }
+
+    fn set_draft_bits(&mut self, bits: u32) -> bool {
+        // only the AP path can draft: the hash-logits stand-in has no
+        // plane prefix to slice, and the draft must be a STRICT subset of
+        // the serving width (an equal-width "draft" would just double the
+        // work for zero information)
+        match self.ap.as_mut() {
+            Some(ap) if bits >= 1 && bits < ap.nw => {
+                let scales = ap
+                    .store
+                    .get_at(LM_HEAD, bits)
+                    .expect("registered at construction")
+                    .scales;
+                ap.draft = Some((bits, scales));
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn draft_one(&mut self, token: i32, pos: usize) -> Result<Vec<f32>> {
+        if pos >= self.max_seq {
+            bail!("KV exhausted");
+        }
+        let Some(ap) = self.ap.as_mut() else {
+            bail!("hash-logits sim backend has no draft path");
+        };
+        let row = ap.draft_logits(&[(token, pos)])?.remove(0);
+        self.draft_steps += 1;
+        Ok(row)
     }
 }
 
@@ -689,6 +777,42 @@ mod tests {
         let base = run(1);
         assert_eq!(run(2), base);
         assert_eq!(run(4), base);
+    }
+
+    #[test]
+    fn draft_path_is_exactly_the_low_bit_replica_of_the_same_pack() {
+        // a W4 backend drafting at W2 must produce, row for row, the
+        // logits a W2-serving replica of the SAME superset store computes
+        // — the draft is not an approximation of a different model, it IS
+        // the lower-precision model the any-precision store already serves
+        let store = superset_store(48, 96, 4, 11);
+        let mut w4 = SimBackend::with_shared_store(64, vec![1, 2, 4], store.clone(), 4, 2);
+        let mut w2 = SimBackend::with_shared_store(64, vec![1, 2, 4], store.clone(), 2, 2);
+        assert!(w4.set_draft_bits(2), "W2 is a strict subset of the W4 serving width");
+        assert_eq!(w4.draft_bits(), Some(2));
+
+        let (_, mut kv) = w2.prefill_one(&[3, 1, 4]).unwrap();
+        let wide = w2.decode_batch(&[5], &mut [&mut kv]).unwrap().remove(0);
+        let draft = w4.draft_one(5, 3).unwrap();
+        assert_eq!(draft, wide, "draft logits ≡ the W2 replica's serving logits");
+        assert_eq!(w4.draft_steps, 1);
+        // drafting never advanced the verifier's own step counters
+        assert_eq!(w4.decode_steps, 0);
+    }
+
+    #[test]
+    fn set_draft_bits_rejects_non_subset_widths_and_hash_backends() {
+        let mut hash = SimBackend::new(64, 32, vec![1, 2]);
+        assert!(!hash.set_draft_bits(1), "hash backend has no planes to slice");
+        assert!(hash.draft_one(1, 0).is_err());
+
+        let mut ap = SimBackend::with_ap_gemm(48, 64, vec![1, 2, 4], 96, 2, 2, 11);
+        assert!(!ap.set_draft_bits(2), "draft must be strictly below the serving width");
+        assert!(!ap.set_draft_bits(3), "wider than serving is not a draft");
+        assert!(!ap.set_draft_bits(0));
+        assert_eq!(ap.draft_bits(), None);
+        assert!(ap.draft_one(1, 0).is_err(), "unarmed draft path must error");
+        assert!(ap.set_draft_bits(1), "W1 of W2 is valid");
     }
 
     #[test]

@@ -4,7 +4,10 @@
 //! it).  The sim path serves through the **continuous-batching engine**
 //! by default; `--replicas N` (≥2) serves a **multi-replica cluster**
 //! behind the router (`--route-policy round-robin|least-loaded`), and
-//! `--group-scheduler` falls back to the group scheduler.
+//! `--group-scheduler` falls back to the group scheduler.  `--spec-k N`
+//! turns on self-speculative decoding (draft from the `--draft-bits`-wide
+//! plane prefix of the same pack, verify at serving width); streams stay
+//! byte-identical to plain decode.
 
 #[cfg(feature = "pjrt")]
 use super::backend::PjrtBackend;
@@ -43,6 +46,12 @@ pub struct ServeArgs {
     /// available-parallelism default): a lone engine gets it all, a
     /// cluster splits it across replicas ([`Cluster::set_worker_budget`]).
     pub workers: usize,
+    /// Speculative decoding: tokens drafted ahead per sequence per step
+    /// from the low-bit plane prefix of the serving pack (`0` = off).
+    pub spec_k: usize,
+    /// Draft width in bit-planes (must stay strictly below the serving
+    /// width; the cluster demo clamps it per replica's precision).
+    pub draft_bits: u32,
 }
 
 impl Default for ServeArgs {
@@ -58,6 +67,8 @@ impl Default for ServeArgs {
             replicas: 1,
             route_policy: RoutePolicy::LeastLoaded,
             workers: 0,
+            spec_k: 0,
+            draft_bits: 1,
         }
     }
 }
@@ -65,8 +76,8 @@ impl Default for ServeArgs {
 /// The flag list every parse error repeats — a bad flag must produce a
 /// recoverable error naming the alternatives, never kill the process.
 const VALID_FLAGS: &str = "--requests N, --rate R, --max-new N, --prompt-len N, --seed N, \
-     --replicas N, --route-policy round-robin|least-loaded, --workers N, --sim, \
-     --group-scheduler";
+     --replicas N, --route-policy round-robin|least-loaded, --workers N, --spec-k N, \
+     --draft-bits N, --sim, --group-scheduler";
 
 fn take_value<'a>(it: &mut std::slice::Iter<'a, String>, name: &str) -> Result<&'a str> {
     it.next()
@@ -106,6 +117,10 @@ pub fn parse_args(args: &[String]) -> Result<ServeArgs> {
                 })?;
             }
             "--workers" => a.workers = parse_value(&mut it, "--workers", "a worker count")?,
+            "--spec-k" => a.spec_k = parse_value(&mut it, "--spec-k", "a draft length")?,
+            "--draft-bits" => {
+                a.draft_bits = parse_value(&mut it, "--draft-bits", "a plane count")?;
+            }
             "--sim" => a.sim = true,
             "--group-scheduler" => a.engine = false,
             other => bail!("unknown flag {other} (valid flags: {VALID_FLAGS})"),
@@ -116,6 +131,12 @@ pub fn parse_args(args: &[String]) -> Result<ServeArgs> {
             "--group-scheduler serves a single replica (the cluster drives \
              continuous-batching engines); drop it or use --replicas 1"
         );
+    }
+    if a.spec_k > 0 && a.draft_bits == 0 {
+        bail!("--spec-k needs --draft-bits ≥ 1 (the draft runs on a non-empty plane prefix)");
+    }
+    if a.spec_k > 0 && !a.engine {
+        bail!("--spec-k is a continuous-batching engine feature; drop --group-scheduler");
     }
     Ok(a)
 }
@@ -187,6 +208,8 @@ fn demo_engine_config() -> EngineConfig {
         prefix_sharing: true,
         eviction: super::kv::EvictionPolicy::Lru,
         workers: 0,
+        spec_k: 0,
+        draft_bits: 0,
     }
 }
 
@@ -234,7 +257,14 @@ pub fn run_sim_serving_demo(a: &ServeArgs) -> Result<String> {
 pub fn run_engine_serving_demo(a: &ServeArgs) -> Result<String> {
     let (backend, vocab) = ap_sim_backend(a.seed);
     let packed_bytes = backend.packed_weight_bytes();
-    let cfg = EngineConfig { workers: a.workers, ..demo_engine_config() };
+    let cfg = EngineConfig {
+        workers: a.workers,
+        spec_k: a.spec_k,
+        // the demo sim backend serves W2, so the plane-prefix draft can
+        // only be 1 bit wide — clamp whatever the flag asked for
+        draft_bits: a.draft_bits.min(1),
+        ..demo_engine_config()
+    };
     let mut eng = Engine::new(backend, cfg);
     let (mut report, _) = drive(&mut eng, a, vocab)?;
     let c = eng.counters();
@@ -242,6 +272,14 @@ pub fn run_engine_serving_demo(a: &ServeArgs) -> Result<String> {
         "engine: steps {}, prefills {}, preemptions {}, resumes {}, rejected {}\n",
         c.steps, c.prefills, c.preemptions, c.resumes, c.rejected
     ));
+    if eng.spec_k() > 0 {
+        report.push_str(&format!(
+            "speculative: spec_k {}, drafted {}, accepted {}\n",
+            eng.spec_k(),
+            c.drafted,
+            c.accepted
+        ));
+    }
     let sh = eng.pool().sharing();
     report.push_str(&format!(
         "kv: {}/{} blocks free after drain | fresh {}, shared {}, restored {}, cow {}, peak {}\n",
@@ -271,7 +309,16 @@ pub fn run_cluster_serving_demo(a: &ServeArgs) -> Result<String> {
         let p = if i % 2 == 0 { PrecisionConfig::W4A4 } else { PrecisionConfig::W2A2 };
         let backend =
             SimBackend::with_shared_store(256, vec![1, 2, 4, 8], store.clone(), p.nw, p.nx);
-        cluster.add_replica(format!("r{i}"), p, backend, demo_engine_config());
+        // per-replica spec config: every replica drafts from the plane
+        // prefix of ITS OWN serving width, so the draft is clamped below
+        // each precision independently (W4 replicas draft up to 3 planes,
+        // W2 replicas at most 1)
+        let cfg = EngineConfig {
+            spec_k: a.spec_k,
+            draft_bits: a.draft_bits.min(p.nw.saturating_sub(1)),
+            ..demo_engine_config()
+        };
+        cluster.add_replica(format!("r{i}"), p, backend, cfg);
     }
     if a.workers > 0 {
         cluster.set_worker_budget(a.workers);
@@ -405,6 +452,12 @@ mod tests {
         let a = parse_args(&s(&["--workers", "4"])).unwrap();
         assert_eq!(a.workers, 4);
         assert_eq!(parse_args(&s(&[])).unwrap().workers, 0, "default inherits APLLM_THREADS");
+        let a = parse_args(&s(&["--spec-k", "4", "--draft-bits", "2"])).unwrap();
+        assert_eq!(a.spec_k, 4);
+        assert_eq!(a.draft_bits, 2);
+        let d = parse_args(&s(&[])).unwrap();
+        assert_eq!(d.spec_k, 0, "speculation is opt-in");
+        assert_eq!(d.draft_bits, 1, "default draft width is the MSB plane");
     }
 
     #[test]
@@ -422,5 +475,9 @@ mod tests {
         // conflicting mode flags are refused, not silently resolved
         let e = parse_args(&s(&["--replicas", "2", "--group-scheduler"])).unwrap_err().to_string();
         assert!(e.contains("--group-scheduler") && e.contains("single replica"), "{e}");
+        let e = parse_args(&s(&["--spec-k", "2", "--draft-bits", "0"])).unwrap_err().to_string();
+        assert!(e.contains("--draft-bits ≥ 1"), "{e}");
+        let e = parse_args(&s(&["--spec-k", "2", "--group-scheduler"])).unwrap_err().to_string();
+        assert!(e.contains("engine feature"), "{e}");
     }
 }

@@ -58,6 +58,22 @@
 //! replica serves exactly one precision: every KV block a replica caches
 //! was produced at that precision, and a re-prefilled arrival rebuilds
 //! (and may then share) content at the target's own precision.
+//!
+//! ## Speculation across replicas
+//!
+//! Speculative decoding is configured **per replica**
+//! ([`EngineConfig::spec_k`] / [`EngineConfig::draft_bits`]): each
+//! replica drafts from the most-significant plane prefix of its *own*
+//! serving width, so a mixed-precision cluster naturally drafts W2-of-W4
+//! on one replica and W1-of-W2 on another, all out of the one shared
+//! superset store.  Draft state never travels: speculation is committed
+//! or rolled back within the step that opened it, so an exported
+//! sequence carries only accepted tokens and KV — on a cross-precision
+//! requant migration the draft context is dropped along with the carried
+//! KV, and the target replica simply resumes drafting (or not) at its
+//! own `spec_k`/`draft_bits` after the re-prefill.  Streams stay
+//! byte-identical throughout, whatever combination of speculation
+//! settings the replicas run.
 
 use super::backend::Backend;
 use super::engine::{Engine, EngineConfig};
@@ -711,6 +727,88 @@ mod tests {
         assert!(events.iter().all(|ev| !matches!(ev, TokenEvent::Requantized { .. })));
         assert_eq!(c2.requants(), 0);
         c2.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn speculating_mixed_precision_cluster_requantizes_and_keeps_streams_identical() {
+        use crate::coordinator::backend::superset_store;
+
+        // one 4-bit superset store; the hot replica serves W4 and drafts
+        // its W2 plane prefix, the cold replica serves W2 and drafts W1 —
+        // per-replica speculation out of one pack.  The hot pool is sized
+        // so decode pressure preempts the younger resident, which can
+        // only leave via the cross-precision requant path; the migrated
+        // sequence's draft state must not travel (it never exists between
+        // steps), and every stream must match a spec-less run byte for
+        // byte.
+        let run = |spec: bool| {
+            let store = superset_store(64, 64, 4, 77);
+            let mut c = Cluster::new(RoutePolicy::LeastLoaded);
+            let (spec_k, hot_draft, cold_draft) = if spec { (2, 2, 1) } else { (0, 0, 0) };
+            c.add_replica(
+                "hot-w4",
+                PrecisionConfig::W4A4,
+                SimBackend::with_shared_store(64, vec![1, 2, 4, 8, 16], store.clone(), 4, 2),
+                EngineConfig {
+                    kv_blocks: 4,
+                    block_tokens: 4,
+                    spec_k,
+                    draft_bits: hot_draft,
+                    ..EngineConfig::default()
+                },
+            );
+            c.add_replica(
+                "cold-w2",
+                PrecisionConfig::W2A2,
+                SimBackend::with_shared_store(64, vec![1, 2, 4, 8, 16], store, 2, 2),
+                EngineConfig {
+                    kv_blocks: 32,
+                    block_tokens: 4,
+                    spec_k,
+                    draft_bits: cold_draft,
+                    ..EngineConfig::default()
+                },
+            );
+            for (i, &base) in [10i32, 50, 30].iter().enumerate() {
+                c.submit(Request::new(
+                    i as u64,
+                    (base..base + 8).collect(),
+                    GenParams { max_new_tokens: 8, sample: false, seed: i as u64 },
+                ));
+            }
+            let events = c.run_to_completion_events().unwrap();
+            c.check_invariants().unwrap();
+            for (i, e) in c.engines().iter().enumerate() {
+                assert_eq!(e.pool().free_blocks(), e.pool().total_blocks(), "replica {i} leaked");
+            }
+            let mut out = responses_of(&events);
+            out.sort_by_key(|r| r.id);
+            (c, out.into_iter().map(|r| r.tokens).collect::<Vec<_>>())
+        };
+
+        let (plain_c, plain) = run(false);
+        let (spec_c, spec) = run(true);
+        assert_eq!(spec, plain, "speculation must not change a single byte of any stream");
+        assert!(plain.iter().all(|t| t.len() == 8));
+        // both runs took the same migration decisions (preemption is
+        // driven by KV pressure, which speculation never adds to)
+        for c in [&plain_c, &spec_c] {
+            assert_eq!(c.migrations(), 1, "the preempted sequence moved hot → cold");
+            assert_eq!(c.requants(), 1, "and crossed the precision boundary");
+            assert_eq!(c.engine(1).counters().reprefills, 1);
+        }
+        // speculation was actually live on both precisions of the spec run
+        assert_eq!(spec_c.engine(0).spec_k(), 2, "W4 replica drafts W2");
+        assert_eq!(spec_c.engine(1).spec_k(), 2, "W2 replica drafts W1");
+        let drafted: u64 = spec_c.engines().iter().map(|e| e.counters().drafted).sum();
+        let accepted: u64 = spec_c.engines().iter().map(|e| e.counters().accepted).sum();
+        assert!(drafted > 0, "decode-heavy load must have drafted");
+        assert!(accepted <= drafted);
+        // the merged cluster metrics carry the speculation counters
+        let m = spec_c.metrics();
+        assert_eq!(m.spec_drafted, drafted);
+        assert_eq!(m.spec_accepted, accepted);
+        assert_eq!(plain_c.metrics().spec_drafted, 0, "spec-less run drafts nothing");
     }
 
     #[test]

@@ -35,7 +35,9 @@
 //! 4. **Decode** — every resident sequence first grows its block table by
 //!    one slot through the pool; an [`KvError::OutOfBlocks`] clean
 //!    failure triggers **preemption** (below).  Survivors then advance
-//!    one token in a single batched backend call, streaming each token.
+//!    one token in a single batched backend call, streaming each token —
+//!    or several tokens, when **speculative decoding** (below) drafted
+//!    ahead and the verify rows agreed.
 //! 5. **Completion** — finished sequences release their block references
 //!    and stream a terminal [`TokenEvent::Finished`].  (Completion also
 //!    runs *before* decode so freshly finished sequences free blocks for
@@ -90,6 +92,41 @@
 //! generated at the new precision; the cluster streams
 //! [`TokenEvent::Requantized`] between `Migrated` and `Resumed` so the
 //! client sees the switch.
+//!
+//! ## Speculative decoding (self-drafting from the plane-prefix store)
+//!
+//! With [`EngineConfig::spec_k`] > 0 the engine drafts ahead on the
+//! *same weights it serves*: the backend slices the most-significant
+//! [`EngineConfig::draft_bits`] planes out of its packed superset
+//! ([`Backend::set_draft_bits`]) — a valid low-bit model of the same
+//! weights, zero extra bytes — and each decode step every surviving
+//! sequence
+//!
+//! 1. **drafts** up to `spec_k` tokens autoregressively with cheap
+//!    single-row low-bit calls ([`Backend::draft_one`]), sampling each
+//!    with the *same* seeded [`sample_token`] call the serving path
+//!    would make at that step;
+//! 2. **verifies** all `k + 1` positions in the ONE wide-precision
+//!    [`Backend::decode_batch`] the plain path already makes — the extra
+//!    verify rows ride alongside the other sequences' rows, bounded by
+//!    the widest supported batch;
+//! 3. **accepts** the longest prefix on which the wide model's sampled
+//!    token agrees with the draft, emitting `accepted + 1` tokens (the
+//!    first disagreeing verify token is itself correct output).
+//!
+//! Position 0's verify row is *exactly* the row plain decode would have
+//! computed, and each accepted draft token reproduces the token the wide
+//! model samples at that position — so by induction the emitted stream
+//! is **byte-identical** to `spec_k = 0`: speculation changes how many
+//! steps a stream takes, never its bytes.  Rejected positions roll back
+//! cleanly: their KV slots were appended *optimistically* (speculative
+//! growth never preempts a peer — an [`KvError::OutOfBlocks`] refusal
+//! just caps the draft length) and [`KvPool::truncate_tokens`] returns
+//! the unused tail, CoW and prefix-cache blocks included, so pool
+//! invariants hold and a sequence swapped out or exported mid-flight
+//! carries only accepted state.  Backends whose KV is device-resident
+//! decline [`Backend::set_draft_bits`] and the engine silently falls
+//! back to plain decode.
 
 use super::backend::{gather_kv_refs, Backend, HasSeqKv, SeqKv};
 use super::batcher::{Batcher, BatcherConfig};
@@ -126,6 +163,17 @@ pub struct EngineConfig {
     /// share one worker pool process-wide (they step sequentially), so a
     /// cluster of N replicas × T workers never oversubscribes the host.
     pub workers: usize,
+    /// Speculative decoding: tokens drafted ahead per sequence per decode
+    /// step at the low-bit plane-prefix width (`0` = plain decode).
+    /// Requires a backend that accepts [`Backend::set_draft_bits`];
+    /// otherwise the engine silently falls back to plain decode (check
+    /// [`Engine::spec_k`] for the width actually in effect).
+    pub spec_k: usize,
+    /// Draft precision in bit-planes — the most-significant prefix of the
+    /// serving pack the drafter runs at.  Backends require
+    /// `1 ≤ draft_bits < serving bits` (a strict subset; an equal-width
+    /// "draft" would double the work for zero information).
+    pub draft_bits: u32,
 }
 
 impl Default for EngineConfig {
@@ -140,6 +188,8 @@ impl Default for EngineConfig {
             prefix_sharing: true,
             eviction: EvictionPolicy::Lru,
             workers: 0,
+            spec_k: 0,
+            draft_bits: 0,
         }
     }
 }
@@ -164,6 +214,14 @@ pub struct EngineCounters {
     /// prompt + generated tokens at this replica's precision
     /// (cross-precision migration).
     pub reprefills: u64,
+    /// Tokens drafted at the low-bit plane-prefix width (speculative
+    /// decoding; zero when [`EngineConfig::spec_k`] is 0 or the backend
+    /// declined to draft).
+    pub drafted: u64,
+    /// Drafted tokens the wide-precision verify pass accepted
+    /// (`accepted / drafted` is the acceptance rate; each accepted token
+    /// is one decode step the stream did not have to spend).
+    pub accepted: u64,
 }
 
 /// One resident (or swapped-out) sequence.
@@ -323,7 +381,13 @@ pub struct Engine<B: Backend> {
 impl<B: Backend> Engine<B> {
     pub fn new(mut backend: B, cfg: EngineConfig) -> Self {
         let cap = cfg.max_running.min(*backend.supported_batches().last().unwrap()).max(1);
-        let cfg = EngineConfig { max_running: cap, ..cfg };
+        let mut cfg = EngineConfig { max_running: cap, ..cfg };
+        if cfg.spec_k > 0 && !backend.set_draft_bits(cfg.draft_bits) {
+            // the backend cannot draft at this width (no plane store to
+            // slice, a non-subset width, or device-resident KV that
+            // cannot roll back): plain decode, byte-identical anyway
+            cfg.spec_k = 0;
+        }
         backend.set_workers(cfg.workers);
         Self {
             pool: KvPool::with_policy(cfg.kv_blocks, cfg.block_tokens, cfg.eviction),
@@ -358,6 +422,13 @@ impl<B: Backend> Engine<B> {
 
     pub fn counters(&self) -> EngineCounters {
         self.counters
+    }
+
+    /// Draft length actually in effect: [`EngineConfig::spec_k`], or `0`
+    /// when the backend declined [`Backend::set_draft_bits`] at
+    /// construction and the engine fell back to plain decode.
+    pub fn spec_k(&self) -> usize {
+        self.cfg.spec_k
     }
 
     pub fn queued(&self) -> usize {
@@ -786,22 +857,136 @@ impl<B: Backend> Engine<B> {
                 .filter(|(_, s)| ids.contains(&s.req.id.0))
                 .map(|(i, _)| i)
                 .collect();
-            let tokens: Vec<i32> = idx.iter().map(|&i| self.running[i].next_token).collect();
+
+            // speculation plan: how many draft positions each participant
+            // verifies this step.  Bounded per sequence by the remaining
+            // token budget (the step must not overshoot max_new), the
+            // context window, the spare rows the widest supported decode
+            // batch has left, and the pool's willingness to grow —
+            // speculative appends NEVER preempt a peer; a clean
+            // OutOfBlocks refusal just caps the draft length.
+            let last_batch = *self.backend.supported_batches().last().unwrap();
+            let mut spare = last_batch.saturating_sub(idx.len());
+            let mut plan = vec![0usize; idx.len()];
+            if self.cfg.spec_k > 0 {
+                for (row, &i) in idx.iter().enumerate() {
+                    let (id, budget_left, pos) = {
+                        let s = &self.running[i];
+                        (s.req.id.0, s.req.params.max_new_tokens - s.generated.len(), s.kv.pos)
+                    };
+                    let want = self
+                        .cfg
+                        .spec_k
+                        .min(budget_left.saturating_sub(1))
+                        .min((self.backend.max_seq() - 1).saturating_sub(pos))
+                        .min(spare);
+                    let mut got = 0;
+                    while got < want {
+                        match self.pool.append_token(id) {
+                            Ok(()) => got += 1,
+                            Err(KvError::OutOfBlocks { .. }) => break,
+                            Err(e) => return Err(e.into()),
+                        }
+                    }
+                    plan[row] = got;
+                    spare -= got;
+                }
+            }
+
+            // draft: chain cheap low-bit single-row forwards per sequence.
+            // The draft sampler runs at the same (seed, step) pair the
+            // verify sampler will use, so agreement is exact whenever the
+            // two widths induce the same choice.
+            let mut drafts: Vec<Vec<i32>> = Vec::with_capacity(idx.len());
+            for (row, &i) in idx.iter().enumerate() {
+                let k = plan[row];
+                let mut d = Vec::with_capacity(k);
+                let (mut prev, pos0, step0) = {
+                    let s = &self.running[i];
+                    (s.next_token, s.kv.pos, s.generated.len())
+                };
+                for j in 0..k {
+                    let logits = self.backend.draft_one(prev, pos0 + j)?;
+                    prev = sample_token(&logits, &self.running[i].req.params, step0 + j);
+                    d.push(prev);
+                }
+                drafts.push(d);
+            }
+
+            // verify: ONE wide-precision batched call — the real rows
+            // (advancing each sequence's own SeqKv) plus one provisional
+            // row per drafted position, carried by position-preset clones
+            // that are discarded after the call (only position-only KV
+            // backends draft — the set_draft_bits contract — so a clone's
+            // position IS its state).
+            let mut all_tokens: Vec<i32> =
+                idx.iter().map(|&i| self.running[i].next_token).collect();
+            let mut spec_kvs: Vec<SeqKv> = Vec::new();
+            let mut spec_offsets = vec![0usize; idx.len()];
+            for (row, &i) in idx.iter().enumerate() {
+                spec_offsets[row] = idx.len() + spec_kvs.len();
+                let base = &self.running[i].kv;
+                for (j, &d) in drafts[row].iter().enumerate() {
+                    let mut kv = base.clone();
+                    kv.pos = base.pos + 1 + j;
+                    spec_kvs.push(kv);
+                    all_tokens.push(d);
+                }
+            }
             let mut kv_refs = gather_kv_refs(&mut self.running, &idx);
-            let logits = self.backend.decode_batch(&tokens, &mut kv_refs)?;
+            kv_refs.extend(spec_kvs.iter_mut());
+            let logits = self.backend.decode_batch(&all_tokens, &mut kv_refs)?;
+            drop(kv_refs);
             self.metrics.groups_executed += 1;
-            self.metrics.batch_occupancy_sum += idx.len() as u64;
-            for (j, &i) in idx.iter().enumerate() {
-                let step = self.running[i].generated.len();
-                let tok = sample_token(&logits[j], &self.running[i].req.params, step);
+            self.metrics.batch_occupancy_sum += all_tokens.len() as u64;
+
+            for (row, &i) in idx.iter().enumerate() {
+                let k = plan[row];
+                let step0 = self.running[i].generated.len();
+                // longest agreeing prefix: position j's token comes from
+                // the SAME seeded sampler call the plain path would make,
+                // on the wide-width logits row — the bytes cannot change,
+                // only the number of steps they take
+                let mut emitted = Vec::with_capacity(k + 1);
+                let mut j = 0;
+                loop {
+                    let lrow = if j == 0 {
+                        &logits[row]
+                    } else {
+                        &logits[spec_offsets[row] + j - 1]
+                    };
+                    let tok = sample_token(lrow, &self.running[i].req.params, step0 + j);
+                    emitted.push(tok);
+                    if j < k && tok == drafts[row][j] {
+                        j += 1;
+                    } else {
+                        break;
+                    }
+                }
+                let e = emitted.len();
+                if k > 0 {
+                    self.counters.drafted += k as u64;
+                    self.counters.accepted += (e - 1) as u64;
+                    self.metrics.record_spec_step(k as u64, (e - 1) as u64);
+                }
+                // commit: decode_batch advanced the real row P → P+1; the
+                // step consumed e KV positions in total but the pool gave
+                // 1 + k slots — return the unused speculative tail
+                let unused = (1 + k) - e;
+                if unused > 0 {
+                    self.pool.truncate_tokens(self.running[i].req.id.0, unused)?;
+                }
                 let a = &mut self.running[i];
-                a.next_token = tok;
-                a.generated.push(tok);
-                let t = Instant::now();
-                self.metrics.itl.record(t.duration_since(a.last_token_at).as_secs_f64());
-                a.last_token_at = t;
-                self.metrics.tokens_generated += 1;
-                events.push(TokenEvent::Token { id: a.req.id, token: tok, step });
+                a.kv.pos = a.kv.pos - 1 + e;
+                a.next_token = *emitted.last().unwrap();
+                for (dj, &tok) in emitted.iter().enumerate() {
+                    a.generated.push(tok);
+                    let t = Instant::now();
+                    self.metrics.itl.record(t.duration_since(a.last_token_at).as_secs_f64());
+                    a.last_token_at = t;
+                    self.metrics.tokens_generated += 1;
+                    events.push(TokenEvent::Token { id: a.req.id, token: tok, step: step0 + dj });
+                }
             }
         }
 
@@ -1252,6 +1437,145 @@ mod tests {
             }
             assert_eq!(e.pool().free_blocks(), kv_blocks);
         }
+    }
+
+    #[test]
+    fn speculative_decoding_is_byte_identical_and_saves_steps() {
+        // the tentpole claim: drafting from the 3-bit plane prefix and
+        // verifying at W4 must change WHICH backend calls run, never what
+        // the client sees — every (id, step, token) triple matches the
+        // spec_k=0 engine exactly, while accepted drafts cut decode steps
+        let mk = |spec_k: usize| {
+            Engine::new(
+                SimBackend::with_ap_gemm(64, 128, vec![1, 2, 4, 8, 16], 64, 4, 2, 5),
+                EngineConfig { spec_k, draft_bits: 3, ..cfg(32, 4, 4) },
+            )
+        };
+        // varied budgets, including max_new=1 (the budget clamp must
+        // stop the drafter from overshooting a 1-token budget)
+        let reqs: Vec<Request> =
+            [(0u64, 3usize, 1usize), (1, 5, 9), (2, 2, 16), (3, 7, 6), (4, 4, 12)]
+                .iter()
+                .map(|&(id, p, m)| req(id, p, m))
+                .collect();
+        let run = |spec_k: usize| {
+            let mut e = mk(spec_k);
+            assert_eq!(e.spec_k(), spec_k, "ap backend accepts the draft config");
+            for r in &reqs {
+                e.submit(r.clone());
+            }
+            let events = e.run_to_completion_events().unwrap();
+            let stream: Vec<(u64, usize, i32)> = events
+                .iter()
+                .filter_map(|ev| match ev {
+                    TokenEvent::Token { id, token, step } => Some((id.0, *step, *token)),
+                    _ => None,
+                })
+                .collect();
+            let mut out = responses_of(&events);
+            out.sort_by_key(|r| r.id);
+            (stream, out, e)
+        };
+        let (plain_stream, plain_out, plain) = run(0);
+        let (spec_stream, spec_out, spec) = run(4);
+        assert_eq!(spec_stream, plain_stream, "speculation changed a streamed token");
+        for (s, p) in spec_out.iter().zip(&plain_out) {
+            assert_eq!(s.tokens, p.tokens, "req {}", p.id.0);
+        }
+        // budgets respected exactly — the clamp never overshoots max_new
+        for (r, q) in spec_out.iter().zip(&reqs) {
+            assert_eq!(r.tokens.len(), q.params.max_new_tokens, "req {}", r.id.0);
+        }
+        let (pc, sc) = (plain.counters(), spec.counters());
+        assert_eq!(pc.drafted, 0, "spec_k=0 never drafts");
+        assert!(sc.drafted > 0, "speculation must actually run");
+        assert!(sc.accepted <= sc.drafted);
+        assert!(sc.accepted > 0, "W3-of-W4 drafts must land sometimes");
+        assert!(
+            spec.metrics.groups_executed < plain.metrics.groups_executed,
+            "accepted drafts must save decode steps ({} vs {})",
+            spec.metrics.groups_executed,
+            plain.metrics.groups_executed
+        );
+        // counters and metrics tell the same story
+        assert_eq!(spec.metrics.spec_drafted, sc.drafted);
+        assert_eq!(spec.metrics.spec_accepted, sc.accepted);
+        assert!(spec.metrics.spec_accept_rate() > 0.0);
+        // no speculative residue in the pool
+        assert_eq!(spec.pool().free_blocks(), 32, "un-accepted drafts leaked blocks");
+        spec.pool().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn speculation_falls_back_to_plain_decode_when_the_backend_cannot_draft() {
+        // hash backend: no plane-prefix store, so set_draft_bits refuses
+        let e = Engine::new(
+            SimBackend::new(64, 64, vec![1, 2, 4, 8]),
+            EngineConfig { spec_k: 4, draft_bits: 1, ..cfg(8, 4, 4) },
+        );
+        assert_eq!(e.spec_k(), 0, "hash backend cannot draft");
+        // ap backend but draft as wide as serving: refused the same way
+        let e = Engine::new(
+            SimBackend::with_ap_gemm(64, 64, vec![1, 2, 4, 8], 64, 4, 2, 5),
+            EngineConfig { spec_k: 4, draft_bits: 4, ..cfg(8, 4, 4) },
+        );
+        assert_eq!(e.spec_k(), 0, "draft must be strictly narrower than serving");
+    }
+
+    #[test]
+    fn mid_speculation_export_import_discards_unaccepted_kv() {
+        // satellite: a sequence preempted and exported while its engine
+        // speculates carries ONLY accepted state — the rollback inside
+        // each step means no draft token ever travels.  Same dual-engine
+        // migration scenario as above, run with speculation on and off;
+        // the spec run must draft (pool 5×4 leaves a spare block once a
+        // victim is swapped out) yet produce identical bytes and a clean
+        // export
+        let run = |spec_k: usize| {
+            let mk = || {
+                Engine::new(
+                    SimBackend::with_ap_gemm(64, 64, vec![1, 2, 4, 8, 16], 64, 4, 2, 9),
+                    EngineConfig {
+                        prefix_sharing: false,
+                        spec_k,
+                        draft_bits: 3,
+                        ..cfg(5, 4, 4)
+                    },
+                )
+            };
+            let mut src = mk();
+            let mut dst = mk();
+            src.submit(req(0, 8, 8));
+            src.submit(req(1, 8, 8));
+            let mut events = Vec::new();
+            while src.swapped() == 0 {
+                assert!(!src.is_idle(), "must preempt before draining");
+                events.extend(src.step().unwrap());
+            }
+            let peek = src.peek_swapped().unwrap();
+            let content_len = peek.content.len();
+            let exported = src.export_swapped().unwrap();
+            // the cleanliness claim: exported KV covers exactly the
+            // prompt + accepted tokens, nothing speculative
+            assert_eq!(exported.kv_tokens(), content_len, "draft residue in exported KV");
+            dst.import_swapped(exported);
+            events.extend(src.run_to_completion_events().unwrap());
+            events.extend(dst.run_to_completion_events().unwrap());
+            let mut out = responses_of(&events);
+            out.sort_by_key(|r| r.id);
+            assert_eq!(out.len(), 2);
+            assert_eq!(src.pool().free_blocks(), 5, "source leaked blocks");
+            assert_eq!(dst.pool().free_blocks(), 5, "target leaked blocks");
+            src.pool().check_invariants().unwrap();
+            dst.pool().check_invariants().unwrap();
+            let drafted = src.counters().drafted + dst.counters().drafted;
+            (out.into_iter().map(|r| r.tokens).collect::<Vec<_>>(), drafted)
+        };
+        let (plain, plain_drafted) = run(0);
+        let (spec, spec_drafted) = run(3);
+        assert_eq!(plain_drafted, 0);
+        assert!(spec_drafted > 0, "the spec run must actually speculate");
+        assert_eq!(spec, plain, "migration under speculation changed a stream");
     }
 
     #[test]

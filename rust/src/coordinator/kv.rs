@@ -551,6 +551,53 @@ impl KvPool {
         Ok(())
     }
 
+    /// Roll back the last `n` tokens of a sequence — the speculative
+    /// decode **rejection path**: the engine appends KV slots for drafted
+    /// positions *before* the wide verify step, and the slots of the
+    /// rejected suffix must return to the pool as if never written.
+    /// Blocks that drop past the new boundary lose one reference each;
+    /// those reaching refcount 0 rejoin the free list exactly as
+    /// [`KvPool::release`] files them (cache registration retained, same
+    /// per-policy ordering), so rollback is indistinguishable from a
+    /// release of just the tail.  A block the surviving prefix still
+    /// covers is kept even if the rolled-back tokens wrote into it — its
+    /// slots are simply overwritten by the next append.  Shared blocks
+    /// (e.g. a CoW split that happened during the speculative appends)
+    /// only shed this sequence's reference, never another holder's.
+    pub fn truncate_tokens(&mut self, seq: u64, n: usize) -> Result<(), KvError> {
+        if n == 0 {
+            return Ok(());
+        }
+        let block_tokens = self.block_tokens;
+        let t = self.tables.get_mut(&seq).ok_or(KvError::UnknownSeq(seq))?;
+        if n > t.tokens {
+            return Err(KvError::TruncateUnderflow { tokens: t.tokens, drop: n });
+        }
+        t.tokens -= n;
+        // a table always holds ≥ 1 block (admit reserves for max(1))
+        let keep = t.tokens.max(1).div_ceil(block_tokens);
+        let mut dropped = Vec::new();
+        while t.blocks.len() > keep {
+            dropped.push(t.blocks.pop().unwrap());
+        }
+        // match release's per-policy free order: LRU frees deepest-first
+        // (popped order) so the shallower block stays warmer; LIFO keeps
+        // the forward table order
+        if self.policy == EvictionPolicy::Lifo {
+            dropped.reverse();
+        }
+        for b in dropped {
+            let r = &mut self.refs[b.0 as usize];
+            debug_assert!(*r > 0, "truncate of unreferenced block {}", b.0);
+            *r -= 1;
+            if *r == 0 {
+                self.used -= 1;
+                self.free_push(b);
+            }
+        }
+        Ok(())
+    }
+
     pub fn table(&self, seq: u64) -> Option<&BlockTable> {
         self.tables.get(&seq)
     }
@@ -676,6 +723,9 @@ pub enum KvError {
     OutOfBlocks { need: usize, free: usize },
     UnknownSeq(u64),
     AlreadyAdmitted(u64),
+    /// [`KvPool::truncate_tokens`] asked to drop more tokens than the
+    /// sequence holds — always a caller bookkeeping bug.
+    TruncateUnderflow { tokens: usize, drop: usize },
 }
 
 impl std::fmt::Display for KvError {
@@ -686,6 +736,9 @@ impl std::fmt::Display for KvError {
             }
             KvError::UnknownSeq(s) => write!(f, "unknown sequence {s}"),
             KvError::AlreadyAdmitted(s) => write!(f, "sequence {s} already admitted"),
+            KvError::TruncateUnderflow { tokens, drop } => {
+                write!(f, "truncate of {drop} tokens from a {tokens}-token sequence")
+            }
         }
     }
 }
@@ -754,6 +807,69 @@ mod tests {
         p.admit(1, 4).unwrap(); // both blocks
         let err = p.append_token(1).unwrap_err();
         assert!(matches!(err, KvError::OutOfBlocks { .. }));
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn truncate_rolls_back_appended_tokens_and_blocks() {
+        let mut p = KvPool::new(8, 4);
+        p.admit(1, 6).unwrap(); // 2 blocks, tail at 6 % 4 = 2
+        // speculative appends: two stay in the tail block, three more
+        // cross into fresh blocks
+        for _ in 0..5 {
+            p.append_token(1).unwrap();
+        }
+        assert_eq!(p.table(1).unwrap().tokens, 11);
+        assert_eq!(p.table(1).unwrap().blocks.len(), 3);
+        // reject all 5: both the in-block writes and the grown block
+        p.truncate_tokens(1, 5).unwrap();
+        assert_eq!(p.table(1).unwrap().tokens, 6);
+        assert_eq!(p.table(1).unwrap().blocks.len(), 2, "grown block returned");
+        assert_eq!(p.free_blocks(), 6);
+        p.check_invariants().unwrap();
+        // truncating zero is a no-op; over-truncating is a clean error
+        p.truncate_tokens(1, 0).unwrap();
+        assert!(matches!(
+            p.truncate_tokens(1, 7),
+            Err(KvError::TruncateUnderflow { tokens: 6, drop: 7 })
+        ));
+        assert!(matches!(p.truncate_tokens(9, 1), Err(KvError::UnknownSeq(9))));
+        p.check_invariants().unwrap();
+        p.release(1).unwrap();
+        assert_eq!(p.free_blocks(), 8, "rollback leaks nothing");
+    }
+
+    #[test]
+    fn truncate_after_cow_keeps_the_other_holder_intact() {
+        // a CoW split during speculative appends must survive the
+        // rollback: the forked sibling keeps the ORIGINAL tail block and
+        // its content, the speculating sequence only returns its copy
+        let mut p = KvPool::new(8, 4);
+        p.admit(1, 6).unwrap();
+        p.fork(1, 2).unwrap();
+        let shared_tail = p.table(1).unwrap().blocks[1];
+        // seq 1 speculates: first append CoW-splits the shared tail,
+        // three more fill the copy and grow a fresh block
+        for _ in 0..4 {
+            p.append_token(1).unwrap();
+        }
+        assert_eq!(p.sharing().cow_copies, 1);
+        let cow_tail = p.table(1).unwrap().blocks[1];
+        assert_ne!(cow_tail, shared_tail);
+        // reject everything speculated
+        p.truncate_tokens(1, 4).unwrap();
+        assert_eq!(p.table(1).unwrap().tokens, 6);
+        assert_eq!(p.table(1).unwrap().blocks.len(), 2);
+        // the CoW copy stays split (seq 1 still holds it privately);
+        // the sibling still holds the original tail untouched
+        assert_eq!(p.table(1).unwrap().blocks[1], cow_tail);
+        assert_eq!(p.table(2).unwrap().blocks[1], shared_tail);
+        assert_eq!(p.refcount(shared_tail), 1);
+        assert_eq!(p.refcount(cow_tail), 1);
+        p.check_invariants().unwrap();
+        p.release(1).unwrap();
+        p.release(2).unwrap();
+        assert_eq!(p.free_blocks(), 8);
         p.check_invariants().unwrap();
     }
 
@@ -1098,7 +1214,7 @@ mod tests {
                 .map(|t| prompt(rng.usize(1, 3 * btok + 1), t))
                 .collect();
             for _ in 0..rng.usize(10, 200) {
-                match rng.u32(0, 5) {
+                match rng.u32(0, 6) {
                     0 => {
                         let toks = rng.usize(1, 3 * btok + 1);
                         if p.admit(next, toks).is_ok() {
@@ -1126,6 +1242,16 @@ mod tests {
                                 live.push(next);
                             }
                             next += 1;
+                        }
+                    }
+                    4 => {
+                        // speculative rollback: drop a random tail slice
+                        // (possibly the whole sequence's tokens)
+                        if !live.is_empty() {
+                            let s = live[rng.usize(0, live.len())];
+                            let have = p.table(s).unwrap().tokens;
+                            let n = rng.usize(0, have + 1);
+                            p.truncate_tokens(s, n).unwrap();
                         }
                     }
                     _ => {

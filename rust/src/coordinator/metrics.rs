@@ -127,6 +127,19 @@ pub struct Metrics {
     /// KV rebuilds performed by THIS replica for cross-precision
     /// arrivals: one prefill over prompt + generated tokens each.
     pub reprefills: u64,
+    /// Tokens drafted at the speculative low-bit plane-prefix width.
+    pub spec_drafted: u64,
+    /// Drafted tokens the wide-precision verify pass accepted.
+    pub spec_accepted: u64,
+    /// Accepted-draft-length distribution: `spec_accept_hist[a]` counts
+    /// the speculating sequence-steps that accepted exactly `a` drafted
+    /// tokens (and so emitted `a + 1`).  Indexed 0..=spec_k; grown on
+    /// demand so replicas at different `spec_k` merge cleanly.
+    pub spec_accept_hist: Vec<u64>,
+    /// Tokens emitted per speculating sequence-step (`accepted + 1`
+    /// samples, one per sequence per decode step with a non-empty draft)
+    /// — mean > 1 is the whole point of drafting.
+    pub spec_tokens_per_step: LatencyStats,
     pub queue: LatencyStats,
     pub ttft: LatencyStats,
     /// Inter-token latency: gap between consecutive streamed tokens of
@@ -180,6 +193,29 @@ impl Metrics {
         self.batch_occupancy_sum as f64 / self.groups_executed as f64
     }
 
+    /// One speculating sequence-step: `drafted` tokens were drafted,
+    /// `accepted` of them survived the wide-precision verify.
+    pub fn record_spec_step(&mut self, drafted: u64, accepted: u64) {
+        debug_assert!(accepted <= drafted);
+        self.spec_drafted += drafted;
+        self.spec_accepted += accepted;
+        let slot = accepted as usize;
+        if self.spec_accept_hist.len() <= slot {
+            self.spec_accept_hist.resize(slot + 1, 0);
+        }
+        self.spec_accept_hist[slot] += 1;
+        self.spec_tokens_per_step.record((accepted + 1) as f64);
+    }
+
+    /// Fraction of drafted tokens the verify pass accepted (0 when
+    /// nothing was drafted).
+    pub fn spec_accept_rate(&self) -> f64 {
+        if self.spec_drafted == 0 {
+            return 0.0;
+        }
+        self.spec_accepted as f64 / self.spec_drafted as f64
+    }
+
     /// Fold a replica's metrics into this aggregate: counters and the
     /// simultaneous KV gauges sum, latency samples concatenate, and
     /// **this** metrics' wall clock is kept (the cluster brackets the
@@ -205,6 +241,15 @@ impl Metrics {
         self.migrations += other.migrations;
         self.requants += other.requants;
         self.reprefills += other.reprefills;
+        self.spec_drafted += other.spec_drafted;
+        self.spec_accepted += other.spec_accepted;
+        if self.spec_accept_hist.len() < other.spec_accept_hist.len() {
+            self.spec_accept_hist.resize(other.spec_accept_hist.len(), 0);
+        }
+        for (slot, &n) in other.spec_accept_hist.iter().enumerate() {
+            self.spec_accept_hist[slot] += n;
+        }
+        self.spec_tokens_per_step.merge(&other.spec_tokens_per_step);
         self.queue.merge(&other.queue);
         self.ttft.merge(&other.ttft);
         self.itl.merge(&other.itl);
@@ -217,6 +262,20 @@ impl Metrics {
         let ttft = self.ttft.snapshot();
         let itl = self.itl.snapshot();
         let total = self.total.snapshot();
+        // speculative line only when something was drafted — plain-decode
+        // reports keep their exact shape
+        let spec = if self.spec_drafted > 0 {
+            format!(
+                "\nspeculative: {}/{} drafts accepted ({:.0}%) | {:.2} tok/step | accept-len {:?}",
+                self.spec_accepted,
+                self.spec_drafted,
+                100.0 * self.spec_accept_rate(),
+                self.spec_tokens_per_step.mean(),
+                self.spec_accept_hist,
+            )
+        } else {
+            String::new()
+        };
         format!(
             "requests: {}/{} done | tokens: {} | wall: {:.2}s | {:.1} tok/s | occupancy {:.2} | \
              preempted {} (resumed {}, migrated {}, requantized {})\n\
@@ -225,7 +284,7 @@ impl Metrics {
              queue  p50/p95/max: {:.1}/{:.1}/{:.1} ms\n\
              ttft   p50/p95/max: {:.1}/{:.1}/{:.1} ms\n\
              itl    p50/p95/max: {:.1}/{:.1}/{:.1} ms\n\
-             total  p50/p95/max: {:.1}/{:.1}/{:.1} ms",
+             total  p50/p95/max: {:.1}/{:.1}/{:.1} ms{spec}",
             self.requests_done,
             self.requests_in,
             self.tokens_generated,
@@ -323,6 +382,37 @@ mod tests {
         m.finish();
         assert!(m.throughput_tok_s() > 0.0);
         assert!(m.report().contains("occupancy 2.50"));
+    }
+
+    #[test]
+    fn spec_steps_accumulate_and_merge_across_replicas() {
+        // one replica speculating at spec_k=4, one at spec_k=2: the
+        // histograms have different lengths and must merge elementwise
+        let mut a = Metrics::default();
+        a.record_spec_step(4, 4); // fully accepted: 5 tokens this step
+        a.record_spec_step(4, 0); // nothing stuck: plain-decode step
+        assert_eq!(a.spec_drafted, 8);
+        assert_eq!(a.spec_accepted, 4);
+        assert!((a.spec_accept_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(a.spec_accept_hist, vec![1, 0, 0, 0, 1]);
+        assert!((a.spec_tokens_per_step.mean() - 3.0).abs() < 1e-12, "(5 + 1) / 2");
+
+        let mut b = Metrics::default();
+        b.record_spec_step(2, 1);
+        assert_eq!(b.spec_accept_hist, vec![0, 1]);
+        a.merge(&b);
+        assert_eq!(a.spec_drafted, 10);
+        assert_eq!(a.spec_accepted, 5);
+        assert_eq!(a.spec_accept_hist, vec![1, 1, 0, 0, 1], "shorter hist merges in place");
+        assert_eq!(a.spec_tokens_per_step.count(), 3);
+        assert!(a.report().contains("speculative:"), "drafting shows in the report");
+        // the short side grows to the long side too
+        let mut c = Metrics::default();
+        c.record_spec_step(2, 2);
+        c.merge(&a);
+        assert_eq!(c.spec_accept_hist, vec![1, 1, 1, 0, 1]);
+        // a replica that never drafted reports no speculative line
+        assert!(!Metrics::default().report().contains("speculative:"));
     }
 
     #[test]

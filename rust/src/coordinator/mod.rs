@@ -41,7 +41,15 @@
 //!   the pack-once kernel path, streaming every token as an event.
 //!   Swapped sequences are exportable (`Engine::export_swapped` →
 //!   `ExportedSeq` → `Engine::import_swapped`) so a peer replica can
-//!   take the work over byte-identically.
+//!   take the work over byte-identically.  **Self-speculative decoding**
+//!   (`EngineConfig::spec_k`/`draft_bits`): each decode step drafts up
+//!   to `spec_k` tokens per sequence from the `draft_bits`-wide MSB
+//!   plane prefix of the *same* weight pack — zero extra weight bytes —
+//!   then verifies every position in ONE wide batched decode and keeps
+//!   the longest agreeing prefix; greedy (and seeded-Gumbel) acceptance
+//!   keeps streams byte-identical to plain decode, so accepted drafts
+//!   are pure decode-step savings.  Un-accepted KV rolls back inside
+//!   the step, so exported/migrated sequences never carry draft state.
 //! * [`router`]   — per-request replica selection (round-robin or
 //!   least-loaded, with optional precision pinning) and conserved load
 //!   accounting, transferred by `Router::migrate` when a sequence moves.

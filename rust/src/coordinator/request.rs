@@ -53,6 +53,14 @@ impl Request {
 /// nothing else, so batched, unbatched and preempted-then-resumed
 /// execution of the same request produce the **identical** token stream —
 /// the property the engine's correctness tests pin down.
+///
+/// Ties break to the **lowest token id** (strict `>` keeps the first
+/// maximum seen).  This is a load-bearing contract, not an accident: the
+/// speculative drafter and the wide-precision verifier each run this
+/// function independently on their own logits rows, and acceptance
+/// compares the results token-by-token — a tie resolved differently on
+/// the two passes would break byte-identity with plain decode.  The
+/// duplicated-max regression test below pins it.
 pub fn sample_token(logits: &[f32], params: &GenParams, step: usize) -> i32 {
     let mut rng = crate::util::Rng::with_seed(
         params.seed ^ (step as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
@@ -66,6 +74,8 @@ pub fn sample_token(logits: &[f32], params: &GenParams, step: usize) -> i32 {
         } else {
             v
         };
+        // strictly greater ONLY: an equal value never displaces the
+        // earlier (lower-id) holder, whatever order the row is walked
         if v > best_v {
             best_v = v;
             best = i;
@@ -158,4 +168,30 @@ pub fn responses_of(events: &[TokenEvent]) -> Vec<Response> {
             _ => None,
         })
         .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_argmax_ties_break_to_the_lowest_token_id() {
+        // duplicated maxima everywhere the tie could hide: leading,
+        // interior, trailing, and an all-equal row.  Speculative
+        // acceptance compares a draft-pass argmax against a verify-pass
+        // argmax — both must land on the SAME token whenever the rows
+        // agree, so the tie-break has to be deterministic and positional.
+        let greedy = GenParams { max_new_tokens: 1, sample: false, seed: 42 };
+        assert_eq!(sample_token(&[7.0, 7.0, 1.0], &greedy, 0), 0, "leading tie");
+        assert_eq!(sample_token(&[1.0, 7.0, 7.0, 2.0], &greedy, 0), 1, "interior tie");
+        assert_eq!(sample_token(&[1.0, 2.0, 9.0, 9.0], &greedy, 0), 2, "trailing tie");
+        assert_eq!(sample_token(&[3.0, 3.0, 3.0, 3.0], &greedy, 0), 0, "all equal");
+        // the step seed must not perturb greedy ties (only sampling draws
+        // from the rng)
+        for step in 0..16 {
+            assert_eq!(sample_token(&[5.0, 5.0, 5.0], &greedy, step), 0);
+        }
+        // non-finite guards: -inf rows still resolve to the first index
+        assert_eq!(sample_token(&[f32::NEG_INFINITY, f32::NEG_INFINITY], &greedy, 0), 0);
+    }
 }

@@ -59,6 +59,28 @@ impl Default for TraceConfig {
     }
 }
 
+impl TraceConfig {
+    /// Decode-heavy preset: short prompts, long greedy generations —
+    /// per-step decode work dominates prefill by an order of magnitude,
+    /// which is the workload speculative decoding exists for (every
+    /// accepted draft token is one decode step saved; prefill-bound
+    /// traces would bury the effect).  Greedy sampling is part of the
+    /// shape: the spec bench compares `spec_k` settings stream-for-stream
+    /// and greedy keeps the reference cheap to reason about.  `requests`
+    /// and `rate` stay caller-chosen so smoke and full bench runs can
+    /// size it.
+    pub fn decode_heavy(requests: usize, rate: f64, seed: u64) -> Self {
+        Self {
+            kind: ArrivalKind::Poisson { rate },
+            requests,
+            prompt_len: (2, 5),
+            max_new: (16, 33),
+            seed,
+            ..Self::default()
+        }
+    }
+}
+
 /// A request plus its arrival offset from trace start.
 #[derive(Debug, Clone)]
 pub struct TimedRequest {
@@ -215,6 +237,27 @@ mod tests {
         assert!(*by_pop.last().unwrap() < 60, "cold prefix drew {}", by_pop.last().unwrap());
         // same seed → same draws
         let tr2 = generate(&cfg);
+        assert!(tr.iter().zip(&tr2).all(|(a, b)| a.request.prompt == b.request.prompt));
+    }
+
+    #[test]
+    fn decode_heavy_preset_is_decode_dominated_and_greedy() {
+        let tr = generate(&TraceConfig::decode_heavy(50, 100.0, 7));
+        assert_eq!(tr.len(), 50);
+        let (mut prompt_tokens, mut decode_tokens) = (0usize, 0usize);
+        for t in &tr {
+            assert!((2..5).contains(&t.request.prompt.len()));
+            assert!((16..33).contains(&t.request.params.max_new_tokens));
+            assert!(!t.request.params.sample, "preset must be greedy");
+            prompt_tokens += t.request.prompt.len();
+            decode_tokens += t.request.params.max_new_tokens;
+        }
+        assert!(
+            decode_tokens >= 4 * prompt_tokens,
+            "decode ({decode_tokens}) must dominate prefill ({prompt_tokens})"
+        );
+        // deterministic like every other preset
+        let tr2 = generate(&TraceConfig::decode_heavy(50, 100.0, 7));
         assert!(tr.iter().zip(&tr2).all(|(a, b)| a.request.prompt == b.request.prompt));
     }
 

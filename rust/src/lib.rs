@@ -58,7 +58,12 @@
 //!   the pack-once pipeline (`SimBackend::with_ap_gemm`), sharded
 //!   across the worker pool on the hot path; `EngineConfig::workers`
 //!   and `Cluster::set_worker_budget` size the per-replica GEMM
-//!   parallelism so N replicas never oversubscribe the host.
+//!   parallelism so N replicas never oversubscribe the host.  The
+//!   engine can **self-speculate** (`EngineConfig::spec_k`): draft
+//!   tokens from a low-bit plane prefix of the same superset pack and
+//!   verify them in one wide batched decode — streams stay
+//!   byte-identical to plain decode while accepted drafts cut decode
+//!   steps (the Any-Precision store doubling as its own draft model).
 //! * [`bench`]    — harness regenerating every table/figure of the paper's
 //!   evaluation section, plus the §3.3 pack-vs-compute split table.
 //! * [`anyhow`]   — in-tree error-handling substrate (offline substitute

@@ -11,7 +11,11 @@
 //!   sharing on: the common prompt heads share refcounted blocks);
 //! * weights are decomposed+packed **exactly once** for the whole run,
 //!   every step packing only its activation batch through the recycling
-//!   arena.
+//!   arena;
+//! * self-speculative decoding (low-bit plane-prefix draft, wide batched
+//!   verify) changes how many backend calls run, never what streams:
+//!   spec_k ∈ {0, 2, 4} produce byte-identical token streams under the
+//!   same churn.
 
 use apllm::coordinator::{
     drive_unbatched, responses_of, Engine, EngineConfig, GenParams, Request, SimBackend,
@@ -170,6 +174,64 @@ fn streams_byte_identical_across_worker_counts() {
         let (streams, tokens) = run(workers);
         assert_eq!(tokens, ref_tokens, "responses diverged at {workers} workers");
         assert_eq!(streams, ref_streams, "streamed events diverged at {workers} workers");
+    }
+}
+
+#[test]
+fn streams_byte_identical_across_spec_k_under_preemption_churn() {
+    // the speculative-decoding tentpole end to end: drafting from the
+    // 3-bit plane prefix and verifying at W4 is a pure execution
+    // strategy — whatever the spec_k, through the tight pool's
+    // preemption churn, prefix sharing, and a mix of greedy and sampled
+    // requests, not one streamed byte may move
+    let w4 = |seed: u64| SimBackend::with_ap_gemm(64, 256, vec![1, 2, 4, 8, 16], 64, 4, 2, seed);
+    let reqs: Vec<Request> = (0..24u64)
+        .map(|i| {
+            let mut r = req(i, 1 + (i as usize * 7) % 16, 1 + (i as usize * 5) % 10);
+            if i % 3 == 0 {
+                // sampled acceptance must hold too: draft and verify
+                // replay the same seeded Gumbel stream per (seed, step)
+                r.params.sample = true;
+                r.params.seed = 500 + i;
+            }
+            r
+        })
+        .collect();
+    let run = |spec_k: usize| {
+        let cfg = EngineConfig {
+            kv_blocks: 16,
+            block_tokens: 4,
+            max_running: 8,
+            spec_k,
+            draft_bits: 3,
+            ..Default::default()
+        };
+        let mut eng = Engine::new(w4(17), cfg);
+        for r in &reqs {
+            eng.submit(r.clone());
+        }
+        let events = eng.run_to_completion_events().unwrap();
+        let mut out = responses_of(&events);
+        out.sort_by_key(|r| r.id);
+        assert_eq!(out.len(), 24);
+        assert_eq!(eng.pool().free_blocks(), 16, "KV leak at spec_k {spec_k}");
+        eng.pool().check_invariants().unwrap();
+        let c = eng.counters();
+        if spec_k == 0 {
+            assert_eq!(c.drafted, 0, "spec_k=0 must never draft");
+        } else {
+            assert!(c.drafted > 0, "spec_k {spec_k} never drafted");
+            assert!(c.accepted <= c.drafted);
+        }
+        assert!(c.preemptions > 0, "churn must preempt at spec_k {spec_k}");
+        let tokens: Vec<Vec<i32>> = out.into_iter().map(|r| r.tokens).collect();
+        (streamed_tokens(&events), tokens)
+    };
+    let (ref_streams, ref_tokens) = run(0);
+    for spec_k in [2usize, 4] {
+        let (streams, tokens) = run(spec_k);
+        assert_eq!(tokens, ref_tokens, "responses diverged at spec_k {spec_k}");
+        assert_eq!(streams, ref_streams, "streamed events diverged at spec_k {spec_k}");
     }
 }
 
