@@ -33,6 +33,13 @@
 //!    reporting accept rate, accepted-length histogram, mean tokens per
 //!    decode step, and wall-clock tok/s against the plain baseline.
 //!
+//! 7. **disaggregated prefill/decode** — a role-split cluster (`--roles
+//!    p,d` by default: one prefill replica handing every freshly
+//!    prefilled sequence to a decode replica) vs an all-Mixed cluster of
+//!    the same size on a bursty prefill-heavy trace, streams asserted
+//!    byte-identical to the mixed oracle, reporting per-role TTFT/ITL
+//!    against the mixed baseline plus the handoff counters.
+//!
 //! `cargo bench --bench serving` for the full table; pass `--smoke` for
 //! the one-row CI job (and `--smoke --cluster` for the cluster smoke)
 //! that keeps these paths building and running.  `--json <path>` emits
@@ -44,8 +51,9 @@
 use apllm::bitmm::{apmm_bipolar_packed_into, pack_codes, ApmmOpts, CodeMatrix, ShardPolicy};
 use apllm::coordinator::trace::{generate, TimedRequest, TraceConfig};
 use apllm::coordinator::{
-    replay_trace, responses_of, superset_store, ArrivalKind, BatcherConfig, Cluster, Engine,
-    EngineConfig, EvictionPolicy, KvPool, KvSharing, RoutePolicy, SimBackend, Stepper, TokenEvent,
+    replay_trace, responses_of, superset_store, ArrivalKind, BatcherConfig, Cluster, ClusterSpec,
+    Engine, EngineConfig, EvictionPolicy, KvPool, KvSharing, ReplicaRole, ReplicaSpec,
+    RoutePolicy, SimBackend, Stepper, TokenEvent,
 };
 use apllm::model::PrecisionConfig;
 use apllm::util::json::Json;
@@ -67,6 +75,7 @@ fn engine_cfg(prefix_sharing: bool, eviction: EvictionPolicy, kv_blocks: usize) 
         workers: 0,
         spec_k: 0,
         draft_bits: 0,
+        prefill_hold: false, // Cluster::new flips this on for prefill roles
     }
 }
 
@@ -316,17 +325,24 @@ fn mixed_precision(rate: f64, requests: usize) -> Json {
         100.0 * saved as f64 / per_precision_bytes as f64
     );
 
-    let mut c = Cluster::new(RoutePolicy::LeastLoaded);
+    let mut spec = ClusterSpec::new(RoutePolicy::LeastLoaded);
     for (i, (p, kv_blocks)) in
         [(PrecisionConfig::W4A4, 24usize), (PrecisionConfig::W2A2, 96)].iter().enumerate()
     {
-        c.add_replica(
-            format!("r{i}-{}", p.label()),
-            *p,
-            SimBackend::with_shared_store(512, vec![1, 2, 4, 8], store.clone(), p.nw, p.nx),
-            engine_cfg(true, EvictionPolicy::Lru, *kv_blocks),
+        spec = spec.replica(
+            ReplicaSpec::new(format!("r{i}-{}", p.label()), *p)
+                .engine(engine_cfg(true, EvictionPolicy::Lru, *kv_blocks)),
         );
     }
+    let mut c = Cluster::new(spec, |r| {
+        SimBackend::with_shared_store(
+            512,
+            vec![1, 2, 4, 8],
+            store.clone(),
+            r.precision.nw,
+            r.precision.nx,
+        )
+    });
     let trace = shared_prefix_trace(rate, requests);
     let events = replay_trace(&mut c, &trace).expect("replay");
     let out = responses_of(&events);
@@ -553,23 +569,173 @@ fn speculative(smoke: bool, spec_k: usize, draft_bits: u32) -> Json {
     ])
 }
 
+/// Disaggregated prefill/decode serving: a role-split cluster (one
+/// replica per `--roles` entry) vs an all-Mixed cluster of the same
+/// size, both replaying the same bursty prefill-heavy trace over the
+/// same W2A2 pack-once backend.  The split topology absorbs each prefill
+/// burst on the prefill tier and hands every sequence to the decode tier
+/// (`PrefillDone` + `Migrated` per handoff), so the section reports
+/// **per-role TTFT/ITL** against the mixed baseline's merged numbers —
+/// with the streams asserted byte-identical to the mixed oracle: roles
+/// redistribute work, they must never change a token.
+fn disaggregated(smoke: bool, roles: &[ReplicaRole]) -> Json {
+    let labels: Vec<&str> = roles.iter().map(|r| r.label()).collect();
+    println!(
+        "\n== serving: disaggregated prefill/decode cluster (roles {}) vs mixed baseline, \
+         bursty prefill-heavy trace ==",
+        labels.join(",")
+    );
+    assert!(roles.len() >= 2, "disaggregation needs at least two replicas");
+    let (requests, burst) = if smoke { (10, 5) } else { (48, 8) };
+    let trace = generate(&TraceConfig {
+        vocab: 256,
+        ..TraceConfig::prefill_heavy(requests, burst, 0.05, 7)
+    });
+
+    let build = |topology: &[ReplicaRole]| {
+        let mut spec = ClusterSpec::new(RoutePolicy::LeastLoaded);
+        for (i, &role) in topology.iter().enumerate() {
+            spec = spec.replica(
+                ReplicaSpec::new(format!("r{i}-{}", role.label()), PrecisionConfig::W2A2)
+                    .role(role)
+                    .engine(engine_cfg(true, EvictionPolicy::Lru, 96)),
+            );
+        }
+        Cluster::new(spec, |_| ap_backend())
+    };
+    let stream_of = |events: &[TokenEvent]| {
+        let mut s: Vec<(u64, usize, i32)> = events
+            .iter()
+            .filter_map(|e| match e {
+                TokenEvent::Token { id, token, step } => Some((id.0, *step, *token)),
+                _ => None,
+            })
+            .collect();
+        s.sort_unstable();
+        s
+    };
+
+    let mixed_roles = vec![ReplicaRole::Mixed; roles.len()];
+    let mut split = build(roles);
+    let mut mixed = build(&mixed_roles);
+    let split_events = replay_trace(&mut split, &trace).expect("replay split");
+    let mixed_events = replay_trace(&mut mixed, &trace).expect("replay mixed");
+    assert_eq!(responses_of(&split_events).len(), requests);
+    assert_eq!(responses_of(&mixed_events).len(), requests);
+    // the tentpole contract: disaggregation redistributes work without
+    // changing a single streamed byte
+    assert_eq!(
+        stream_of(&split_events),
+        stream_of(&mixed_events),
+        "role-split streams must be byte-identical to the mixed oracle"
+    );
+    split.check_invariants().expect("split cluster invariants");
+    mixed.check_invariants().expect("mixed cluster invariants");
+    for c in [&split, &mixed] {
+        for eng in c.engines() {
+            assert_eq!(eng.pool().free_blocks(), eng.pool().total_blocks(), "leaked KV blocks");
+        }
+        assert_eq!(c.router().inflight(), 0, "router load accounting drained");
+    }
+    // every handoff streamed its marker
+    let prefill_done =
+        split_events.iter().filter(|e| matches!(e, TokenEvent::PrefillDone { .. })).count();
+    assert_eq!(prefill_done as u64, split.prefill_handoffs(), "every handoff streamed");
+    let has_split_pair = roles.iter().any(|r| *r == ReplicaRole::Prefill)
+        && roles.iter().any(|r| r.accepts_decode());
+    if has_split_pair {
+        assert!(
+            split.prefill_handoffs() > 0,
+            "a prefill replica with a decode-capable peer must hand off"
+        );
+    }
+    assert_eq!(mixed.prefill_handoffs(), 0, "mixed replicas never hand off");
+
+    let ms = |v: f64| v * 1e3;
+    let sm = split.metrics();
+    let mm = mixed.metrics();
+    println!(
+        "  split: {} done | {:.0} tok/s | {} handoffs ({} migrations) | mixed: {} done | {:.0} tok/s",
+        sm.requests_done,
+        sm.throughput_tok_s(),
+        split.prefill_handoffs(),
+        split.migrations(),
+        mm.requests_done,
+        mm.throughput_tok_s(),
+    );
+    let mut per_role = Vec::new();
+    for role in [ReplicaRole::Prefill, ReplicaRole::Decode, ReplicaRole::Mixed] {
+        if !roles.contains(&role) {
+            continue;
+        }
+        let m = split.metrics_for_role(role);
+        println!(
+            "  role {:>7}: done {:>4} | tokens {:>5} | ttft p50/p95 {:>6.1}/{:<6.1} ms | \
+             itl p50/p95 {:>5.1}/{:<5.1} ms",
+            role.label(),
+            m.requests_done,
+            m.tokens_generated,
+            ms(m.ttft.percentile(50.0)),
+            ms(m.ttft.percentile(95.0)),
+            ms(m.itl.percentile(50.0)),
+            ms(m.itl.percentile(95.0)),
+        );
+        per_role.push(obj(vec![
+            ("role", Json::Str(role.label().into())),
+            ("done", num("done", m.requests_done as f64)),
+            ("tokens", num("tokens", m.tokens_generated as f64)),
+            ("ttft_p50_ms", num("ttft_p50_ms", ms(m.ttft.percentile(50.0)))),
+            ("ttft_p95_ms", num("ttft_p95_ms", ms(m.ttft.percentile(95.0)))),
+            ("itl_p50_ms", num("itl_p50_ms", ms(m.itl.percentile(50.0)))),
+            ("itl_p95_ms", num("itl_p95_ms", ms(m.itl.percentile(95.0)))),
+        ]));
+    }
+    println!(
+        "  mixed baseline: ttft p50/p95 {:.1}/{:.1} ms | itl p50/p95 {:.1}/{:.1} ms",
+        ms(mm.ttft.percentile(50.0)),
+        ms(mm.ttft.percentile(95.0)),
+        ms(mm.itl.percentile(50.0)),
+        ms(mm.itl.percentile(95.0)),
+    );
+    obj(vec![
+        ("roles", Json::Arr(labels.iter().map(|l| Json::Str((*l).into())).collect())),
+        ("requests", pos("requests", requests as f64)),
+        ("done", pos("done", sm.requests_done as f64)),
+        ("tok_s", pos("tok_s", sm.throughput_tok_s())),
+        ("prefill_handoffs", num("prefill_handoffs", split.prefill_handoffs() as f64)),
+        ("migrations", num("migrations", split.migrations() as f64)),
+        ("per_role", Json::Arr(per_role)),
+        (
+            "mixed_baseline",
+            obj(vec![
+                ("done", pos("mixed done", mm.requests_done as f64)),
+                ("tok_s", pos("mixed tok_s", mm.throughput_tok_s())),
+                ("ttft_p50_ms", num("ttft_p50_ms", ms(mm.ttft.percentile(50.0)))),
+                ("ttft_p95_ms", num("ttft_p95_ms", ms(mm.ttft.percentile(95.0)))),
+                ("itl_p50_ms", num("itl_p50_ms", ms(mm.itl.percentile(50.0)))),
+                ("itl_p95_ms", num("itl_p95_ms", ms(mm.itl.percentile(95.0)))),
+            ]),
+        ),
+        ("streams_identical", Json::Bool(true)),
+    ])
+}
+
 fn cluster(rate: f64, requests: usize, replicas: usize) -> Json {
     println!(
         "\n== serving: {replicas}-replica cluster (LeastLoaded router, hot replica 0), \
          shared-prefix trace, rate {rate}/s =="
     );
-    let mut c = Cluster::new(RoutePolicy::LeastLoaded);
+    let mut spec = ClusterSpec::new(RoutePolicy::LeastLoaded);
     for i in 0..replicas {
         // replica 0 is deliberately undersized so swap-outs pile up on
         // it and the rebalancer has something to migrate
         let kv_blocks = if i == 0 { 24 } else { 96 };
-        c.add_replica(
-            format!("r{i}"),
-            PrecisionConfig::W2A2,
-            ap_backend(),
-            engine_cfg(true, EvictionPolicy::Lru, kv_blocks),
+        spec = spec.replica(
+            ReplicaSpec::new(format!("r{i}"), PrecisionConfig::W2A2)
+                .engine(engine_cfg(true, EvictionPolicy::Lru, kv_blocks)),
         );
     }
+    let mut c = Cluster::new(spec, |_| ap_backend());
     let trace = shared_prefix_trace(rate, requests);
     let events = replay_trace(&mut c, &trace).expect("replay");
     let out = responses_of(&events);
@@ -645,6 +811,14 @@ fn main() {
     };
     let spec_k = flag_num("--spec-k", 4) as usize;
     let draft_bits = flag_num("--draft-bits", 3) as u32;
+    let roles: Vec<ReplicaRole> = args
+        .iter()
+        .position(|a| a == "--roles")
+        .map(|i| args.get(i + 1).expect("--roles needs p,d[,m]").clone())
+        .unwrap_or_else(|| "p,d".to_string())
+        .split(',')
+        .map(|s| ReplicaRole::parse(s).unwrap_or_else(|| panic!("bad role {s:?} in --roles")))
+        .collect();
 
     let mut report: BTreeMap<String, Json> = BTreeMap::new();
     report.insert("schema".into(), Json::Num(1.0));
@@ -666,6 +840,7 @@ fn main() {
         report.insert("mixed_precision".into(), mixed_precision(pr_rate, pr_requests));
         report.insert("thread_scaling".into(), thread_scaling(smoke));
         report.insert("speculative".into(), speculative(smoke, spec_k, draft_bits));
+        report.insert("disaggregated".into(), disaggregated(smoke, &roles));
     }
 
     if let Some(path) = json_path {

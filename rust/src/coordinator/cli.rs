@@ -3,7 +3,9 @@
 //! the pack-once AP-GEMM sim backend (always available; `--sim` forces
 //! it).  The sim path serves through the **continuous-batching engine**
 //! by default; `--replicas N` (≥2) serves a **multi-replica cluster**
-//! behind the router (`--route-policy round-robin|least-loaded`), and
+//! behind the router (`--route-policy round-robin|least-loaded`), with
+//! `--roles p,d,m` assigning prefill/decode/mixed roles round-robin for
+//! a disaggregated deployment, and
 //! `--group-scheduler` falls back to the group scheduler.  `--spec-k N`
 //! turns on self-speculative decoding (draft from the `--draft-bits`-wide
 //! plane prefix of the same pack, verify at serving width); streams stay
@@ -12,10 +14,10 @@
 #[cfg(feature = "pjrt")]
 use super::backend::PjrtBackend;
 use super::backend::SimBackend;
-use super::cluster::Cluster;
+use super::cluster::{Cluster, ClusterSpec, ReplicaSpec};
 use super::engine::{Engine, EngineConfig};
 use super::request::{responses_of, Response};
-use super::router::RoutePolicy;
+use super::router::{ReplicaRole, RoutePolicy};
 use super::scheduler::{Scheduler, SchedulerConfig};
 use super::server::{replay_trace, Stepper};
 use super::trace::{generate, ArrivalKind, TimedRequest, TraceConfig};
@@ -42,9 +44,14 @@ pub struct ServeArgs {
     pub replicas: usize,
     /// How the router picks a replica.
     pub route_policy: RoutePolicy,
+    /// Replica roles assigned round-robin across `replicas` (`p`refill /
+    /// `d`ecode / `m`ixed); empty = every replica Mixed (the symmetric
+    /// baseline).  Requires a cluster (`--replicas ≥ 2`) and at least one
+    /// prefill-capable assignment.
+    pub roles: Vec<ReplicaRole>,
     /// Host-wide GEMM worker budget (`0` = the `APLLM_THREADS` /
     /// available-parallelism default): a lone engine gets it all, a
-    /// cluster splits it across replicas ([`Cluster::set_worker_budget`]).
+    /// cluster splits it across replicas ([`ClusterSpec::worker_budget`]).
     pub workers: usize,
     /// Speculative decoding: tokens drafted ahead per sequence per step
     /// from the low-bit plane prefix of the serving pack (`0` = off).
@@ -66,6 +73,7 @@ impl Default for ServeArgs {
             engine: true,
             replicas: 1,
             route_policy: RoutePolicy::LeastLoaded,
+            roles: Vec::new(),
             workers: 0,
             spec_k: 0,
             draft_bits: 1,
@@ -76,8 +84,8 @@ impl Default for ServeArgs {
 /// The flag list every parse error repeats — a bad flag must produce a
 /// recoverable error naming the alternatives, never kill the process.
 const VALID_FLAGS: &str = "--requests N, --rate R, --max-new N, --prompt-len N, --seed N, \
-     --replicas N, --route-policy round-robin|least-loaded, --workers N, --spec-k N, \
-     --draft-bits N, --sim, --group-scheduler";
+     --replicas N, --route-policy round-robin|least-loaded, --roles p,d,m, --workers N, \
+     --spec-k N, --draft-bits N, --sim, --group-scheduler";
 
 fn take_value<'a>(it: &mut std::slice::Iter<'a, String>, name: &str) -> Result<&'a str> {
     it.next()
@@ -116,6 +124,23 @@ pub fn parse_args(args: &[String]) -> Result<ServeArgs> {
                     format!("--route-policy expects round-robin|least-loaded, got {raw:?}")
                 })?;
             }
+            "--roles" => {
+                let raw = take_value(&mut it, "--roles")?;
+                a.roles = raw
+                    .split(',')
+                    .map(|s| {
+                        ReplicaRole::parse(s).with_context(|| {
+                            format!(
+                                "--roles expects a comma list of p[refill]|d[ecode]|m[ixed], \
+                                 got {s:?} in {raw:?}"
+                            )
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                if a.roles.is_empty() {
+                    bail!("--roles needs at least one role (p|d|m)");
+                }
+            }
             "--workers" => a.workers = parse_value(&mut it, "--workers", "a worker count")?,
             "--spec-k" => a.spec_k = parse_value(&mut it, "--spec-k", "a draft length")?,
             "--draft-bits" => {
@@ -134,6 +159,25 @@ pub fn parse_args(args: &[String]) -> Result<ServeArgs> {
     }
     if a.spec_k > 0 && a.draft_bits == 0 {
         bail!("--spec-k needs --draft-bits ≥ 1 (the draft runs on a non-empty plane prefix)");
+    }
+    if !a.roles.is_empty() {
+        if a.replicas < 2 {
+            bail!("--roles splits work across a cluster; use --replicas ≥ 2");
+        }
+        // roles cycle over the replicas — the ASSIGNED set must contain a
+        // prefill-capable replica or every request would be unroutable
+        // (Cluster::new would panic on the same condition; fail the parse
+        // with a recoverable error instead)
+        let assigned_prefill =
+            (0..a.replicas).any(|i| a.roles[i % a.roles.len()].accepts_prefill());
+        if !assigned_prefill {
+            bail!(
+                "--roles {:?} with --replicas {} assigns no prefill-capable replica \
+                 (add a p or m entry)",
+                a.roles.iter().map(|r| r.label()).collect::<Vec<_>>().join(","),
+                a.replicas
+            );
+        }
     }
     if a.spec_k > 0 && !a.engine {
         bail!("--spec-k is a continuous-batching engine feature; drop --group-scheduler");
@@ -210,6 +254,8 @@ fn demo_engine_config() -> EngineConfig {
         workers: 0,
         spec_k: 0,
         draft_bits: 0,
+        // Cluster::new flips this on for prefill-role replicas
+        prefill_hold: false,
     }
 }
 
@@ -299,16 +345,20 @@ pub fn run_engine_serving_demo(a: &ServeArgs) -> Result<String> {
 /// **alternating precisions (W4A4 / W2A2), all slicing one shared 4-bit
 /// superset weight store** — the any-precision memory model: the weight
 /// is packed once for the whole cluster and each replica serves its own
-/// plane prefix.  Merged metrics plus a per-replica load/KV breakdown;
-/// swapped sequences requantize across the precision boundary when no
-/// same-precision peer has headroom.
+/// plane prefix.  `--roles` cycles prefill/decode/mixed roles across the
+/// replicas for a disaggregated deployment.  Merged metrics plus a
+/// per-replica load/KV breakdown; swapped sequences requantize across
+/// the precision boundary when no same-precision peer has headroom.
 pub fn run_cluster_serving_demo(a: &ServeArgs) -> Result<String> {
     let store = super::backend::superset_store(DEMO_VOCAB, 128, 4, a.seed ^ 0xAB);
-    let mut cluster = Cluster::new(a.route_policy);
+    let mut spec = ClusterSpec::new(a.route_policy);
+    if a.workers > 0 {
+        spec = spec.worker_budget(a.workers);
+    }
     for i in 0..a.replicas {
         let p = if i % 2 == 0 { PrecisionConfig::W4A4 } else { PrecisionConfig::W2A2 };
-        let backend =
-            SimBackend::with_shared_store(256, vec![1, 2, 4, 8], store.clone(), p.nw, p.nx);
+        let role =
+            if a.roles.is_empty() { ReplicaRole::Mixed } else { a.roles[i % a.roles.len()] };
         // per-replica spec config: every replica drafts from the plane
         // prefix of ITS OWN serving width, so the draft is clamped below
         // each precision independently (W4 replicas draft up to 3 planes,
@@ -318,15 +368,21 @@ pub fn run_cluster_serving_demo(a: &ServeArgs) -> Result<String> {
             draft_bits: a.draft_bits.min(p.nw.saturating_sub(1)),
             ..demo_engine_config()
         };
-        cluster.add_replica(format!("r{i}"), p, backend, cfg);
+        spec = spec.replica(ReplicaSpec::new(format!("r{i}"), p).role(role).engine(cfg));
     }
-    if a.workers > 0 {
-        cluster.set_worker_budget(a.workers);
-    }
+    let mut cluster = Cluster::new(spec, |r| {
+        SimBackend::with_shared_store(
+            256,
+            vec![1, 2, 4, 8],
+            store.clone(),
+            r.precision.nw,
+            r.precision.nx,
+        )
+    });
     let (mut report, _) = drive(&mut cluster, a, DEMO_VOCAB)?;
     report.push_str(&format!(
         "cluster: {} replicas, policy {:?}, routed {}, completed {}, unroutable {}, \
-         migrated {} (requantized {})\n",
+         migrated {} (requantized {}, prefill handoffs {})\n",
         cluster.replicas(),
         cluster.router().policy(),
         cluster.router().routed,
@@ -334,6 +390,7 @@ pub fn run_cluster_serving_demo(a: &ServeArgs) -> Result<String> {
         cluster.unroutable(),
         cluster.migrations(),
         cluster.requants(),
+        cluster.prefill_handoffs(),
     ));
     // one superset pack serves every precision — report its bytes ONCE
     // for the whole cluster, against what per-precision stores would cost
@@ -355,10 +412,11 @@ pub fn run_cluster_serving_demo(a: &ServeArgs) -> Result<String> {
         let c = eng.counters();
         let sh = eng.pool().sharing();
         report.push_str(&format!(
-            "  {} ({}): completed {}, steps {}, preempt {}, kv free {}/{}, \
+            "  {} ({}, {}): completed {}, steps {}, preempt {}, kv free {}/{}, \
              fresh {}, shared {}, cow {}\n",
             rep.name,
             rep.precision.label(),
+            rep.role.label(),
             c.completed,
             c.steps,
             c.preemptions,
@@ -458,6 +516,31 @@ mod tests {
         let d = parse_args(&s(&[])).unwrap();
         assert_eq!(d.spec_k, 0, "speculation is opt-in");
         assert_eq!(d.draft_bits, 1, "default draft width is the MSB plane");
+        assert!(d.roles.is_empty(), "default topology is all-mixed");
+        let a = parse_args(&s(&["--replicas", "3", "--roles", "p,d,m"])).unwrap();
+        assert_eq!(
+            a.roles,
+            vec![ReplicaRole::Prefill, ReplicaRole::Decode, ReplicaRole::Mixed]
+        );
+        let a = parse_args(&s(&["--replicas", "2", "--roles", "prefill,decode"])).unwrap();
+        assert_eq!(a.roles, vec![ReplicaRole::Prefill, ReplicaRole::Decode]);
+    }
+
+    #[test]
+    fn parse_args_roles_validation() {
+        let e = parse_args(&s(&["--replicas", "2", "--roles", "x"])).unwrap_err().to_string();
+        assert!(e.contains("p[refill]") && e.contains('x'), "{e}");
+        let e = parse_args(&s(&["--roles", "p,d"])).unwrap_err().to_string();
+        assert!(e.contains("--replicas ≥ 2"), "roles need a cluster: {e}");
+        let e = parse_args(&s(&["--replicas", "3", "--roles", "d"])).unwrap_err().to_string();
+        assert!(e.contains("no prefill-capable"), "{e}");
+        // a p entry beyond the replica count doesn't help: 2 replicas
+        // cycling d,d,p never assign the p
+        let e =
+            parse_args(&s(&["--replicas", "2", "--roles", "d,d,p"])).unwrap_err().to_string();
+        assert!(e.contains("no prefill-capable"), "{e}");
+        // …but within reach it does
+        assert!(parse_args(&s(&["--replicas", "3", "--roles", "d,d,p"])).is_ok());
     }
 
     #[test]

@@ -1,15 +1,17 @@
 //! Multi-replica serving cluster: N independent continuous-batching
 //! [`Engine`] replicas — each with its own [`KvPool`](super::kv::KvPool),
-//! batcher, and pack-once backend, possibly at different W/A precisions —
-//! driven behind the [`Router`].
+//! batcher, and pack-once backend, possibly at different W/A precisions
+//! and possibly specialized by [`ReplicaRole`] — driven behind the
+//! [`Router`].
 //!
 //! This is the deployment shape the related work motivates: FP6-LLM
 //! frames low-bit kernels as one half of an end-to-end serving co-design,
 //! and Any-Precision LLM serves several precisions from one deployment —
 //! which is exactly what a router over per-precision replicas provides.
 //! A request optionally pins a [`PrecisionConfig`]
-//! ([`Request::precision`]); the router narrows to matching replicas and
-//! picks by policy (round-robin, or least outstanding token budget).
+//! ([`Request::precision`]); the router narrows to matching
+//! prefill-capable replicas and picks by policy (round-robin, or least
+//! outstanding token budget).
 //!
 //! The cluster is itself a [`Stepper`]: `submit` routes, `step` advances
 //! every busy replica and merges their streamed [`TokenEvent`]s (tagging
@@ -19,40 +21,97 @@
 //! [`replay_trace`](super::server::replay_trace), the benches — serves a
 //! cluster unchanged.
 //!
+//! ## Construction: [`ClusterSpec`] / [`ReplicaSpec`]
+//!
+//! A topology is declared up front and consumed whole by
+//! [`Cluster::new`] — role, precision, engine shape, speculation, and
+//! worker budget all live on the spec, replacing the setter sprawl
+//! (`add_replica` + `set_migration` + `set_worker_budget` + per-engine
+//! pokes) that grew across PRs 3–8:
+//!
+//! ```
+//! use apllm::coordinator::{Cluster, ClusterSpec, ReplicaRole, ReplicaSpec, RoutePolicy, SimBackend};
+//! use apllm::model::PrecisionConfig;
+//!
+//! let spec = ClusterSpec::new(RoutePolicy::LeastLoaded)
+//!     .replica(ReplicaSpec::new("p0", PrecisionConfig::W2A2).role(ReplicaRole::Prefill))
+//!     .replica(
+//!         ReplicaSpec::new("d0", PrecisionConfig::W2A2)
+//!             .role(ReplicaRole::Decode)
+//!             .kv_blocks(128),
+//!     );
+//! let cluster = Cluster::new(spec, |_spec| SimBackend::new(64, 64, vec![1, 2, 4, 8]));
+//! assert_eq!(cluster.replicas(), 2);
+//! ```
+//!
+//! The backend factory runs once per replica (in declaration order) so
+//! mixed-precision clusters can slice each replica's width out of one
+//! shared superset store.
+//!
+//! ## Disaggregated prefill/decode serving
+//!
+//! With [`ReplicaRole::Prefill`] / [`ReplicaRole::Decode`] replicas the
+//! cluster splits the two phases of a request's life onto specialized
+//! replicas, so long prefills stop inflating the inter-token latency of
+//! sequences decoding elsewhere:
+//!
+//! 1. the router admits every request to a **prefill-capable** replica
+//!    (decode-only replicas never admit — they are fed by migration);
+//! 2. a prefill-role engine runs under [`EngineConfig::prefill_hold`]:
+//!    a freshly prefilled sequence streams its first token, then sits
+//!    decode out for one step, surfacing via
+//!    [`Engine::prefilled_ready`](super::engine::Engine::prefilled_ready);
+//! 3. between steps the cluster hands each held sequence to the
+//!    decode-capable peer with the least outstanding decode load that
+//!    [`Engine::import_fit`] admits — streaming
+//!    [`TokenEvent::PrefillDone`] immediately before the
+//!    [`TokenEvent::Migrated`] (no `Preempted`: the move is voluntary),
+//!    with the importer's `Resumed` picking the stream back up;
+//! 4. a held sequence **no** peer can take simply decodes locally next
+//!    step — the hold expires, so a missing or saturated decode tier
+//!    degrades to mixed behavior instead of stranding streams.
+//!
+//! The handoff rides the same export/import machinery as rebalancing, so
+//! streams stay byte-identical to a mixed-role cluster; `Mixed` replicas
+//! (the default) never hold and preserve the symmetric behavior exactly.
+//!
 //! ## Preemptive rebalancing
 //!
 //! Admission no longer pins a sequence to its replica for life: after
 //! every step the cluster **migrates the oldest swapped sequences away
 //! from overloaded replicas** ([`Engine::is_overloaded`] — a swapped
-//! sequence the replica cannot resume itself) onto same-precision peers
-//! with KV headroom ([`Engine::can_import`], ties broken toward the most
-//! free blocks, then the lowest index — deterministic).  The sequence
-//! travels as an [`ExportedSeq`](super::engine::ExportedSeq) (request +
-//! host KV + generated tokens), re-admits through the target's prefix
-//! cache, and its stream continues byte-identically — the client just
-//! sees `Preempted`, [`TokenEvent::Migrated`], `Resumed`.  The router's
-//! load accounting transfers conservatively ([`Router::migrate`]), so
-//! conservation holds mid-flight.  Same-precision replicas are assumed
-//! to be identical model replicas (the standard scale-out deployment);
-//! that is what makes the migrated stream's logits — and therefore its
-//! tokens — identical.
+//! sequence the replica cannot resume itself) onto **decode-capable**
+//! same-precision peers that pass [`Engine::import_fit`] (a decoding
+//! sequence is never parked on a prefill-only replica; ties broken
+//! toward the most free blocks, then the lowest index — deterministic).
+//! The sequence travels as an [`ExportedSeq`](super::engine::ExportedSeq)
+//! (request + host KV + generated tokens), re-admits through the
+//! target's prefix cache, and its stream continues byte-identically —
+//! the client just sees `Preempted`, [`TokenEvent::Migrated`],
+//! `Resumed`.  The router's load accounting transfers conservatively
+//! ([`Router::migrate`]), so conservation holds mid-flight.
+//! Same-precision replicas are assumed to be identical model replicas
+//! (the standard scale-out deployment); that is what makes the migrated
+//! stream's logits — and therefore its tokens — identical.
 //!
 //! ## Cross-precision migration (re-prefill)
 //!
 //! With the **one-superset-store** memory model (every replica slices
 //! its precision out of one shared `PackedWeightStore`), precision is a
 //! runtime choice — so when no same-precision peer has headroom, the
-//! rebalancer falls back to ANY peer with headroom: the export drops the
-//! carried `SeqKv` ([`ExportedSeq::strip_kv_for_requant`]) and the
-//! importing engine **re-prefills** the prompt + generated tokens at its
-//! own precision.  Streamed bytes never change (they are teacher-forced
-//! as context); only subsequent tokens are generated at the new
-//! precision, and the client sees [`TokenEvent::Requantized`] between
-//! `Migrated` and `Resumed`.  Requests that pinned a precision
+//! rebalancer falls back to ANY decode-capable peer admitting the
+//! [`SwappedPeek::as_requant`] view: the export drops the carried
+//! `SeqKv` ([`ExportedSeq::strip_kv_for_requant`]) and the importing
+//! engine **re-prefills** the prompt + generated tokens at its own
+//! precision.  Streamed bytes never change (they are teacher-forced as
+//! context); only subsequent tokens are generated at the new precision,
+//! and the client sees [`TokenEvent::Requantized`] between `Migrated`
+//! and `Resumed`.  Requests that pinned a precision
 //! ([`Request::with_precision`]) never cross — the pin is a contract.
 //! The trade-off is compute for memory/latency: a re-prefill costs one
-//! prefill over the carried tokens, against the alternative of the
-//! sequence waiting out an overloaded replica.
+//! prefill over the carried tokens — and that cost is **charged to the
+//! importer's load accounting** ([`Router::charge_reprefill`]), so a
+//! requantized import is visible to placement instead of looking free.
 //!
 //! Per-replica prefix caches stay sound under requantization because a
 //! replica serves exactly one precision: every KV block a replica caches
@@ -62,27 +121,132 @@
 //! ## Speculation across replicas
 //!
 //! Speculative decoding is configured **per replica**
-//! ([`EngineConfig::spec_k`] / [`EngineConfig::draft_bits`]): each
-//! replica drafts from the most-significant plane prefix of its *own*
-//! serving width, so a mixed-precision cluster naturally drafts W2-of-W4
-//! on one replica and W1-of-W2 on another, all out of the one shared
-//! superset store.  Draft state never travels: speculation is committed
-//! or rolled back within the step that opened it, so an exported
-//! sequence carries only accepted tokens and KV — on a cross-precision
-//! requant migration the draft context is dropped along with the carried
-//! KV, and the target replica simply resumes drafting (or not) at its
-//! own `spec_k`/`draft_bits` after the re-prefill.  Streams stay
+//! ([`ReplicaSpec::speculation`] → [`EngineConfig::spec_k`] /
+//! [`EngineConfig::draft_bits`]): each replica drafts from the
+//! most-significant plane prefix of its *own* serving width, so a
+//! mixed-precision cluster naturally drafts W2-of-W4 on one replica and
+//! W1-of-W2 on another, all out of the one shared superset store.  Draft
+//! state never travels: speculation is committed or rolled back within
+//! the step that opened it, so an exported sequence carries only
+//! accepted tokens and KV — on a cross-precision requant migration the
+//! draft context is dropped along with the carried KV, and the target
+//! replica simply resumes drafting (or not) at its own
+//! `spec_k`/`draft_bits` after the re-prefill.  Streams stay
 //! byte-identical throughout, whatever combination of speculation
 //! settings the replicas run.
 
 use super::backend::Backend;
-use super::engine::{Engine, EngineConfig};
+use super::engine::{Engine, EngineConfig, SwappedPeek};
 use super::metrics::Metrics;
 use super::request::{Request, Response, TokenEvent};
-use super::router::{RoutePolicy, Router};
+use super::router::{ReplicaRole, RoutePolicy, Router};
 use super::server::Stepper;
 use crate::anyhow::Result;
 use crate::model::PrecisionConfig;
+
+/// Declarative description of one replica, consumed by [`Cluster::new`].
+/// Defaults: [`ReplicaRole::Mixed`], [`EngineConfig::default`].
+#[derive(Debug, Clone)]
+pub struct ReplicaSpec {
+    pub name: String,
+    pub precision: PrecisionConfig,
+    pub role: ReplicaRole,
+    pub engine: EngineConfig,
+}
+
+impl ReplicaSpec {
+    pub fn new(name: impl Into<String>, precision: PrecisionConfig) -> Self {
+        Self {
+            name: name.into(),
+            precision,
+            role: ReplicaRole::Mixed,
+            engine: EngineConfig::default(),
+        }
+    }
+
+    /// What work this replica accepts ([`ReplicaRole::Mixed`] default).
+    pub fn role(mut self, role: ReplicaRole) -> Self {
+        self.role = role;
+        self
+    }
+
+    /// Replace the whole engine config (the shorthands below tweak the
+    /// common fields without spelling out an [`EngineConfig`] literal).
+    pub fn engine(mut self, cfg: EngineConfig) -> Self {
+        self.engine = cfg;
+        self
+    }
+
+    /// KV pool capacity in blocks.
+    pub fn kv_blocks(mut self, blocks: usize) -> Self {
+        self.engine.kv_blocks = blocks;
+        self
+    }
+
+    /// Tokens per KV block.
+    pub fn block_tokens(mut self, tokens: usize) -> Self {
+        self.engine.block_tokens = tokens;
+        self
+    }
+
+    /// Per-replica GEMM worker budget (overridden by
+    /// [`ClusterSpec::worker_budget`] when one is set).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.engine.workers = workers;
+        self
+    }
+
+    /// Self-speculative decoding: draft `spec_k` tokens per sequence per
+    /// step at the `draft_bits`-wide plane prefix (`spec_k = 0` off).
+    pub fn speculation(mut self, spec_k: usize, draft_bits: u32) -> Self {
+        self.engine.spec_k = spec_k;
+        self.engine.draft_bits = draft_bits;
+        self
+    }
+}
+
+/// Declarative description of a whole cluster topology — the one
+/// construction API ([`Cluster::new`] consumes it).
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub policy: RoutePolicy,
+    /// Preemptive rebalancing of swapped sequences (on by default; off
+    /// restores the PR 3 behavior — every request stays pinned to its
+    /// admission replica — and also disables prefill→decode handoffs).
+    pub migration: bool,
+    /// Host-wide GEMM worker budget, split evenly across replicas (each
+    /// gets at least 1); `None` keeps each replica's own
+    /// [`ReplicaSpec::workers`] setting.
+    pub worker_budget: Option<usize>,
+    pub replicas: Vec<ReplicaSpec>,
+}
+
+impl ClusterSpec {
+    pub fn new(policy: RoutePolicy) -> Self {
+        Self { policy, migration: true, worker_budget: None, replicas: Vec::new() }
+    }
+
+    /// Enable/disable cross-replica migration (see the field docs).
+    pub fn migration(mut self, enabled: bool) -> Self {
+        self.migration = enabled;
+        self
+    }
+
+    /// Split a host-wide GEMM worker budget evenly across replicas (each
+    /// gets at least 1).  Replicas stepping sequentially share pools by
+    /// size ([`crate::util::pool_of`]), so N replicas × T workers resolve
+    /// to one T-sized pool rather than N·T threads.
+    pub fn worker_budget(mut self, total_workers: usize) -> Self {
+        self.worker_budget = Some(total_workers);
+        self
+    }
+
+    /// Append a replica (declaration order is replica-index order).
+    pub fn replica(mut self, spec: ReplicaSpec) -> Self {
+        self.replicas.push(spec);
+        self
+    }
+}
 
 /// N engine replicas behind one router.
 pub struct Cluster<B: Backend> {
@@ -95,31 +259,53 @@ pub struct Cluster<B: Backend> {
     unroutable: u64,
     /// Terminal events for unroutable requests, drained next step.
     pending_events: Vec<TokenEvent>,
-    /// Preemptive rebalancing of swapped sequences (on by default;
-    /// `set_migration(false)` restores the PR 3 pinned behavior).
+    /// Preemptive rebalancing + prefill→decode handoffs (from the spec).
     migration: bool,
 }
 
 impl<B: Backend> Cluster<B> {
-    pub fn new(policy: RoutePolicy) -> Self {
+    /// Build the cluster a [`ClusterSpec`] describes.  `make_backend`
+    /// runs once per replica in declaration order (so mixed-precision
+    /// topologies can slice each replica's width out of one shared
+    /// superset store).  Prefill-role replicas get
+    /// [`EngineConfig::prefill_hold`] switched on — the engine-side half
+    /// of the disaggregated handoff; a [`ClusterSpec::worker_budget`]
+    /// overrides per-replica worker settings with an even split.
+    ///
+    /// Panics if the spec has no replicas or no prefill-capable replica
+    /// (nothing could ever admit a request) — topology bugs surface at
+    /// construction, not as every request mysteriously rejecting.
+    pub fn new(spec: ClusterSpec, mut make_backend: impl FnMut(&ReplicaSpec) -> B) -> Self {
+        assert!(!spec.replicas.is_empty(), "a cluster needs at least one replica");
+        assert!(
+            spec.replicas.iter().any(|r| r.role.accepts_prefill()),
+            "no prefill-capable replica: every request would be unroutable"
+        );
+        let per_worker = spec.worker_budget.map(|t| (t / spec.replicas.len()).max(1));
+        let mut router = Router::new(spec.policy);
+        let mut engines = Vec::with_capacity(spec.replicas.len());
+        for r in &spec.replicas {
+            router.add_replica(r.name.clone(), r.precision, r.role);
+            let mut cfg = r.engine.clone();
+            if let Some(w) = per_worker {
+                cfg.workers = w;
+            }
+            cfg.prefill_hold = r.role == ReplicaRole::Prefill;
+            let backend = make_backend(r);
+            engines.push(Engine::new(backend, cfg));
+        }
         Self {
-            router: Router::new(policy),
-            engines: Vec::new(),
+            router,
+            engines,
             clock: Metrics::default(),
             unroutable: 0,
             pending_events: Vec::new(),
-            migration: true,
+            migration: spec.migration,
         }
     }
 
-    /// Enable/disable cross-replica migration of swapped sequences
-    /// (enabled by default).  Off restores the PR 3 behavior: a request
-    /// stays pinned to its admission replica forever.
-    pub fn set_migration(&mut self, enabled: bool) {
-        self.migration = enabled;
-    }
-
-    /// Swapped sequences moved between replicas so far.
+    /// Sequences moved between replicas so far (rebalanced swapped
+    /// sequences plus prefill→decode handoffs).
     pub fn migrations(&self) -> u64 {
         self.clock.migrations
     }
@@ -131,34 +317,14 @@ impl<B: Backend> Cluster<B> {
         self.clock.requants
     }
 
-    /// Register a replica: a backend wrapped in its own engine, serving
-    /// `precision`.  Returns the replica index.
-    pub fn add_replica(
-        &mut self,
-        name: impl Into<String>,
-        precision: PrecisionConfig,
-        backend: B,
-        cfg: EngineConfig,
-    ) -> usize {
-        let idx = self.router.add_replica(name, precision);
-        self.engines.push(Engine::new(backend, cfg));
-        debug_assert_eq!(self.engines.len(), idx + 1);
-        idx
+    /// Migrations that were disaggregated prefill→decode handoffs.
+    /// Subset of [`Cluster::migrations`].
+    pub fn prefill_handoffs(&self) -> u64 {
+        self.clock.prefill_handoffs
     }
 
     pub fn replicas(&self) -> usize {
         self.engines.len()
-    }
-
-    /// Split a host-wide GEMM worker budget evenly across replicas (each
-    /// gets at least 1).  Replicas stepping sequentially share pools by
-    /// size ([`crate::util::pool_of`]), so N replicas × T workers resolve
-    /// to one T-sized pool rather than N·T threads.
-    pub fn set_worker_budget(&mut self, total_workers: usize) {
-        let per = (total_workers / self.engines.len().max(1)).max(1);
-        for e in &mut self.engines {
-            e.set_workers(per);
-        }
     }
 
     pub fn router(&self) -> &Router {
@@ -177,6 +343,20 @@ impl<B: Backend> Cluster<B> {
     /// precision).
     pub fn unroutable(&self) -> u64 {
         self.unroutable
+    }
+
+    /// Merged metrics of every replica serving `role` — the per-role
+    /// TTFT/ITL view the disaggregated bench reports (a prefill replica
+    /// owns the TTFT samples of the requests it admitted; a decode
+    /// replica owns the ITL gaps of the tokens it streamed).
+    pub fn metrics_for_role(&self, role: ReplicaRole) -> Metrics {
+        let mut m = Metrics::default();
+        for (i, e) in self.engines.iter().enumerate() {
+            if self.router.replicas()[i].role == role {
+                m.merge(&e.metrics);
+            }
+        }
+        m
     }
 
     /// Whole-cluster consistency: router load accounting conserves,
@@ -215,37 +395,55 @@ impl<B: Backend> Cluster<B> {
                 self.clock.requants
             ));
         }
+        // every handoff is a migration too
+        if self.clock.prefill_handoffs > self.clock.migrations {
+            return Err(format!(
+                "{} prefill handoffs exceed {} migrations",
+                self.clock.prefill_handoffs, self.clock.migrations
+            ));
+        }
+        // role topology: a prefill-only replica must never be decoding
+        // an imported sequence (its own fresh admissions may decode
+        // locally as the expired-hold fallback — that is allowed)
+        for (i, e) in self.engines.iter().enumerate() {
+            if !self.router.replicas()[i].role.accepts_decode()
+                && e.counters().imported > 0
+            {
+                return Err(format!(
+                    "prefill-only replica {i} imported {} sequences",
+                    e.counters().imported
+                ));
+            }
+        }
         Ok(())
     }
 
-    /// Best import target among `src`'s peers for a swapped sequence:
-    /// when `same_precision`, only peers serving `src`'s precision and
-    /// passing [`Engine::can_import`] qualify (the KV travels verbatim);
-    /// otherwise only peers at a *different* precision passing
-    /// [`Engine::can_import_requant`] (the KV is dropped and re-prefilled
-    /// there).  The acceptable peer with the most free KV blocks wins,
-    /// lowest index on ties — deterministic.
+    /// Best rebalance target among `src`'s **decode-capable** peers for a
+    /// swapped (mid-decode) sequence: when `same_precision`, only peers
+    /// serving `src`'s precision qualify (the KV travels verbatim unless
+    /// an earlier hop already stripped it); otherwise only peers at a
+    /// *different* precision, queried via the [`SwappedPeek::as_requant`]
+    /// view (the KV is dropped and re-prefilled there).  Acceptance is
+    /// [`Engine::import_fit`]; the admitting peer with the most free KV
+    /// blocks wins, lowest index on ties — deterministic.
     fn best_target(
         &self,
         src: usize,
-        peek: &super::engine::SwappedPeek<'_>,
+        peek: &SwappedPeek<'_>,
         same_precision: bool,
     ) -> Option<usize> {
         let precision = self.router.replicas()[src].precision;
         let mut best: Option<(usize, usize)> = None; // (free_blocks, idx)
         for (i, e) in self.engines.iter().enumerate() {
-            if i == src || (self.router.replicas()[i].precision == precision) != same_precision {
+            let rep = &self.router.replicas()[i];
+            if i == src
+                || !rep.role.accepts_decode()
+                || (rep.precision == precision) != same_precision
+            {
                 continue;
             }
-            // a same-precision move carries the KV verbatim — unless an
-            // earlier cross-precision hop already stripped it, in which
-            // case the final host re-prefills whatever its precision is
-            let ok = if same_precision && !peek.reprefill_pending {
-                e.can_import(peek.content, peek.budget)
-            } else {
-                e.can_import_requant(peek.content, peek.budget)
-            };
-            if ok {
+            let query = if same_precision { *peek } else { peek.as_requant() };
+            if e.import_fit(&query).admissible() {
                 let free = e.pool().free_blocks();
                 let better = match best {
                     None => true,
@@ -259,13 +457,110 @@ impl<B: Backend> Cluster<B> {
         best.map(|(_, i)| i)
     }
 
+    /// Best prefill→decode handoff target: the decode-capable peer with
+    /// the **least outstanding decode load** (lowest index on ties) that
+    /// [`Engine::import_fit`] admits — handoffs steer by decode pressure,
+    /// which is exactly the component the router's split accounting
+    /// isolates.  Same-precision peers adopt the prefilled KV verbatim;
+    /// cross-precision ones are queried via [`SwappedPeek::as_requant`].
+    fn pick_decode_target(
+        &self,
+        src: usize,
+        peek: &SwappedPeek<'_>,
+        same_precision: bool,
+    ) -> Option<usize> {
+        let precision = self.router.replicas()[src].precision;
+        let mut best: Option<(u64, usize)> = None; // (outstanding_decode, idx)
+        for (i, e) in self.engines.iter().enumerate() {
+            let rep = &self.router.replicas()[i];
+            if i == src
+                || !rep.role.accepts_decode()
+                || (rep.precision == precision) != same_precision
+            {
+                continue;
+            }
+            let query = if same_precision { *peek } else { peek.as_requant() };
+            if e.import_fit(&query).admissible() {
+                let load = rep.outstanding_decode();
+                let better = match best {
+                    None => true,
+                    Some((bl, bi)) => load < bl || (load == bl && i < bi),
+                };
+                if better {
+                    best = Some((load, i));
+                }
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
+    /// Hand freshly prefilled sequences off prefill-role replicas to
+    /// decode-capable peers (the disaggregated migration path).  Runs in
+    /// the between-steps window [`EngineConfig::prefill_hold`] opens:
+    /// each held sequence streams [`TokenEvent::PrefillDone`] immediately
+    /// before its [`TokenEvent::Migrated`] (no `Preempted` — the move is
+    /// voluntary), and the importer's next step streams the `Resumed`.
+    /// Sequences no peer admits are left alone — their hold expires and
+    /// they decode locally, so saturation degrades to mixed behavior.
+    fn handoff_prefilled(&mut self, events: &mut Vec<TokenEvent>) {
+        if !self.migration || self.engines.len() < 2 {
+            return;
+        }
+        for src in 0..self.engines.len() {
+            if self.router.replicas()[src].role != ReplicaRole::Prefill {
+                continue;
+            }
+            for id in self.engines[src].prefilled_ready() {
+                let Some(peek) = self.engines[src].peek_prefilled(id) else { continue };
+                let content_tokens = peek.content.len() as u64;
+                // same-precision first — adopting KV beats recomputing it
+                let target = match self.pick_decode_target(src, &peek, true) {
+                    Some(dst) => Some((dst, false)),
+                    // a precision pin is a contract: pinned requests
+                    // never requantize — they decode locally instead
+                    None if peek.pinned.is_none() => {
+                        self.pick_decode_target(src, &peek, false).map(|dst| (dst, true))
+                    }
+                    None => None,
+                };
+                let Some((dst, cross)) = target else { continue };
+                let mut seq =
+                    self.engines[src].export_running(id).expect("held sequence peeked above");
+                if cross {
+                    seq.strip_kv_for_requant();
+                }
+                let importer_reprefills = seq.needs_reprefill();
+                self.engines[dst].import_swapped(seq);
+                let from = self.router.migrate(id, dst).expect("handed-off seq in flight");
+                debug_assert_eq!(from, src);
+                if importer_reprefills {
+                    // the importer teacher-forces the content again —
+                    // placement must see that work (ROADMAP item 1)
+                    self.router.charge_reprefill(id, content_tokens);
+                }
+                self.clock.migrations += 1;
+                self.clock.prefill_handoffs += 1;
+                events.push(TokenEvent::PrefillDone { id });
+                events.push(TokenEvent::Migrated { id, from: src, to: dst });
+                if cross {
+                    self.clock.requants += 1;
+                    events.push(TokenEvent::Requantized {
+                        id,
+                        from_bits: self.router.replicas()[src].precision,
+                        to_bits: self.router.replicas()[dst].precision,
+                    });
+                }
+            }
+        }
+    }
+
     /// Move the oldest swapped sequences off overloaded replicas —
-    /// preferably onto same-precision peers with headroom (KV travels
-    /// verbatim), otherwise, for unpinned requests, onto **any** peer
-    /// with headroom via the cross-precision re-prefill path.
-    /// Deterministic: sources in replica order, target = the acceptable
-    /// peer with the most free KV blocks (lowest index on ties).  Each
-    /// move streams [`TokenEvent::Migrated`] (plus
+    /// preferably onto same-precision decode-capable peers with headroom
+    /// (KV travels verbatim), otherwise, for unpinned requests, onto
+    /// **any** decode-capable peer with headroom via the cross-precision
+    /// re-prefill path.  Deterministic: sources in replica order, target
+    /// = the admitting peer with the most free KV blocks (lowest index
+    /// on ties).  Each move streams [`TokenEvent::Migrated`] (plus
     /// [`TokenEvent::Requantized`] when crossing the boundary); the
     /// target's own next step streams the `Resumed`.
     fn rebalance(&mut self, events: &mut Vec<TokenEvent>) {
@@ -276,21 +571,23 @@ impl<B: Backend> Cluster<B> {
             while self.engines[src].is_overloaded() {
                 let Some(peek) = self.engines[src].peek_swapped() else { break };
                 // cheap pre-filter (the peek borrows, it doesn't clone):
-                // some peer must have no swapped backlog of its own AND
-                // be reachable — same precision, or any precision when
-                // the request is unpinned.  A saturated cluster, or a
-                // pinned head with only foreign-precision peers, breaks
-                // here without scanning targets every step.
+                // some decode-capable peer must not be overloaded itself
+                // AND be reachable — same precision, or any precision
+                // when the request is unpinned.  A saturated cluster, or
+                // a pinned head with only foreign-precision peers,
+                // breaks here without scanning targets every step.
                 let precision = self.router.replicas()[src].precision;
                 let any_peer = self.engines.iter().enumerate().any(|(i, e)| {
                     i != src
-                        && e.swapped() == 0
+                        && self.router.replicas()[i].role.accepts_decode()
+                        && !e.is_overloaded()
                         && (self.router.replicas()[i].precision == precision
                             || peek.pinned.is_none())
                 });
                 if !any_peer {
                     break;
                 }
+                let content_tokens = peek.content.len() as u64;
                 // same-precision first — carrying KV beats recomputing it
                 let target = match self.best_target(src, &peek, true) {
                     Some(dst) => Some((dst, false)),
@@ -307,9 +604,16 @@ impl<B: Backend> Cluster<B> {
                 if cross {
                     seq.strip_kv_for_requant();
                 }
+                let importer_reprefills = seq.needs_reprefill();
                 self.engines[dst].import_swapped(seq);
                 let from = self.router.migrate(id, dst).expect("migrated seq must be in flight");
                 debug_assert_eq!(from, src);
+                if importer_reprefills {
+                    // a requantized (or still-stripped) import costs the
+                    // target a full re-prefill over the carried tokens —
+                    // charge it so placement sees the work (ROADMAP 1)
+                    self.router.charge_reprefill(id, content_tokens);
+                }
                 self.clock.migrations += 1;
                 events.push(TokenEvent::Migrated { id, from: src, to: dst });
                 if cross {
@@ -335,9 +639,9 @@ impl<B: Backend> Cluster<B> {
 }
 
 impl<B: Backend> Stepper for Cluster<B> {
-    /// Route to a replica by policy (respecting the request's precision
-    /// pin).  An unroutable request resolves with a terminal empty-stream
-    /// `Finished` on the next step.
+    /// Route to a prefill-capable replica by policy (respecting the
+    /// request's precision pin).  An unroutable request resolves with a
+    /// terminal empty-stream `Finished` on the next step.
     fn submit(&mut self, r: Request) {
         match self.router.route(&r, r.precision) {
             Some(idx) => self.engines[idx].submit(r),
@@ -351,9 +655,10 @@ impl<B: Backend> Stepper for Cluster<B> {
         }
     }
 
-    /// Advance every busy replica one iteration, rebalance swapped
-    /// sequences off overloaded replicas, then merge the event streams
-    /// and drain completions out of the router's load accounting.
+    /// Advance every busy replica one iteration, hand freshly prefilled
+    /// sequences from prefill-role replicas to decode peers, rebalance
+    /// swapped sequences off overloaded replicas, then merge the event
+    /// streams and drain completions out of the router's load accounting.
     fn step(&mut self) -> Result<Vec<TokenEvent>> {
         let mut events = std::mem::take(&mut self.pending_events);
         for e in &mut self.engines {
@@ -361,6 +666,7 @@ impl<B: Backend> Stepper for Cluster<B> {
                 events.extend(e.step()?);
             }
         }
+        self.handoff_prefilled(&mut events);
         self.rebalance(&mut events);
         for ev in &events {
             if let TokenEvent::Finished { id, .. } = ev {
@@ -404,7 +710,7 @@ impl<B: Backend> Stepper for Cluster<B> {
 mod tests {
     use super::*;
     use crate::coordinator::backend::SimBackend;
-    use crate::coordinator::request::{responses_of, GenParams};
+    use crate::coordinator::request::{responses_of, GenParams, RequestId};
 
     fn sim() -> SimBackend {
         SimBackend::new(64, 64, vec![1, 2, 4, 8])
@@ -418,38 +724,47 @@ mod tests {
         )
     }
 
+    fn small_engine(kv_blocks: usize) -> EngineConfig {
+        EngineConfig { kv_blocks, block_tokens: 4, ..EngineConfig::default() }
+    }
+
     fn cluster3() -> Cluster<SimBackend> {
-        let mut c = Cluster::new(RoutePolicy::LeastLoaded);
+        let mut spec = ClusterSpec::new(RoutePolicy::LeastLoaded);
         for i in 0..3 {
-            c.add_replica(
-                format!("r{i}"),
-                PrecisionConfig::W2A2,
-                sim(),
-                EngineConfig { kv_blocks: 16, block_tokens: 4, ..EngineConfig::default() },
+            spec = spec.replica(
+                ReplicaSpec::new(format!("r{i}"), PrecisionConfig::W2A2)
+                    .engine(small_engine(16)),
             );
         }
-        c
+        Cluster::new(spec, |_| sim())
     }
 
     #[test]
     fn worker_budget_splits_evenly_across_replicas() {
-        let mut c = Cluster::new(RoutePolicy::RoundRobin);
-        for i in 0..3u64 {
-            c.add_replica(
-                format!("r{i}"),
-                PrecisionConfig::W2A2,
-                SimBackend::with_ap_gemm(32, 64, vec![1, 2, 4], 64, 2, 2, i),
-                EngineConfig::default(),
-            );
-        }
-        c.set_worker_budget(8);
-        for e in c.engines() {
+        let build = |budget: usize| {
+            let mut spec = ClusterSpec::new(RoutePolicy::RoundRobin).worker_budget(budget);
+            for i in 0..3u64 {
+                spec = spec.replica(ReplicaSpec::new(format!("r{i}"), PrecisionConfig::W2A2));
+            }
+            Cluster::new(spec, |r| {
+                let seed = r.name.trim_start_matches('r').parse::<u64>().unwrap();
+                SimBackend::with_ap_gemm(32, 64, vec![1, 2, 4], 64, 2, 2, seed)
+            })
+        };
+        for e in build(8).engines() {
             assert_eq!(e.backend().gemm_workers(), Some(2), "8 workers / 3 replicas → 2 each");
         }
-        c.set_worker_budget(1);
-        for e in c.engines() {
+        for e in build(1).engines() {
             assert_eq!(e.backend().gemm_workers(), Some(1), "budget floor is 1 per replica");
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "no prefill-capable replica")]
+    fn all_decode_topology_is_rejected_at_construction() {
+        let spec = ClusterSpec::new(RoutePolicy::LeastLoaded)
+            .replica(ReplicaSpec::new("d0", PrecisionConfig::W2A2).role(ReplicaRole::Decode));
+        let _ = Cluster::new(spec, |_| sim());
     }
 
     #[test]
@@ -476,9 +791,10 @@ mod tests {
 
     #[test]
     fn precision_pinning_routes_or_rejects() {
-        let mut c = Cluster::new(RoutePolicy::RoundRobin);
-        c.add_replica("w2", PrecisionConfig::W2A2, sim(), EngineConfig::default());
-        c.add_replica("w1", PrecisionConfig::W1A1, sim(), EngineConfig::default());
+        let spec = ClusterSpec::new(RoutePolicy::RoundRobin)
+            .replica(ReplicaSpec::new("w2", PrecisionConfig::W2A2))
+            .replica(ReplicaSpec::new("w1", PrecisionConfig::W1A1));
+        let mut c = Cluster::new(spec, |_| sim());
         c.submit(req(0, 4, 3).with_precision(PrecisionConfig::W1A1));
         c.submit(req(1, 4, 3).with_precision(PrecisionConfig::W8A8)); // nobody serves this
         c.submit(req(2, 4, 3));
@@ -496,13 +812,9 @@ mod tests {
 
     #[test]
     fn engine_level_rejects_still_drain_the_router() {
-        let mut c = Cluster::new(RoutePolicy::RoundRobin);
-        c.add_replica(
-            "r0",
-            PrecisionConfig::W2A2,
-            sim(),
-            EngineConfig { kv_blocks: 2, block_tokens: 4, ..EngineConfig::default() },
-        );
+        let spec = ClusterSpec::new(RoutePolicy::RoundRobin)
+            .replica(ReplicaSpec::new("r0", PrecisionConfig::W2A2).engine(small_engine(2)));
+        let mut c = Cluster::new(spec, |_| sim());
         // routed fine, but the engine's capacity guard rejects it (budget
         // 40 tokens > 2×4 pool) — the Finished event must still release
         // the router's load accounting
@@ -515,14 +827,24 @@ mod tests {
         c.check_invariants().unwrap();
     }
 
+    /// The hot/cold two-replica fixture the migration tests share:
+    /// replica 0 has a 4-block pool (two 16-token-budget residents
+    /// overflow it), replica 1 is roomy.
+    fn hot_cold(migration: bool, cold_precision: PrecisionConfig) -> Cluster<SimBackend> {
+        let spec = ClusterSpec::new(RoutePolicy::LeastLoaded)
+            .migration(migration)
+            .replica(ReplicaSpec::new("hot", PrecisionConfig::W2A2).engine(small_engine(4)))
+            .replica(ReplicaSpec::new("cold", cold_precision).engine(small_engine(32)));
+        Cluster::new(spec, |_| sim())
+    }
+
     #[test]
     fn overloaded_replica_migrates_swapped_sequence_to_peer() {
         use crate::coordinator::backend::drive_unbatched;
 
-        // r0: 4-block pool (two 16-token-budget residents overflow it);
-        // r1: plenty of headroom.  LeastLoaded lands A and C on r0 (ties
-        // break by index) and B on r1; decoding preempts C, which r0 can
-        // never resume while A runs — the rebalancer must move it to r1.
+        // LeastLoaded lands A and C on r0 (ties break by index) and B on
+        // r1; decoding preempts C, which r0 can never resume while A
+        // runs — the rebalancer must move it to r1.
         let mk_prompt = |base: i32| (base..base + 8).collect::<Vec<i32>>();
         let reqs: Vec<Request> = [10, 50, 30]
             .iter()
@@ -542,20 +864,7 @@ mod tests {
             .collect();
 
         let run = |migration: bool| {
-            let mut c = Cluster::new(RoutePolicy::LeastLoaded);
-            c.add_replica(
-                "hot",
-                PrecisionConfig::W2A2,
-                sim(),
-                EngineConfig { kv_blocks: 4, block_tokens: 4, ..EngineConfig::default() },
-            );
-            c.add_replica(
-                "cold",
-                PrecisionConfig::W2A2,
-                sim(),
-                EngineConfig { kv_blocks: 32, block_tokens: 4, ..EngineConfig::default() },
-            );
-            c.set_migration(migration);
+            let mut c = hot_cold(migration, PrecisionConfig::W2A2);
             for r in &reqs {
                 c.submit(r.clone());
             }
@@ -597,6 +906,7 @@ mod tests {
         assert_eq!(c.engine(1).counters().completed, 2, "B and the migrated C on cold");
         assert_eq!(c.router().migrated, 1);
         assert_eq!(c.metrics().migrations, 1);
+        assert_eq!(c.prefill_handoffs(), 0, "mixed replicas never hand off");
 
         // without migration: same streams, but C waits out A on r0
         let (c, events) = run(false);
@@ -611,14 +921,7 @@ mod tests {
         // PINNED theirs: the pin is a contract, so the swapped sequence
         // must NOT migrate (not even via the re-prefill path) and still
         // completes locally
-        let mut c = Cluster::new(RoutePolicy::LeastLoaded);
-        c.add_replica(
-            "hot-w2",
-            PrecisionConfig::W2A2,
-            sim(),
-            EngineConfig { kv_blocks: 4, block_tokens: 4, ..EngineConfig::default() },
-        );
-        c.add_replica("cold-w1", PrecisionConfig::W1A1, sim(), EngineConfig::default());
+        let mut c = hot_cold(true, PrecisionConfig::W1A1);
         // pin both to the W2A2 replica so it overloads
         for i in 0..2u64 {
             let r = Request::new(
@@ -647,14 +950,7 @@ mod tests {
         // peer, the rebalancer takes the cross-precision path — the KV is
         // dropped, the W1A1 replica re-prefills, and the client sees
         // Preempted → Migrated → Requantized → Resumed in order
-        let mut c = Cluster::new(RoutePolicy::LeastLoaded);
-        c.add_replica(
-            "hot-w2",
-            PrecisionConfig::W2A2,
-            sim(),
-            EngineConfig { kv_blocks: 4, block_tokens: 4, ..EngineConfig::default() },
-        );
-        c.add_replica("cold-w1", PrecisionConfig::W1A1, sim(), EngineConfig::default());
+        let mut c = hot_cold(true, PrecisionConfig::W1A1);
         // LeastLoaded with ties broken by index: A→hot, B→cold, C→hot.
         // A + C (budget 16 tokens each) overflow hot's 4-block pool
         // mid-decode, so C is preempted with no same-precision peer —
@@ -707,15 +1003,7 @@ mod tests {
         c.check_invariants().unwrap();
         assert_eq!(c.router().inflight(), 0);
         // migration off restores strict pinning-to-admission-replica
-        let mut c2 = Cluster::new(RoutePolicy::LeastLoaded);
-        c2.add_replica(
-            "hot-w2",
-            PrecisionConfig::W2A2,
-            sim(),
-            EngineConfig { kv_blocks: 4, block_tokens: 4, ..EngineConfig::default() },
-        );
-        c2.add_replica("cold-w1", PrecisionConfig::W1A1, sim(), EngineConfig::default());
-        c2.set_migration(false);
+        let mut c2 = hot_cold(false, PrecisionConfig::W1A1);
         for (i, &base) in [10i32, 50, 30].iter().enumerate() {
             c2.submit(Request::new(
                 i as u64,
@@ -730,6 +1018,224 @@ mod tests {
     }
 
     #[test]
+    fn reprefill_cost_is_charged_to_the_importing_replica() {
+        // freeze the cluster right after the requantizing migration (step
+        // until the Requantized event lands, before the stream drains)
+        // and check the router's split accounting: the importer's prefill
+        // load must include the re-prefill charge — prompt + generated —
+        // on top of the migrated request's original budget
+        let mut c = hot_cold(true, PrecisionConfig::W1A1);
+        for (i, &base) in [10i32, 50, 30].iter().enumerate() {
+            c.submit(Request::new(
+                i as u64,
+                (base..base + 8).collect(),
+                GenParams { max_new_tokens: 8, sample: false, seed: i as u64 },
+            ));
+        }
+        let mut carried = 0u64;
+        'outer: for _ in 0..64 {
+            for ev in c.step().unwrap() {
+                if let TokenEvent::Preempted { id } = ev {
+                    // C's KV content at preemption = what the importer
+                    // will re-prefill (peek before the rebalance exports)
+                    assert_eq!(id.0, 2);
+                }
+                if let TokenEvent::Requantized { id, .. } = ev {
+                    assert_eq!(id.0, 2);
+                    carried = 1; // found
+                    break 'outer;
+                }
+            }
+        }
+        assert_eq!(carried, 1, "the cross-precision migration must happen");
+        // importer (replica 1) now carries B's budget + C's budget + C's
+        // re-prefill charge; the charge is visible as prefill load beyond
+        // the two prompts (8 tokens each)
+        let rep = &c.router().replicas()[1];
+        assert!(
+            rep.outstanding_prefill() > 16,
+            "re-prefill charge missing: prefill load {} ≤ two prompts",
+            rep.outstanding_prefill()
+        );
+        c.check_invariants().unwrap();
+        // and completion drains every charged token
+        c.run_to_completion_events().unwrap();
+        assert_eq!(c.router().inflight(), 0);
+        assert!(c.router().replicas().iter().all(|r| r.outstanding() == 0));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefill_replica_hands_off_to_decode_peer_with_identical_streams() {
+        // the disaggregated tentpole at cluster level: a prefill/decode
+        // split cluster must stream every byte a mixed cluster streams,
+        // with each request prefilled on the prefill replica, handed off
+        // (PrefillDone immediately before Migrated), and decoded to
+        // completion on the decode replica
+        let reqs: Vec<Request> = (0..6u64).map(|i| req(i, 4 + (i as usize % 3), 6)).collect();
+        let split_spec = ClusterSpec::new(RoutePolicy::LeastLoaded)
+            .replica(
+                ReplicaSpec::new("p0", PrecisionConfig::W2A2)
+                    .role(ReplicaRole::Prefill)
+                    .engine(small_engine(16)),
+            )
+            .replica(
+                ReplicaSpec::new("d0", PrecisionConfig::W2A2)
+                    .role(ReplicaRole::Decode)
+                    .engine(small_engine(32)),
+            );
+        let mixed_spec = ClusterSpec::new(RoutePolicy::LeastLoaded)
+            .replica(ReplicaSpec::new("m0", PrecisionConfig::W2A2).engine(small_engine(16)))
+            .replica(ReplicaSpec::new("m1", PrecisionConfig::W2A2).engine(small_engine(32)));
+
+        let stream_of = |events: &[TokenEvent]| {
+            let mut s: Vec<(u64, usize, i32)> = events
+                .iter()
+                .filter_map(|ev| match ev {
+                    TokenEvent::Token { id, token, step } => Some((id.0, *step, *token)),
+                    _ => None,
+                })
+                .collect();
+            s.sort();
+            s
+        };
+
+        let mut split = Cluster::new(split_spec, |_| sim());
+        let mut mixed = Cluster::new(mixed_spec, |_| sim());
+        for r in &reqs {
+            split.submit(r.clone());
+            mixed.submit(r.clone());
+        }
+        let split_events = split.run_to_completion_events().unwrap();
+        let mixed_events = mixed.run_to_completion_events().unwrap();
+        assert_eq!(
+            stream_of(&split_events),
+            stream_of(&mixed_events),
+            "disaggregation changed a streamed byte"
+        );
+
+        // every request was handed off exactly once, prefill → decode
+        assert_eq!(split.prefill_handoffs(), 6);
+        assert_eq!(split.migrations(), 6);
+        assert_eq!(split.requants(), 0, "same-precision handoff adopts the KV");
+        assert_eq!(split.engine(0).counters().prefills, 6, "all prefills on p0");
+        assert_eq!(split.engine(0).counters().completed, 0, "nothing finished on p0");
+        assert_eq!(split.engine(1).counters().completed, 6, "all streams finished on d0");
+        assert_eq!(split.engine(1).counters().prefills, 0, "d0 never prefills");
+
+        // grammar: PrefillDone streams immediately before its Migrated,
+        // and every Migrated targets the decode replica
+        for (i, ev) in split_events.iter().enumerate() {
+            if let TokenEvent::PrefillDone { id } = ev {
+                match &split_events[i + 1] {
+                    TokenEvent::Migrated { id: mid, from, to } => {
+                        assert_eq!(mid, id, "PrefillDone must pair with its own Migrated");
+                        assert_eq!((*from, *to), (0, 1));
+                    }
+                    other => panic!("PrefillDone followed by {other:?}"),
+                }
+            }
+        }
+        let handoff_events =
+            split_events.iter().filter(|e| matches!(e, TokenEvent::PrefillDone { .. })).count();
+        assert_eq!(handoff_events, 6);
+        // no Preempted accompanies a voluntary handoff
+        assert!(split_events.iter().all(|e| !matches!(e, TokenEvent::Preempted { .. })));
+
+        // per-role metrics views split cleanly
+        let p = split.metrics_for_role(ReplicaRole::Prefill);
+        let d = split.metrics_for_role(ReplicaRole::Decode);
+        assert_eq!(p.ttft.count(), 6, "prefill replica owns every TTFT sample");
+        assert!(d.itl.count() > 0, "decode replica owns the ITL gaps");
+        assert_eq!(d.ttft.count(), 0);
+
+        // zero leaks on both roles, router drained, invariants hold
+        for (i, e) in split.engines().iter().enumerate() {
+            assert_eq!(e.pool().free_blocks(), e.pool().total_blocks(), "replica {i} leaked");
+        }
+        assert_eq!(split.router().inflight(), 0);
+        split.check_invariants().unwrap();
+        mixed.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn handoff_without_decode_headroom_falls_back_to_local_decode() {
+        // decode replica too small to ever admit (2-block pool, budget
+        // needs 3): the prefill replica's holds expire and every stream
+        // completes locally — disaggregation must degrade, not strand
+        let spec = ClusterSpec::new(RoutePolicy::LeastLoaded)
+            .replica(
+                ReplicaSpec::new("p0", PrecisionConfig::W2A2)
+                    .role(ReplicaRole::Prefill)
+                    .engine(small_engine(16)),
+            )
+            .replica(
+                ReplicaSpec::new("d0", PrecisionConfig::W2A2)
+                    .role(ReplicaRole::Decode)
+                    .engine(small_engine(2)),
+            );
+        let mut c = Cluster::new(spec, |_| sim());
+        for i in 0..3u64 {
+            c.submit(req(i, 6, 6)); // budget 12 tokens = 3 blocks > d0's 2
+        }
+        let events = c.run_to_completion_events().unwrap();
+        let out = responses_of(&events);
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|r| r.tokens.len() == 6), "every stream completed");
+        assert_eq!(c.prefill_handoffs(), 0, "nothing could be handed off");
+        assert_eq!(c.engine(0).counters().completed, 3, "all decoded locally on p0");
+        assert!(events.iter().all(|e| !matches!(e, TokenEvent::PrefillDone { .. })));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cross_precision_handoff_requantizes_and_charges_the_importer() {
+        // prefill replica at W4, decode replica at W2, unpinned request:
+        // the handoff must take the requant path — PrefillDone, Migrated,
+        // Requantized adjacent in the stream, the decode replica
+        // re-prefills, and the router charges it the re-prefill
+        use crate::coordinator::backend::superset_store;
+        let store = superset_store(64, 64, 4, 77);
+        let spec = ClusterSpec::new(RoutePolicy::LeastLoaded)
+            .replica(
+                ReplicaSpec::new("p-w4", PrecisionConfig::W4A4)
+                    .role(ReplicaRole::Prefill)
+                    .engine(small_engine(16)),
+            )
+            .replica(
+                ReplicaSpec::new("d-w2", PrecisionConfig::W2A2)
+                    .role(ReplicaRole::Decode)
+                    .engine(small_engine(32)),
+            );
+        let mut c = Cluster::new(spec, move |r| {
+            let (nw, nx) = if r.precision == PrecisionConfig::W4A4 { (4, 2) } else { (2, 2) };
+            SimBackend::with_shared_store(64, vec![1, 2, 4, 8], store.clone(), nw, nx)
+        });
+        c.submit(req(0, 5, 6));
+        let events = c.run_to_completion_events().unwrap();
+        let out = responses_of(&events);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].tokens.len(), 6);
+        assert_eq!(c.prefill_handoffs(), 1);
+        assert_eq!(c.requants(), 1, "W4 → W2 handoff crosses the precision boundary");
+        assert_eq!(c.engine(1).counters().reprefills, 1, "d-w2 rebuilt the KV");
+        // lifecycle: PrefillDone → Migrated → Requantized → Resumed
+        let lifecycle: Vec<&TokenEvent> = events
+            .iter()
+            .filter(|ev| {
+                ev.id() == RequestId(0)
+                    && !matches!(ev, TokenEvent::Token { .. } | TokenEvent::Admitted { .. })
+            })
+            .collect();
+        assert!(matches!(lifecycle[0], TokenEvent::PrefillDone { .. }), "{lifecycle:?}");
+        assert!(matches!(lifecycle[1], TokenEvent::Migrated { .. }), "{lifecycle:?}");
+        assert!(matches!(lifecycle[2], TokenEvent::Requantized { .. }), "{lifecycle:?}");
+        assert!(matches!(lifecycle[3], TokenEvent::Resumed { .. }), "{lifecycle:?}");
+        assert_eq!(c.router().inflight(), 0);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
     fn speculating_mixed_precision_cluster_requantizes_and_keeps_streams_identical() {
         use crate::coordinator::backend::superset_store;
 
@@ -741,34 +1247,25 @@ mod tests {
         // sequence's draft state must not travel (it never exists between
         // steps), and every stream must match a spec-less run byte for
         // byte.
-        let run = |spec: bool| {
+        let run = |spec_on: bool| {
             let store = superset_store(64, 64, 4, 77);
-            let mut c = Cluster::new(RoutePolicy::LeastLoaded);
-            let (spec_k, hot_draft, cold_draft) = if spec { (2, 2, 1) } else { (0, 0, 0) };
-            c.add_replica(
-                "hot-w4",
-                PrecisionConfig::W4A4,
-                SimBackend::with_shared_store(64, vec![1, 2, 4, 8, 16], store.clone(), 4, 2),
-                EngineConfig {
-                    kv_blocks: 4,
-                    block_tokens: 4,
-                    spec_k,
-                    draft_bits: hot_draft,
-                    ..EngineConfig::default()
-                },
-            );
-            c.add_replica(
-                "cold-w2",
-                PrecisionConfig::W2A2,
-                SimBackend::with_shared_store(64, vec![1, 2, 4, 8, 16], store, 2, 2),
-                EngineConfig {
-                    kv_blocks: 32,
-                    block_tokens: 4,
-                    spec_k,
-                    draft_bits: cold_draft,
-                    ..EngineConfig::default()
-                },
-            );
+            let (spec_k, hot_draft, cold_draft) = if spec_on { (2, 2, 1) } else { (0, 0, 0) };
+            let spec = ClusterSpec::new(RoutePolicy::LeastLoaded)
+                .replica(
+                    ReplicaSpec::new("hot-w4", PrecisionConfig::W4A4)
+                        .engine(small_engine(4))
+                        .speculation(spec_k, hot_draft),
+                )
+                .replica(
+                    ReplicaSpec::new("cold-w2", PrecisionConfig::W2A2)
+                        .engine(small_engine(32))
+                        .speculation(spec_k, cold_draft),
+                );
+            let mut c = Cluster::new(spec, move |r| {
+                let (nw, nx) =
+                    if r.precision == PrecisionConfig::W4A4 { (4, 2) } else { (2, 2) };
+                SimBackend::with_shared_store(64, vec![1, 2, 4, 8, 16], store.clone(), nw, nx)
+            });
             for (i, &base) in [10i32, 50, 30].iter().enumerate() {
                 c.submit(Request::new(
                     i as u64,

@@ -37,7 +37,12 @@
 //!    failure triggers **preemption** (below).  Survivors then advance
 //!    one token in a single batched backend call, streaming each token —
 //!    or several tokens, when **speculative decoding** (below) drafted
-//!    ahead and the verify rows agreed.
+//!    ahead and the verify rows agreed.  Under
+//!    [`EngineConfig::prefill_hold`] (prefill-role replicas in a
+//!    disaggregated cluster), sequences admitted *this step* sit decode
+//!    out once, surfacing through [`Engine::prefilled_ready`] /
+//!    [`Engine::export_running`] so the between-steps window can hand
+//!    them to a decode replica; unexported holds expire next step.
 //! 5. **Completion** — finished sequences release their block references
 //!    and stream a terminal [`TokenEvent::Finished`].  (Completion also
 //!    runs *before* decode so freshly finished sequences free blocks for
@@ -75,19 +80,24 @@
 //! where the next step re-admits it through the target's prefix cache.
 //! [`Engine::is_overloaded`] is the migration trigger (a swapped
 //! sequence this engine cannot resume right now) and
-//! [`Engine::can_import`] the acceptance gate (a free decode slot, no
-//! swapped backlog, and KV headroom for the content *and* the remaining
-//! budget).  The [`Cluster`](super::cluster::Cluster) drives the actual
-//! rebalancing and streams [`TokenEvent::Migrated`] between the victim's
-//! `Preempted` and the target's `Resumed`.
+//! [`Engine::import_fit`] the acceptance gate: one admission API
+//! answering fits / needs-requant / rejected-with-reason from a
+//! [`SwappedPeek`] (a free decode slot, no unresumed backlog, and KV
+//! headroom for the content *and* the remaining budget — counting the
+//! arrivals already queued ahead of it).  The
+//! [`Cluster`](super::cluster::Cluster) drives the actual rebalancing
+//! and streams [`TokenEvent::Migrated`] between the victim's `Preempted`
+//! and the target's `Resumed`.
 //!
 //! Migration is no longer confined to same-precision peers: for a
 //! **cross-precision** move the exporter calls
 //! [`ExportedSeq::strip_kv_for_requant`] (the carried KV encodes the
 //! source precision's activations and is useless elsewhere) and the
 //! importing engine **re-prefills** the prompt + generated tokens at its
-//! own precision during swap-in ([`Engine::can_import_requant`] gates on
-//! the content fitting the prompt window).  Streamed bytes never change —
+//! own precision during swap-in (queried via
+//! [`SwappedPeek::as_requant`], [`Engine::import_fit`] additionally
+//! gates on the content fitting the prompt window).  Streamed bytes
+//! never change —
 //! they are teacher-forced as context — and only subsequent tokens are
 //! generated at the new precision; the cluster streams
 //! [`TokenEvent::Requantized`] between `Migrated` and `Resumed` so the
@@ -174,6 +184,16 @@ pub struct EngineConfig {
     /// `1 ≤ draft_bits < serving bits` (a strict subset; an equal-width
     /// "draft" would double the work for zero information).
     pub draft_bits: u32,
+    /// Hold each freshly prefilled sequence out of the same step's decode
+    /// phase, exposing it through [`Engine::prefilled_ready`] until the
+    /// next step.  A disaggregated cluster sets this on prefill-role
+    /// replicas so the between-steps window can hand the sequence to a
+    /// decode replica ([`Engine::export_running`]); without the hold
+    /// there is no post-step moment at which a just-prefilled sequence
+    /// still sits exactly at its prompt boundary (phase 4 decodes
+    /// same-step admissions).  A held sequence nobody exports simply
+    /// decodes next step — the hold never strands a stream.
+    pub prefill_hold: bool,
 }
 
 impl Default for EngineConfig {
@@ -190,6 +210,7 @@ impl Default for EngineConfig {
             workers: 0,
             spec_k: 0,
             draft_bits: 0,
+            prefill_hold: false,
         }
     }
 }
@@ -247,6 +268,12 @@ struct RunSeq {
     /// dropped: the next swap-in must re-prefill `swap_content` at this
     /// replica's precision instead of trusting `kv`.
     needs_reprefill: bool,
+    /// Freshly prefilled under [`EngineConfig::prefill_hold`]: sit out
+    /// this step's decode phase so the cluster's between-steps window can
+    /// hand the sequence to a decode replica.  Expires at the start of
+    /// the next step's admission phase — a hold nobody acted on decodes
+    /// normally.
+    hold_decode: bool,
 }
 
 impl RunSeq {
@@ -327,10 +354,12 @@ impl ExportedSeq {
     }
 }
 
-/// What [`Engine::peek_swapped`] exposes about the oldest swapped
+/// What [`Engine::peek_swapped`] (or [`Engine::peek_prefilled`], for a
+/// disaggregated prefill→decode handoff) exposes about a migratable
 /// sequence: everything a cluster's rebalancer needs to pick a target
 /// without exporting anything yet.  Borrows the engine — peeking a
 /// sequence every step must not clone its token content.
+#[derive(Debug, Clone, Copy)]
 pub struct SwappedPeek<'a> {
     pub id: RequestId,
     /// KV content tokens (prompt + decoded inputs) the target must admit
@@ -345,8 +374,42 @@ pub struct SwappedPeek<'a> {
     /// The sequence's KV was already stripped by an earlier
     /// cross-precision hop and it has not re-prefilled yet: ANY further
     /// target (same precision included) must pass the re-prefill gate
-    /// ([`Engine::can_import_requant`]).
+    /// in [`Engine::import_fit`].
     pub reprefill_pending: bool,
+}
+
+impl<'a> SwappedPeek<'a> {
+    /// The same peek viewed as a **cross-precision** arrival: the cluster
+    /// queries [`Engine::import_fit`] with this when the move it is
+    /// considering would strip the carried KV, so the target answers for
+    /// the re-prefill path (content through its prompt window) instead of
+    /// a plain KV adoption.
+    pub fn as_requant(&self) -> SwappedPeek<'a> {
+        SwappedPeek { reprefill_pending: true, ..*self }
+    }
+}
+
+/// Verdict of [`Engine::import_fit`] — the one admission API a cluster
+/// consults before moving a sequence here.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ImportFit {
+    /// Admissible as-is: the carried KV state swaps straight in.
+    Fits,
+    /// Admissible, but this engine must **re-prefill** the content at its
+    /// own precision before resuming (the peek's KV was — or would be —
+    /// stripped for the move).
+    NeedsRequant,
+    /// Not admissible right now; the message names the failed gate (for
+    /// rebalancer diagnostics and tests).
+    Rejected(&'static str),
+}
+
+impl ImportFit {
+    /// Either [`ImportFit::Fits`] or [`ImportFit::NeedsRequant`] — the
+    /// target can take the sequence.
+    pub fn admissible(self) -> bool {
+        !matches!(self, ImportFit::Rejected(_))
+    }
 }
 
 /// The continuous-batching engine.  Single-threaded state machine — wrap
@@ -459,7 +522,7 @@ impl<B: Backend> Engine<B> {
     }
 
     /// The oldest swapped sequence's migration-relevant state — what a
-    /// target must be able to admit ([`Engine::can_import`]) and what
+    /// target must be able to admit ([`Engine::import_fit`]) and what
     /// decides whether a cross-precision fallback is even allowed (a
     /// pinned request is a contract: it never requantizes).
     pub fn peek_swapped(&self) -> Option<SwappedPeek<'_>> {
@@ -488,24 +551,64 @@ impl<B: Backend> Engine<B> {
             && (self.running.len() >= self.cfg.max_running || self.resume_blocked)
     }
 
-    /// Acceptance gate for a migrated sequence: a free decode slot, no
-    /// swapped backlog of this engine's own, KV headroom for `content`
-    /// right now, and room for the full `budget` (prompt + max_new) so
-    /// the no-deadlock guarantee ("every admitted sequence fits the pool
-    /// alone") carries over to imports.
-    pub fn can_import(&self, content: &[i32], budget: usize) -> bool {
-        self.swapped.is_empty()
-            && self.running.len() < self.cfg.max_running
-            && budget <= self.backend.max_seq()
-            && self.pool.blocks_for(budget) <= self.pool.total_blocks()
-            && self.pool_can_admit(content)
+    /// KV blocks the already-queued swapped sequences will claim when
+    /// they swap back in — headroom an import must leave untouched, or
+    /// the newcomer starves the arrivals queued ahead of it.
+    fn swapped_block_demand(&self) -> usize {
+        self.swapped
+            .iter()
+            .map(|s| {
+                let len = s.swap_content.as_ref().map_or(s.kv.pos, |c| c.len());
+                self.pool.blocks_for(len)
+            })
+            .sum()
     }
 
-    /// [`Engine::can_import`] for a **cross-precision** arrival: the
-    /// sequence additionally needs a re-prefill of `content` through this
-    /// backend, so the content must fit its prompt window.
-    pub fn can_import_requant(&self, content: &[i32], budget: usize) -> bool {
-        self.can_import(content, budget) && content.len() <= self.backend.max_prompt()
+    /// Acceptance gate for a migrated sequence — the ONE admission API a
+    /// cluster consults, answering fits / needs-requant /
+    /// rejected-with-reason for the peeked sequence.  Admissible means: a
+    /// decode slot will be free once the resume queue drains (so several
+    /// handoffs may target one replica in the same between-steps window),
+    /// this engine's own backlog is not stuck, the full `budget`
+    /// (prompt + max_new) fits the context window and the pool alone (the
+    /// no-deadlock guarantee carries over to imports), and there is KV
+    /// headroom for the content *beyond* what the arrivals already queued
+    /// ahead of it will claim.  A `reprefill_pending` peek (or a
+    /// [`SwappedPeek::as_requant`] view of one the caller intends to
+    /// strip) additionally needs the content to fit the prompt window —
+    /// admissible then means [`ImportFit::NeedsRequant`].
+    pub fn import_fit(&self, peek: &SwappedPeek<'_>) -> ImportFit {
+        if self.is_overloaded() {
+            return ImportFit::Rejected("target's own swapped backlog is stuck");
+        }
+        if self.running.len() + self.swapped.len() >= self.cfg.max_running {
+            return ImportFit::Rejected("no decode slot free (running + queued arrivals)");
+        }
+        if peek.budget > self.backend.max_seq() {
+            return ImportFit::Rejected("budget exceeds the context window");
+        }
+        if self.pool.blocks_for(peek.budget) > self.pool.total_blocks() {
+            return ImportFit::Rejected("budget exceeds the whole pool");
+        }
+        if !self.pool_can_admit(peek.content) {
+            return ImportFit::Rejected("no KV headroom for the carried content");
+        }
+        // with arrivals already queued, their swap-in demand comes first;
+        // conservative (prefix sharing could stretch the pool further),
+        // which at worst delays this move one step
+        let queued = self.swapped_block_demand();
+        if queued > 0
+            && self.pool.blocks_for(peek.content.len()) + queued > self.pool.free_blocks()
+        {
+            return ImportFit::Rejected("KV headroom already promised to queued arrivals");
+        }
+        if peek.reprefill_pending {
+            if peek.content.len() > self.backend.max_prompt() {
+                return ImportFit::Rejected("re-prefill content exceeds the prompt window");
+            }
+            return ImportFit::NeedsRequant;
+        }
+        ImportFit::Fits
     }
 
     /// Pop the **oldest** swapped sequence for migration to a peer
@@ -548,12 +651,14 @@ impl<B: Backend> Engine<B> {
     /// Counts as a fresh admission for victim selection — an import must
     /// not displace this replica's own older residents.
     pub fn import_swapped(&mut self, seq: ExportedSeq) {
-        // [`Engine::can_import`] required an empty swapped queue, so any
-        // recorded resume-blocked outcome described a backlog that has
-        // since drained; the newcomer has not attempted a resume yet.
-        // Without this clear, an idle engine that last blocked long ago
-        // would advertise overload the moment it imports — and the
-        // rebalancer would bounce the sequence straight back out.
+        // [`Engine::import_fit`] rejected overloaded targets, so at
+        // import time either the swapped queue was empty (any recorded
+        // resume-blocked outcome described a backlog that has since
+        // drained) or it is non-empty with the flag already false; the
+        // newcomer itself has not attempted a resume yet.  Without this
+        // clear, an idle engine that last blocked long ago would
+        // advertise overload the moment it imports — and the rebalancer
+        // would bounce the sequence straight back out.
         self.resume_blocked = false;
         self.counters.imported += 1;
         let admitted_at = self.admissions;
@@ -568,7 +673,57 @@ impl<B: Backend> Engine<B> {
             swap_content: Some(seq.swap_content),
             admitted_at,
             needs_reprefill: seq.reprefill,
+            hold_decode: false,
         });
+    }
+
+    /// Sequences whose prefill completed THIS step and are being held out
+    /// of decode under [`EngineConfig::prefill_hold`] — each sits exactly
+    /// at its prompt boundary (one streamed token, KV = the prompt).  A
+    /// disaggregated cluster polls this between steps and hands each to a
+    /// decode replica via [`Engine::export_running`]; holds nobody acts
+    /// on expire next step and the sequences decode locally.
+    pub fn prefilled_ready(&self) -> Vec<RequestId> {
+        self.running.iter().filter(|s| s.hold_decode).map(|s| s.req.id).collect()
+    }
+
+    /// Migration-relevant state of a held just-prefilled sequence (see
+    /// [`Engine::prefilled_ready`]).  Its KV holds exactly the prompt, so
+    /// the peek borrows the request's prompt — no content is rebuilt.
+    pub fn peek_prefilled(&self, id: RequestId) -> Option<SwappedPeek<'_>> {
+        self.running.iter().find(|s| s.req.id == id && s.hold_decode).map(|s| SwappedPeek {
+            id: s.req.id,
+            content: &s.req.prompt,
+            budget: s.req.prompt.len() + s.req.params.max_new_tokens,
+            pinned: s.req.precision,
+            reprefill_pending: s.needs_reprefill,
+        })
+    }
+
+    /// Pop a held just-prefilled **running** sequence for a
+    /// prefill→decode handoff — the disaggregated analogue of
+    /// [`Engine::export_swapped`].  Its first token already streamed and
+    /// the move is voluntary (no KV pressure), so no `Preempted` is
+    /// involved: the cluster streams `PrefillDone` + `Migrated`, and the
+    /// importer's `Resumed` continues the stream byte-identically.
+    pub fn export_running(&mut self, id: RequestId) -> Option<ExportedSeq> {
+        let i = self.running.iter().position(|s| s.req.id == id && s.hold_decode)?;
+        let mut s = self.running.remove(i);
+        // release fails only on a bookkeeping bug — the id is resident
+        self.pool.release(s.req.id.0).expect("resident sequence owns a pool table");
+        self.counters.exported += 1;
+        s.hold_decode = false;
+        let swap_content = s.kv_content();
+        Some(ExportedSeq {
+            req: s.req,
+            kv: s.kv,
+            next_token: s.next_token,
+            generated: s.generated,
+            first_token_at: s.first_token_at,
+            last_token_at: s.last_token_at,
+            swap_content,
+            reprefill: s.needs_reprefill,
+        })
     }
 
     pub fn is_idle(&self) -> bool {
@@ -778,6 +933,14 @@ impl<B: Backend> Engine<B> {
             }
         }
 
+        // holds from the previous step expire here: the cluster had its
+        // between-steps window to export them, and whoever is still
+        // resident decodes this step (also scrubs any stale flag a
+        // preempted-then-resumed sequence carried back in).
+        for s in &mut self.running {
+            s.hold_decode = false;
+        }
+
         // 3: admission + prefill — reserve only the prompt's KV; decode
         // growth is incremental (that is the continuous-batching bet).
         while self.swapped.is_empty() && self.running.len() < self.cfg.max_running {
@@ -820,6 +983,7 @@ impl<B: Backend> Engine<B> {
                 swap_content: None,
                 admitted_at,
                 needs_reprefill: false,
+                hold_decode: self.cfg.prefill_hold,
             });
         }
 
@@ -829,7 +993,11 @@ impl<B: Backend> Engine<B> {
 
         // 4: decode — secure one KV slot per participant (preempting on
         // the allocator's clean failure), then one batched call.
-        let mut ids: Vec<u64> = self.running.iter().map(|s| s.req.id.0).collect();
+        // Sequences under a prefill hold sit this phase out; the flag
+        // survives to the between-steps window so the cluster can see
+        // (and export) them, and expires above next step.
+        let mut ids: Vec<u64> =
+            self.running.iter().filter(|s| !s.hold_decode).map(|s| s.req.id.0).collect();
         let mut i = 0;
         while i < ids.len() {
             let id = ids[i];
@@ -1183,7 +1351,7 @@ mod tests {
         let peek = src.peek_swapped().unwrap();
         assert_eq!(peek.budget, 16);
         assert_eq!(peek.pinned, None, "unpinned request");
-        assert!(dst.can_import(peek.content, peek.budget), "idle peer must accept");
+        assert_eq!(dst.import_fit(&peek), ImportFit::Fits, "idle peer must accept");
         let (id, content_len) = (peek.id, peek.content.len());
         let exported = src.export_swapped().unwrap();
         assert_eq!(exported.id(), id);
@@ -1296,7 +1464,7 @@ mod tests {
             src.step().unwrap();
         }
         let peek = src.peek_swapped().unwrap();
-        assert!(dst.can_import_requant(peek.content, peek.budget));
+        assert_eq!(dst.import_fit(&peek.as_requant()), ImportFit::NeedsRequant);
         let mut exported = src.export_swapped().unwrap();
         assert!(!exported.needs_reprefill());
         exported.strip_kv_for_requant();
@@ -1631,5 +1799,158 @@ mod tests {
             assert_eq!(out.len() as u64, c.completed + c.rejected);
             assert_eq!(c.resumes, c.preemptions);
         });
+    }
+
+    #[test]
+    fn import_fit_names_the_failing_gate_and_allows_queued_arrivals_headroom() {
+        // exercise every verdict of the unified admission API on a peek
+        // we can shape freely
+        let peek = |content: &'static [i32], budget: usize, requant: bool| SwappedPeek {
+            id: RequestId(99),
+            content,
+            budget,
+            pinned: None,
+            reprefill_pending: requant,
+        };
+        let idle = Engine::new(SimBackend::new(64, 64, vec![1, 2, 4, 8]), cfg(8, 4, 4));
+        assert_eq!(idle.import_fit(&peek(&[1, 2, 3], 8, false)), ImportFit::Fits);
+        assert_eq!(idle.import_fit(&peek(&[1, 2, 3], 8, true)), ImportFit::NeedsRequant);
+        // as_requant flips only the reprefill axis of the same peek
+        let p = peek(&[1, 2, 3], 8, false);
+        assert_eq!(idle.import_fit(&p.as_requant()), ImportFit::NeedsRequant);
+        // budget beyond the context window / whole pool
+        assert!(!idle.import_fit(&peek(&[1, 2], 100, false)).admissible());
+        assert!(!idle.import_fit(&peek(&[1, 2], 40, false)).admissible(), "pool is 8×4");
+        // re-prefill content must fit the prompt window (max_prompt =
+        // 32); the pool is sized up so every earlier gate passes and the
+        // rejection is attributable to the re-prefill gate alone
+        let big = Engine::new(SimBackend::new(64, 64, vec![1, 2, 4, 8]), cfg(16, 4, 4));
+        static LONG: [i32; 33] = [7; 33];
+        assert_eq!(big.import_fit(&peek(&LONG, 40, false)), ImportFit::Fits);
+        assert!(!big.import_fit(&peek(&LONG, 40, true)).admissible());
+
+        // a stuck backlog rejects outright; a merely-present one only
+        // reserves its own headroom
+        let mut hot = Engine::new(
+            SimBackend::new(64, 64, vec![1, 2, 4, 8]),
+            EngineConfig { prefix_sharing: false, ..cfg(4, 4, 4) },
+        );
+        hot.submit(req(0, 8, 8));
+        hot.submit(req(1, 8, 8));
+        while hot.swapped() == 0 {
+            hot.step().unwrap();
+        }
+        assert!(hot.is_overloaded());
+        assert!(
+            !hot.import_fit(&peek(&[1], 2, false)).admissible(),
+            "an overloaded engine must refuse imports"
+        );
+        // queued-arrival headroom: an idle engine with an imported-but-
+        // not-yet-resumed sequence must reserve that sequence's blocks
+        let mut busy = Engine::new(
+            SimBackend::new(64, 64, vec![1, 2, 4, 8]),
+            EngineConfig { prefix_sharing: false, ..cfg(4, 4, 4) },
+        );
+        busy.import_swapped(hot.export_swapped().unwrap());
+        // the queued arrival (an 8-token prompt preempted before any
+        // decode) reserves ceil(8/4) = 2 of 4 blocks: a 3-block newcomer
+        // no longer fits, a 1-block one still does
+        static NINE: [i32; 9] = [3; 9];
+        assert!(!busy.import_fit(&peek(&NINE, 12, false)).admissible());
+        assert_eq!(busy.import_fit(&peek(&[1, 2], 4, false)), ImportFit::Fits);
+        // drain both so the scenario stays leak-free
+        let mut all = hot.run_to_completion().unwrap();
+        all.extend(busy.run_to_completion().unwrap());
+        assert_eq!(all.len(), 2);
+        assert!(all.iter().all(|r| r.tokens.len() == 8));
+        assert_eq!(hot.pool().free_blocks(), 4);
+        assert_eq!(busy.pool().free_blocks(), 4);
+    }
+
+    #[test]
+    fn prefill_hold_surfaces_the_sequence_then_expires_without_a_taker() {
+        // prefill_hold: the just-prefilled sequence must be visible at
+        // its prompt boundary after the step (exactly one streamed
+        // token), and — if nobody exports it — decode normally from the
+        // next step on, finishing byte-identical to a no-hold engine
+        let mut plain = SimBackend::new(64, 64, vec![1, 2, 4, 8]);
+        let want = reference(&mut plain, &req(0, 5, 7).prompt, &req(0, 5, 7).params);
+
+        let mut e = Engine::new(
+            SimBackend::new(64, 64, vec![1, 2, 4, 8]),
+            EngineConfig { prefill_hold: true, ..cfg(64, 8, 4) },
+        );
+        e.submit(req(0, 5, 7));
+        let events = e.step().unwrap();
+        let toks = events
+            .iter()
+            .filter(|ev| matches!(ev, TokenEvent::Token { .. }))
+            .count();
+        assert_eq!(toks, 1, "held sequence streams its prefill token only");
+        let ready = e.prefilled_ready();
+        assert_eq!(ready, vec![RequestId(0)]);
+        let p = e.peek_prefilled(RequestId(0)).unwrap();
+        assert_eq!(p.content, &req(0, 5, 7).prompt[..], "peek borrows the prompt");
+        assert_eq!(p.budget, 12);
+        assert!(!p.reprefill_pending);
+        // nobody takes it: the hold expires and the stream completes
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].tokens, want, "an expired hold must not change the stream");
+        assert!(e.prefilled_ready().is_empty(), "hold gone after the next step");
+        assert_eq!(e.pool().free_blocks(), 64);
+
+        // without the flag nothing is ever held
+        let mut m = Engine::new(SimBackend::new(64, 64, vec![1, 2, 4, 8]), cfg(64, 8, 4));
+        m.submit(req(0, 5, 7));
+        m.step().unwrap();
+        assert!(m.prefilled_ready().is_empty(), "mixed engines never hold");
+        assert!(m.peek_prefilled(RequestId(0)).is_none());
+        assert!(m.export_running(RequestId(0)).is_none());
+    }
+
+    #[test]
+    fn export_running_hands_a_held_prefill_to_a_peer_byte_identically() {
+        // the disaggregated handoff at engine level: prefill on a held
+        // engine, export the running sequence between steps, import into
+        // a peer — the composite stream must equal the unbatched oracle
+        let mut plain = SimBackend::new(64, 64, vec![1, 2, 4, 8]);
+        let want = reference(&mut plain, &req(0, 6, 8).prompt, &req(0, 6, 8).params);
+
+        let mut pre = Engine::new(
+            SimBackend::new(64, 64, vec![1, 2, 4, 8]),
+            EngineConfig { prefill_hold: true, ..cfg(64, 8, 4) },
+        );
+        let mut dec = Engine::new(SimBackend::new(64, 64, vec![1, 2, 4, 8]), cfg(64, 8, 4));
+        pre.submit(req(0, 6, 8));
+        let mut events = pre.step().unwrap();
+        let id = *pre.prefilled_ready().first().expect("prefill held");
+        let p = pre.peek_prefilled(id).unwrap();
+        assert_eq!(dec.import_fit(&p), ImportFit::Fits);
+        let exported = pre.export_running(id).unwrap();
+        assert_eq!(exported.id(), id);
+        assert_eq!(exported.kv_tokens(), 6, "exported KV covers exactly the prompt");
+        assert!(!exported.needs_reprefill());
+        dec.import_swapped(exported);
+        assert!(pre.is_idle(), "source fully handed off");
+        assert_eq!(pre.pool().free_blocks(), 64, "source released the prompt blocks");
+        events.extend(dec.run_to_completion_events().unwrap());
+        let out = responses_of(&events);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].tokens, want, "handoff changed the stream");
+        // streamed tokens concatenate across the two engines
+        let streamed: Vec<i32> = events
+            .iter()
+            .filter_map(|ev| match ev {
+                TokenEvent::Token { token, .. } => Some(*token),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(streamed, want);
+        assert_eq!(pre.counters().exported, 1);
+        assert_eq!(dec.counters().imported, 1);
+        assert_eq!(dec.counters().resumes, 1, "decode side resumes the stream");
+        assert_eq!(dec.pool().free_blocks(), 64);
+        dec.pool().check_invariants().unwrap();
     }
 }

@@ -124,6 +124,11 @@ pub struct Metrics {
     /// Migrations that crossed a precision boundary — the carried KV was
     /// dropped and the target re-prefills (counted on the cluster clock).
     pub requants: u64,
+    /// Migrations that were disaggregated prefill→decode handoffs: a
+    /// prefill-role replica finished a prefill and the sequence moved to
+    /// a decode replica (counted on the cluster clock; subset of
+    /// `migrations`).
+    pub prefill_handoffs: u64,
     /// KV rebuilds performed by THIS replica for cross-precision
     /// arrivals: one prefill over prompt + generated tokens each.
     pub reprefills: u64,
@@ -240,6 +245,7 @@ impl Metrics {
         self.prefix_evictions += other.prefix_evictions;
         self.migrations += other.migrations;
         self.requants += other.requants;
+        self.prefill_handoffs += other.prefill_handoffs;
         self.reprefills += other.reprefills;
         self.spec_drafted += other.spec_drafted;
         self.spec_accepted += other.spec_accepted;
@@ -278,7 +284,7 @@ impl Metrics {
         };
         format!(
             "requests: {}/{} done | tokens: {} | wall: {:.2}s | {:.1} tok/s | occupancy {:.2} | \
-             preempted {} (resumed {}, migrated {}, requantized {})\n\
+             preempted {} (resumed {}, migrated {}, requantized {}, prefill handoffs {})\n\
              kv tokens resident/swapped: {}/{} (peak swapped {})\n\
              prefix cache: {}/{} blocks hit ({:.0}%), {} evicted\n\
              queue  p50/p95/max: {:.1}/{:.1}/{:.1} ms\n\
@@ -295,6 +301,7 @@ impl Metrics {
             self.resumes,
             self.migrations,
             self.requants,
+            self.prefill_handoffs,
             self.kv_resident_tokens,
             self.kv_swapped_tokens,
             self.kv_swapped_peak,
@@ -432,6 +439,7 @@ mod tests {
             prefix_evictions: 2,
             migrations: 3,
             requants: 2,
+            prefill_handoffs: 2,
             reprefills: 1,
             ..Metrics::default()
         };
@@ -450,6 +458,7 @@ mod tests {
         assert_eq!(a.prefix_evictions, 2);
         assert_eq!(a.migrations, 3);
         assert_eq!(a.requants, 2);
+        assert_eq!(a.prefill_handoffs, 2);
         assert_eq!(a.reprefills, 1);
         assert!((a.prefix_hit_rate() - 0.75).abs() < 1e-12);
         assert_eq!(a.wall_seconds(), wall, "merge keeps the aggregate's clock");

@@ -30,7 +30,7 @@
 //!   slices its own plane prefix per step — no per-precision weight
 //!   duplication.  The AP-GEMM logits shard across the persistent
 //!   worker pool (`Backend::set_workers`, sized per replica by
-//!   `EngineConfig::workers` / `Cluster::set_worker_budget` so N
+//!   `EngineConfig::workers` / `ClusterSpec::worker_budget` so N
 //!   replicas split the host instead of oversubscribing it).
 //! * [`scheduler`]— group scheduler over the backend trait: admission,
 //!   prefill/decode interleaving, slot recycling (reserves each
@@ -51,20 +51,44 @@
 //!   are pure decode-step savings.  Un-accepted KV rolls back inside
 //!   the step, so exported/migrated sequences never carry draft state.
 //! * [`router`]   — per-request replica selection (round-robin or
-//!   least-loaded, with optional precision pinning) and conserved load
-//!   accounting, transferred by `Router::migrate` when a sequence moves.
+//!   least-loaded, with optional precision pinning and **replica roles**:
+//!   every request is admitted to a prefill-capable replica, decode-only
+//!   replicas are fed by migration) and conserved load accounting split
+//!   into prefill/decode components, transferred by `Router::migrate`
+//!   when a sequence moves and topped up by `Router::charge_reprefill`
+//!   when an import must re-prefill.
 //! * [`cluster`]  — **the multi-replica composition**: N engine replicas
 //!   (each its own `KvPool`/batcher, all slicing one shared superset
 //!   weight store at their own W/A precision) behind the router, itself
 //!   a [`Stepper`] — the serving topology the ROADMAP's heavy-traffic
-//!   north star calls for.  After every step it **rebalances**: the
+//!   north star calls for.  A whole topology is declared as a
+//!   [`ClusterSpec`] of [`ReplicaSpec`]s (name, precision, role, engine
+//!   shape, speculation, worker budget) and built in one
+//!   [`Cluster::new`] call.  After every step it **rebalances**: the
 //!   oldest swapped sequences on overloaded replicas migrate to
-//!   same-precision peers with KV headroom (`TokenEvent::Migrated`
-//!   between `Preempted` and the target's `Resumed`), and — for unpinned
-//!   requests with no same-precision escape — **across the precision
-//!   boundary**: the KV is dropped and the target re-prefills the prompt
-//!   + generated tokens at its own precision (`TokenEvent::Requantized`
-//!   after `Migrated`), streamed bytes unchanged.
+//!   same-precision decode-capable peers with KV headroom
+//!   (`TokenEvent::Migrated` between `Preempted` and the target's
+//!   `Resumed`), and — for unpinned requests with no same-precision
+//!   escape — **across the precision boundary**: the KV is dropped and
+//!   the target re-prefills the prompt + generated tokens at its own
+//!   precision (`TokenEvent::Requantized` after `Migrated`), streamed
+//!   bytes unchanged.
+//!
+//! ## Replica roles: disaggregated prefill/decode serving
+//!
+//! [`ReplicaRole`] makes prefill/decode disaggregation first-class:
+//! `Prefill` replicas admit and prefill but hand every freshly prefilled
+//! sequence to a decode-capable peer (`Engine::prefilled_ready` /
+//! `Engine::export_running` under `EngineConfig::prefill_hold`, with
+//! `TokenEvent::PrefillDone` streamed immediately before the `Migrated`);
+//! `Decode` replicas never admit fresh requests and are fed exclusively
+//! by handoffs and rebalancing; `Mixed` (the default) does both — an
+//! all-`Mixed` cluster is byte-for-byte the symmetric baseline.  Both
+//! migration paths gate on `Engine::import_fit`, which answers
+//! fits / needs-requant / rejected-with-reason for a candidate import.
+//! A held sequence no peer admits decodes locally on the next step, so a
+//! saturated decode tier degrades to mixed behavior instead of stranding
+//! streams.
 //! * [`metrics`]  — counters, latency percentiles (incl. streamed
 //!   TTFT/ITL), resident-vs-swapped KV and prefix-cache hit/eviction
 //!   gauges, the migration counter, and cross-replica merge.
@@ -87,14 +111,14 @@ pub mod trace;
 
 pub use backend::{drive_unbatched, superset_store, ApStats, Backend, SimBackend};
 pub use batcher::{Batcher, BatcherConfig};
-pub use cluster::Cluster;
-pub use engine::{Engine, EngineConfig, EngineCounters, ExportedSeq, SwappedPeek};
+pub use cluster::{Cluster, ClusterSpec, ReplicaSpec};
+pub use engine::{Engine, EngineConfig, EngineCounters, ExportedSeq, ImportFit, SwappedPeek};
 pub use kv::{BlockId, EvictionPolicy, KvPool, KvSharing};
 pub use metrics::{LatencySnapshot, LatencyStats, Metrics};
 pub use request::{
     responses_of, sample_token, GenParams, Request, RequestId, Response, TokenEvent,
 };
-pub use router::{RoutePolicy, Router};
+pub use router::{Replica, ReplicaRole, RoutePolicy, Router};
 pub use scheduler::{Scheduler, SchedulerConfig};
 pub use server::{drain, replay_trace, Server, ServerConfig, Stepper};
 pub use trace::{ArrivalKind, TraceConfig};

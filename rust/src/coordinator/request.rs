@@ -115,7 +115,12 @@ impl Response {
 /// when the move crosses a precision boundary, `Requantized` — between
 /// them when the rebalancer moves a swapped sequence to a peer replica),
 /// then `Finished`; a rejected request emits only `Finished` with an
-/// empty response.  The concatenation of a request's `Token` payloads is
+/// empty response.  On a disaggregated cluster a prefill-role replica
+/// additionally streams `PrefillDone` right after the prefill's first
+/// token and immediately before the `Migrated` that hands the sequence
+/// to a decode replica — the marker that makes prefill→decode handoffs
+/// auditable in the stream (a voluntary move, so no `Preempted` precedes
+/// it; the decode replica's `Resumed` picks the stream back up).  The concatenation of a request's `Token` payloads is
 /// byte-identical to its final [`Response::tokens`] — migration included
 /// — pinned by the integration tests.  Tokens streamed before a
 /// `Requantized` keep their bytes (the new replica re-prefills them as
@@ -128,6 +133,11 @@ pub enum TokenEvent {
     Token { id: RequestId, token: i32, step: usize },
     /// Swapped out under KV pressure (stream pauses, nothing is lost).
     Preempted { id: RequestId },
+    /// The prefill completed on a prefill-role replica and the sequence
+    /// is leaving for a decode replica: streams immediately before the
+    /// corresponding `Migrated`.  A marker, not a pause — the handoff is
+    /// voluntary (no KV pressure), so no `Preempted` accompanies it.
+    PrefillDone { id: RequestId },
     /// A swapped-out sequence moved to another replica (`from`/`to` are
     /// cluster replica indices); the stream stays paused until the
     /// target's `Resumed`.
@@ -150,6 +160,7 @@ impl TokenEvent {
             TokenEvent::Admitted { id }
             | TokenEvent::Token { id, .. }
             | TokenEvent::Preempted { id }
+            | TokenEvent::PrefillDone { id }
             | TokenEvent::Migrated { id, .. }
             | TokenEvent::Requantized { id, .. }
             | TokenEvent::Resumed { id }

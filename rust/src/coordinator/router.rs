@@ -9,6 +9,24 @@
 //! target **conservatively** — the full original budget moves, so the
 //! conservation law (Σ outstanding == Σ inflight budgets) survives
 //! migration and completions drain the replica actually doing the work.
+//!
+//! ## Replica roles
+//!
+//! Every replica carries a [`ReplicaRole`].  Admission routing only
+//! considers **prefill-capable** replicas (`Prefill` or `Mixed`) — every
+//! accepted request starts with a prefill — while decode-only replicas
+//! receive work exclusively through migration (the cluster's
+//! prefill→decode handoff and rebalancer, both of which refuse
+//! prefill-only targets for decoding sequences).  `Mixed` is the default
+//! and preserves the symmetric pre-role behavior exactly.
+//!
+//! Load accounting is split along the same axis: each in-flight request
+//! contributes a **prefill component** (its prompt tokens, plus any
+//! re-prefill a requantizing migration charges the importer via
+//! [`Router::charge_reprefill`]) and a **decode component** (its
+//! `max_new` budget).  The split lets the cluster steer prefill→decode
+//! handoffs by decode load specifically, and makes requantized imports
+//! visible to placement instead of looking free.
 
 use super::request::{Request, RequestId};
 use crate::model::PrecisionConfig;
@@ -33,19 +51,80 @@ impl RoutePolicy {
     }
 }
 
+/// What work a replica accepts in a disaggregated topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReplicaRole {
+    /// Admits and prefills requests, then hands them to a decode replica
+    /// (decoding locally only as a graceful fallback when no decode
+    /// replica can take the sequence).
+    Prefill,
+    /// Never admits requests; receives prefilled sequences via migration
+    /// and decodes them to completion.
+    Decode,
+    /// Both — the symmetric pre-role behavior, and the pinned baseline.
+    #[default]
+    Mixed,
+}
+
+impl ReplicaRole {
+    /// Parse a CLI spelling (`p`/`prefill`, `d`/`decode`, `m`/`mixed`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "p" | "prefill" => Some(ReplicaRole::Prefill),
+            "d" | "decode" => Some(ReplicaRole::Decode),
+            "m" | "mixed" => Some(ReplicaRole::Mixed),
+            _ => None,
+        }
+    }
+
+    /// May admission routing hand this replica a fresh request?
+    pub fn accepts_prefill(self) -> bool {
+        !matches!(self, ReplicaRole::Decode)
+    }
+
+    /// May a decoding (post-prefill) sequence land here?
+    pub fn accepts_decode(self) -> bool {
+        !matches!(self, ReplicaRole::Prefill)
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ReplicaRole::Prefill => "prefill",
+            ReplicaRole::Decode => "decode",
+            ReplicaRole::Mixed => "mixed",
+        }
+    }
+}
+
 /// A registered replica.
 #[derive(Debug, Clone)]
 pub struct Replica {
     pub name: String,
     pub precision: PrecisionConfig,
-    /// Outstanding work in tokens (prompt + max_new of in-flight requests).
-    outstanding: u64,
+    pub role: ReplicaRole,
+    /// Outstanding prefill-side work in tokens: prompt budgets of
+    /// in-flight requests, plus re-prefill charges from requantizing
+    /// imports ([`Router::charge_reprefill`]).
+    outstanding_prefill: u64,
+    /// Outstanding decode-side work in tokens (max_new budgets).
+    outstanding_decode: u64,
 }
 
 impl Replica {
     /// Outstanding token budget (load the router steers by).
     pub fn outstanding(&self) -> u64 {
-        self.outstanding
+        self.outstanding_prefill + self.outstanding_decode
+    }
+
+    /// The prefill component of [`Replica::outstanding`].
+    pub fn outstanding_prefill(&self) -> u64 {
+        self.outstanding_prefill
+    }
+
+    /// The decode component of [`Replica::outstanding`] — what the
+    /// cluster steers prefill→decode handoffs by.
+    pub fn outstanding_decode(&self) -> u64 {
+        self.outstanding_decode
     }
 }
 
@@ -54,8 +133,9 @@ pub struct Router {
     replicas: Vec<Replica>,
     policy: RoutePolicy,
     rr_next: usize,
-    /// request → replica index (so completions decrement the right one).
-    inflight: HashMap<RequestId, (usize, u64)>,
+    /// request → (replica index, prefill budget, decode budget) so
+    /// completions — and migrations — move the right components.
+    inflight: HashMap<RequestId, (usize, u64, u64)>,
     pub routed: u64,
     pub completed: u64,
     /// In-flight requests transferred between replicas by the rebalancer.
@@ -75,8 +155,19 @@ impl Router {
         }
     }
 
-    pub fn add_replica(&mut self, name: impl Into<String>, precision: PrecisionConfig) -> usize {
-        self.replicas.push(Replica { name: name.into(), precision, outstanding: 0 });
+    pub fn add_replica(
+        &mut self,
+        name: impl Into<String>,
+        precision: PrecisionConfig,
+        role: ReplicaRole,
+    ) -> usize {
+        self.replicas.push(Replica {
+            name: name.into(),
+            precision,
+            role,
+            outstanding_prefill: 0,
+            outstanding_decode: 0,
+        });
         self.replicas.len() - 1
     }
 
@@ -88,12 +179,17 @@ impl Router {
         self.policy
     }
 
-    /// Replicas able to serve a precision (exact match).
+    /// Replicas able to admit a fresh request: exact precision match AND
+    /// a prefill-capable role (every admitted request starts with a
+    /// prefill; decode-only replicas receive work via migration only).
     fn candidates(&self, precision: Option<PrecisionConfig>) -> Vec<usize> {
         self.replicas
             .iter()
             .enumerate()
-            .filter(|(_, r)| precision.map(|p| r.precision == p).unwrap_or(true))
+            .filter(|(_, r)| {
+                r.role.accepts_prefill()
+                    && precision.map(|p| r.precision == p).unwrap_or(true)
+            })
             .map(|(i, _)| i)
             .collect()
     }
@@ -115,12 +211,14 @@ impl Router {
             }
             RoutePolicy::LeastLoaded => *cands
                 .iter()
-                .min_by_key(|&&c| (self.replicas[c].outstanding, c))
+                .min_by_key(|&&c| (self.replicas[c].outstanding(), c))
                 .unwrap(),
         };
-        let budget = (req.prompt.len() + req.params.max_new_tokens) as u64;
-        self.replicas[idx].outstanding += budget;
-        self.inflight.insert(req.id, (idx, budget));
+        let prefill = req.prompt.len() as u64;
+        let decode = req.params.max_new_tokens as u64;
+        self.replicas[idx].outstanding_prefill += prefill;
+        self.replicas[idx].outstanding_decode += decode;
+        self.inflight.insert(req.id, (idx, prefill, decode));
         self.routed += 1;
         Some(idx)
     }
@@ -133,22 +231,44 @@ impl Router {
     /// None if the request isn't in flight (never routed, or already
     /// completed).  A self-migration is a no-op.
     pub fn migrate(&mut self, id: RequestId, to: usize) -> Option<usize> {
-        let (from, budget) = *self.inflight.get(&id)?;
+        let (from, prefill, decode) = *self.inflight.get(&id)?;
         if from == to {
             return Some(from);
         }
         assert!(to < self.replicas.len(), "migrate to unknown replica {to}");
-        self.replicas[from].outstanding = self.replicas[from].outstanding.saturating_sub(budget);
-        self.replicas[to].outstanding += budget;
-        self.inflight.insert(id, (to, budget));
+        self.replicas[from].outstanding_prefill =
+            self.replicas[from].outstanding_prefill.saturating_sub(prefill);
+        self.replicas[from].outstanding_decode =
+            self.replicas[from].outstanding_decode.saturating_sub(decode);
+        self.replicas[to].outstanding_prefill += prefill;
+        self.replicas[to].outstanding_decode += decode;
+        self.inflight.insert(id, (to, prefill, decode));
         self.migrated += 1;
         Some(from)
     }
 
+    /// Charge a requantizing migration's re-prefill to the importing
+    /// replica: the importer must teacher-force `tokens` (prompt +
+    /// generated so far) before the sequence can resume, and that work
+    /// was invisible to placement before this accounting existed.  The
+    /// charge grows both the in-flight record and the replica's prefill
+    /// load, so the conservation law is untouched and the eventual
+    /// completion drains exactly what was charged.  No-op for requests
+    /// not in flight.
+    pub fn charge_reprefill(&mut self, id: RequestId, tokens: u64) {
+        if let Some((idx, prefill, _)) = self.inflight.get_mut(&id) {
+            *prefill += tokens;
+            self.replicas[*idx].outstanding_prefill += tokens;
+        }
+    }
+
     /// Mark a routed request finished; releases its load accounting.
     pub fn complete(&mut self, id: RequestId) -> Option<usize> {
-        let (idx, budget) = self.inflight.remove(&id)?;
-        self.replicas[idx].outstanding = self.replicas[idx].outstanding.saturating_sub(budget);
+        let (idx, prefill, decode) = self.inflight.remove(&id)?;
+        self.replicas[idx].outstanding_prefill =
+            self.replicas[idx].outstanding_prefill.saturating_sub(prefill);
+        self.replicas[idx].outstanding_decode =
+            self.replicas[idx].outstanding_decode.saturating_sub(decode);
         self.completed += 1;
         Some(idx)
     }
@@ -157,12 +277,22 @@ impl Router {
         self.inflight.len()
     }
 
-    /// Conservation check: Σ outstanding == Σ inflight budgets.
+    /// Conservation check: Σ outstanding == Σ inflight budgets, on each
+    /// component of the prefill/decode load split independently.
     pub fn check_invariants(&self) -> Result<(), String> {
-        let tracked: u64 = self.inflight.values().map(|(_, b)| b).sum();
-        let held: u64 = self.replicas.iter().map(|r| r.outstanding).sum();
-        if tracked != held {
-            return Err(format!("load accounting drift: inflight {tracked} vs held {held}"));
+        let tracked_p: u64 = self.inflight.values().map(|(_, p, _)| p).sum();
+        let tracked_d: u64 = self.inflight.values().map(|(_, _, d)| d).sum();
+        let held_p: u64 = self.replicas.iter().map(|r| r.outstanding_prefill).sum();
+        let held_d: u64 = self.replicas.iter().map(|r| r.outstanding_decode).sum();
+        if tracked_p != held_p {
+            return Err(format!(
+                "prefill load accounting drift: inflight {tracked_p} vs held {held_p}"
+            ));
+        }
+        if tracked_d != held_d {
+            return Err(format!(
+                "decode load accounting drift: inflight {tracked_d} vs held {held_d}"
+            ));
         }
         Ok(())
     }
@@ -184,9 +314,9 @@ mod tests {
 
     fn router3(policy: RoutePolicy) -> Router {
         let mut r = Router::new(policy);
-        r.add_replica("r0", PrecisionConfig::W2A2);
-        r.add_replica("r1", PrecisionConfig::W2A2);
-        r.add_replica("r2", PrecisionConfig::W1A1);
+        r.add_replica("r0", PrecisionConfig::W2A2, ReplicaRole::Mixed);
+        r.add_replica("r1", PrecisionConfig::W2A2, ReplicaRole::Mixed);
+        r.add_replica("r2", PrecisionConfig::W1A1, ReplicaRole::Mixed);
         r
     }
 
@@ -266,16 +396,21 @@ mod tests {
             let mut r = Router::new(policy);
             let n_rep = rng.usize(1, 5);
             for i in 0..n_rep {
-                r.add_replica(format!("r{i}"), PrecisionConfig::W2A2);
+                r.add_replica(format!("r{i}"), PrecisionConfig::W2A2, ReplicaRole::Mixed);
             }
             let mut live: Vec<RequestId> = Vec::new();
             let mut next = 0u64;
             for _ in 0..rng.usize(5, 80) {
-                match rng.u32(0, 3) {
+                match rng.u32(0, 4) {
                     0 if !live.is_empty() => {
                         // migration must conserve load accounting too
                         let id = live[rng.usize(0, live.len())];
                         r.migrate(id, rng.usize(0, n_rep)).unwrap();
+                    }
+                    3 if !live.is_empty() => {
+                        // a re-prefill charge must conserve too
+                        let id = live[rng.usize(0, live.len())];
+                        r.charge_reprefill(id, rng.usize(1, 48) as u64);
                     }
                     1 if !live.is_empty() => {
                         let i = rng.usize(0, live.len());
@@ -296,7 +431,51 @@ mod tests {
                 r.complete(id).unwrap();
             }
             assert_eq!(r.inflight(), 0);
-            assert!(r.replicas().iter().all(|rep| rep.outstanding == 0));
+            assert!(r.replicas().iter().all(|rep| rep.outstanding() == 0));
         });
+    }
+
+    #[test]
+    fn decode_only_replicas_never_receive_admissions() {
+        for policy in [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded] {
+            let mut r = Router::new(policy);
+            r.add_replica("p", PrecisionConfig::W2A2, ReplicaRole::Prefill);
+            r.add_replica("d", PrecisionConfig::W2A2, ReplicaRole::Decode);
+            r.add_replica("m", PrecisionConfig::W2A2, ReplicaRole::Mixed);
+            for i in 0..8u64 {
+                let idx = r.route(&req(i, 4, 4), None).unwrap();
+                assert_ne!(idx, 1, "decode-only replica admitted a fresh request");
+            }
+            r.check_invariants().unwrap();
+        }
+        // a decode-only topology has no admission candidates at all
+        let mut r = Router::new(RoutePolicy::LeastLoaded);
+        r.add_replica("d", PrecisionConfig::W2A2, ReplicaRole::Decode);
+        assert!(r.route(&req(0, 4, 4), None).is_none());
+    }
+
+    #[test]
+    fn reprefill_charge_lands_on_the_importer_and_conserves() {
+        let mut r = router3(RoutePolicy::RoundRobin);
+        let rq = req(0, 10, 6); // prefill 10, decode 6
+        let from = r.route(&rq, None).unwrap();
+        assert_eq!(r.replicas()[from].outstanding_prefill(), 10);
+        assert_eq!(r.replicas()[from].outstanding_decode(), 6);
+        let to = (from + 1) % 3;
+        r.migrate(rq.id, to).unwrap();
+        // a requantizing import re-prefills prompt + generated (say 12
+        // tokens): the importer's prefill load must grow by exactly that
+        r.charge_reprefill(rq.id, 12);
+        assert_eq!(r.replicas()[to].outstanding_prefill(), 22);
+        assert_eq!(r.replicas()[to].outstanding_decode(), 6);
+        assert_eq!(r.replicas()[from].outstanding(), 0);
+        r.check_invariants().unwrap();
+        // completion drains the grown budget, not the original
+        r.complete(rq.id).unwrap();
+        assert_eq!(r.replicas()[to].outstanding(), 0);
+        r.check_invariants().unwrap();
+        // charging an unknown request is a harmless no-op
+        r.charge_reprefill(RequestId(99), 7);
+        r.check_invariants().unwrap();
     }
 }

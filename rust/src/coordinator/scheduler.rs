@@ -2,7 +2,8 @@
 //! [`Backend`], now a streaming [`Stepper`]: every iteration emits
 //! [`TokenEvent`]s as sequences admit, generate, and finish.  It
 //! reserves each sequence's full budget up front, so it never preempts
-//! — and therefore never emits `Preempted`/`Migrated`/`Resumed`; its
+//! — and therefore never emits `Preempted`/`Migrated`/`Resumed` (nor
+//! the cluster-only `PrefillDone` handoff marker); its
 //! KV pool keeps the default LRU eviction order but the order is moot
 //! without a prefix cache on this path (`KvPool::admit` only).
 //!

@@ -13,7 +13,9 @@
 //! [`TokenEvent::Migrated`] (and, across precision boundaries,
 //! [`TokenEvent::Requantized`]) rides the same channel: the client
 //! observes the replica hand-off as a pause annotation, never as a
-//! change in the already-streamed token bytes.
+//! change in the already-streamed token bytes.  On a disaggregated
+//! cluster [`TokenEvent::PrefillDone`] streams the same way, marking the
+//! voluntary prefill→decode handoff immediately before its `Migrated`.
 //!
 //! PJRT handles are not `Send`, so the backend lives on the thread that
 //! calls [`Server::serve`]; request producers feed the `Sender` from any

@@ -79,6 +79,26 @@ impl TraceConfig {
             ..Self::default()
         }
     }
+
+    /// Prefill-heavy bursty preset: long prompts, short generations,
+    /// arriving in back-to-back bursts — the workload disaggregated
+    /// prefill/decode serving exists for.  Each burst drops several long
+    /// prefills on the cluster at once; on a mixed deployment those
+    /// prefills stall the inter-token latency of every sequence already
+    /// decoding, while a prefill/decode split absorbs the burst on the
+    /// prefill tier and keeps the decode tier's ITL flat.  The serving
+    /// bench's `disaggregated` section replays this trace against both
+    /// topologies and reports per-role TTFT/ITL.
+    pub fn prefill_heavy(requests: usize, burst_size: usize, period_s: f64, seed: u64) -> Self {
+        Self {
+            kind: ArrivalKind::Bursty { burst_size, period_s },
+            requests,
+            prompt_len: (24, 49),
+            max_new: (4, 9),
+            seed,
+            ..Self::default()
+        }
+    }
 }
 
 /// A request plus its arrival offset from trace start.
@@ -258,6 +278,31 @@ mod tests {
         );
         // deterministic like every other preset
         let tr2 = generate(&TraceConfig::decode_heavy(50, 100.0, 7));
+        assert!(tr.iter().zip(&tr2).all(|(a, b)| a.request.prompt == b.request.prompt));
+    }
+
+    #[test]
+    fn prefill_heavy_preset_is_prefill_dominated_and_bursty() {
+        let tr = generate(&TraceConfig::prefill_heavy(24, 6, 0.5, 9));
+        assert_eq!(tr.len(), 24);
+        let (mut prompt_tokens, mut decode_tokens) = (0usize, 0usize);
+        for t in &tr {
+            assert!((24..49).contains(&t.request.prompt.len()));
+            assert!((4..9).contains(&t.request.params.max_new_tokens));
+            assert!(!t.request.params.sample, "preset must be greedy");
+            prompt_tokens += t.request.prompt.len();
+            decode_tokens += t.request.params.max_new_tokens;
+        }
+        assert!(
+            prompt_tokens >= 3 * decode_tokens,
+            "prefill ({prompt_tokens}) must dominate decode ({decode_tokens})"
+        );
+        // bursts of 6 land together
+        assert_eq!(tr[0].at_s, 0.0);
+        assert_eq!(tr[5].at_s, 0.0);
+        assert_eq!(tr[6].at_s, 0.5);
+        assert_eq!(tr[23].at_s, 1.5);
+        let tr2 = generate(&TraceConfig::prefill_heavy(24, 6, 0.5, 9));
         assert!(tr.iter().zip(&tr2).all(|(a, b)| a.request.prompt == b.request.prompt));
     }
 

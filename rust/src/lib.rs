@@ -42,7 +42,15 @@
 //!   precision out of **one shared superset weight store** (packed once
 //!   at the widest precision; no per-precision duplication) — behind a
 //!   routing policy (round-robin / least-loaded, with per-request
-//!   precision pinning), with **preemptive rebalancing**: swapped
+//!   precision pinning).  Topologies are declared as a
+//!   `ClusterSpec` of `ReplicaSpec`s and built in one `Cluster::new`
+//!   call; **replica roles** make prefill/decode disaggregation
+//!   first-class — `Prefill` replicas admit and prefill, then hand each
+//!   freshly prefilled sequence (`TokenEvent::PrefillDone`) to the
+//!   decode-capable peer `Engine::import_fit` admits, `Decode` replicas
+//!   are fed exclusively by migration, and all-`Mixed` is the symmetric
+//!   baseline, byte-for-byte.  The cluster also does **preemptive
+//!   rebalancing**: swapped
 //!   sequences an overloaded replica cannot resume migrate to
 //!   same-precision peers and continue byte-identically, or — unpinned,
 //!   with no same-precision escape — **across the precision boundary**:
@@ -57,7 +65,7 @@
 //!   measurements.  Its `SimBackend` serves real bitmm logits through
 //!   the pack-once pipeline (`SimBackend::with_ap_gemm`), sharded
 //!   across the worker pool on the hot path; `EngineConfig::workers`
-//!   and `Cluster::set_worker_budget` size the per-replica GEMM
+//!   and `ClusterSpec::worker_budget` size the per-replica GEMM
 //!   parallelism so N replicas never oversubscribe the host.  The
 //!   engine can **self-speculate** (`EngineConfig::spec_k`): draft
 //!   tokens from a low-bit plane prefix of the same superset pack and

@@ -20,12 +20,21 @@
 //!   swapped sequence **migrates across the precision boundary via
 //!   re-prefill** with a byte-identical greedy token stream (already
 //!   streamed bytes teacher-forced, continuation pinned by a composite
-//!   two-precision oracle) and zero leaked KV blocks on both replicas.
+//!   two-precision oracle) and zero leaked KV blocks on both replicas;
+//! * (PR 9) a **disaggregated prefill/decode cluster** (one prefill-role
+//!   and one decode-role replica, built through the `ClusterSpec` /
+//!   `ReplicaSpec` API like every cluster here) serves a bursty
+//!   prefill-heavy workload with streams byte-identical to both the
+//!   unbatched oracle and an all-Mixed cluster, `PrefillDone`
+//!   immediately preceding each handoff's `Migrated`, every migration
+//!   targeting a decode-capable replica, and zero KV leaks — with a
+//!   property test driving random role topologies through tight pools.
 
 use apllm::coordinator::trace::{generate, TraceConfig};
 use apllm::coordinator::{
     drive_unbatched, responses_of, sample_token, superset_store, ArrivalKind, Backend, Cluster,
-    EngineConfig, GenParams, Request, RoutePolicy, SimBackend, Stepper, TokenEvent,
+    ClusterSpec, EngineConfig, GenParams, ReplicaRole, ReplicaSpec, Request, RoutePolicy,
+    SimBackend, Stepper, TokenEvent,
 };
 use apllm::model::PrecisionConfig;
 use apllm::util::proptest::forall;
@@ -66,16 +75,13 @@ fn shared_prefix_requests(n: usize) -> Vec<Request> {
 }
 
 fn build_cluster(sharing: bool) -> Cluster<SimBackend> {
-    let mut c = Cluster::new(RoutePolicy::LeastLoaded);
+    let mut spec = ClusterSpec::new(RoutePolicy::LeastLoaded);
     for i in 0..3 {
-        c.add_replica(
-            format!("r{i}"),
-            PrecisionConfig::W2A2,
-            replica_backend(),
-            engine_cfg(sharing),
+        spec = spec.replica(
+            ReplicaSpec::new(format!("r{i}"), PrecisionConfig::W2A2).engine(engine_cfg(sharing)),
         );
     }
-    c
+    Cluster::new(spec, |_| replica_backend())
 }
 
 #[test]
@@ -168,20 +174,16 @@ fn three_replica_cluster_streams_oracle_identical_tokens_and_saves_blocks() {
 /// Two-replica cluster with a deliberately undersized "hot" replica 0 —
 /// the migration scenario's fixture.
 fn hot_cold_cluster() -> Cluster<SimBackend> {
-    let mut c = Cluster::new(RoutePolicy::LeastLoaded);
-    c.add_replica(
-        "hot",
-        PrecisionConfig::W2A2,
-        replica_backend(),
-        EngineConfig { kv_blocks: 6, block_tokens: 4, ..engine_cfg(true) },
-    );
-    c.add_replica(
-        "cold",
-        PrecisionConfig::W2A2,
-        replica_backend(),
-        EngineConfig { kv_blocks: 32, block_tokens: 4, ..engine_cfg(true) },
-    );
-    c
+    let spec = ClusterSpec::new(RoutePolicy::LeastLoaded)
+        .replica(
+            ReplicaSpec::new("hot", PrecisionConfig::W2A2)
+                .engine(EngineConfig { kv_blocks: 6, block_tokens: 4, ..engine_cfg(true) }),
+        )
+        .replica(
+            ReplicaSpec::new("cold", PrecisionConfig::W2A2)
+                .engine(EngineConfig { kv_blocks: 32, block_tokens: 4, ..engine_cfg(true) }),
+        );
+    Cluster::new(spec, |_| replica_backend())
 }
 
 #[test]
@@ -344,19 +346,16 @@ fn mixed_precision_cluster_serves_one_store_and_requantizes_via_reprefill() {
         SimBackend::with_shared_store(256, vec![1, 2, 4, 8], store.clone(), nw, nx)
     };
 
-    let mut cluster = Cluster::new(RoutePolicy::LeastLoaded);
-    cluster.add_replica(
-        "hot-w4",
-        PrecisionConfig::W4A4,
-        backend_at(4, 4),
-        EngineConfig { kv_blocks: 6, block_tokens: 4, ..engine_cfg(true) },
-    );
-    cluster.add_replica(
-        "cold-w2",
-        PrecisionConfig::W2A2,
-        backend_at(2, 2),
-        EngineConfig { kv_blocks: 32, block_tokens: 4, ..engine_cfg(true) },
-    );
+    let spec = ClusterSpec::new(RoutePolicy::LeastLoaded)
+        .replica(
+            ReplicaSpec::new("hot-w4", PrecisionConfig::W4A4)
+                .engine(EngineConfig { kv_blocks: 6, block_tokens: 4, ..engine_cfg(true) }),
+        )
+        .replica(
+            ReplicaSpec::new("cold-w2", PrecisionConfig::W2A2)
+                .engine(EngineConfig { kv_blocks: 32, block_tokens: 4, ..engine_cfg(true) }),
+        );
+    let mut cluster = Cluster::new(spec, |r| backend_at(r.precision.nw, r.precision.nx));
     // ONE store for the whole cluster: every replica reports the same
     // superset bytes (count it once) and nobody packed anything itself
     for eng in cluster.engines() {
@@ -478,14 +477,16 @@ fn mixed_precision_cluster_serves_one_store_and_requantizes_via_reprefill() {
 fn mixed_precision_cluster_pins_requests_to_matching_replicas() {
     // two precisions behind one endpoint (the Any-Precision deployment
     // story): pinned requests land only on matching replicas
-    let mut c = Cluster::new(RoutePolicy::LeastLoaded);
-    c.add_replica("w2", PrecisionConfig::W2A2, replica_backend(), engine_cfg(true));
-    c.add_replica(
-        "w1",
-        PrecisionConfig::W1A1,
-        SimBackend::with_ap_gemm(64, 256, vec![1, 2, 4, 8], 64, 1, 1, 29),
-        engine_cfg(true),
-    );
+    let spec = ClusterSpec::new(RoutePolicy::LeastLoaded)
+        .replica(ReplicaSpec::new("w2", PrecisionConfig::W2A2).engine(engine_cfg(true)))
+        .replica(ReplicaSpec::new("w1", PrecisionConfig::W1A1).engine(engine_cfg(true)));
+    let mut c = Cluster::new(spec, |r| {
+        if r.precision == PrecisionConfig::W1A1 {
+            SimBackend::with_ap_gemm(64, 256, vec![1, 2, 4, 8], 64, 1, 1, 29)
+        } else {
+            replica_backend()
+        }
+    });
     for i in 0..8u64 {
         let pin = if i % 2 == 0 { PrecisionConfig::W2A2 } else { PrecisionConfig::W1A1 };
         let mut r = Request::new(
@@ -504,4 +505,246 @@ fn mixed_precision_cluster_pins_requests_to_matching_replicas() {
     assert_eq!(c.engine(1).counters().completed, 4, "W1A1 pins went to w1");
     assert_eq!(c.unroutable(), 0);
     c.check_invariants().unwrap();
+}
+
+/// Per-request lifecycle grammar around migrations, as a paused-state
+/// machine: a `Migrated` is only legal while its request is paused (its
+/// own `PrefillDone` or `Preempted` streamed, with no token since — a
+/// swapped sequence may migrate more than once under churn without a
+/// fresh `Preempted`), no token streams while paused, and every pause
+/// ends in a `Resumed` before the run drains.
+fn assert_migration_grammar(events: &[TokenEvent]) {
+    use std::collections::HashSet;
+    let mut paused: HashSet<u64> = HashSet::new();
+    for ev in events {
+        match ev {
+            TokenEvent::PrefillDone { id } | TokenEvent::Preempted { id } => {
+                paused.insert(id.0);
+            }
+            TokenEvent::Migrated { id, .. } => {
+                assert!(
+                    paused.contains(&id.0),
+                    "Migrated for {} without a preceding PrefillDone/Preempted pause",
+                    id.0
+                );
+            }
+            TokenEvent::Resumed { id } => {
+                assert!(paused.remove(&id.0), "Resumed for {} while not paused", id.0);
+            }
+            TokenEvent::Token { id, .. } => {
+                assert!(!paused.contains(&id.0), "request {} streamed a token while paused", id.0);
+            }
+            _ => {}
+        }
+    }
+    assert!(paused.is_empty(), "requests still paused after drain: {paused:?}");
+}
+
+#[test]
+fn disaggregated_split_cluster_streams_match_mixed_oracle_with_clean_handoffs() {
+    // THE PR 9 acceptance scenario: a prefill-role replica and a
+    // decode-role replica serve a bursty prefill-heavy trace.  Every
+    // request admits on the prefill replica, prefills, streams
+    // PrefillDone immediately before its Migrated, and decodes to
+    // completion on the decode replica — with every streamed byte
+    // identical to BOTH the unbatched oracle and an all-Mixed cluster of
+    // the same shape (disaggregation redistributes work; it never
+    // changes tokens).
+    let reqs: Vec<Request> = generate(&TraceConfig {
+        vocab: 64,
+        ..TraceConfig::prefill_heavy(10, 4, 0.0, 23)
+    })
+    .into_iter()
+    .map(|t| t.request)
+    .collect();
+    let mut oracle = replica_backend();
+    let want: Vec<Vec<i32>> =
+        reqs.iter().map(|r| drive_unbatched(&mut oracle, &r.prompt, &r.params).unwrap()).collect();
+
+    let build = |roles: [ReplicaRole; 2]| {
+        let spec = ClusterSpec::new(RoutePolicy::LeastLoaded)
+            .replica(
+                ReplicaSpec::new(format!("r0-{}", roles[0].label()), PrecisionConfig::W2A2)
+                    .role(roles[0])
+                    .engine(EngineConfig { kv_blocks: 32, block_tokens: 4, ..engine_cfg(true) }),
+            )
+            .replica(
+                // the decode tier is provisioned so every handoff fits
+                // (10 requests × ≤14 blocks each, decode slots > 10) —
+                // the prefill replica should never have to decode locally
+                ReplicaSpec::new(format!("r1-{}", roles[1].label()), PrecisionConfig::W2A2)
+                    .role(roles[1])
+                    .engine(EngineConfig {
+                        kv_blocks: 160,
+                        block_tokens: 4,
+                        max_running: 12,
+                        ..engine_cfg(true)
+                    }),
+            );
+        Cluster::new(spec, |_| replica_backend())
+    };
+    let sorted_stream = |events: &[TokenEvent]| {
+        let mut s: Vec<(u64, usize, i32)> = events
+            .iter()
+            .filter_map(|e| match e {
+                TokenEvent::Token { id, token, step } => Some((id.0, *step, *token)),
+                _ => None,
+            })
+            .collect();
+        s.sort_unstable();
+        s
+    };
+
+    let mut split = build([ReplicaRole::Prefill, ReplicaRole::Decode]);
+    let mut mixed = build([ReplicaRole::Mixed, ReplicaRole::Mixed]);
+    for r in &reqs {
+        split.submit(r.clone());
+        mixed.submit(r.clone());
+    }
+    let split_events = split.run_to_completion_events().unwrap();
+    let mixed_events = mixed.run_to_completion_events().unwrap();
+
+    // streams: split ≡ mixed ≡ unbatched oracle, per request and in full
+    assert_eq!(sorted_stream(&split_events), sorted_stream(&mixed_events));
+    let mut out = responses_of(&split_events);
+    out.sort_by_key(|r| r.id);
+    assert_eq!(out.len(), reqs.len());
+    for (resp, want) in out.iter().zip(&want) {
+        assert!(!resp.tokens.is_empty(), "request {} rejected", resp.id.0);
+        assert_eq!(resp.tokens, *want, "request {} ≠ oracle on the split cluster", resp.id.0);
+    }
+
+    // handoffs happened, were all voluntary, and all landed on the
+    // decode-capable replica
+    assert!(split.prefill_handoffs() > 0, "prefill tier must hand work to the decode tier");
+    assert_eq!(split.prefill_handoffs(), split.migrations(), "all moves were handoffs here");
+    let prefill_done =
+        split_events.iter().filter(|e| matches!(e, TokenEvent::PrefillDone { .. })).count();
+    assert_eq!(prefill_done as u64, split.prefill_handoffs(), "every handoff streamed a marker");
+    for (i, ev) in split_events.iter().enumerate() {
+        // the handoff marker is adjacent: PrefillDone streams immediately
+        // before its own Migrated
+        if let TokenEvent::PrefillDone { id } = ev {
+            assert!(
+                matches!(split_events.get(i + 1),
+                    Some(TokenEvent::Migrated { id: m, .. }) if m == id),
+                "PrefillDone for {} not immediately followed by its Migrated",
+                id.0
+            );
+        }
+        if let TokenEvent::Migrated { to, .. } = ev {
+            assert!(
+                split.router().replicas()[*to].role.accepts_decode(),
+                "migration targeted a prefill-only replica"
+            );
+        }
+    }
+    assert_migration_grammar(&split_events);
+    assert_migration_grammar(&mixed_events);
+    // the decode replica never admits fresh work; the prefill replica
+    // never finishes a stream (its holds always found a taker here)
+    assert_eq!(split.engine(1).counters().prefills, 0, "decode replica must not prefill");
+    assert_eq!(split.engine(0).counters().completed, 0, "prefill replica must not decode");
+    assert_eq!(split.engine(1).counters().completed as usize, reqs.len());
+    assert!(mixed.prefill_handoffs() == 0, "mixed replicas never hold or hand off");
+
+    // zero KV leaks on both tiers, router drained, invariants hold
+    for c in [&split, &mixed] {
+        c.check_invariants().unwrap();
+        for (i, eng) in c.engines().iter().enumerate() {
+            assert_eq!(eng.pool().free_blocks(), eng.pool().total_blocks(), "replica {i} leaked");
+            assert_eq!(eng.pool().used_blocks(), 0, "replica {i} leaked refcounts");
+        }
+        assert_eq!(c.router().inflight(), 0);
+    }
+}
+
+#[test]
+fn prop_random_role_topologies_respect_roles_and_match_the_oracle() {
+    // random role assignments over 2–3 replicas with tight pools: under
+    // any interleaving of handoffs, preemptions, and rebalances, every
+    // stream matches the unbatched oracle, a decoding sequence never
+    // lands on a prefill-only replica, and both pools drain clean.
+    let total_handoffs = std::cell::Cell::new(0u64);
+    forall(16, |rng| {
+        let n_replicas = rng.usize(2, 4);
+        let roles: Vec<ReplicaRole> = (0..n_replicas)
+            .map(|i| {
+                if i == 0 {
+                    // replica 0 is always prefill-capable so every
+                    // request routes (the spec builder insists on one)
+                    if rng.bool() { ReplicaRole::Prefill } else { ReplicaRole::Mixed }
+                } else {
+                    match rng.usize(0, 3) {
+                        0 => ReplicaRole::Prefill,
+                        1 => ReplicaRole::Decode,
+                        _ => ReplicaRole::Mixed,
+                    }
+                }
+            })
+            .collect();
+        let mut spec = ClusterSpec::new(RoutePolicy::LeastLoaded);
+        for (i, &role) in roles.iter().enumerate() {
+            // prefill-capable pools stay tight (6 blocks = 24 tokens, so
+            // concurrent budgets preempt); pure decode pools are roomier
+            let kv_blocks = if role == ReplicaRole::Decode { 32 } else { 6 };
+            spec = spec.replica(
+                ReplicaSpec::new(format!("r{i}"), PrecisionConfig::W2A2)
+                    .role(role)
+                    .engine(EngineConfig { kv_blocks, block_tokens: 4, ..engine_cfg(true) }),
+            );
+        }
+        let mut cluster = Cluster::new(spec, |_| replica_backend());
+
+        let n = rng.usize(3, 12);
+        let reqs: Vec<Request> = (0..n)
+            .map(|i| {
+                let plen = rng.usize(1, 13);
+                let max_new = rng.usize(1, 21 - plen); // budget ≤ 20 tokens (5 of 6 blocks)
+                let base = rng.u32(1, 50) as i32;
+                Request::new(
+                    i as u64,
+                    (base..base + plen as i32).collect(),
+                    GenParams { max_new_tokens: max_new, sample: rng.bool(), seed: i as u64 },
+                )
+            })
+            .collect();
+        let mut oracle = replica_backend();
+        let want: Vec<Vec<i32>> = reqs
+            .iter()
+            .map(|r| drive_unbatched(&mut oracle, &r.prompt, &r.params).unwrap())
+            .collect();
+        for r in &reqs {
+            cluster.submit(r.clone());
+        }
+        let events = cluster.run_to_completion_events().unwrap();
+        let mut out = responses_of(&events);
+        out.sort_by_key(|r| r.id);
+        assert_eq!(out.len(), n);
+        for (resp, want) in out.iter().zip(&want) {
+            assert_eq!(resp.tokens, *want, "request {} ≠ oracle (roles {roles:?})", resp.id.0);
+        }
+        // the role contract under churn: every migration — handoff or
+        // rebalance — landed on a decode-capable replica
+        for ev in &events {
+            if let TokenEvent::Migrated { to, .. } = ev {
+                assert!(
+                    roles[*to].accepts_decode(),
+                    "migration to prefill-only replica {to} (roles {roles:?})"
+                );
+            }
+        }
+        assert_migration_grammar(&events);
+        cluster.check_invariants().unwrap_or_else(|e| panic!("invariant: {e}"));
+        for (i, eng) in cluster.engines().iter().enumerate() {
+            assert_eq!(eng.pool().free_blocks(), eng.pool().total_blocks(), "replica {i} leaked");
+            eng.pool().check_invariants().unwrap_or_else(|e| panic!("replica {i}: {e}"));
+        }
+        assert_eq!(cluster.router().inflight(), 0);
+        total_handoffs.set(total_handoffs.get() + cluster.prefill_handoffs());
+    });
+    assert!(
+        total_handoffs.get() > 0,
+        "random topologies must exercise the prefill→decode handoff at least once"
+    );
 }
