@@ -19,7 +19,8 @@
 //! Run: `cargo run --release --example llm_serving -- [--requests N] [--rate R] [--sim]
 //!       [--replicas N] [--route-policy least-loaded]`
 //! (PJRT path additionally needs `make artifacts` and `--features pjrt`;
-//! `--group-scheduler` falls back to the group-batching scheduler.)
+//! `--admission reserve` books each request's full budget up front and
+//! never preempts — the retired group scheduler's semantics.)
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();

@@ -1,43 +1,53 @@
-//! L3 coordinator bench: scheduler throughput and batcher overhead under
+//! L3 coordinator bench: engine throughput and batcher overhead under
 //! synthetic load (SimBackend — isolates coordination cost from compute).
+//! The engine runs under `AdmissionPolicy::Reserve` — the retired group
+//! scheduler's full-budget admission — so the series stays comparable
+//! with the pre-fold numbers.
 
 use apllm::bench::bench_fn;
 use apllm::coordinator::{
-    Backend, Batcher, BatcherConfig, GenParams, Request, Scheduler, SchedulerConfig, SimBackend,
+    AdmissionPolicy, Backend, Batcher, BatcherConfig, Engine, EngineConfig, GenParams, Request,
+    SimBackend,
 };
 use std::time::{Duration, Instant};
 
-fn sched_run(n_requests: usize, max_running: usize, step_latency: Duration) -> f64 {
+fn engine_run(n_requests: usize, max_running: usize, step_latency: Duration) -> f64 {
     let mut backend = SimBackend::new(1024, 128, vec![1, 2, 4, 8]);
     backend.step_latency = step_latency;
-    let mut s = Scheduler::new(
+    let mut e = Engine::new(
         backend,
-        SchedulerConfig { kv_blocks: 256, block_tokens: 16, max_running },
+        EngineConfig {
+            kv_blocks: 256,
+            block_tokens: 16,
+            max_running,
+            admission: AdmissionPolicy::Reserve,
+            ..EngineConfig::default()
+        },
     );
     for i in 0..n_requests {
-        s.submit(Request::new(
+        e.submit(Request::new(
             i as u64,
             vec![1, 2, 3, 4, 5, 6, 7, 8],
             GenParams { max_new_tokens: 16, sample: false, seed: i as u64 },
         ));
     }
-    let out = s.run_to_completion().unwrap();
+    let out = e.run_to_completion().unwrap();
     assert_eq!(out.len(), n_requests);
-    s.metrics.throughput_tok_s()
+    e.metrics.throughput_tok_s()
 }
 
 fn main() {
-    println!("== coordinator: scheduler overhead (SimBackend, zero device latency) ==");
+    println!("== coordinator: engine overhead (SimBackend, zero device latency) ==");
     for max_running in [1usize, 2, 4, 8] {
-        let label = format!("scheduler 64 reqs, max_running={max_running}");
+        let label = format!("engine (reserve admission) 64 reqs, max_running={max_running}");
         bench_fn(&label, 1, 5, || {
-            std::hint::black_box(sched_run(64, max_running, Duration::ZERO));
+            std::hint::black_box(engine_run(64, max_running, Duration::ZERO));
         });
     }
 
     println!("\n== coordinator: batching payoff with 1ms simulated step latency ==");
     for max_running in [1usize, 4, 8] {
-        let tput = sched_run(32, max_running, Duration::from_millis(1));
+        let tput = engine_run(32, max_running, Duration::from_millis(1));
         println!("  max_running={max_running}: {tput:.0} tok/s");
     }
 
@@ -46,34 +56,41 @@ fn main() {
         let run = |workers: usize| {
             let mut backend = SimBackend::with_ap_gemm(256, 128, vec![1, 2, 4, 8], 256, 2, 2, 7);
             backend.set_workers(workers);
-            let mut s = Scheduler::new(
+            let mut e = Engine::new(
                 backend,
-                SchedulerConfig { kv_blocks: 256, block_tokens: 16, max_running: 8 },
+                EngineConfig {
+                    kv_blocks: 256,
+                    block_tokens: 16,
+                    max_running: 8,
+                    admission: AdmissionPolicy::Reserve,
+                    ..EngineConfig::default()
+                },
             );
             for i in 0..32usize {
-                s.submit(Request::new(
+                e.submit(Request::new(
                     i as u64,
                     vec![1, 2, 3, 4, 5, 6, 7, 8],
                     GenParams { max_new_tokens: 16, sample: false, seed: i as u64 },
                 ));
             }
-            let out = s.run_to_completion().unwrap();
+            let out = e.run_to_completion().unwrap();
             assert_eq!(out.len(), 32);
-            s
+            e
         };
         for workers in [1usize, 2] {
-            let label = format!("scheduler 32 reqs over prepacked W2A2 lm-head, {workers}w");
+            let label =
+                format!("engine (reserve admission) 32 reqs over prepacked W2A2 lm-head, {workers}w");
             bench_fn(&label, 1, 5, || {
                 std::hint::black_box(run(workers));
             });
         }
-        let s = run(1);
-        let stats = s.backend().ap_stats().unwrap();
+        let e = run(1);
+        let stats = e.backend().ap_stats().unwrap();
         println!(
             "  tok/s {:.0}; weight packs {} (packed once, {} bytes resident), act packs {}, arena allocs {}, reuses {}",
-            s.metrics.throughput_tok_s(),
+            e.metrics.throughput_tok_s(),
             stats.weight_packs,
-            s.backend().packed_weight_bytes(),
+            e.backend().packed_weight_bytes(),
             stats.act_packs,
             stats.arena_allocs,
             stats.arena_reuses

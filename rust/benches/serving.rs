@@ -40,6 +40,13 @@
 //!    byte-identical to the mixed oracle, reporting per-role TTFT/ITL
 //!    against the mixed baseline plus the handoff counters.
 //!
+//! 8. **admission policy** — Reserve (the retired group scheduler's
+//!    full-budget admission, now `EngineConfig::admission`) vs Optimistic
+//!    on one overloaded Poisson backlog over a tight KV pool: admitted
+//!    count inside a fixed probe window, preemption/resume counters, and
+//!    drain goodput, with Reserve asserted preemption-free and Optimistic
+//!    asserted to admit at least as much.
+//!
 //! `cargo bench --bench serving` for the full table; pass `--smoke` for
 //! the one-row CI job (and `--smoke --cluster` for the cluster smoke)
 //! that keeps these paths building and running.  `--json <path>` emits
@@ -51,9 +58,9 @@
 use apllm::bitmm::{apmm_bipolar_packed_into, pack_codes, ApmmOpts, CodeMatrix, ShardPolicy};
 use apllm::coordinator::trace::{generate, TimedRequest, TraceConfig};
 use apllm::coordinator::{
-    replay_trace, responses_of, superset_store, ArrivalKind, BatcherConfig, Cluster, ClusterSpec,
-    Engine, EngineConfig, EvictionPolicy, KvPool, KvSharing, ReplicaRole, ReplicaSpec,
-    RoutePolicy, SimBackend, Stepper, TokenEvent,
+    replay_trace, responses_of, superset_store, AdmissionPolicy, ArrivalKind, BatcherConfig,
+    Cluster, ClusterSpec, Engine, EngineConfig, EvictionPolicy, KvPool, KvSharing, ReplicaRole,
+    ReplicaSpec, RoutePolicy, SimBackend, Stepper, TokenEvent,
 };
 use apllm::model::PrecisionConfig;
 use apllm::util::json::Json;
@@ -76,6 +83,7 @@ fn engine_cfg(prefix_sharing: bool, eviction: EvictionPolicy, kv_blocks: usize) 
         spec_k: 0,
         draft_bits: 0,
         prefill_hold: false, // Cluster::new flips this on for prefill roles
+        admission: AdmissionPolicy::Optimistic,
     }
 }
 
@@ -791,6 +799,87 @@ fn cluster(rate: f64, requests: usize, replicas: usize) -> Json {
     ])
 }
 
+/// Reserve vs Optimistic admission over the SAME overloaded Poisson
+/// workload on a deliberately tight KV pool: the whole trace lands as an
+/// up-front backlog, a fixed probe window counts how much each policy
+/// has admitted, then both drain for goodput.  Optimistic books only the
+/// prompt and grows per token (preempting on pressure), so it must admit
+/// at least as much as Reserve inside the probe window; Reserve books
+/// `prompt + max_new` up front, so it must never preempt.  Both
+/// contracts are asserted here (and gated again in CI off the artifact).
+fn admission(smoke: bool) -> Json {
+    println!("\n== serving: admission policy (Reserve vs Optimistic), overloaded Poisson backlog ==");
+    let requests = if smoke { 12 } else { 48 };
+    let probe_steps = 3;
+    let trace = generate(&TraceConfig {
+        kind: ArrivalKind::Poisson { rate: 800.0 },
+        requests,
+        prompt_len: (4, 12),
+        max_new: (8, 16),
+        vocab: 256,
+        seed: 11,
+        shared_prefixes: 0,
+        prefix_len: 0,
+        prefix_skew: 0.0,
+    });
+    let run = |policy: AdmissionPolicy| {
+        // 12 blocks × 8 tokens: far below the backlog's aggregate budget,
+        // so admission policy — not compute — decides the schedule
+        let cfg = EngineConfig { admission: policy, ..engine_cfg(false, EvictionPolicy::Lru, 12) };
+        let mut eng = Engine::new(ap_backend(), cfg);
+        eng.start_clock();
+        for tr in &trace {
+            eng.submit(tr.request.clone());
+        }
+        let mut events = Vec::new();
+        for _ in 0..probe_steps {
+            events.extend(eng.step().expect("probe step"));
+        }
+        let admitted_at_probe = eng.counters().prefills;
+        while !eng.is_idle() {
+            events.extend(eng.step().expect("drain step"));
+        }
+        eng.stop_clock();
+        let done = responses_of(&events).len();
+        assert_eq!(done, requests, "overload must delay, not drop, requests");
+        assert_eq!(
+            eng.pool().free_blocks(),
+            eng.pool().total_blocks(),
+            "policy {policy:?} leaked KV blocks"
+        );
+        let cnt = eng.counters();
+        let tok_s = eng.metrics.throughput_tok_s();
+        println!(
+            "  {policy:?}: admitted {admitted_at_probe} in {probe_steps} steps | done {done} | \
+             {tok_s:.0} tok/s | preemptions {} | resumes {}",
+            cnt.preemptions, cnt.resumes
+        );
+        (admitted_at_probe, cnt, tok_s, done)
+    };
+    let (res_admitted, res_cnt, res_tok_s, res_done) = run(AdmissionPolicy::Reserve);
+    let (opt_admitted, opt_cnt, opt_tok_s, opt_done) = run(AdmissionPolicy::Optimistic);
+    assert_eq!(res_cnt.preemptions, 0, "Reserve booked the full budget yet preempted");
+    assert!(
+        opt_admitted >= res_admitted,
+        "Optimistic admitted {opt_admitted} < Reserve {res_admitted} in the probe window"
+    );
+    let policy_obj = |admitted: u64, cnt: apllm::coordinator::EngineCounters, tok_s: f64, done: usize| {
+        obj(vec![
+            ("admitted_at_probe", num("admitted_at_probe", admitted as f64)),
+            ("preemptions", num("preemptions", cnt.preemptions as f64)),
+            ("resumes", num("resumes", cnt.resumes as f64)),
+            ("done", pos("done", done as f64)),
+            ("tok_s", pos("tok_s", tok_s)),
+        ])
+    };
+    obj(vec![
+        ("requests", pos("requests", requests as f64)),
+        ("probe_steps", pos("probe_steps", probe_steps as f64)),
+        ("reserve", policy_obj(res_admitted, res_cnt, res_tok_s, res_done)),
+        ("optimistic", policy_obj(opt_admitted, opt_cnt, opt_tok_s, opt_done)),
+    ])
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let smoke = args.iter().any(|a| a == "--smoke");
@@ -841,6 +930,7 @@ fn main() {
         report.insert("thread_scaling".into(), thread_scaling(smoke));
         report.insert("speculative".into(), speculative(smoke, spec_k, draft_bits));
         report.insert("disaggregated".into(), disaggregated(smoke, &roles));
+        report.insert("admission".into(), admission(smoke));
     }
 
     if let Some(path) = json_path {

@@ -1,10 +1,10 @@
-//! Execution backends for the scheduler.
+//! Execution backends for the serving engine.
 //!
 //! `Backend` abstracts one model replica at the granularity continuous
 //! batching needs: per-sequence prefill and per-slot batched decode.
 //! `PjrtBackend` runs the real AOT artifacts (`pjrt` cargo feature);
 //! `SimBackend` is a deterministic stand-in (fake logits, optional
-//! synthetic step latency) for scheduler tests and the coordinator bench.
+//! synthetic step latency) for engine tests and the coordinator bench.
 //! `SimBackend::with_ap_gemm` upgrades the stand-in to compute real
 //! logits through the **pack-once bitmm pipeline**: the weight matrix is
 //! decomposed+packed exactly once at construction and every decode step
@@ -34,7 +34,7 @@ use crate::runtime::{lit_f32, ModelRunner};
 use std::sync::Arc;
 
 /// Host-resident KV state of ONE sequence: `(L, max_seq, Hkv, Dh)` f32,
-/// plus the next write position.  The scheduler owns these; backends
+/// plus the next write position.  The engine owns these; backends
 /// gather them into device group tensors per step.
 #[derive(Debug, Clone)]
 pub struct SeqKv {
@@ -72,8 +72,8 @@ pub(crate) trait HasSeqKv {
 
 /// Collect `&mut SeqKv` at the ascending `idx` positions of `seqs`
 /// without unsafe or a double mutable borrow (split_at_mut
-/// partitioning).  Shared by the scheduler's and the engine's
-/// batched-decode gather so the tricky slice arithmetic lives once.
+/// partitioning).  Used by the engine's batched-decode gather so the
+/// tricky slice arithmetic lives once.
 pub(crate) fn gather_kv_refs<'a, T: HasSeqKv>(
     seqs: &'a mut [T],
     idx: &[usize],
@@ -459,7 +459,7 @@ pub struct ApStats {
 }
 
 /// Deterministic fake backend: logits depend only on (last token, pos) so
-/// scheduler behaviour is reproducible; per-step latency is configurable
+/// serving behaviour is reproducible; per-step latency is configurable
 /// to emulate a device.  With [`SimBackend::with_ap_gemm`], logits come
 /// from a real prepacked bitmm GEMM instead of the hash rule.
 pub struct SimBackend {

@@ -1,24 +1,25 @@
 //! `apllm serve` — the end-to-end serving demo: a synthetic Poisson
 //! workload over either the real PJRT model artifacts (`pjrt` feature) or
 //! the pack-once AP-GEMM sim backend (always available; `--sim` forces
-//! it).  The sim path serves through the **continuous-batching engine**
-//! by default; `--replicas N` (≥2) serves a **multi-replica cluster**
-//! behind the router (`--route-policy round-robin|least-loaded`), with
+//! it).  Both paths serve through the ONE **continuous-batching engine**;
+//! `--admission optimistic|reserve` selects the KV booking policy
+//! (`reserve` = the retired group scheduler's full-budget, never-preempt
+//! semantics; `--group-scheduler` survives as a deprecated alias).
+//! `--replicas N` (≥2) serves a **multi-replica cluster** behind the
+//! router (`--route-policy round-robin|least-loaded`), with
 //! `--roles p,d,m` assigning prefill/decode/mixed roles round-robin for
-//! a disaggregated deployment, and
-//! `--group-scheduler` falls back to the group scheduler.  `--spec-k N`
-//! turns on self-speculative decoding (draft from the `--draft-bits`-wide
-//! plane prefix of the same pack, verify at serving width); streams stay
-//! byte-identical to plain decode.
+//! a disaggregated deployment.  `--spec-k N` turns on self-speculative
+//! decoding (draft from the `--draft-bits`-wide plane prefix of the same
+//! pack, verify at serving width); streams stay byte-identical to plain
+//! decode.
 
 #[cfg(feature = "pjrt")]
 use super::backend::PjrtBackend;
 use super::backend::SimBackend;
 use super::cluster::{Cluster, ClusterSpec, ReplicaSpec};
-use super::engine::{Engine, EngineConfig};
+use super::engine::{AdmissionPolicy, Engine, EngineConfig};
 use super::request::{responses_of, Response};
 use super::router::{ReplicaRole, RoutePolicy};
-use super::scheduler::{Scheduler, SchedulerConfig};
 use super::server::{replay_trace, Stepper};
 use super::trace::{generate, ArrivalKind, TimedRequest, TraceConfig};
 use crate::anyhow::{bail, Context, Result};
@@ -37,9 +38,11 @@ pub struct ServeArgs {
     pub seed: u64,
     /// Use the pack-once sim backend even when `pjrt` is compiled in.
     pub sim: bool,
-    /// Serve through the continuous-batching engine (sim path default);
-    /// false = the group scheduler.
-    pub engine: bool,
+    /// KV admission policy: `Optimistic` (default) overcommits and
+    /// preempts under pressure; `Reserve` books each request's full
+    /// `prompt + max_new` budget up front and never preempts (the
+    /// retired group scheduler's semantics).
+    pub admission: AdmissionPolicy,
     /// Engine replicas behind the router (≥2 = cluster demo).
     pub replicas: usize,
     /// How the router picks a replica.
@@ -70,7 +73,7 @@ impl Default for ServeArgs {
             prompt_len: 12,
             seed: 0,
             sim: false,
-            engine: true,
+            admission: AdmissionPolicy::Optimistic,
             replicas: 1,
             route_policy: RoutePolicy::LeastLoaded,
             roles: Vec::new(),
@@ -85,7 +88,8 @@ impl Default for ServeArgs {
 /// recoverable error naming the alternatives, never kill the process.
 const VALID_FLAGS: &str = "--requests N, --rate R, --max-new N, --prompt-len N, --seed N, \
      --replicas N, --route-policy round-robin|least-loaded, --roles p,d,m, --workers N, \
-     --spec-k N, --draft-bits N, --sim, --group-scheduler";
+     --spec-k N, --draft-bits N, --sim, --admission optimistic|reserve, \
+     --group-scheduler (deprecated alias for --admission reserve)";
 
 fn take_value<'a>(it: &mut std::slice::Iter<'a, String>, name: &str) -> Result<&'a str> {
     it.next()
@@ -147,14 +151,30 @@ pub fn parse_args(args: &[String]) -> Result<ServeArgs> {
                 a.draft_bits = parse_value(&mut it, "--draft-bits", "a plane count")?;
             }
             "--sim" => a.sim = true,
-            "--group-scheduler" => a.engine = false,
+            "--admission" => {
+                let raw = take_value(&mut it, "--admission")?;
+                a.admission = match raw {
+                    "optimistic" => AdmissionPolicy::Optimistic,
+                    "reserve" => AdmissionPolicy::Reserve,
+                    other => {
+                        bail!("--admission expects optimistic|reserve, got {other:?}")
+                    }
+                };
+            }
+            "--group-scheduler" => {
+                eprintln!(
+                    "(--group-scheduler is deprecated: the group scheduler was folded into \
+                     the engine — use --admission reserve)"
+                );
+                a.admission = AdmissionPolicy::Reserve;
+            }
             other => bail!("unknown flag {other} (valid flags: {VALID_FLAGS})"),
         }
     }
-    if !a.engine && a.replicas > 1 {
+    if a.admission == AdmissionPolicy::Reserve && a.replicas > 1 {
         bail!(
-            "--group-scheduler serves a single replica (the cluster drives \
-             continuous-batching engines); drop it or use --replicas 1"
+            "--admission reserve serves a single replica in this demo (the cluster drives \
+             optimistic continuous-batching engines); drop it or use --replicas 1"
         );
     }
     if a.spec_k > 0 && a.draft_bits == 0 {
@@ -179,8 +199,11 @@ pub fn parse_args(args: &[String]) -> Result<ServeArgs> {
             );
         }
     }
-    if a.spec_k > 0 && !a.engine {
-        bail!("--spec-k is a continuous-batching engine feature; drop --group-scheduler");
+    if a.spec_k > 0 && a.admission == AdmissionPolicy::Reserve {
+        bail!(
+            "--spec-k needs --admission optimistic (reserve admission books the full \
+             budget up front and never speculates)"
+        );
     }
     Ok(a)
 }
@@ -240,27 +263,36 @@ fn pack_once_stats(backend: &SimBackend, packed_bytes: usize) -> String {
     )
 }
 
+/// The ONE demo pool shape, shared by every serving demo (PJRT, sim
+/// engine, legacy-parity reserve, and each cluster replica) so the
+/// configurations can't drift apart.
+const DEMO_KV_BLOCKS: usize = 128;
+const DEMO_BLOCK_TOKENS: usize = 16;
+const DEMO_MAX_RUNNING: usize = 8;
+
 fn demo_engine_config() -> EngineConfig {
     EngineConfig {
-        kv_blocks: 64,
-        block_tokens: 16,
-        max_running: 8,
+        kv_blocks: DEMO_KV_BLOCKS,
+        block_tokens: DEMO_BLOCK_TOKENS,
+        max_running: DEMO_MAX_RUNNING,
         batcher: super::batcher::BatcherConfig {
             batch_sizes: vec![1, 2, 4, 8],
             max_wait: Duration::from_millis(2),
         },
-        prefix_sharing: true,
-        eviction: super::kv::EvictionPolicy::Lru,
-        workers: 0,
-        spec_k: 0,
-        draft_bits: 0,
-        // Cluster::new flips this on for prefill-role replicas
-        prefill_hold: false,
+        // everything else (prefix sharing, LRU eviction, optimistic
+        // admission, no speculation; Cluster::new flips prefill_hold on
+        // for prefill-role replicas) is the engine default
+        ..EngineConfig::default()
     }
 }
 
 /// Run the demo over the REAL PJRT artifacts; returns the metrics report.
-/// Used by the CLI and the llm_serving example.
+/// Used by the CLI and the llm_serving example.  Serves through the same
+/// continuous-batching [`Engine`] as the sim path — ONE serving stack for
+/// every backend.  Speculation auto-disarms here: PJRT KV is real device
+/// tensors, not position-only state, so the backend declines
+/// [`super::backend::Backend::set_draft_bits`] and the engine falls back
+/// to plain decode.
 #[cfg(feature = "pjrt")]
 pub fn run_serving_demo(a: &ServeArgs) -> Result<String> {
     let dir = artifacts_dir();
@@ -273,42 +305,55 @@ pub fn run_serving_demo(a: &ServeArgs) -> Result<String> {
 
     let backend = PjrtBackend::new(&runner)?;
     let vocab = runner.cfg.vocab;
-    let mut sched = Scheduler::new(
+    let mut eng = Engine::new(
         backend,
-        SchedulerConfig { kv_blocks: 128, block_tokens: 16, max_running: 8 },
+        EngineConfig {
+            workers: a.workers,
+            spec_k: a.spec_k,
+            draft_bits: a.draft_bits,
+            admission: a.admission,
+            ..demo_engine_config()
+        },
     );
-    let (report, _) = drive(&mut sched, a, vocab)?;
+    let (mut report, _) = drive(&mut eng, a, vocab)?;
+    let c = eng.counters();
+    report.push_str(&format!(
+        "engine: steps {}, prefills {}, preemptions {}, resumes {}, rejected {}\n",
+        c.steps, c.prefills, c.preemptions, c.resumes, c.rejected
+    ));
     Ok(report)
 }
 
-/// Group-scheduler demo over the pack-once AP-GEMM sim backend (kept as
-/// the baseline the engine demo is compared against).
+/// Legacy-parity demo over the pack-once AP-GEMM sim backend: the SAME
+/// continuous-batching engine forced to [`AdmissionPolicy::Reserve`] —
+/// the retired group scheduler's full-budget, never-preempt admission —
+/// kept as the baseline the optimistic engine demo is compared against.
 pub fn run_sim_serving_demo(a: &ServeArgs) -> Result<String> {
-    let (backend, vocab) = ap_sim_backend(a.seed);
-    let packed_bytes = backend.packed_weight_bytes();
-    let mut sched = Scheduler::new(
-        backend,
-        SchedulerConfig { kv_blocks: 128, block_tokens: 16, max_running: 8 },
-    );
-    let (mut report, _) = drive(&mut sched, a, vocab)?;
-    report.push_str(&pack_once_stats(sched.backend(), packed_bytes));
-    Ok(report)
+    engine_demo(a, AdmissionPolicy::Reserve)
 }
 
 /// Continuous-batching engine demo over the pack-once AP-GEMM sim
-/// backend: batcher-fed admission, prefix-shared incremental KV with swap
-/// preemption, per-step join/leave batching — weights decomposed+packed
-/// once at startup, every step packing only its activation batch through
-/// the recycling arena, with the counters to prove both appended.
+/// backend: batcher-fed admission under `--admission`, prefix-shared
+/// incremental KV with swap preemption, per-step join/leave batching —
+/// weights decomposed+packed once at startup, every step packing only
+/// its activation batch through the recycling arena, with the counters
+/// to prove both appended.
 pub fn run_engine_serving_demo(a: &ServeArgs) -> Result<String> {
+    engine_demo(a, a.admission)
+}
+
+fn engine_demo(a: &ServeArgs, admission: AdmissionPolicy) -> Result<String> {
     let (backend, vocab) = ap_sim_backend(a.seed);
     let packed_bytes = backend.packed_weight_bytes();
+    // clamp the draft strictly below the backend's serving width (the
+    // cluster demo does the same per replica) — the demo sim backend
+    // serves W2, so at most the 1-bit MSB plane drafts
+    let max_draft = backend.serving_bits().map_or(0, |(nw, _)| nw.saturating_sub(1));
     let cfg = EngineConfig {
         workers: a.workers,
         spec_k: a.spec_k,
-        // the demo sim backend serves W2, so the plane-prefix draft can
-        // only be 1 bit wide — clamp whatever the flag asked for
-        draft_bits: a.draft_bits.min(1),
+        draft_bits: a.draft_bits.min(max_draft),
+        admission,
         ..demo_engine_config()
     };
     let mut eng = Engine::new(backend, cfg);
@@ -433,10 +478,10 @@ pub fn run_cluster_serving_demo(a: &ServeArgs) -> Result<String> {
 
 /// Pick the demo the build supports: real PJRT artifacts when the `pjrt`
 /// feature is compiled in (unless `--sim`); otherwise the pack-once sim
-/// backend — a router-driven cluster when `--replicas ≥ 2`, the
-/// continuous-batching engine by default, or the group scheduler under
-/// `--group-scheduler`.  Shared by `apllm serve` and the llm_serving
-/// example.
+/// backend — a router-driven cluster when `--replicas ≥ 2`, else the
+/// continuous-batching engine under the `--admission` policy.  Every
+/// path is the same engine.  Shared by `apllm serve` and the
+/// llm_serving example.
 pub fn run_demo(a: &ServeArgs) -> Result<String> {
     if a.workers > 0 {
         // cap the global default pool too (activation packing etc.), not
@@ -460,10 +505,8 @@ pub fn run_demo(a: &ServeArgs) -> Result<String> {
     }
     if a.replicas > 1 {
         run_cluster_serving_demo(a)
-    } else if a.engine {
-        run_engine_serving_demo(a)
     } else {
-        run_sim_serving_demo(a)
+        run_engine_serving_demo(a)
     }
 }
 
@@ -498,10 +541,15 @@ mod tests {
         assert_eq!(a.requests, 3);
         assert_eq!(a.rate_per_s, 2.5);
         assert!(a.sim);
-        assert!(a.engine, "engine is the default");
+        assert_eq!(a.admission, AdmissionPolicy::Optimistic, "optimistic is the default");
         assert_eq!(a.replicas, 1, "single replica is the default");
+        let a = parse_args(&s(&["--admission", "reserve"])).unwrap();
+        assert_eq!(a.admission, AdmissionPolicy::Reserve);
+        let a = parse_args(&s(&["--admission", "optimistic"])).unwrap();
+        assert_eq!(a.admission, AdmissionPolicy::Optimistic);
+        // the deprecated alias still parses, mapping onto reserve
         let a = parse_args(&s(&["--group-scheduler"])).unwrap();
-        assert!(!a.engine);
+        assert_eq!(a.admission, AdmissionPolicy::Reserve);
         let a = parse_args(&s(&["--replicas", "3", "--route-policy", "round-robin"])).unwrap();
         assert_eq!(a.replicas, 3);
         assert_eq!(a.route_policy, RoutePolicy::RoundRobin);
@@ -555,12 +603,21 @@ mod tests {
         assert!(e.contains("round-robin") && e.contains("fastest"), "{e}");
         let e = parse_args(&s(&["--replicas", "0"])).unwrap_err().to_string();
         assert!(e.contains("≥ 1"), "{e}");
-        // conflicting mode flags are refused, not silently resolved
+        let e = parse_args(&s(&["--admission", "eager"])).unwrap_err().to_string();
+        assert!(e.contains("optimistic|reserve") && e.contains("eager"), "{e}");
+        // conflicting mode flags are refused, not silently resolved —
+        // through the new flag and the deprecated alias alike
+        let e = parse_args(&s(&["--replicas", "2", "--admission", "reserve"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--admission reserve") && e.contains("single replica"), "{e}");
         let e = parse_args(&s(&["--replicas", "2", "--group-scheduler"])).unwrap_err().to_string();
-        assert!(e.contains("--group-scheduler") && e.contains("single replica"), "{e}");
+        assert!(e.contains("single replica"), "{e}");
         let e = parse_args(&s(&["--spec-k", "2", "--draft-bits", "0"])).unwrap_err().to_string();
         assert!(e.contains("--draft-bits ≥ 1"), "{e}");
-        let e = parse_args(&s(&["--spec-k", "2", "--group-scheduler"])).unwrap_err().to_string();
-        assert!(e.contains("engine feature"), "{e}");
+        let e = parse_args(&s(&["--spec-k", "2", "--admission", "reserve"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--admission optimistic"), "{e}");
     }
 }

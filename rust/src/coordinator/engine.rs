@@ -44,9 +44,31 @@
 //!    [`Engine::export_running`] so the between-steps window can hand
 //!    them to a decode replica; unexported holds expire next step.
 //! 5. **Completion** — finished sequences release their block references
-//!    and stream a terminal [`TokenEvent::Finished`].  (Completion also
-//!    runs *before* decode so freshly finished sequences free blocks for
-//!    the current step.)
+//!    and stream a terminal [`TokenEvent::Finished`].  (Under
+//!    [`AdmissionPolicy::Optimistic`] completion also runs *before*
+//!    decode so freshly finished sequences free blocks for the current
+//!    step.)
+//!
+//! ## Admission policy
+//!
+//! [`EngineConfig::admission`] selects how admission books KV — the one
+//! semantic that used to distinguish the legacy group scheduler from
+//! this engine, folded in here when that scheduler was retired:
+//!
+//! * [`AdmissionPolicy::Optimistic`] (default) reserves only the
+//!   prompt's blocks; decode grows the table one token at a time and
+//!   preempts under pressure — continuous batching's overcommit bet.
+//! * [`AdmissionPolicy::Reserve`] books the full `prompt + max_new`
+//!   budget up front, so a running sequence can never hit
+//!   out-of-blocks mid-generation and the engine **never preempts**
+//!   (nor emits `Preempted`/`Resumed`); a head-of-line request waits
+//!   until its whole stream is guaranteed to fit.  Streams are
+//!   byte-identical to the retired scheduler's — completions scan by
+//!   `swap_remove` strictly after decode — pinned by golden-fixture
+//!   parity tests in both integration suites.  Speculation and prefix
+//!   sharing are forced off ([`Engine::new`]): full-budget tables
+//!   leave no optimistic slack to draft into and never match the
+//!   prefix cache's content hashing.
 //!
 //! ## Preemption policy
 //!
@@ -149,6 +171,23 @@ use crate::model::PrecisionConfig;
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
+/// Admission-time KV booking policy (see the module docs) — the one
+/// semantic that used to distinguish the legacy group scheduler from
+/// the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionPolicy {
+    /// Reserve only the prompt's KV at admission; decode grows the
+    /// block table per token and preempts the youngest resident on a
+    /// clean out-of-blocks refusal.
+    #[default]
+    Optimistic,
+    /// Reserve the full `prompt + max_new` budget at admission and
+    /// never preempt; head-of-line requests wait until their whole
+    /// stream fits.  The retired group scheduler's semantics, stream
+    /// order included.
+    Reserve,
+}
+
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     /// KV pool capacity in blocks.
@@ -158,6 +197,13 @@ pub struct EngineConfig {
     /// Max sequences decoding concurrently (clamped to the backend's
     /// largest supported batch).
     pub max_running: usize,
+    /// How admission books KV: [`AdmissionPolicy::Optimistic`] reserves
+    /// the prompt only and grows per token (preempting under pressure);
+    /// [`AdmissionPolicy::Reserve`] books the full `prompt + max_new`
+    /// budget up front and never preempts.  Reserve forces
+    /// [`EngineConfig::spec_k`] to 0 and
+    /// [`EngineConfig::prefix_sharing`] off at construction.
+    pub admission: AdmissionPolicy,
     /// Admission batcher (deadline + supported group sizes).
     pub batcher: BatcherConfig,
     /// Admit through the hash-based prefix cache (copy-on-write shared
@@ -202,6 +248,7 @@ impl Default for EngineConfig {
             kv_blocks: 64,
             block_tokens: 16,
             max_running: 8,
+            admission: AdmissionPolicy::Optimistic,
             // zero deadline: groups release as soon as the engine polls —
             // iteration-level scheduling rarely wants to hold arrivals back
             batcher: BatcherConfig { batch_sizes: vec![1, 2, 4, 8], max_wait: Duration::ZERO },
@@ -445,6 +492,15 @@ impl<B: Backend> Engine<B> {
     pub fn new(mut backend: B, cfg: EngineConfig) -> Self {
         let cap = cfg.max_running.min(*backend.supported_batches().last().unwrap()).max(1);
         let mut cfg = EngineConfig { max_running: cap, ..cfg };
+        if cfg.admission == AdmissionPolicy::Reserve {
+            // full-budget reservation leaves no optimistic slack to
+            // draft into, and a whole-budget table never matches the
+            // prefix cache's content hashing — plain private
+            // reservations, plain decode: the retired group scheduler's
+            // exact serving contract
+            cfg.spec_k = 0;
+            cfg.prefix_sharing = false;
+        }
         if cfg.spec_k > 0 && !backend.set_draft_bits(cfg.draft_bits) {
             // the backend cannot draft at this width (no plane store to
             // slice, a non-subset width, or device-resident KV that
@@ -775,6 +831,19 @@ impl<B: Backend> Engine<B> {
         }
     }
 
+    /// Admit a fresh sequence's KV according to the admission policy:
+    /// the prompt only (optimistic growth, may preempt later) or the
+    /// full `prompt + max_new` budget up front (never preempts).  Fails
+    /// without side effects either way.
+    fn admit_new(&mut self, req: &Request) -> Result<(), KvError> {
+        match self.cfg.admission {
+            AdmissionPolicy::Optimistic => self.pool_admit(req.id.0, &req.prompt),
+            AdmissionPolicy::Reserve => {
+                self.pool.admit(req.id.0, req.prompt.len() + req.params.max_new_tokens)
+            }
+        }
+    }
+
     /// Swap out the youngest resident sequence other than `keep`: its pool
     /// block references are released (the KV data itself lives host-side
     /// in `SeqKv`; shared blocks stay resident for their other owners)
@@ -824,10 +893,17 @@ impl<B: Backend> Engine<B> {
                 i += 1;
                 continue;
             }
-            // Vec::remove, not swap_remove: keeps `running` (and thus the
-            // decode batch) in a stable order; victim selection itself
-            // goes by `admitted_at`, not position.
-            let a = self.running.remove(i);
+            let a = match self.cfg.admission {
+                // Vec::remove keeps `running` (and thus the decode
+                // batch) in a stable order; victim selection itself
+                // goes by `admitted_at`, not position.
+                AdmissionPolicy::Optimistic => self.running.remove(i),
+                // swap_remove replays the retired scheduler's completion
+                // scan exactly — the scrambled order it leaves behind
+                // shapes subsequent decode interleaving, which the
+                // Reserve parity fixtures pin byte-for-byte.
+                AdmissionPolicy::Reserve => self.running.swap_remove(i),
+            };
             self.pool.release(a.req.id.0)?;
             self.counters.completed += 1;
             self.metrics.requests_done += 1;
@@ -886,7 +962,16 @@ impl<B: Backend> Engine<B> {
         while self.running.len() < self.cfg.max_running {
             let Some(mut seq) = self.swapped.pop_front() else { break };
             let content = seq.swap_content.take().unwrap_or_else(|| seq.kv_content());
-            match self.pool_admit(seq.req.id.0, &content) {
+            let admitted = match self.cfg.admission {
+                AdmissionPolicy::Optimistic => self.pool_admit(seq.req.id.0, &content),
+                // an import re-books the full remaining budget, so the
+                // never-preempt invariant holds for the rest of the
+                // stream (content.len() ≤ budget always)
+                AdmissionPolicy::Reserve => self
+                    .pool
+                    .admit(seq.req.id.0, seq.req.prompt.len() + seq.req.params.max_new_tokens),
+            };
+            match admitted {
                 Ok(()) => {
                     if seq.needs_reprefill {
                         // cross-precision arrival: the carried KV was
@@ -945,7 +1030,7 @@ impl<B: Backend> Engine<B> {
         // growth is incremental (that is the continuous-batching bet).
         while self.swapped.is_empty() && self.running.len() < self.cfg.max_running {
             let Some(req) = self.wait.pop_front() else { break };
-            if let Err(e) = self.pool_admit(req.id.0, &req.prompt) {
+            if let Err(e) = self.admit_new(&req) {
                 // head-of-line waits for memory (admit has no side
                 // effects on refusal)
                 self.wait.push_front(req);
@@ -988,16 +1073,29 @@ impl<B: Backend> Engine<B> {
         }
 
         // early completion: a prefill can satisfy max_new == 1 outright,
-        // and freshly freed blocks should help the decode below
-        self.collect_finished(&mut events)?;
+        // and freshly freed blocks should help the decode below.
+        // Reserve keeps the legacy single completion pass after decode —
+        // completions streaming strictly last is part of its
+        // byte-for-byte parity contract with the retired scheduler.
+        if self.cfg.admission == AdmissionPolicy::Optimistic {
+            self.collect_finished(&mut events)?;
+        }
 
         // 4: decode — secure one KV slot per participant (preempting on
         // the allocator's clean failure), then one batched call.
         // Sequences under a prefill hold sit this phase out; the flag
         // survives to the between-steps window so the cluster can see
         // (and export) them, and expires above next step.
-        let mut ids: Vec<u64> =
-            self.running.iter().filter(|s| !s.hold_decode).map(|s| s.req.id.0).collect();
+        // the budget filter is a no-op under Optimistic (the early
+        // completion pass already removed satisfied sequences) but
+        // load-bearing under Reserve, where a max_new == 1 prefill is
+        // still resident here and must sit decode out
+        let mut ids: Vec<u64> = self
+            .running
+            .iter()
+            .filter(|s| !s.hold_decode && s.generated.len() < s.req.params.max_new_tokens)
+            .map(|s| s.req.id.0)
+            .collect();
         let mut i = 0;
         while i < ids.len() {
             let id = ids[i];
@@ -1009,12 +1107,17 @@ impl<B: Backend> Engine<B> {
                 ids.remove(i);
                 continue;
             }
-            match self.pool.append_token(id) {
-                Ok(()) => i += 1,
-                Err(KvError::OutOfBlocks { .. }) => {
-                    self.preempt_youngest_except(id, &mut events)?
-                }
-                Err(e) => return Err(e.into()),
+            match self.cfg.admission {
+                // Reserve booked the full budget at admission: growth is
+                // already paid for and preemption impossible
+                AdmissionPolicy::Reserve => i += 1,
+                AdmissionPolicy::Optimistic => match self.pool.append_token(id) {
+                    Ok(()) => i += 1,
+                    Err(KvError::OutOfBlocks { .. }) => {
+                        self.preempt_youngest_except(id, &mut events)?
+                    }
+                    Err(e) => return Err(e.into()),
+                },
             }
         }
         if !ids.is_empty() {
@@ -1952,5 +2055,158 @@ mod tests {
         assert_eq!(dec.counters().resumes, 1, "decode side resumes the stream");
         assert_eq!(dec.pool().free_blocks(), 64);
         dec.pool().check_invariants().unwrap();
+    }
+
+    // ---- AdmissionPolicy::Reserve: the retired group scheduler's
+    // contract, ported test-for-test when scheduler.rs was deleted ----
+
+    fn rcfg(kv_blocks: usize, block_tokens: usize, max_running: usize) -> EngineConfig {
+        EngineConfig {
+            admission: AdmissionPolicy::Reserve,
+            ..cfg(kv_blocks, block_tokens, max_running)
+        }
+    }
+
+    #[test]
+    fn reserve_single_request_generates_exactly_max_new() {
+        let mut e = Engine::new(SimBackend::new(64, 64, vec![1, 2, 4, 8]), rcfg(64, 8, 4));
+        e.submit(req(1, 5, 7));
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].tokens.len(), 7);
+        assert_eq!(e.pool().free_blocks(), 64, "all blocks returned");
+        assert_eq!(e.counters().preemptions, 0);
+    }
+
+    #[test]
+    fn reserve_batching_actually_batches() {
+        let mut e = Engine::new(SimBackend::new(64, 64, vec![1, 2, 4, 8]), rcfg(64, 8, 8));
+        for i in 0..8 {
+            e.submit(req(i, 4, 10));
+        }
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 8);
+        // 8 concurrent sequences, 9 decode steps each (first token from
+        // prefill) → occupancy near 8
+        assert!(e.metrics.mean_occupancy() > 6.0, "occ {}", e.metrics.mean_occupancy());
+        assert_eq!(e.metrics.tokens_generated, 80);
+        // streaming ITL: one inter-token gap per decoded (non-first) token
+        assert_eq!(e.metrics.itl.count() as u64, e.metrics.tokens_generated - 8);
+    }
+
+    #[test]
+    fn reserve_kv_pressure_serializes_without_preempting() {
+        // pool fits only ~1 full budget at a time: head-of-line requests
+        // wait for memory instead of overcommitting — completes with
+        // ZERO preemptions where Optimistic would swap
+        let mut e = Engine::new(SimBackend::new(64, 64, vec![1, 2, 4, 8]), rcfg(3, 8, 8));
+        for i in 0..5 {
+            e.submit(req(i, 8, 8)); // budget 16 → 2 of 3 blocks each
+        }
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 5, "head-of-line blocking must not deadlock");
+        assert_eq!(e.pool().free_blocks(), 3);
+        assert_eq!(e.counters().preemptions, 0, "Reserve never preempts");
+        assert_eq!(e.counters().resumes, 0);
+        // per-request bytes still match the unbatched oracle
+        let mut plain = SimBackend::new(64, 64, vec![1, 2, 4, 8]);
+        for r in &out {
+            let rq = req(r.id.0, 8, 8);
+            assert_eq!(r.tokens, reference(&mut plain, &rq.prompt, &rq.params));
+        }
+    }
+
+    #[test]
+    fn reserve_and_optimistic_agree_on_bytes_but_not_preemptions() {
+        // the differential: a pool too tight for both budgets makes
+        // Optimistic overcommit-and-swap while Reserve serializes; the
+        // per-request token bytes are identical either way
+        let run = |admission: AdmissionPolicy| {
+            let mut e = Engine::new(
+                SimBackend::new(64, 64, vec![1, 2, 4, 8]),
+                EngineConfig {
+                    admission,
+                    prefix_sharing: false,
+                    ..cfg(4, 4, 4)
+                },
+            );
+            e.submit(req(0, 8, 8));
+            e.submit(req(1, 8, 8));
+            let mut out = e.run_to_completion().unwrap();
+            out.sort_by_key(|r| r.id);
+            assert_eq!(e.pool().free_blocks(), 4);
+            (out.into_iter().map(|r| r.tokens).collect::<Vec<_>>(), e.counters().preemptions)
+        };
+        let (opt_tokens, opt_preempts) = run(AdmissionPolicy::Optimistic);
+        let (res_tokens, res_preempts) = run(AdmissionPolicy::Reserve);
+        assert!(opt_preempts > 0, "the tight pool must force Optimistic to swap");
+        assert_eq!(res_preempts, 0, "Reserve never preempts");
+        assert_eq!(res_tokens, opt_tokens, "admission policy changed a stream");
+    }
+
+    #[test]
+    fn reserve_mixed_depths_and_rejects_resolve() {
+        let mut e = Engine::new(SimBackend::new(64, 64, vec![1, 2, 4, 8]), rcfg(64, 8, 8));
+        e.submit(req(0, 2, 3));
+        e.submit(req(1, 9, 12));
+        e.submit(req(2, 1, 1));
+        e.submit(req(3, 33, 4)); // SimBackend max_prompt = 32 → rejected
+        let mut out = e.run_to_completion().unwrap();
+        out.sort_by_key(|r| r.id);
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0].tokens.len(), 3);
+        assert_eq!(out[1].tokens.len(), 12);
+        assert_eq!(out[2].tokens.len(), 1);
+        assert!(out[3].tokens.is_empty(), "oversized prompt resolves terminally");
+        assert_eq!(e.counters().rejected, 1);
+        assert_eq!(e.pool().free_blocks(), 64);
+    }
+
+    #[test]
+    fn reserve_disarms_speculation_and_sharing() {
+        // spec_k and prefix_sharing are forced off at construction: a
+        // Reserve engine never drafts (zero drafted counter) even on a
+        // backend that would accept the draft width
+        let mut e = Engine::new(
+            SimBackend::with_ap_gemm(64, 64, vec![1, 2, 4, 8], 64, 4, 2, 9),
+            EngineConfig { spec_k: 4, draft_bits: 2, ..rcfg(64, 8, 4) },
+        );
+        assert_eq!(e.spec_k(), 0, "Reserve must disarm speculation");
+        e.submit(req(0, 5, 9));
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out[0].tokens.len(), 9);
+        assert_eq!(e.counters().drafted, 0);
+        let sh = e.pool().sharing();
+        assert_eq!(sh.shared_live + sh.cache_restores, 0, "no prefix cache under Reserve");
+    }
+
+    #[test]
+    fn prop_reserve_conserves_and_never_preempts() {
+        forall(24, |rng| {
+            let max_running = [1, 2, 4, 8][rng.usize(0, 4)];
+            let blocks = rng.usize(4, 40);
+            let mut e =
+                Engine::new(SimBackend::new(64, 64, vec![1, 2, 4, 8]), rcfg(blocks, 8, max_running));
+            let n = rng.usize(1, 16);
+            let mut want_tokens = 0usize;
+            for i in 0..n {
+                let plen = rng.usize(1, 12);
+                let mnew = rng.usize(1, 10);
+                // only submit requests the pool can EVER hold
+                if e.pool().blocks_for(plen + mnew) <= blocks {
+                    e.submit(req(i as u64, plen, mnew));
+                    want_tokens += mnew;
+                }
+            }
+            let out = e.run_to_completion().unwrap();
+            let got: usize = out.iter().map(|r| r.tokens.len()).sum();
+            assert_eq!(got, want_tokens, "every request gets exactly max_new tokens");
+            assert_eq!(e.pool().free_blocks(), blocks, "no leaked blocks");
+            assert!(e.is_idle());
+            e.pool().check_invariants().unwrap();
+            assert_eq!(e.counters().preemptions, 0, "Reserve never preempts");
+            // occupancy never exceeded the cap (implied by supported sizes)
+            assert!(e.metrics.mean_occupancy() <= max_running as f64 + 1e-9);
+        });
     }
 }

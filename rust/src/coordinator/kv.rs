@@ -406,7 +406,7 @@ impl KvPool {
     /// Allocate the blocks for a new sequence of `tokens` (its prompt)
     /// **privately** — no prefix sharing, every block fresh.  Fails
     /// (without side effects) if the pool can't hold it.  This is the
-    /// baseline path (and the group scheduler's only path).
+    /// baseline path (and the only one `AdmissionPolicy::Reserve` takes).
     pub fn admit(&mut self, seq: u64, tokens: usize) -> Result<(), KvError> {
         if self.tables.contains_key(&seq) {
             return Err(KvError::AlreadyAdmitted(seq));

@@ -32,12 +32,13 @@
 //!   worker pool (`Backend::set_workers`, sized per replica by
 //!   `EngineConfig::workers` / `ClusterSpec::worker_budget` so N
 //!   replicas split the host instead of oversubscribing it).
-//! * [`scheduler`]— group scheduler over the backend trait: admission,
-//!   prefill/decode interleaving, slot recycling (reserves each
-//!   sequence's full budget up front).
-//! * [`engine`]   — **continuous-batching decode engine**: batcher-fed
-//!   admission, prefix-shared incremental KV with swap-style preemption
-//!   on the allocator's clean failure, per-step join/leave batching over
+//! * [`engine`]   — **continuous-batching decode engine**, the one
+//!   serving state machine: batcher-fed admission under a selectable
+//!   [`AdmissionPolicy`] (`Optimistic` reserves the prompt and grows per
+//!   token with swap-style preemption on the allocator's clean failure;
+//!   `Reserve` books the full `prompt + max_new` budget up front and
+//!   never preempts — the retired group scheduler's semantics, folded in
+//!   as a config switch), per-step join/leave batching over
 //!   the pack-once kernel path, streaming every token as an event.
 //!   Swapped sequences are exportable (`Engine::export_swapped` →
 //!   `ExportedSeq` → `Engine::import_swapped`) so a peer replica can
@@ -92,9 +93,9 @@
 //! * [`metrics`]  — counters, latency percentiles (incl. streamed
 //!   TTFT/ITL), resident-vs-swapped KV and prefix-cache hit/eviction
 //!   gauges, the migration counter, and cross-replica merge.
-//! * [`server`]   — the [`server::Stepper`] abstraction (scheduler,
-//!   engine, and cluster all implement it), the channel serve loop that
-//!   streams events, and the wall-clock trace replay driver.
+//! * [`server`]   — the [`server::Stepper`] abstraction (engine and
+//!   cluster both implement it), the channel serve loop that streams
+//!   events, and the wall-clock trace replay driver.
 
 pub mod backend;
 pub mod batcher;
@@ -105,20 +106,20 @@ pub mod kv;
 pub mod metrics;
 pub mod request;
 pub mod router;
-pub mod scheduler;
 pub mod server;
 pub mod trace;
 
 pub use backend::{drive_unbatched, superset_store, ApStats, Backend, SimBackend};
 pub use batcher::{Batcher, BatcherConfig};
 pub use cluster::{Cluster, ClusterSpec, ReplicaSpec};
-pub use engine::{Engine, EngineConfig, EngineCounters, ExportedSeq, ImportFit, SwappedPeek};
+pub use engine::{
+    AdmissionPolicy, Engine, EngineConfig, EngineCounters, ExportedSeq, ImportFit, SwappedPeek,
+};
 pub use kv::{BlockId, EvictionPolicy, KvPool, KvSharing};
 pub use metrics::{LatencySnapshot, LatencyStats, Metrics};
 pub use request::{
     responses_of, sample_token, GenParams, Request, RequestId, Response, TokenEvent,
 };
 pub use router::{Replica, ReplicaRole, RoutePolicy, Router};
-pub use scheduler::{Scheduler, SchedulerConfig};
 pub use server::{drain, replay_trace, Server, ServerConfig, Stepper};
 pub use trace::{ArrivalKind, TraceConfig};

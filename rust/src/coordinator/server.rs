@@ -1,8 +1,9 @@
 //! The serve loop: requests in, **streamed [`TokenEvent`]s out** — plus
 //! the [`Stepper`] abstraction every serving state machine implements
-//! (group scheduler, continuous-batching engine, and the multi-replica
-//! [`Cluster`](super::cluster::Cluster)) and the wall-clock trace replay
-//! driver the demos and benches share.
+//! (the continuous-batching engine — under either
+//! [`AdmissionPolicy`](super::engine::AdmissionPolicy) — and the
+//! multi-replica [`Cluster`](super::cluster::Cluster)) and the
+//! wall-clock trace replay driver the demos and benches share.
 //!
 //! Delivery is streaming: each `step()` returns the events the iteration
 //! produced (admissions, individual tokens, preempt/migrate/resume
@@ -23,9 +24,9 @@
 //! with stepper iterations and parks briefly when idle.
 
 use super::backend::Backend;
+use super::engine::{Engine, EngineConfig};
 use super::metrics::Metrics;
 use super::request::{Request, TokenEvent};
-use super::scheduler::{Scheduler, SchedulerConfig};
 use super::trace::TimedRequest;
 use crate::anyhow::Result;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
@@ -34,8 +35,7 @@ use std::time::{Duration, Instant};
 pub use super::request::responses_of;
 
 /// One serving state machine the serve loop can drive.  Implemented by
-/// the group [`Scheduler`], the continuous-batching
-/// [`Engine`](super::engine::Engine), and the multi-replica
+/// the continuous-batching [`Engine`] and the multi-replica
 /// [`Cluster`](super::cluster::Cluster); everything above this trait
 /// (channel serve loop, trace replay, demos, benches) works with any.
 pub trait Stepper {
@@ -54,14 +54,15 @@ pub trait Stepper {
 
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
-    pub scheduler: SchedulerConfig,
+    /// Engine shape (pool size, admission policy, batcher, …).
+    pub engine: EngineConfig,
     /// Idle park time when no work is queued.
     pub idle_wait: Duration,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { scheduler: SchedulerConfig::default(), idle_wait: Duration::from_millis(1) }
+        Self { engine: EngineConfig::default(), idle_wait: Duration::from_millis(1) }
     }
 }
 
@@ -72,11 +73,10 @@ pub struct Server<S: Stepper> {
     idle_wait: Duration,
 }
 
-impl<B: Backend> Server<Scheduler<B>> {
-    /// Convenience: wrap a backend in the group scheduler (the original
-    /// serve path).
+impl<B: Backend> Server<Engine<B>> {
+    /// Convenience: wrap a backend in a continuous-batching engine.
     pub fn new(backend: B, cfg: ServerConfig) -> Self {
-        Self::from_stepper(Scheduler::new(backend, cfg.scheduler.clone()), cfg.idle_wait)
+        Self::from_stepper(Engine::new(backend, cfg.engine.clone()), cfg.idle_wait)
     }
 }
 
@@ -179,14 +179,23 @@ pub fn drain<S: Stepper>(s: &mut S) -> Result<Vec<TokenEvent>> {
 mod tests {
     use super::*;
     use crate::coordinator::backend::SimBackend;
-    use crate::coordinator::engine::{Engine, EngineConfig};
+    use crate::coordinator::engine::{AdmissionPolicy, Engine, EngineConfig};
     use crate::coordinator::request::{GenParams, Response};
     use std::sync::mpsc::channel;
 
     #[test]
     fn serve_loop_drains_and_exits() {
+        // drive the loop over a Reserve engine — the retired group
+        // scheduler's admission semantics behind the same Server::new
         let backend = SimBackend::new(64, 64, vec![1, 2, 4]);
-        let server = Server::new(backend, ServerConfig::default());
+        let cfg = ServerConfig {
+            engine: EngineConfig {
+                admission: AdmissionPolicy::Reserve,
+                ..EngineConfig::default()
+            },
+            ..ServerConfig::default()
+        };
+        let server = Server::new(backend, cfg);
         let (tx_req, rx_req) = channel();
         let (tx_ev, rx_ev) = channel();
 

@@ -49,7 +49,12 @@
 //!   freshly prefilled sequence (`TokenEvent::PrefillDone`) to the
 //!   decode-capable peer `Engine::import_fit` admits, `Decode` replicas
 //!   are fed exclusively by migration, and all-`Mixed` is the symmetric
-//!   baseline, byte-for-byte.  The cluster also does **preemptive
+//!   baseline, byte-for-byte.  Admission is a per-engine policy switch
+//!   (`EngineConfig::admission`): `Optimistic` books only the prompt and
+//!   grows per token, swap-preempting under KV pressure; `Reserve` books
+//!   the full `prompt + max_new` budget up front and never preempts —
+//!   the retired group scheduler's semantics, folded into the one
+//!   serving engine.  The cluster also does **preemptive
 //!   rebalancing**: swapped
 //!   sequences an overloaded replica cannot resume migrate to
 //!   same-precision peers and continue byte-identically, or — unpinned,

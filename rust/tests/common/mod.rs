@@ -1,0 +1,150 @@
+//! Shared helpers for the serving integration suites.
+//!
+//! The load-bearing piece is [`legacy_scheduler_events`]: a line-faithful
+//! port of the retired group scheduler's step loop
+//! (`coordinator/scheduler.rs`, deleted when its reserve-the-full-budget
+//! admission semantics were folded into the engine as
+//! `AdmissionPolicy::Reserve`).  It is the golden oracle the parity
+//! tests replay: the engine under `Reserve` must stream a byte-identical
+//! [`Ev`] sequence on the same workload.  The oracle deliberately skips
+//! the metrics/wall-clock bookkeeping the real scheduler carried —
+//! [`project`] strips exactly those nondeterministic fields from the
+//! engine's stream before comparison, so both sides compare on
+//! scheduling decisions and token bytes alone.
+
+#![allow(dead_code)]
+
+use apllm::coordinator::backend::{Backend, SeqKv};
+use apllm::coordinator::{sample_token, KvPool, Request, TokenEvent};
+use std::collections::VecDeque;
+
+/// Timing-free projection of a [`TokenEvent`] stream: scheduling
+/// decisions and token bytes only (responses carry wall-clock latency
+/// fields that can never be replayed bit-exactly).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Ev {
+    Admitted(u64),
+    Token { id: u64, step: usize, token: i32 },
+    Preempted(u64),
+    Resumed(u64),
+    Finished { id: u64, tokens: Vec<i32> },
+    /// Cluster-only markers (`PrefillDone`/`Migrated`/`Requantized`) —
+    /// present so a parity mismatch names the stray variant instead of
+    /// panicking in the projection.
+    Other(&'static str),
+}
+
+pub fn project(events: &[TokenEvent]) -> Vec<Ev> {
+    events
+        .iter()
+        .map(|e| match e {
+            TokenEvent::Admitted { id } => Ev::Admitted(id.0),
+            TokenEvent::Token { id, token, step } => {
+                Ev::Token { id: id.0, step: *step, token: *token }
+            }
+            TokenEvent::Preempted { id } => Ev::Preempted(id.0),
+            TokenEvent::Resumed { id } => Ev::Resumed(id.0),
+            TokenEvent::Finished { id, response } => {
+                Ev::Finished { id: id.0, tokens: response.tokens.clone() }
+            }
+            TokenEvent::PrefillDone { .. } => Ev::Other("prefill_done"),
+            TokenEvent::Migrated { .. } => Ev::Other("migrated"),
+            TokenEvent::Requantized { .. } => Ev::Other("requantized"),
+        })
+        .collect()
+}
+
+struct Active {
+    req: Request,
+    kv: SeqKv,
+    next_token: i32,
+    generated: Vec<i32>,
+}
+
+/// Replay the retired group scheduler over `backend`: full-budget
+/// (`prompt + max_new`) reservation at admission, head-of-line blocking
+/// on KV pressure, batch-1 prefill streaming the first token, one
+/// batched decode per step, completions scanned with `swap_remove` —
+/// never a preemption.  Steps until drained; returns the projected
+/// event stream and asserts the pool comes back empty (zero KV leaks).
+pub fn legacy_scheduler_events<B: Backend>(
+    mut backend: B,
+    kv_blocks: usize,
+    block_tokens: usize,
+    max_running: usize,
+    reqs: Vec<Request>,
+) -> Vec<Ev> {
+    let max_running = max_running.min(*backend.supported_batches().last().unwrap());
+    let mut pool = KvPool::new(kv_blocks, block_tokens);
+    let mut queue: VecDeque<Request> = reqs.into();
+    let mut running: Vec<Active> = Vec::new();
+    let mut events = Vec::new();
+
+    while !queue.is_empty() || !running.is_empty() {
+        // 1+2: admission + prefill
+        while running.len() < max_running {
+            let Some(front) = queue.front() else { break };
+            if front.prompt.is_empty() || front.prompt.len() > backend.max_prompt() {
+                let req = queue.pop_front().unwrap();
+                events.push(Ev::Finished { id: req.id.0, tokens: Vec::new() });
+                continue;
+            }
+            let budget = front.prompt.len() + front.params.max_new_tokens;
+            if !pool.can_admit(budget) {
+                break; // head-of-line blocks until memory frees
+            }
+            let req = queue.pop_front().unwrap();
+            pool.admit(req.id.0, budget).expect("oracle: can_admit then admit");
+            events.push(Ev::Admitted(req.id.0));
+            let (logits, kv) = backend.prefill_one(&req.prompt).expect("oracle: prefill");
+            let tok = sample_token(&logits, &req.params, 0);
+            events.push(Ev::Token { id: req.id.0, step: 0, token: tok });
+            running.push(Active { req, kv, next_token: tok, generated: vec![tok] });
+        }
+
+        // 3: one batched decode over everything still below max_new
+        let mut decode_idx: Vec<usize> = (0..running.len())
+            .filter(|&i| running[i].generated.len() < running[i].req.params.max_new_tokens)
+            .collect();
+        if let Some(&maxb) = backend.supported_batches().last() {
+            decode_idx.truncate(maxb);
+        }
+        if !decode_idx.is_empty() {
+            let tokens: Vec<i32> = decode_idx.iter().map(|&i| running[i].next_token).collect();
+            let mut kv_refs: Vec<&mut SeqKv> = running
+                .iter_mut()
+                .enumerate()
+                .filter(|(i, _)| decode_idx.contains(i))
+                .map(|(_, a)| &mut a.kv)
+                .collect();
+            let logits = backend.decode_batch(&tokens, &mut kv_refs).expect("oracle: decode");
+            for (j, &i) in decode_idx.iter().enumerate() {
+                let step = running[i].generated.len();
+                let tok = sample_token(&logits[j], &running[i].req.params, step);
+                let a = &mut running[i];
+                a.next_token = tok;
+                a.generated.push(tok);
+                events.push(Ev::Token { id: a.req.id.0, step, token: tok });
+            }
+        }
+
+        // 4: completion — swap_remove scan (the scramble shapes the
+        // interleaving of every later decode, so parity depends on it)
+        let mut i = 0;
+        while i < running.len() {
+            let done = running[i].generated.len() >= running[i].req.params.max_new_tokens
+                || running[i].kv.pos >= backend.max_seq();
+            if done {
+                let a = running.swap_remove(i);
+                pool.release(a.req.id.0).expect("oracle: release");
+                events.push(Ev::Finished { id: a.req.id.0, tokens: a.generated });
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    assert_eq!(pool.free_blocks(), pool.total_blocks(), "oracle leaked KV blocks");
+    pool.check_invariants().expect("oracle pool invariants");
+    events
+}

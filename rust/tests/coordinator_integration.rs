@@ -1,11 +1,18 @@
 //! Coordinator over the REAL PJRT backend: continuous batching with
-//! mixed-depth sequences against the AOT model artifacts.
+//! mixed-depth sequences against the AOT model artifacts, driven by the
+//! one serving engine (`AdmissionPolicy::Reserve` replays the retired
+//! group scheduler's semantics bit-for-bit).
 //! Skips gracefully when `artifacts/` is absent; needs the `pjrt` feature.
 #![cfg(feature = "pjrt")]
 
+mod common;
+
 use apllm::coordinator::backend::{Backend, PjrtBackend};
-use apllm::coordinator::{GenParams, Request, Scheduler, SchedulerConfig};
-use apllm::runtime::{Engine, ModelRunner};
+use apllm::coordinator::{
+    AdmissionPolicy, Engine, EngineConfig, GenParams, Request,
+};
+use apllm::runtime::{Engine as RuntimeEngine, ModelRunner};
+use common::{legacy_scheduler_events, project};
 
 fn artifacts() -> Option<std::path::PathBuf> {
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -17,10 +24,33 @@ fn artifacts() -> Option<std::path::PathBuf> {
     }
 }
 
+fn reserve_cfg(kv_blocks: usize, block_tokens: usize, max_running: usize) -> EngineConfig {
+    EngineConfig {
+        kv_blocks,
+        block_tokens,
+        max_running,
+        admission: AdmissionPolicy::Reserve,
+        ..EngineConfig::default()
+    }
+}
+
+fn workload() -> Vec<Request> {
+    (0..6u64)
+        .map(|i| {
+            let prompt: Vec<i32> = (1..(4 + i as i32 % 5)).collect();
+            Request::new(
+                i,
+                prompt,
+                GenParams { max_new_tokens: 4 + (i as usize % 3), sample: false, seed: i },
+            )
+        })
+        .collect()
+}
+
 #[test]
 fn pjrt_backend_prefill_decode_mixed_depths() {
     let Some(dir) = artifacts() else { return };
-    let engine = Engine::load(&dir).unwrap();
+    let engine = RuntimeEngine::load(&dir).unwrap();
     let runner = ModelRunner::new(&engine).unwrap();
     let mut backend = PjrtBackend::new(&runner).unwrap();
     let vocab = backend.vocab();
@@ -60,52 +90,71 @@ fn pjrt_backend_prefill_decode_mixed_depths() {
 }
 
 #[test]
-fn scheduler_end_to_end_over_pjrt() {
+fn reserve_engine_end_to_end_over_pjrt() {
     let Some(dir) = artifacts() else { return };
-    let engine = Engine::load(&dir).unwrap();
+    let engine = RuntimeEngine::load(&dir).unwrap();
     let runner = ModelRunner::new(&engine).unwrap();
     let backend = PjrtBackend::new(&runner).unwrap();
 
-    let mut sched = Scheduler::new(
-        backend,
-        SchedulerConfig { kv_blocks: 64, block_tokens: 16, max_running: 4 },
-    );
-    for i in 0..6u64 {
-        let prompt: Vec<i32> = (1..(4 + i as i32 % 5)).collect();
-        sched.submit(Request::new(
-            i,
-            prompt,
-            GenParams { max_new_tokens: 4 + (i as usize % 3), sample: false, seed: i },
-        ));
+    let mut eng = Engine::new(backend, reserve_cfg(64, 16, 4));
+    for r in workload() {
+        eng.submit(r);
     }
-    let mut out = sched.run_to_completion().unwrap();
+    let mut out = eng.run_to_completion().unwrap();
     assert_eq!(out.len(), 6);
     out.sort_by_key(|r| r.id);
     for (i, r) in out.iter().enumerate() {
         assert_eq!(r.tokens.len(), 4 + (i % 3), "request {i} token count");
-        let vocab = sched.backend().vocab() as i32;
+        let vocab = eng.backend().vocab() as i32;
         assert!(r.tokens.iter().all(|&t| t >= 0 && t < vocab));
     }
-    assert!(sched.metrics.mean_occupancy() > 1.0, "batching must engage");
-    assert_eq!(sched.metrics.tokens_generated as usize, 4 + 5 + 6 + 4 + 5 + 6);
+    assert!(eng.metrics.mean_occupancy() > 1.0, "batching must engage");
+    assert_eq!(eng.metrics.tokens_generated as usize, 4 + 5 + 6 + 4 + 5 + 6);
+    // speculation auto-disarms over PJRT (real device KV, not
+    // position-only), and Reserve never preempts
+    assert_eq!(eng.spec_k(), 0);
+    assert_eq!(eng.counters().preemptions, 0);
+    assert_eq!(eng.pool().free_blocks(), eng.pool().total_blocks(), "KV leak");
+}
+
+/// Golden-fixture parity over the real backend: the Reserve engine's
+/// stream must match the retired group scheduler's, replayed by the
+/// oracle in `common` against a fresh `PjrtBackend` on the same runner.
+#[test]
+fn reserve_engine_matches_scheduler_stream_over_pjrt() {
+    let Some(dir) = artifacts() else { return };
+    let engine = RuntimeEngine::load(&dir).unwrap();
+    let runner = ModelRunner::new(&engine).unwrap();
+
+    let golden =
+        legacy_scheduler_events(PjrtBackend::new(&runner).unwrap(), 64, 16, 4, workload());
+
+    let mut eng = Engine::new(PjrtBackend::new(&runner).unwrap(), reserve_cfg(64, 16, 4));
+    for r in workload() {
+        eng.submit(r);
+    }
+    let events = eng.run_to_completion_events().unwrap();
+    assert_eq!(project(&events), golden, "Reserve engine diverged from the scheduler oracle");
+    assert_eq!(eng.counters().preemptions, 0);
+    assert_eq!(eng.pool().free_blocks(), eng.pool().total_blocks(), "KV leak");
 }
 
 #[test]
-fn scheduler_determinism_over_pjrt() {
+fn reserve_engine_determinism_over_pjrt() {
     let Some(dir) = artifacts() else { return };
-    let engine = Engine::load(&dir).unwrap();
+    let engine = RuntimeEngine::load(&dir).unwrap();
     let runner = ModelRunner::new(&engine).unwrap();
     let run = |runner: &ModelRunner| {
         let backend = PjrtBackend::new(runner).unwrap();
-        let mut sched = Scheduler::new(backend, SchedulerConfig::default());
+        let mut eng = Engine::new(backend, reserve_cfg(64, 16, 8));
         for i in 0..3u64 {
-            sched.submit(Request::new(
+            eng.submit(Request::new(
                 i,
                 vec![2, 4, 6, 8],
                 GenParams { max_new_tokens: 5, sample: false, seed: i },
             ));
         }
-        let mut out = sched.run_to_completion().unwrap();
+        let mut out = eng.run_to_completion().unwrap();
         out.sort_by_key(|r| r.id);
         out.iter().map(|r| r.tokens.clone()).collect::<Vec<_>>()
     };

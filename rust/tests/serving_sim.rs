@@ -1,11 +1,17 @@
 //! End-to-end pack-once serving (no artifacts needed): the continuous-
-//! batching scheduler over `SimBackend::with_ap_gemm`, whose logits come
+//! batching engine over `SimBackend::with_ap_gemm`, whose logits come
 //! from the real prepacked bitmm kernel.  Verifies the §3.3 contract at
 //! the serving layer: weights are decomposed+packed exactly once for the
 //! whole run, activations recycle arena buffers, and generation is
-//! deterministic.
+//! deterministic — plus the `AdmissionPolicy::Reserve` parity fixtures
+//! against the retired group scheduler's replayed event stream.
 
-use apllm::coordinator::{GenParams, Request, Scheduler, SchedulerConfig, SimBackend};
+mod common;
+
+use apllm::coordinator::{
+    AdmissionPolicy, Engine, EngineConfig, GenParams, Request, SimBackend,
+};
+use common::{legacy_scheduler_events, project};
 
 fn ap_backend(seed: u64) -> SimBackend {
     SimBackend::with_ap_gemm(96, 128, vec![1, 2, 4, 8], 128, 2, 2, seed)
@@ -19,26 +25,35 @@ fn req(id: u64, prompt_len: usize, max_new: usize) -> Request {
     )
 }
 
-#[test]
-fn scheduler_over_pack_once_backend() {
-    let mut sched = Scheduler::new(
-        ap_backend(3),
-        SchedulerConfig { kv_blocks: 64, block_tokens: 16, max_running: 4 },
-    );
-    for i in 0..6u64 {
-        sched.submit(req(i, 4 + (i as usize % 3), 5));
+fn reserve_cfg(kv_blocks: usize, block_tokens: usize, max_running: usize) -> EngineConfig {
+    EngineConfig {
+        kv_blocks,
+        block_tokens,
+        max_running,
+        admission: AdmissionPolicy::Reserve,
+        ..EngineConfig::default()
     }
-    let out = sched.run_to_completion().unwrap();
+}
+
+#[test]
+fn reserve_engine_over_pack_once_backend() {
+    let mut eng = Engine::new(ap_backend(3), reserve_cfg(64, 16, 4));
+    for i in 0..6u64 {
+        eng.submit(req(i, 4 + (i as usize % 3), 5));
+    }
+    let out = eng.run_to_completion().unwrap();
     assert_eq!(out.len(), 6);
     assert!(out.iter().all(|r| r.tokens.len() == 5));
-    let vocab = sched.backend().vocab as i32;
+    let vocab = eng.backend().vocab as i32;
     assert!(out.iter().all(|r| r.tokens.iter().all(|&t| (0..vocab).contains(&t))));
-    assert!(sched.metrics.mean_occupancy() > 1.0, "batching must engage");
+    assert!(eng.metrics.mean_occupancy() > 1.0, "batching must engage");
+    assert_eq!(eng.counters().preemptions, 0, "Reserve never preempts");
+    assert_eq!(eng.pool().free_blocks(), eng.pool().total_blocks());
 
-    let s = sched.backend().ap_stats().unwrap();
+    let s = eng.backend().ap_stats().unwrap();
     assert_eq!(s.weight_packs, 1, "weights packed exactly once for the whole run");
     // every prefill and every decode step packed one activation batch...
-    let steps = sched.backend().prefills + sched.backend().decode_steps;
+    let steps = eng.backend().prefills + eng.backend().decode_steps;
     assert_eq!(s.act_packs, steps);
     // ...and after warm-up those packs came from recycled buffers: one
     // allocation per distinct batch shape, everything else reused
@@ -54,15 +69,60 @@ fn scheduler_over_pack_once_backend() {
 #[test]
 fn pack_once_serving_is_deterministic() {
     let run = || {
-        let mut sched = Scheduler::new(ap_backend(9), SchedulerConfig::default());
+        let mut eng = Engine::new(ap_backend(9), reserve_cfg(64, 16, 8));
         for i in 0..4u64 {
-            sched.submit(req(i, 3, 4));
+            eng.submit(req(i, 3, 4));
         }
-        let mut out = sched.run_to_completion().unwrap();
+        let mut out = eng.run_to_completion().unwrap();
         out.sort_by_key(|r| r.id);
         out.iter().map(|r| r.tokens.clone()).collect::<Vec<_>>()
     };
     assert_eq!(run(), run(), "greedy decode over prepacked weights must be deterministic");
+}
+
+/// The golden-fixture parity contract: on the suite's standard workload,
+/// the `Reserve` engine's stream is byte-identical (modulo wall-clock
+/// latency fields) to the retired group scheduler's, replayed by the
+/// line-faithful oracle in `common`.
+#[test]
+fn reserve_engine_matches_group_scheduler_stream() {
+    let workload: Vec<Request> = (0..6u64).map(|i| req(i, 4 + (i as usize % 3), 5)).collect();
+    let golden = legacy_scheduler_events(ap_backend(3), 64, 16, 4, workload.clone());
+
+    let mut eng = Engine::new(ap_backend(3), reserve_cfg(64, 16, 4));
+    for r in workload {
+        eng.submit(r);
+    }
+    let events = eng.run_to_completion_events().unwrap();
+    assert_eq!(project(&events), golden, "Reserve engine diverged from the scheduler oracle");
+    assert_eq!(eng.counters().preemptions, 0);
+    assert_eq!(eng.counters().resumes, 0);
+    assert_eq!(eng.pool().free_blocks(), eng.pool().total_blocks(), "KV leak");
+    eng.pool().check_invariants().unwrap();
+}
+
+/// Same contract under KV pressure: a pool too small for all admissions
+/// forces head-of-line blocking, and both sides must serialize the same
+/// way — admissions interleave with completions, never a preemption.
+#[test]
+fn reserve_engine_matches_scheduler_stream_under_kv_pressure() {
+    // budget per request: 8 + 8 = 16 tokens = 2 blocks of 8; a 5-block
+    // pool fits two sequences, so the fifth admission waits on memory
+    let workload: Vec<Request> = (0..5u64).map(|i| req(i, 8, 8)).collect();
+    let golden = legacy_scheduler_events(ap_backend(7), 5, 8, 8, workload.clone());
+    assert!(
+        golden.iter().any(|e| matches!(e, common::Ev::Admitted(_))),
+        "sanity: oracle admitted work"
+    );
+
+    let mut eng = Engine::new(ap_backend(7), reserve_cfg(5, 8, 8));
+    for r in workload {
+        eng.submit(r);
+    }
+    let events = eng.run_to_completion_events().unwrap();
+    assert_eq!(project(&events), golden, "Reserve engine diverged under KV pressure");
+    assert_eq!(eng.counters().preemptions, 0);
+    assert_eq!(eng.pool().free_blocks(), eng.pool().total_blocks(), "KV leak");
 }
 
 #[test]
@@ -79,6 +139,7 @@ fn sim_serving_demo_reports_pack_once() {
     let report = apllm::coordinator::cli::run_sim_serving_demo(&a).unwrap();
     assert!(report.contains("pack-once: weight packs 1"), "report was:\n{report}");
     assert!(report.contains("arena reuses"));
+    assert!(report.contains("engine: steps"), "report was:\n{report}");
 }
 
 #[test]
@@ -94,7 +155,7 @@ fn engine_serving_demo_reports_pack_once_and_clean_kv() {
     };
     let report = apllm::coordinator::cli::run_engine_serving_demo(&a).unwrap();
     assert!(report.contains("pack-once: weight packs 1"), "report was:\n{report}");
-    assert!(report.contains("kv: 64/64 blocks free"), "report was:\n{report}");
+    assert!(report.contains("kv: 128/128 blocks free"), "report was:\n{report}");
     assert!(report.contains("engine: steps"));
 }
 
